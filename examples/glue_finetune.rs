@@ -1,0 +1,127 @@
+//! End-to-end driver (deliverable (b) + the mandated full-system example):
+//! "pre-train" the encoder body on the MNLI-like corpus, then fine-tune on
+//! a downstream task twice — baseline (no RMM) and randomized (ρ=0.5) —
+//! logging the full loss curves, dev metric, throughput and measured
+//! activation memory.  Exercises all three layers: Pallas-derived HLO via
+//! PJRT (L1/L2) coordinated by the Rust trainer (L3).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example glue_finetune -- [task] [steps]
+//! ```
+//!
+//! Results of the reference run are recorded in EXPERIMENTS.md §E2E.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use rmmlinear::bench_harness::runner::{head_for, run_finetune, variant_name, RunOpts};
+use rmmlinear::config::TrainConfig;
+use rmmlinear::coordinator::{Checkpoint, MetricsLog, Trainer};
+use rmmlinear::data::{Batcher, Split, Task, TaskGen, Tokenizer};
+use rmmlinear::runtime::{Engine, Manifest};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let task = Task::parse(args.first().map(|s| s.as_str()).unwrap_or("sst2"))
+        .context("unknown task")?;
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let manifest = Manifest::load(Path::new("artifacts"))?;
+    let mut engine = Engine::cpu()?;
+
+    // ---- phase 1: pre-train the encoder body on the largest corpus ----
+    let pre_steps = steps.min(400);
+    println!("=== phase 1: pretrain body on MNLI-like corpus ({pre_steps} steps) ===");
+    let pre_variant = manifest.variant("small_cls3_r100_gauss")?;
+    let pre_cfg = TrainConfig {
+        steps: pre_steps,
+        warmup_steps: pre_steps / 16,
+        log_every: (pre_steps / 8).max(1),
+        ..Default::default()
+    };
+    let tok = Tokenizer::new(pre_variant.config.vocab_size);
+    let mut pre = Trainer::new(&manifest, pre_variant, Task::Mnli, pre_cfg.clone())?;
+    let gen = TaskGen::new(Task::Mnli, &tok, pre_variant.config.seq_len, pre_cfg.seed);
+    let mut epoch = 0;
+    let mut batches = Batcher::new(&gen, Split::Train, pre_variant.config.batch_size, 0);
+    for step in 0..pre_steps {
+        let batch = match batches.next() {
+            Some(b) => b,
+            None => {
+                epoch += 1;
+                batches = Batcher::new(&gen, Split::Train, pre_variant.config.batch_size, epoch);
+                batches.next().unwrap()
+            }
+        };
+        let s = pre.train_step(&mut engine, &batch)?;
+        if step % pre_cfg.log_every == 0 {
+            println!("  pretrain step {:>4}  loss {:.4}", step, s.loss);
+        }
+    }
+    println!("  pretrain dev acc: {:.2}", pre.evaluate(&mut engine, &tok)?);
+    let body = Checkpoint {
+        step: pre_steps,
+        variant: "small_cls3_r100_gauss".into(),
+        names: pre.param_names.clone(),
+        params: pre.params.clone(),
+    };
+
+    // ---- phase 2: fine-tune downstream, baseline vs RMM ----
+    let out = Path::new("runs/glue_finetune");
+    std::fs::create_dir_all(out)?;
+    let mut results = Vec::new();
+    for rho in [1.0, 0.5] {
+        let vname = variant_name("small", head_for(task), rho, "gauss");
+        println!("\n=== phase 2: fine-tune {} with rho={rho} ({steps} steps) ===", task.name());
+        let mut log =
+            MetricsLog::create(&out.join(format!("{}_rho{rho}.jsonl", task.name())))?;
+        let cfg = TrainConfig {
+            steps,
+            warmup_steps: steps / 16,
+            log_every: (steps / 20).max(1),
+            ..Default::default()
+        };
+        let res = run_finetune(
+            &mut engine,
+            &manifest,
+            &vname,
+            task,
+            RunOpts {
+                train: cfg,
+                log: Some(&mut log),
+                eval_loss_every: (steps / 10).max(1),
+                warm_start: Some((&body.names, &body.params)),
+                skip_eval: false,
+            },
+        )?;
+        println!(
+            "  rho={rho}: dev score {:.2}, {:.1} samples/s, peak residuals {:.1} KiB",
+            res.score,
+            res.samples_per_s,
+            res.peak_residual_bytes as f64 / 1024.0
+        );
+        results.push(res);
+    }
+
+    println!("\n=== summary ===");
+    println!(
+        "{:<10} {:>8} {:>12} {:>14} {:>12}",
+        "mode", "score", "samples/s", "resid KiB", "train loss"
+    );
+    for r in &results {
+        println!(
+            "{:<10} {:>8.2} {:>12.1} {:>14.1} {:>12.4}",
+            if (r.rho - 1.0).abs() < 1e-9 { "baseline" } else { "rmm(0.5)" },
+            r.score,
+            r.samples_per_s,
+            r.peak_residual_bytes as f64 / 1024.0,
+            r.final_train_loss
+        );
+    }
+    let saved = 100.0
+        * (1.0 - results[1].peak_residual_bytes as f64
+            / results[0].peak_residual_bytes as f64);
+    println!("\nactivation memory saved by RMM at rho=0.5: {saved:.1}%");
+    println!("loss curves -> {}", out.display());
+    Ok(())
+}

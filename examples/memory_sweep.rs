@@ -1,0 +1,68 @@
+//! Memory sweep (paper §3.2, Fig. 3): measures the activation-store peak
+//! across batch sizes and compression ratios, checks it against the
+//! analytic model, and extrapolates to RoBERTa-base scale.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example memory_sweep
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+use rmmlinear::config::TrainConfig;
+use rmmlinear::coordinator::Trainer;
+use rmmlinear::data::{Batcher, Split, Task, TaskGen, Tokenizer};
+use rmmlinear::memory::{MemoryModel, ModelGeometry};
+use rmmlinear::runtime::{Engine, Manifest};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(Path::new("artifacts"))?;
+    let mut engine = Engine::cpu()?;
+
+    println!(
+        "{:>6} {:>6} {:>15} {:>15} {:>8} {:>18}",
+        "batch", "rho", "measured KiB", "model KiB", "err %", "roberta-base MiB"
+    );
+    for batch_size in [8usize, 16, 32, 64] {
+        for rho_tag in [("r100", 1.0), ("r50", 0.5), ("r20", 0.2), ("r10", 0.1)] {
+            let (tag, rho) = rho_tag;
+            let vname = if batch_size == 16 {
+                format!("small_cls2_{tag}_gauss")
+            } else {
+                format!("small_cls2_b{batch_size}_{tag}_gauss")
+            };
+            let variant = manifest.variant(&vname)?;
+            let cfg = TrainConfig { steps: 2, warmup_steps: 0, ..Default::default() };
+            let tok = Tokenizer::new(variant.config.vocab_size);
+            let mut trainer = Trainer::new(&manifest, variant, Task::Cola, cfg)?;
+            let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, 1);
+            let mut batches = Batcher::new(&gen, Split::Train, batch_size, 0);
+            for _ in 0..2 {
+                let b = batches.next().unwrap();
+                trainer.train_step(&mut engine, &b)?;
+            }
+            let measured = trainer.peak_residual_bytes;
+            let model = MemoryModel::new(variant.config.geometry(), rho);
+            let predicted = model.residual_bytes();
+            let err = 100.0 * (measured as f64 - predicted as f64) / predicted as f64;
+            let rob = MemoryModel::new(
+                ModelGeometry::roberta_base(batch_size * 2, 128),
+                rho,
+            );
+            println!(
+                "{:>6} {:>6.2} {:>15.1} {:>15.1} {:>8.2} {:>18.1}",
+                batch_size,
+                rho,
+                measured as f64 / 1024.0,
+                predicted as f64 / 1024.0,
+                err,
+                rob.residual_bytes() as f64 / (1024.0 * 1024.0)
+            );
+            // The analytic model must match the measurement exactly (it
+            // mirrors the tape layout); tolerate < 1% for float metadata.
+            assert!(err.abs() < 1.0, "model/measurement divergence at {vname}");
+        }
+    }
+    println!("\nanalytic model matches the measured activation store.");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: load the AOT artifacts, fine-tune a randomized-linear (RMM)
+//! model for a few steps on the CoLA-like task, and print loss + the
+//! measured activation-store footprint vs the no-RMM baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use rmmlinear::config::TrainConfig;
+use rmmlinear::coordinator::Trainer;
+use rmmlinear::data::{Batcher, Split, Task, TaskGen, Tokenizer};
+use rmmlinear::runtime::{Engine, Manifest};
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let mut engine = Engine::cpu()?;
+    println!("PJRT platform: {}", engine.platform());
+
+    let cfg = TrainConfig { steps: 30, warmup_steps: 3, log_every: 5, ..Default::default() };
+    let mut footprints = Vec::new();
+    for variant_name in ["small_cls2_r100_gauss", "small_cls2_r10_gauss"] {
+        let variant = manifest.variant(variant_name)?;
+        let tok = Tokenizer::new(variant.config.vocab_size);
+        let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, cfg.seed);
+        let mut trainer = Trainer::new(&manifest, variant, Task::Cola, cfg.clone())?;
+
+        println!(
+            "\n=== {variant_name} (rho={}, sketch={}) ===",
+            variant.config.rho, variant.config.sketch
+        );
+        let mut batches = Batcher::new(&gen, Split::Train, variant.config.batch_size, 0);
+        for step in 0..cfg.steps {
+            let batch = batches.next().unwrap();
+            let s = trainer.train_step(&mut engine, &batch)?;
+            if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+                println!(
+                    "step {:>3}  loss {:.4}  residuals {:>7.1} KiB  ({:.0} ms/step)",
+                    s.step,
+                    s.loss,
+                    s.residual_bytes as f64 / 1024.0,
+                    s.step_time_s * 1e3
+                );
+            }
+        }
+        let score = trainer.evaluate(&mut engine, &tok)?;
+        println!("dev Matthews corr: {score:.2}");
+        footprints.push((variant_name, trainer.peak_residual_bytes));
+    }
+
+    let (base, rmm) = (footprints[0].1, footprints[1].1);
+    println!(
+        "\nstored activations: baseline {:.1} KiB -> rmm(rho=0.1) {:.1} KiB  ({:.1}% saved)",
+        base as f64 / 1024.0,
+        rmm as f64 / 1024.0,
+        100.0 * (1.0 - rmm as f64 / base as f64)
+    );
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Variance monitor (paper §3.3, Fig. 4/7): fine-tunes the probe variant
+//! and live-prints the paper's variance estimators at the probed layer —
+//! D²_SGD (Lemma 2.1), D²_RMM (Lemma 2.2), α, and both sides of
+//! Theorem 2.3's inequality — asserting the bound at every step.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example variance_monitor -- [steps]
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+use rmmlinear::config::TrainConfig;
+use rmmlinear::coordinator::Trainer;
+use rmmlinear::data::{Batcher, Split, Task, TaskGen, Tokenizer};
+use rmmlinear::runtime::{Engine, Manifest};
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let manifest = Manifest::load(Path::new("artifacts"))?;
+    let mut engine = Engine::cpu()?;
+    let variant = manifest.variant("probe_cls2_r50_gauss")?;
+    let cfg = TrainConfig { steps, warmup_steps: steps / 16, ..Default::default() };
+    let tok = Tokenizer::new(variant.config.vocab_size);
+    let mut trainer = Trainer::new(&manifest, variant, Task::Cola, cfg.clone())?;
+    let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, cfg.seed);
+
+    println!(
+        "probing FFN1 of block {} (rows={}, b_proj={})",
+        variant.config.probe_layer, variant.rows, variant.b_proj
+    );
+    println!(
+        "{:>5} {:>9} {:>13} {:>13} {:>9} {:>10} {:>10}",
+        "step", "loss", "d2_sgd", "d2_rmm", "alpha", "ratio_lhs", "bound_rhs"
+    );
+    let mut epoch = 0;
+    let mut batches = Batcher::new(&gen, Split::Train, variant.config.batch_size, 0);
+    let mut violations = 0;
+    for step in 0..steps {
+        let batch = match batches.next() {
+            Some(b) => b,
+            None => {
+                epoch += 1;
+                batches = Batcher::new(&gen, Split::Train, variant.config.batch_size, epoch);
+                batches.next().unwrap()
+            }
+        };
+        let s = trainer.train_step(&mut engine, &batch)?;
+        let p = s.probe.expect("probe variant must emit probe stats");
+        if p.ratio_lhs > p.bound_rhs * 1.001 {
+            violations += 1;
+        }
+        if step % (steps / 20).max(1) == 0 || step + 1 == steps {
+            println!(
+                "{:>5} {:>9.4} {:>13.4e} {:>13.4e} {:>9.4} {:>10.4} {:>10.2}",
+                step, s.loss, p.d2_sgd, p.d2_rmm, p.alpha, p.ratio_lhs, p.bound_rhs
+            );
+        }
+    }
+    println!("\nTheorem 2.3 bound violations: {violations}/{steps}");
+    assert_eq!(violations, 0, "the variance bound must hold empirically");
+    println!("OK: ratio stayed below (alpha+1)/alpha at every step");
+    Ok(())
+}

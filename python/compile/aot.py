@@ -1,0 +1,327 @@
+"""AOT compile path: lower every model variant to HLO text + manifest.
+
+Run once at build time (``make artifacts``); Python never appears on the
+training/request path.  For each variant (a ModelConfig + entry-point list)
+this emits::
+
+    artifacts/<variant>/fwd.hlo.txt     loss/logits/residuals
+    artifacts/<variant>/bwd.hlo.txt     grads (+ variance-probe scalars)
+    artifacts/<variant>/eval.hlo.txt    logits only
+    artifacts/init_<geom>.bin           raw-f32 initial parameters
+    artifacts/manifest.json             arg/output specs for the Rust runtime
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the xla crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+MANIFEST_VERSION = 2
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the only proto-safe route)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name: str, arr, role: str) -> Dict:
+    return {
+        "name": name,
+        "shape": list(arr.shape),
+        "dtype": str(arr.dtype),
+        "role": role,
+    }
+
+
+def example_inputs(cfg: M.ModelConfig):
+    """Zero-valued example args defining shapes/dtypes for lowering."""
+    tokens = jnp.zeros((cfg.batch_size, cfg.seq_len), jnp.int32)
+    mask = jnp.ones((cfg.batch_size, cfg.seq_len), jnp.float32)
+    labels = (jnp.zeros((cfg.batch_size,), jnp.float32) if cfg.regression
+              else jnp.zeros((cfg.batch_size,), jnp.int32))
+    seed = jnp.zeros((2,), jnp.uint32)
+    return tokens, mask, labels, seed
+
+
+def lower_entry(cfg: M.ModelConfig, entry: str):
+    """Returns (hlo_text, arg_specs, out_specs) for one entry point."""
+    pspec = M.param_spec(cfg)
+    params = [jnp.zeros(s, jnp.float32) for _, s in pspec]
+    tokens, mask, labels, seed = example_inputs(cfg)
+    res_names = M.residual_names(cfg)
+
+    if entry == "fwd":
+        fn = M.make_fwd(cfg)
+        args = [*params, tokens, mask, labels, seed]
+        arg_specs = ([_spec(n, p, "param") for (n, _), p in zip(pspec, params)]
+                     + [_spec("tokens", tokens, "tokens"),
+                        _spec("mask", mask, "mask"),
+                        _spec("labels", labels, "labels"),
+                        _spec("seed", seed, "seed")])
+        outs = jax.eval_shape(fn, *args)
+        out_names = ["loss", "logits"] + res_names
+        out_roles = ["metric", "logits"] + ["residual"] * len(res_names)
+    elif entry == "bwd":
+        fn = M.make_bwd(cfg)
+        res_shapes = _residual_shapes(cfg)
+        residuals = [jnp.zeros(s, d) for s, d in res_shapes]
+        args = [*params, tokens, mask, labels, seed, *residuals]
+        arg_specs = ([_spec(n, p, "param") for (n, _), p in zip(pspec, params)]
+                     + [_spec("tokens", tokens, "tokens"),
+                        _spec("mask", mask, "mask"),
+                        _spec("labels", labels, "labels"),
+                        _spec("seed", seed, "seed")]
+                     + [_spec(n, r, "residual")
+                        for n, r in zip(res_names, residuals)])
+        outs = jax.eval_shape(fn, *args)
+        out_names = [n for n, _ in pspec]
+        out_roles = ["grad"] * len(pspec)
+        if cfg.probe_layer >= 0:
+            out_names += list(M.PROBE_NAMES)
+            out_roles += ["probe"] * len(M.PROBE_NAMES)
+    elif entry == "eval":
+        fn = M.make_eval(cfg)
+        args = [*params, tokens, mask]
+        arg_specs = ([_spec(n, p, "param") for (n, _), p in zip(pspec, params)]
+                     + [_spec("tokens", tokens, "tokens"),
+                        _spec("mask", mask, "mask")])
+        outs = jax.eval_shape(fn, *args)
+        out_names = ["logits"]
+        out_roles = ["logits"]
+    else:
+        raise ValueError(entry)
+
+    out_specs = [_spec(n, o, r) for n, o, r in zip(out_names, outs, out_roles)]
+    # Unused-arg pinning: ρ=1.0 graphs ignore `seed`, eval ignores labels…
+    # jax's keep_unused keeps them in the MLIR signature, but the
+    # mlir→XlaComputation converter drops parameters with no uses, which
+    # would desynchronize the runtime's arg list from the manifest.  Fold a
+    # zero-valued dependency on every argument into the first (f32) output.
+    def pinned(*call_args):
+        outs = fn(*call_args)
+        ka = jnp.float32(0.0)
+        for a in call_args:
+            ka = ka + jnp.sum(jnp.ravel(a)[:1].astype(jnp.float32)) * jnp.float32(0.0)
+        return (outs[0] + ka, *outs[1:])
+
+    hlo = to_hlo_text(jax.jit(pinned, keep_unused=True).lower(*args))
+    return hlo, arg_specs, out_specs
+
+
+def _residual_shapes(cfg) -> List[Tuple[Tuple[int, ...], object]]:
+    tokens, mask, labels, seed = example_inputs(cfg)
+    params = {n: jnp.zeros(s, jnp.float32) for n, s in M.param_spec(cfg)}
+    fn = M.make_fwd(cfg)
+    names = [n for n, _ in M.param_spec(cfg)]
+    outs = jax.eval_shape(
+        fn, *[params[n] for n in names], tokens, mask, labels, seed
+    )
+    return [(o.shape, o.dtype) for o in outs[2:]]
+
+
+# ---------------------------------------------------------------------------
+# Variant sets
+# ---------------------------------------------------------------------------
+
+# The "small" geometry used across the experiment suite.  See DESIGN.md §2
+# for the RoBERTa→small-encoder substitution rationale (single CPU core).
+SMALL = dict(vocab_size=256, seq_len=32, batch_size=16, d_model=64,
+             n_heads=4, n_layers=2, d_ff=256)
+TINY = dict(vocab_size=64, seq_len=8, batch_size=4, d_model=16,
+            n_heads=2, n_layers=1, d_ff=32)
+
+HEADS = {
+    "cls2": dict(n_classes=2, regression=False),
+    "cls3": dict(n_classes=3, regression=False),
+    "reg": dict(n_classes=1, regression=True),
+}
+
+RHO_TAG = {1.0: "r100", 0.9: "r90", 0.5: "r50", 0.2: "r20", 0.1: "r10"}
+
+
+def rho_name(rho: float) -> str:
+    return RHO_TAG.get(rho, f"r{int(round(rho * 100)):03d}")
+
+
+def build_variants(which: str) -> Dict[str, Tuple[M.ModelConfig, List[str]]]:
+    """Variant name -> (config, entry list)."""
+    v: Dict[str, Tuple[M.ModelConfig, List[str]]] = {}
+
+    def add(name, cfg_kwargs, entries):
+        cfg = M.ModelConfig(**cfg_kwargs)
+        cfg.validate()
+        v[name] = (cfg, entries)
+
+    if which == "quick":
+        add("tiny_cls2_r100_gauss", dict(**TINY, **HEADS["cls2"], rho=1.0),
+            ["fwd", "bwd", "eval"])
+        add("tiny_cls2_r50_gauss", dict(**TINY, **HEADS["cls2"], rho=0.5),
+            ["fwd", "bwd", "eval"])
+        add("tinyk_cls2_r50_gauss",
+            dict(**TINY, **HEADS["cls2"], rho=0.5, use_kernels=True),
+            ["fwd", "bwd"])
+        return v
+
+    # 1. Table 2 / Fig 5 / Fig 6: gauss sweep over ρ for each head type.
+    for head, hk in HEADS.items():
+        for rho in (1.0, 0.9, 0.5, 0.2, 0.1):
+            add(f"small_{head}_{rho_name(rho)}_gauss",
+                dict(**SMALL, **hk, rho=rho, sketch="gauss"),
+                ["fwd", "bwd", "eval"])
+
+    # 2. Table 4: sketch-family comparison on the CoLA-like (cls2) task.
+    for kind in ("rademacher", "dct", "dft", "rowsample"):
+        for rho in (0.5, 0.2, 0.1):
+            add(f"small_cls2_{rho_name(rho)}_{kind}",
+                dict(**SMALL, **HEADS["cls2"], rho=rho, sketch=kind),
+                ["fwd", "bwd", "eval"])
+
+    # 3. Fig 4/7: variance probe (block 1 FFN, ρ=0.5, gauss).
+    add("probe_cls2_r50_gauss",
+        dict(**SMALL, **HEADS["cls2"], rho=0.5, sketch="gauss", probe_layer=1),
+        ["fwd", "bwd"])
+
+    # 4. Table 3 / Fig 3 / Fig 8: batch-size sweep (B=16 reuses set 1).
+    for bsz in (8, 32, 64):
+        for rho in (1.0, 0.5, 0.2, 0.1):
+            add(f"small_cls2_b{bsz}_{rho_name(rho)}_gauss",
+                dict(**{**SMALL, "batch_size": bsz}, **HEADS["cls2"],
+                     rho=rho, sketch="gauss"),
+                ["fwd", "bwd"])
+
+    # 5. Kernel-path validation: full Pallas pipeline through PJRT (tiny —
+    #    interpret-mode lowering is bulky, so keep the geometry minimal).
+    add("tinyk_cls2_r50_gauss",
+        dict(**TINY, **HEADS["cls2"], rho=0.5, sketch="gauss",
+             use_kernels=True),
+        ["fwd", "bwd"])
+    add("tiny_cls2_r50_gauss",
+        dict(**TINY, **HEADS["cls2"], rho=0.5, sketch="gauss"),
+        ["fwd", "bwd", "eval"])
+    add("tiny_cls2_r100_gauss",
+        dict(**TINY, **HEADS["cls2"], rho=1.0, sketch="gauss"),
+        ["fwd", "bwd", "eval"])
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Init params
+# ---------------------------------------------------------------------------
+
+
+def geometry_key(cfg: M.ModelConfig) -> str:
+    """Geometry hash — variants sharing it share initial parameters."""
+    geom = (cfg.vocab_size, cfg.seq_len, cfg.d_model, cfg.n_heads,
+            cfg.n_layers, cfg.d_ff, cfg.n_classes, cfg.regression)
+    return hashlib.sha1(repr(geom).encode()).hexdigest()[:10]
+
+
+def write_init(cfg: M.ModelConfig, out_dir: str, seed: int = 0) -> str:
+    key = geometry_key(cfg)
+    fname = f"init_{key}.bin"
+    path = os.path.join(out_dir, fname)
+    if not os.path.exists(path):
+        params = M.init_params(cfg, seed)
+        with open(path, "wb") as f:
+            for name, _ in M.param_spec(cfg):
+                f.write(np.ascontiguousarray(params[name]).tobytes())
+    return fname
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", dest="which", default="default",
+                    choices=["default", "quick"])
+    ap.add_argument("--force", action="store_true",
+                    help="rebuild even if the manifest is up to date")
+    args = ap.parse_args(argv)
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+
+    variants = build_variants(args.which)
+    stamp = {"version": MANIFEST_VERSION, "set": args.which,
+             "variants": sorted(variants)}
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if (old.get("version") == MANIFEST_VERSION
+                    and old.get("set") == args.which
+                    and sorted(old.get("variants", {})) == stamp["variants"]):
+                print(f"manifest up to date ({len(variants)} variants); "
+                      "use --force to rebuild")
+                return 0
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    manifest = {"version": MANIFEST_VERSION, "set": args.which,
+                "variants": {}}
+    t_all = time.time()
+    for name, (cfg, entries) in sorted(variants.items()):
+        vdir = os.path.join(out_dir, name)
+        os.makedirs(vdir, exist_ok=True)
+        ventry = {}
+        for entry in entries:
+            t0 = time.time()
+            hlo, arg_specs, out_specs = lower_entry(cfg, entry)
+            rel = f"{name}/{entry}.hlo.txt"
+            with open(os.path.join(out_dir, rel), "w") as f:
+                f.write(hlo)
+            ventry[entry] = {"file": rel, "args": arg_specs,
+                             "outputs": out_specs}
+            print(f"  {rel:46s} {len(hlo)/1e6:6.2f} MB  "
+                  f"{time.time()-t0:5.1f}s", flush=True)
+        init_file = write_init(cfg, out_dir)
+        manifest["variants"][name] = {
+            "config": dataclasses.asdict(cfg),
+            "rows": cfg.rows,
+            "b_proj": cfg.b_proj,
+            "init_params": init_file,
+            "param_count": int(sum(
+                int(np.prod(s)) for _, s in M.param_spec(cfg))),
+            "entries": ventry,
+        }
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {manifest_path}: {len(variants)} variants "
+          f"in {time.time()-t_all:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

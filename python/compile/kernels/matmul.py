@@ -1,0 +1,67 @@
+"""Tiled Pallas matmul — the MXU-shaped baseline contraction.
+
+Used for the linear-layer forward (X Wᵀ) and the second half of the RMM
+backward ((Sᵀ Y)ᵀ · X_proj).  Grid is (M-tiles, N-tiles, K-tiles) with the
+K axis innermost so each output block stays resident in VMEM across the
+whole accumulation (one (tm, tn) f32 accumulator + one (tm, tk) and one
+(tk, tn) operand tile ⇒ VMEM footprint 3·128·128·4 B = 192 KiB at default
+tiles, well under a TPU core's ~16 MiB VMEM with headroom for
+double-buffering).
+
+Always lowered with ``interpret=True``: CPU PJRT cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO (see
+DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import tiling
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "tile_k"))
+def matmul(a, b, *, tile_m=None, tile_n=None, tile_k=None):
+    """C = A @ B for f32 A:(M,K), B:(K,N) via a tiled Pallas kernel."""
+    m, ka = a.shape
+    kb, n = b.shape
+    assert ka == kb, f"inner dims mismatch: {a.shape} @ {b.shape}"
+    tm = tile_m or tiling.pick_tile(m)
+    tn = tile_n or tiling.pick_tile(n)
+    tk = tile_k or tiling.pick_tile(ka)
+
+    a_p = tiling.pad_to(tiling.pad_to(a, 0, tm), 1, tk)
+    b_p = tiling.pad_to(tiling.pad_to(b, 0, tk), 1, tn)
+    grid = (
+        tiling.grid_dim(a_p.shape[0], tm),
+        tiling.grid_dim(b_p.shape[1], tn),
+        tiling.grid_dim(a_p.shape[1], tk),
+    )
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tk, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a_p.shape[0], b_p.shape[1]), jnp.float32),
+        interpret=True,
+    )(a_p, b_p)
+    return out[:m, :n]

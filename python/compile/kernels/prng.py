@@ -1,0 +1,144 @@
+"""Counter-based PRNG (Philox4x32-10) in pure jnp integer ops.
+
+This is the "PRNG state" of the paper made concrete: the sketching matrix S
+is never stored — every element S[i, j] is a pure function of
+(seed, i, j, stream), so S can be rematerialized tile-by-tile inside a
+Pallas kernel (forward pass) and again in the backward pass, bit-identically,
+with O(1) state (the two 32-bit seed words).
+
+Implemented with 16-bit-split multiplies so it works under JAX's default
+32-bit mode (no uint64), and therefore also inside Pallas kernel bodies in
+interpret mode.  The same algorithm is mirrored in ``rust/src/rng/philox.rs``
+and pinned by the Random123 reference test vectors on both sides.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Philox4x32 round constants (Salmon et al., "Parallel Random Numbers: As
+# Easy as 1, 2, 3", SC'11).
+PHILOX_M0 = 0xD2511F53
+PHILOX_M1 = 0xCD9E8D57
+PHILOX_W0 = 0x9E3779B9
+PHILOX_W1 = 0xBB67AE85
+
+# Stream tags: disjoint Philox streams per use so sketches, row selections
+# and sign flips never collide even under the same seed.
+STREAM_SKETCH = 0  # dense sketch entries (gauss / rademacher)
+STREAM_ROWSEL = 1  # SORS / row-sample row selection
+STREAM_SIGNS = 2  # SORS random sign flips
+STREAM_DATA = 3  # reserved (host-side data generation uses rust philox)
+
+
+def _u32(x):
+    return jnp.asarray(x, jnp.uint32)
+
+
+def mulhilo32(a, b):
+    """(hi, lo) 32-bit halves of the 64-bit product a*b, using u32 ops only.
+
+    JAX runs in 32-bit mode by default (no uint64), so the 64-bit product is
+    assembled from 16-bit limbs.  All intermediate products of 16-bit limbs
+    fit in uint32; carries are recovered from wrap-around comparisons.
+    """
+    a = _u32(a)
+    b = _u32(b)
+    a_lo = a & 0xFFFF
+    a_hi = a >> 16
+    b_lo = b & 0xFFFF
+    b_hi = b >> 16
+
+    t = a_lo * b_lo
+    m1 = a_hi * b_lo
+    m2 = a_lo * b_hi
+    mid = m1 + m2
+    carry_mid = (mid < m1).astype(jnp.uint32)  # wrapped?
+
+    lo = t + (mid << 16)
+    carry_lo = (lo < t).astype(jnp.uint32)
+
+    hi = a_hi * b_hi + (mid >> 16) + (carry_mid << 16) + carry_lo
+    return hi, lo
+
+
+def philox4x32(c0, c1, c2, c3, k0, k1, rounds: int = 10):
+    """Philox4x32 block cipher: counter (c0..c3), key (k0, k1) -> 4 u32.
+
+    All arguments broadcast elementwise, so this evaluates a whole tile of
+    counters in one call (vectorized over arbitrary shapes).
+    """
+    c0, c1, c2, c3 = _u32(c0), _u32(c1), _u32(c2), _u32(c3)
+    k0, k1 = _u32(k0), _u32(k1)
+    m0 = _u32(PHILOX_M0)
+    m1 = _u32(PHILOX_M1)
+    w0 = _u32(PHILOX_W0)
+    w1 = _u32(PHILOX_W1)
+    for r in range(rounds):
+        hi0, lo0 = mulhilo32(m0, c0)
+        hi1, lo1 = mulhilo32(m1, c2)
+        c0, c1, c2, c3 = hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+        if r != rounds - 1:
+            k0 = k0 + w0
+            k1 = k1 + w1
+    return c0, c1, c2, c3
+
+
+def uniform01(bits):
+    """u32 -> f32 uniform in the open interval (0, 1).
+
+    Uses the top 24 bits plus a half-ulp offset so the result is never 0
+    (safe for log in Box-Muller) and never 1.
+    """
+    bits = _u32(bits)
+    return ((bits >> 8).astype(jnp.float32) + 0.5) * jnp.float32(1.0 / (1 << 24))
+
+
+def normal_pair(a, b):
+    """Box-Muller: two u32 words -> two standard normals (f32)."""
+    u1 = uniform01(a)
+    u2 = uniform01(b)
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    theta = jnp.float32(2.0 * 3.14159265358979323846) * u2
+    return r * jnp.cos(theta), r * jnp.sin(theta)
+
+
+def element_normal(i, j, seed_lo, seed_hi, stream=STREAM_SKETCH):
+    """Standard-normal draw for logical element (i, j) of a sketch matrix.
+
+    The counter encodes (i, j, stream); the key is the 64-bit seed.  This is
+    position-stable: padding a tile or evaluating elements in any order and
+    grouping yields identical values.
+
+    §Perf note: a pair-mapped variant (one Philox block feeding the
+    (even, odd) column pair via `where`-selects) was tried and reverted —
+    it cut the host path 16% but slowed the *lowered graph* 54% because the
+    elementwise formulation still evaluates a full block per element and
+    adds the selects (EXPERIMENTS.md §Perf iteration 1).
+    """
+    c0, c1, c2, c3 = philox4x32(i, j, _u32(stream), _u32(0), seed_lo, seed_hi)
+    z0, _ = normal_pair(c0, c1)
+    return z0
+
+
+def element_rademacher(i, j, seed_lo, seed_hi, stream=STREAM_SKETCH):
+    """±1 draw for logical element (i, j)."""
+    c0, _, _, _ = philox4x32(i, j, _u32(stream), _u32(0), seed_lo, seed_hi)
+    return jnp.where((c0 & 1) == 1, jnp.float32(1.0), jnp.float32(-1.0))
+
+
+def element_uniform_int(i, j, seed_lo, seed_hi, bound, stream=STREAM_ROWSEL):
+    """Uniform int in [0, bound) for logical element (i, j).
+
+    Uses the multiply-shift trick (bits * bound) >> 32 via mulhilo32 so no
+    modulo bias larger than bound/2^32 is introduced.
+    """
+    c0, _, _, _ = philox4x32(i, j, _u32(stream), _u32(0), seed_lo, seed_hi)
+    hi, _ = mulhilo32(c0, _u32(bound))
+    return hi.astype(jnp.int32)
+
+
+def split_seed(seed):
+    """Split a python/int64-ish seed into (lo, hi) u32 words."""
+    seed = int(seed) & 0xFFFFFFFFFFFFFFFF
+    return seed & 0xFFFFFFFF, (seed >> 32) & 0xFFFFFFFF

@@ -1,0 +1,114 @@
+"""Fused seeded-projection Pallas kernel: X_proj = Sᵀ X with S generated
+on the fly.
+
+This is the paper's Algorithm 1 made literal at the kernel level: the
+sketching matrix S ∈ R^{B×B_proj} is *never materialized in HBM*.  Each
+grid step generates one (tile_b × tile_bp) tile of S inside VMEM from the
+Philox counter PRNG keyed by (seed, logical_row, logical_col) and
+immediately contracts it against the matching X tile.  The backward pass
+calls the same kernel with the same seed on Y = ∂L/∂X̂, reproducing S
+bit-identically — the "random state" the paper stores is our two 32-bit
+seed words.
+
+VMEM per grid step at default 128-tiles: S tile (64 KiB) + X tile (64 KiB)
++ f32 accumulator (64 KiB) = 192 KiB.  The S-tile generation is ~40 integer
+VPU ops/element (10 Philox rounds) fused ahead of an MXU contraction — on
+real TPU this pipelines with the dot; in interpret mode it lowers to plain
+HLO (the only mode CPU PJRT can run — see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import prng, tiling
+
+
+def _sketch_tile(rows, cols, seed_lo, seed_hi, b_proj, kind):
+    """One (tile_b, tile_bp) tile of S from logical element indices."""
+    if kind == "gauss":
+        z = prng.element_normal(rows, cols, seed_lo, seed_hi)
+    elif kind == "rademacher":
+        z = prng.element_rademacher(rows, cols, seed_lo, seed_hi)
+    else:
+        raise ValueError(f"dense sketch kind {kind!r} not supported here")
+    return z * jnp.float32(1.0 / math.sqrt(b_proj))
+
+
+def _project_kernel(seed_ref, x_ref, o_ref, *, tile_b, tile_bp, b_proj, kind):
+    i = pl.program_id(0)  # B_proj tile index
+    k = pl.program_id(2)  # B tile index (reduction axis)
+
+    rows = (k * tile_b + jax.lax.broadcasted_iota(jnp.int32, (tile_b, tile_bp), 0)).astype(
+        jnp.uint32
+    )
+    cols = (i * tile_bp + jax.lax.broadcasted_iota(jnp.int32, (tile_b, tile_bp), 1)).astype(
+        jnp.uint32
+    )
+    s = _sketch_tile(rows, cols, seed_ref[0], seed_ref[1], b_proj, kind)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (tile_bp, tile_b) @ (tile_b, tile_n) — padded X rows are zero, so
+    # sketch values generated for out-of-range rows contribute nothing.
+    o_ref[...] += jnp.dot(s.T, x_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("b_proj", "kind", "tile_b", "tile_bp", "tile_n"),
+)
+def project(x, seed, b_proj, kind="gauss", *, tile_b=None, tile_bp=None, tile_n=None):
+    """X_proj = Sᵀ X for X:(B, N) → (b_proj, N), S rematerialized from seed.
+
+    ``seed`` is a (2,) uint32 array (lo, hi).  Matches
+    ``ref.project(x, lo, hi, b_proj, kind)`` exactly for gauss/rademacher.
+    """
+    b, n = x.shape
+    tb = tile_b or tiling.pick_tile(b)
+    tbp = tile_bp or tiling.pick_tile(b_proj)
+    tn = tile_n or tiling.pick_tile(n)
+
+    x_p = tiling.pad_to(tiling.pad_to(x, 0, tb), 1, tn)
+    bp_pad = ((b_proj + tbp - 1) // tbp) * tbp
+    grid = (
+        bp_pad // tbp,
+        tiling.grid_dim(x_p.shape[1], tn),
+        tiling.grid_dim(x_p.shape[0], tb),
+    )
+    kernel = functools.partial(
+        _project_kernel, tile_b=tb, tile_bp=tbp, b_proj=b_proj, kind=kind
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i, j, k: (0,)),
+            pl.BlockSpec((tb, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tbp, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp_pad, x_p.shape[1]), jnp.float32),
+        interpret=True,
+    )(jnp.asarray(seed, jnp.uint32), x_p)
+    return out[:b_proj, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("kind",))
+def rmm_grad_w(y, x_proj, seed, kind="gauss"):
+    """∂L/∂W ≈ (Sᵀ Y)ᵀ X_proj (paper eq. 4), fully kernel-backed.
+
+    Reuses the fused projection (identical seed ⇒ identical S) followed by
+    the tiled matmul kernel.
+    """
+    from . import matmul as mm
+
+    b_proj = x_proj.shape[0]
+    y_proj = project(y, seed, b_proj, kind)  # (B_proj, N_out)
+    return mm.matmul(y_proj.T, x_proj)  # (N_out, N_in)

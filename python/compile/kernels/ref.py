@@ -1,0 +1,252 @@
+"""Pure-jnp oracles for every Pallas kernel and sketch family.
+
+These are the CORE correctness signal: each kernel in this package must
+match its oracle here to float32 tolerance (pytest + hypothesis sweeps),
+and the L2 model's randomized backward is defined in terms of these
+semantics.  Everything is a deterministic function of (seed, shapes), so
+the oracle, the kernel, and the Rust reference implementation
+(``rust/src/rmm/``) can be cross-checked bit-for-bit at the PRNG level and
+to ~1e-5 at the float level.
+
+Sketch families (all satisfy E[S Sᵀ] = I_B for S ∈ R^{B×B_proj}):
+
+* ``gauss``       — S = P / sqrt(B_proj), P_ij ~ N(0, 1) iid (paper eq. 5)
+* ``rademacher``  — S = R / sqrt(B_proj), R_ij ~ ±1 iid
+* ``dct`` / ``dft`` — SORS-style: S = sqrt(B/B_proj) · D Hᵀ R with H an
+  orthonormal transform (DCT-II or real DFT), D random signs, R a uniform
+  column-sampling matrix (paper §3.5, Iwen et al. 2021)
+* ``rowsample``   — S = sqrt(B/B_proj) · R, uniform row sampling with
+  replacement (the memory-compatible cousin of Adelman et al. 2021's
+  norm-based sampling, which needs ‖y_k‖ and hence cannot precompute SᵀX)
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import prng
+
+SKETCH_KINDS = ("gauss", "rademacher", "dct", "dft", "rowsample")
+
+
+# ---------------------------------------------------------------------------
+# Dense sketch entries (gauss / rademacher)
+# ---------------------------------------------------------------------------
+
+
+def gauss_sketch(b, b_proj, seed_lo, seed_hi):
+    """S[i, j] = N(0,1)(seed, i, j) / sqrt(b_proj), shape (b, b_proj)."""
+    i = jnp.arange(b, dtype=jnp.uint32)[:, None]
+    j = jnp.arange(b_proj, dtype=jnp.uint32)[None, :]
+    z = prng.element_normal(i, j, seed_lo, seed_hi)
+    return z / jnp.float32(math.sqrt(b_proj))
+
+
+def rademacher_sketch(b, b_proj, seed_lo, seed_hi):
+    """S[i, j] = ±1 / sqrt(b_proj), shape (b, b_proj)."""
+    i = jnp.arange(b, dtype=jnp.uint32)[:, None]
+    j = jnp.arange(b_proj, dtype=jnp.uint32)[None, :]
+    z = prng.element_rademacher(i, j, seed_lo, seed_hi)
+    return z / jnp.float32(math.sqrt(b_proj))
+
+
+# ---------------------------------------------------------------------------
+# Structured transforms (orthonormal, defined by closed-form entries so a
+# kernel can generate any tile without materializing the full matrix)
+# ---------------------------------------------------------------------------
+
+
+def dct_entry(k, i, b):
+    """Orthonormal DCT-II matrix entry H[k, i] for an order-b transform."""
+    kf = jnp.asarray(k, jnp.float32)
+    i_f = jnp.asarray(i, jnp.float32)
+    bf = jnp.float32(b)
+    scale = jnp.where(
+        jnp.asarray(k) == 0, jnp.float32(1.0 / math.sqrt(2.0)), jnp.float32(1.0)
+    )
+    return (
+        scale
+        * jnp.float32(math.sqrt(2.0 / b))
+        * jnp.cos(jnp.float32(math.pi) * (2.0 * i_f + 1.0) * kf / (2.0 * bf))
+    )
+
+
+def dft_entry(k, i, b):
+    """Orthonormal *real* DFT matrix entry H[k, i] for an order-b transform.
+
+    Row layout (b even): row 0 = 1/sqrt(b); odd rows k=2m−1 are cosine rows
+    with frequency m; even rows k=2m are sine rows with frequency m; the
+    last row (k=b−1, b even) is the Nyquist row (−1)^i / sqrt(b).
+    """
+    k = jnp.asarray(k)
+    i = jnp.asarray(i)
+    kf = k.astype(jnp.float32)
+    i_f = i.astype(jnp.float32)
+    bf = jnp.float32(b)
+    m = jnp.floor((kf + 1.0) / 2.0)
+    ang = jnp.float32(2.0 * math.pi) * m * i_f / bf
+    is_cos = (k % 2) == 1
+    base = jnp.where(is_cos, jnp.cos(ang), jnp.sin(ang)) * jnp.float32(
+        math.sqrt(2.0 / b)
+    )
+    dc = jnp.float32(1.0 / math.sqrt(b)) * jnp.ones_like(base)
+    nyq = jnp.where((i % 2) == 0, jnp.float32(1.0), jnp.float32(-1.0)) * jnp.float32(
+        1.0 / math.sqrt(b)
+    )
+    out = jnp.where(k == 0, dc, base)
+    if b % 2 == 0:
+        out = jnp.where(k == b - 1, nyq, out)
+    return out
+
+
+def transform_matrix(kind, b):
+    """Full b×b orthonormal transform matrix H (oracle only)."""
+    k = jnp.arange(b, dtype=jnp.int32)[:, None]
+    i = jnp.arange(b, dtype=jnp.int32)[None, :]
+    if kind == "dct":
+        return dct_entry(k, i, b)
+    if kind == "dft":
+        return dft_entry(k, i, b)
+    raise ValueError(f"unknown transform {kind!r}")
+
+
+def row_selection(b, b_proj, seed_lo, seed_hi):
+    """b_proj uniform row indices in [0, b), with replacement."""
+    j = jnp.arange(b_proj, dtype=jnp.uint32)
+    return prng.element_uniform_int(jnp.uint32(0), j, seed_lo, seed_hi, b)
+
+
+def sign_flips(b, seed_lo, seed_hi):
+    """Random ±1 per input position (the D matrix of SORS)."""
+    i = jnp.arange(b, dtype=jnp.uint32)
+    return prng.element_rademacher(
+        jnp.uint32(0), i, seed_lo, seed_hi, prng.STREAM_SIGNS
+    )
+
+
+def sors_sketch(kind, b, b_proj, seed_lo, seed_hi):
+    """S = sqrt(b/b_proj) · D Hᵀ R as a dense (b, b_proj) matrix (oracle)."""
+    h = transform_matrix(kind, b)  # (b, b)
+    sel = row_selection(b, b_proj, seed_lo, seed_hi)  # (b_proj,)
+    d = sign_flips(b, seed_lo, seed_hi)  # (b,)
+    # Column j of S is sqrt(b/b_proj) · D · H[sel_j, :]ᵀ
+    s = h[sel, :].T * d[:, None]
+    return s * jnp.float32(math.sqrt(b / b_proj))
+
+
+def rowsample_sketch(b, b_proj, seed_lo, seed_hi):
+    """S = sqrt(b/b_proj) · R: column j is e_{sel_j} (uniform, replacement)."""
+    sel = row_selection(b, b_proj, seed_lo, seed_hi)
+    s = jnp.zeros((b, b_proj), jnp.float32).at[sel, jnp.arange(b_proj)].set(1.0)
+    return s * jnp.float32(math.sqrt(b / b_proj))
+
+
+def sketch(kind, b, b_proj, seed_lo, seed_hi):
+    """Dense sketch matrix S ∈ R^{b×b_proj} (oracle for all kernel paths)."""
+    if kind == "gauss":
+        return gauss_sketch(b, b_proj, seed_lo, seed_hi)
+    if kind == "rademacher":
+        return rademacher_sketch(b, b_proj, seed_lo, seed_hi)
+    if kind in ("dct", "dft"):
+        return sors_sketch(kind, b, b_proj, seed_lo, seed_hi)
+    if kind == "rowsample":
+        return rowsample_sketch(b, b_proj, seed_lo, seed_hi)
+    raise ValueError(f"unknown sketch kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Oracles for the kernels
+# ---------------------------------------------------------------------------
+
+
+def matmul(a, b):
+    """Plain f32 matmul oracle."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def project(x, seed_lo, seed_hi, b_proj, kind="gauss"):
+    """X_proj = Sᵀ X — what the forward pass stores instead of X."""
+    b = x.shape[0]
+    s = sketch(kind, b, b_proj, seed_lo, seed_hi)
+    return jnp.dot(s.T, x, preferred_element_type=jnp.float32)
+
+
+def rmm_grad_w(y, x_proj, seed_lo, seed_hi, kind="gauss"):
+    """∂L/∂W estimate = (Yᵀ S) X_proj = (Sᵀ Y)ᵀ X_proj  (paper eq. 4).
+
+    y: (B, N_out) upstream gradient; x_proj: (B_proj, N_in) stored sketch.
+    Returns (N_out, N_in).
+    """
+    b_proj = x_proj.shape[0]
+    y_proj = project(y, seed_lo, seed_hi, b_proj, kind)  # (B_proj, N_out)
+    return jnp.dot(y_proj.T, x_proj, preferred_element_type=jnp.float32)
+
+
+def exact_grad_w(y, x):
+    """Exact ∂L/∂W = Yᵀ X (the no-RMM baseline, paper eq. 3)."""
+    return jnp.dot(y.T, x, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Variance estimators (paper eqs. 9, 11, 13) — also mirrored in rust/rmm
+# ---------------------------------------------------------------------------
+
+
+def d2_sgd(x, y):
+    """Lemma 2.1: aposteriori SGD variance estimate (eq. 9)."""
+    b = x.shape[0]
+    row = jnp.sum(x * x, axis=1) * jnp.sum(y * y, axis=1)
+    xty = jnp.dot(x.T, y, preferred_element_type=jnp.float32)
+    fro2 = jnp.sum(xty * xty)
+    return (b / (b - 1.0)) * jnp.sum(row) - fro2 / (b - 1.0)
+
+
+def d2_rmm(x, y, b_proj):
+    """Lemma 2.2: apriori RMM variance — *as stated in the paper* (eq. 11).
+
+    Soundness note (see EXPERIMENTS.md §Discrepancies): the paper's proof
+    drops the Gaussian fourth-moment excess in eq. (36); the exact variance
+    is :func:`d2_rmm_exact` (same expression with +‖XᵀY‖² instead of −).
+    The two agree to O(α) and α ≪ 1 throughout training, so the paper's
+    empirical figures are unaffected; we keep this form to reproduce
+    Fig. 4/7 and pin the exact form against Monte-Carlo in the tests.
+    """
+    xf2 = jnp.sum(x * x)
+    yf2 = jnp.sum(y * y)
+    xty = jnp.dot(x.T, y, preferred_element_type=jnp.float32)
+    fro2 = jnp.sum(xty * xty)
+    return (xf2 * yf2 - fro2) / b_proj
+
+
+def d2_rmm_exact(x, y, b_proj):
+    """Exact Gaussian-sketch variance: (‖X‖²‖Y‖² + ‖XᵀY‖²)/B_proj."""
+    xf2 = jnp.sum(x * x)
+    yf2 = jnp.sum(y * y)
+    xty = jnp.dot(x.T, y, preferred_element_type=jnp.float32)
+    fro2 = jnp.sum(xty * xty)
+    return (xf2 * yf2 + fro2) / b_proj
+
+
+def alpha(x, y):
+    """Correlation ratio α = ‖XᵀY‖²_F / (‖X‖²_F ‖Y‖²_F)  (eq. 13)."""
+    xty = jnp.dot(x.T, y, preferred_element_type=jnp.float32)
+    num = jnp.sum(xty * xty)
+    den = jnp.sum(x * x) * jnp.sum(y * y)
+    return num / jnp.maximum(den, jnp.float32(1e-30))
+
+
+def variance_ratio_lhs(x, y, b_proj):
+    """LHS of Theorem 2.3 inequality (eq. 12)."""
+    b = x.shape[0]
+    return (b_proj / (b - 1.0)) * d2_rmm(x, y, b_proj) / jnp.maximum(
+        d2_sgd(x, y), jnp.float32(1e-30)
+    )
+
+
+def numpy_sketch(kind, b, b_proj, seed):
+    """Convenience: dense sketch as numpy (used by Monte-Carlo tests)."""
+    lo, hi = prng.split_seed(seed)
+    return np.asarray(sketch(kind, b, b_proj, lo, hi))

@@ -1,0 +1,40 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+TPU-oriented block policy: the MXU consumes 128×128 tiles, so blocks default
+to 128 on every axis and shrink (to the next multiple of 8, floor 8) when
+the logical dimension is smaller.  Inputs are zero-padded up to the block
+grid; outputs are sliced back to logical shape.  Zero padding is safe for
+every kernel here because (a) matmul/projection contributions from padded
+rows are exactly zero and (b) sketch-entry generation is keyed on *logical*
+(row, col) indices, so padding never shifts the random stream.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+MXU_TILE = 128
+MIN_TILE = 8
+
+
+def pick_tile(dim: int, preferred: int = MXU_TILE) -> int:
+    """Largest "nice" tile ≤ preferred that keeps padding small."""
+    if dim >= preferred:
+        return preferred
+    # round dim up to a multiple of MIN_TILE
+    return max(MIN_TILE, ((dim + MIN_TILE - 1) // MIN_TILE) * MIN_TILE)
+
+
+def pad_to(x, axis: int, multiple: int):
+    """Zero-pad ``x`` along ``axis`` to the next multiple of ``multiple``."""
+    dim = x.shape[axis]
+    rem = (-dim) % multiple
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths)
+
+
+def grid_dim(dim: int, tile: int) -> int:
+    return (dim + tile - 1) // tile

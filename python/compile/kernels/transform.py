@@ -1,0 +1,137 @@
+"""Structured-sketch Pallas kernel: SORS projection with DCT-II / real-DFT.
+
+X_proj = Sᵀ X with S = sqrt(B/B_proj) · D Hᵀ R (paper §3.5):
+  D — diagonal of random signs (Philox stream SIGNS),
+  H — orthonormal transform with *closed-form entries* (DCT-II or real DFT),
+  R — uniform row selection with replacement (Philox stream ROWSEL).
+
+Hardware adaptation (DESIGN.md §3): on GPU the fast transform is a butterfly
+network over warp shuffles; that idiom has no TPU equivalent.  Instead the
+transform is expressed as a structured matmul whose tiles are *generated
+from the closed-form entry formula in VMEM* — same O(1) memory for S, and
+the contraction runs on the MXU.  The asymptotic O(B log B) fast path is
+exercised by the Rust radix-2 FFT substrate (``rust/src/rmm/fft.rs``) and
+its crossover bench.
+
+The selected row indices (B_proj ints) are generated *inside* the kernel
+from the seed, so — like the dense sketches — nothing but the seed crosses
+the forward/backward boundary.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import prng, tiling
+
+
+def _dct_tile(sel, pos, b):
+    """H[sel, pos] tile for orthonormal DCT-II of order b."""
+    kf = sel.astype(jnp.float32)
+    i_f = pos.astype(jnp.float32)
+    scale = jnp.where(sel == 0, jnp.float32(1.0 / math.sqrt(2.0)), jnp.float32(1.0))
+    return (
+        scale
+        * jnp.float32(math.sqrt(2.0 / b))
+        * jnp.cos(jnp.float32(math.pi) * (2.0 * i_f + 1.0) * kf / jnp.float32(2.0 * b))
+    )
+
+
+def _dft_tile(sel, pos, b):
+    """H[sel, pos] tile for the orthonormal real DFT of order b."""
+    kf = sel.astype(jnp.float32)
+    i_f = pos.astype(jnp.float32)
+    m = jnp.floor((kf + 1.0) / 2.0)
+    ang = jnp.float32(2.0 * math.pi) * m * i_f / jnp.float32(b)
+    is_cos = (sel % 2) == 1
+    base = jnp.where(is_cos, jnp.cos(ang), jnp.sin(ang)) * jnp.float32(
+        math.sqrt(2.0 / b)
+    )
+    dc = jnp.float32(1.0 / math.sqrt(b)) * jnp.ones_like(base)
+    nyq = jnp.where((pos % 2) == 0, jnp.float32(1.0), jnp.float32(-1.0)) * jnp.float32(
+        1.0 / math.sqrt(b)
+    )
+    out = jnp.where(sel == 0, dc, base)
+    if b % 2 == 0:
+        out = jnp.where(sel == b - 1, nyq, out)
+    return out
+
+
+def _sors_kernel(seed_ref, x_ref, o_ref, *, tile_b, tile_bp, b, b_proj, kind):
+    i = pl.program_id(0)  # B_proj tile
+    k = pl.program_id(2)  # B tile (reduction)
+    seed_lo = seed_ref[0]
+    seed_hi = seed_ref[1]
+
+    # Selected frequency indices for this output tile, regenerated from the
+    # seed (stream ROWSEL): sel[j] = uniform_int(0, j_logical; b).
+    j_log = (i * tile_bp + jax.lax.iota(jnp.int32, tile_bp)).astype(jnp.uint32)
+    sel = prng.element_uniform_int(jnp.uint32(0), j_log, seed_lo, seed_hi, b)
+
+    # Input positions covered by this reduction tile + their random signs
+    # (stream SIGNS).
+    pos = (k * tile_b + jax.lax.iota(jnp.int32, tile_b)).astype(jnp.int32)
+    signs = prng.element_rademacher(
+        jnp.uint32(0), pos.astype(jnp.uint32), seed_lo, seed_hi, prng.STREAM_SIGNS
+    )
+
+    sel2 = sel[:, None]  # (tile_bp, 1)
+    pos2 = pos[None, :]  # (1, tile_b)
+    if kind == "dct":
+        h = _dct_tile(sel2, pos2, b)
+    elif kind == "dft":
+        h = _dft_tile(sel2, pos2, b)
+    else:
+        raise ValueError(f"unknown transform {kind!r}")
+
+    # Sᵀ tile = sqrt(b/b_proj) · H[sel, pos] · sign(pos); padded X rows are
+    # zero so out-of-range positions contribute nothing, and padded output
+    # rows are sliced off by the wrapper.
+    st = h * signs[None, :] * jnp.float32(math.sqrt(b / b_proj))
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(st, x_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("b_proj", "kind", "tile_b", "tile_bp", "tile_n")
+)
+def sors_project(
+    x, seed, b_proj, kind="dct", *, tile_b=None, tile_bp=None, tile_n=None
+):
+    """X_proj = Sᵀ X for the SORS sketch; matches ``ref.project(..., kind)``."""
+    b, n = x.shape
+    tb = tile_b or tiling.pick_tile(b)
+    tbp = tile_bp or tiling.pick_tile(b_proj)
+    tn = tile_n or tiling.pick_tile(n)
+
+    x_p = tiling.pad_to(tiling.pad_to(x, 0, tb), 1, tn)
+    bp_pad = ((b_proj + tbp - 1) // tbp) * tbp
+    grid = (
+        bp_pad // tbp,
+        tiling.grid_dim(x_p.shape[1], tn),
+        tiling.grid_dim(x_p.shape[0], tb),
+    )
+    kernel = functools.partial(
+        _sors_kernel, tile_b=tb, tile_bp=tbp, b=b, b_proj=b_proj, kind=kind
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i, j, k: (0,)),
+            pl.BlockSpec((tb, tn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((tbp, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp_pad, x_p.shape[1]), jnp.float32),
+        interpret=True,
+    )(jnp.asarray(seed, jnp.uint32), x_p)
+    return out[:b_proj, :n]

@@ -1,0 +1,332 @@
+"""Explicit-residual layers with hand-written backward passes.
+
+Every layer is a pair of pure functions:
+
+    *_fwd(..., tape)   -> output            (appends residuals to the tape)
+    *_bwd(dout, loaded, grads, ...)         -> dinput  (reads residuals back)
+
+The tape is a *flat, named* list of arrays — exactly what crosses the
+HLO boundary between the ``fwd`` and ``bwd`` artifacts, and exactly what the
+Rust coordinator holds in its ActivationStore between the two calls.  With
+RMM enabled a linear layer's residual is the sketch ``X_proj = SᵀX`` plus
+nothing else (S is rematerialized from the seed in ``*_bwd``); with RMM
+disabled it is the full input X, reproducing the baseline's memory
+behaviour (paper Table 1).
+
+The hand-written backward (RMM off) is pinned against ``jax.grad`` of the
+same forward in ``python/tests/test_model_grads.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+
+from . import rmm
+
+
+class Tape:
+    """Ordered named residual recorder (forward side)."""
+
+    def __init__(self):
+        self.items: List[Tuple[str, jnp.ndarray]] = []
+
+    def save(self, name: str, arr):
+        self.items.append((name, arr))
+
+    def names(self):
+        return [n for n, _ in self.items]
+
+    def arrays(self):
+        return [a for _, a in self.items]
+
+
+class Loaded:
+    """Residuals re-assembled by name (backward side)."""
+
+    def __init__(self, names, arrays):
+        assert len(names) == len(arrays), (len(names), len(arrays))
+        self.d = dict(zip(names, arrays))
+
+    def __getitem__(self, name):
+        return self.d[name]
+
+    def __contains__(self, name):
+        return name in self.d
+
+
+def accumulate(grads: Dict[str, jnp.ndarray], name: str, g):
+    """Sum gradient contributions for shared parameters."""
+    if name in grads:
+        grads[name] = grads[name] + g
+    else:
+        grads[name] = g
+
+
+# ---------------------------------------------------------------------------
+# Input store: the heart of Algorithm 1.
+# ---------------------------------------------------------------------------
+
+
+def store_rows(tape: Tape, name: str, x2d, seed, rho: float, kind: str,
+               use_kernels: bool):
+    """Record the backward-pass evidence for a linear layer's input.
+
+    ρ ≥ 1 stores X itself (baseline); ρ < 1 stores SᵀX (RMM).  One store can
+    feed several linears reading the same input (e.g. Q/K/V), mirroring how
+    autograd keeps a single copy of a shared activation.
+    """
+    rows = x2d.shape[0]
+    if rho >= 1.0:
+        tape.save(name, x2d)
+    else:
+        b_proj = rmm.b_proj_for(rows, rho)
+        tape.save(name, rmm.project_rows(x2d, seed, b_proj, kind, use_kernels))
+
+
+def grad_w_from_store(loaded: Loaded, name: str, dy2d, seed, rho: float,
+                      kind: str, use_kernels: bool):
+    """∂L/∂W from whatever the forward stored (exact or eq. 4 estimate)."""
+    stored = loaded[name]
+    if rho >= 1.0:
+        return jnp.dot(dy2d.T, stored, preferred_element_type=jnp.float32)
+    return rmm.grad_w(dy2d, stored, seed, kind, use_kernels)
+
+
+# ---------------------------------------------------------------------------
+# Linear (weights w: (n_out, n_in), bias b: (n_out,); x2d: (rows, n_in))
+# ---------------------------------------------------------------------------
+
+
+def linear_fwd(x2d, w, b, use_kernels: bool):
+    return rmm.linear_matmul(x2d, w.T, use_kernels) + b[None, :]
+
+
+def linear_bwd_dx(dy2d, w, use_kernels: bool):
+    """∂L/∂X = ∂L/∂X̂ · W  (paper eq. 2 — always exact, no sketch)."""
+    return rmm.linear_matmul(dy2d, w, use_kernels)
+
+
+def linear_bwd_db(dy2d):
+    """∂L/∂b = ∂L/∂X̂ᵀ·1  (paper eq. 3 — needs no stored input)."""
+    return jnp.sum(dy2d, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (last axis)
+# ---------------------------------------------------------------------------
+
+LN_EPS = 1e-5
+
+
+def layernorm_fwd(tape: Tape, name: str, x2d, g, b):
+    mean = jnp.mean(x2d, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x2d - mean), axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + LN_EPS)
+    xhat = (x2d - mean) * rstd
+    tape.save(f"{name}.xhat", xhat)
+    tape.save(f"{name}.rstd", rstd)
+    return xhat * g[None, :] + b[None, :]
+
+
+def layernorm_bwd(loaded: Loaded, name: str, dout, g, grads, gname, bname):
+    xhat = loaded[f"{name}.xhat"]
+    rstd = loaded[f"{name}.rstd"]
+    accumulate(grads, gname, jnp.sum(dout * xhat, axis=0))
+    accumulate(grads, bname, jnp.sum(dout, axis=0))
+    dxhat = dout * g[None, :]
+    m1 = jnp.mean(dxhat, axis=-1, keepdims=True)
+    m2 = jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    return rstd * (dxhat - m1 - xhat * m2)
+
+
+# ---------------------------------------------------------------------------
+# GELU (tanh approximation, as in RoBERTa/GPT)
+# ---------------------------------------------------------------------------
+
+_GELU_C = math.sqrt(2.0 / math.pi)
+
+
+def gelu_fwd(tape: Tape, name: str, x2d):
+    tape.save(f"{name}.x", x2d)
+    inner = _GELU_C * (x2d + 0.044715 * x2d**3)
+    return 0.5 * x2d * (1.0 + jnp.tanh(inner))
+
+
+def gelu_bwd(loaded: Loaded, name: str, dout):
+    x = loaded[f"{name}.x"]
+    inner = _GELU_C * (x + 0.044715 * x**3)
+    t = jnp.tanh(inner)
+    dinner = _GELU_C * (1.0 + 3 * 0.044715 * x**2)
+    return dout * (0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * dinner)
+
+
+# ---------------------------------------------------------------------------
+# Multi-head attention (post-LN RoBERTa block internals)
+# ---------------------------------------------------------------------------
+
+
+def mha_fwd(tape: Tape, name: str, x3, mask, p, prefix, seed, cfg):
+    """x3: (B, T, d); mask: (B, T) in {0,1}. Returns (B, T, d).
+
+    Residuals: one shared input store for Q/K/V (same X, same seed ⇒ one
+    sketch), per-head tensors q/k/v, the attention probabilities A, and one
+    input store for the output projection.
+    """
+    B, T, d = x3.shape
+    H = cfg.n_heads
+    hd = d // H
+    x2 = x3.reshape(B * T, d)
+
+    seed_qkv = rmm.derive_seed(seed, _seed_idx(prefix, 0))
+    seed_o = rmm.derive_seed(seed, _seed_idx(prefix, 1))
+
+    store_rows(tape, f"{name}.qkv_in", x2, seed_qkv, cfg.rho, cfg.sketch,
+               cfg.use_kernels)
+
+    def heads(z2):
+        return z2.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+
+    q = heads(linear_fwd(x2, p[f"{prefix}.q_w"], p[f"{prefix}.q_b"], cfg.use_kernels))
+    k = heads(linear_fwd(x2, p[f"{prefix}.k_w"], p[f"{prefix}.k_b"], cfg.use_kernels))
+    v = heads(linear_fwd(x2, p[f"{prefix}.v_w"], p[f"{prefix}.v_b"], cfg.use_kernels))
+    tape.save(f"{name}.q", q)
+    tape.save(f"{name}.k", k)
+    tape.save(f"{name}.v", v)
+
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.float32(math.sqrt(hd))
+    neg = (1.0 - mask[:, None, None, :]) * jnp.float32(-1e9)
+    a = jnp.exp(scores + neg - jnp.max(scores + neg, axis=-1, keepdims=True))
+    a = a / jnp.sum(a, axis=-1, keepdims=True)
+    tape.save(f"{name}.a", a)
+
+    ctx = jnp.einsum("bhts,bhsd->bhtd", a, v)
+    ctx2 = ctx.transpose(0, 2, 1, 3).reshape(B * T, d)
+    store_rows(tape, f"{name}.o_in", ctx2, seed_o, cfg.rho, cfg.sketch,
+               cfg.use_kernels)
+    out2 = linear_fwd(ctx2, p[f"{prefix}.o_w"], p[f"{prefix}.o_b"], cfg.use_kernels)
+    return out2.reshape(B, T, d)
+
+
+def mha_bwd(loaded: Loaded, name: str, dout3, p, prefix, seed, cfg, grads):
+    B, T, d = dout3.shape
+    H = cfg.n_heads
+    hd = d // H
+    dout2 = dout3.reshape(B * T, d)
+
+    seed_qkv = rmm.derive_seed(seed, _seed_idx(prefix, 0))
+    seed_o = rmm.derive_seed(seed, _seed_idx(prefix, 1))
+
+    # Output projection.
+    accumulate(grads, f"{prefix}.o_w",
+               grad_w_from_store(loaded, f"{name}.o_in", dout2, seed_o,
+                                 cfg.rho, cfg.sketch, cfg.use_kernels))
+    accumulate(grads, f"{prefix}.o_b", linear_bwd_db(dout2))
+    dctx2 = linear_bwd_dx(dout2, p[f"{prefix}.o_w"], cfg.use_kernels)
+    dctx = dctx2.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+
+    a = loaded[f"{name}.a"]
+    q = loaded[f"{name}.q"]
+    k = loaded[f"{name}.k"]
+    v = loaded[f"{name}.v"]
+
+    da = jnp.einsum("bhtd,bhsd->bhts", dctx, v)
+    dv = jnp.einsum("bhts,bhtd->bhsd", a, dctx)
+    # softmax backward (the additive mask has zero gradient)
+    dscores = a * (da - jnp.sum(da * a, axis=-1, keepdims=True))
+    dscores = dscores / jnp.float32(math.sqrt(hd))
+    dq = jnp.einsum("bhts,bhsd->bhtd", dscores, k)
+    dk = jnp.einsum("bhts,bhtd->bhsd", dscores, q)
+
+    def flat(z):
+        return z.transpose(0, 2, 1, 3).reshape(B * T, d)
+
+    dq2, dk2, dv2 = flat(dq), flat(dk), flat(dv)
+
+    # Q/K/V share one stored input (and one sketch seed).
+    for nm, dz in (("q", dq2), ("k", dk2), ("v", dv2)):
+        accumulate(grads, f"{prefix}.{nm}_w",
+                   grad_w_from_store(loaded, f"{name}.qkv_in", dz, seed_qkv,
+                                     cfg.rho, cfg.sketch, cfg.use_kernels))
+        accumulate(grads, f"{prefix}.{nm}_b", linear_bwd_db(dz))
+
+    dx2 = (linear_bwd_dx(dq2, p[f"{prefix}.q_w"], cfg.use_kernels)
+           + linear_bwd_dx(dk2, p[f"{prefix}.k_w"], cfg.use_kernels)
+           + linear_bwd_dx(dv2, p[f"{prefix}.v_w"], cfg.use_kernels))
+    return dx2.reshape(B, T, d)
+
+
+def _seed_idx(prefix: str, slot: int) -> int:
+    """Stable per-layer seed index derived from the parameter prefix."""
+    h = 0
+    for ch in prefix:
+        h = (h * 131 + ord(ch)) & 0x7FFFFFFF
+    return (h * 8 + slot) & 0x7FFFFFFF
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward block (linear → GELU → linear)
+# ---------------------------------------------------------------------------
+
+
+def ffn_fwd(tape: Tape, name: str, h2, p, prefix, seed, cfg):
+    seed_f1 = rmm.derive_seed(seed, _seed_idx(prefix, 2))
+    seed_f2 = rmm.derive_seed(seed, _seed_idx(prefix, 3))
+
+    store_rows(tape, f"{name}.f1_in", h2, seed_f1, cfg.rho, cfg.sketch,
+               cfg.use_kernels)
+    z = linear_fwd(h2, p[f"{prefix}.f1_w"], p[f"{prefix}.f1_b"], cfg.use_kernels)
+    g = gelu_fwd(tape, f"{name}.gelu", z)
+    store_rows(tape, f"{name}.f2_in", g, seed_f2, cfg.rho, cfg.sketch,
+               cfg.use_kernels)
+    return linear_fwd(g, p[f"{prefix}.f2_w"], p[f"{prefix}.f2_b"], cfg.use_kernels)
+
+
+def ffn_bwd(loaded: Loaded, name: str, dout2, p, prefix, seed, cfg, grads,
+            probe=None):
+    seed_f1 = rmm.derive_seed(seed, _seed_idx(prefix, 2))
+    seed_f2 = rmm.derive_seed(seed, _seed_idx(prefix, 3))
+
+    accumulate(grads, f"{prefix}.f2_w",
+               grad_w_from_store(loaded, f"{name}.f2_in", dout2, seed_f2,
+                                 cfg.rho, cfg.sketch, cfg.use_kernels))
+    accumulate(grads, f"{prefix}.f2_b", linear_bwd_db(dout2))
+    dg = linear_bwd_dx(dout2, p[f"{prefix}.f2_w"], cfg.use_kernels)
+    dz = gelu_bwd(loaded, f"{name}.gelu", dg)
+
+    if probe is not None:
+        # Variance probe (paper §3.3 / Fig. 4): X = full f1 input (stored
+        # separately by the probe), Y = upstream gradient at the f1 output.
+        probe["x"] = loaded[f"{name}.f1_probe_x"]
+        probe["y"] = dz
+
+    accumulate(grads, f"{prefix}.f1_w",
+               grad_w_from_store(loaded, f"{name}.f1_in", dz, seed_f1,
+                                 cfg.rho, cfg.sketch, cfg.use_kernels))
+    accumulate(grads, f"{prefix}.f1_b", linear_bwd_db(dz))
+    return linear_bwd_dx(dz, p[f"{prefix}.f1_w"], cfg.use_kernels)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def embed_fwd(tape: Tape, name: str, tokens, p, cfg):
+    B, T = tokens.shape
+    x3 = p["emb.tok"][tokens] + p["emb.pos"][None, :T, :]
+    x2 = x3.reshape(B * T, cfg.d_model)
+    out2 = layernorm_fwd(tape, f"{name}.ln", x2, p["emb.ln_g"], p["emb.ln_b"])
+    return out2.reshape(B, T, cfg.d_model)
+
+
+def embed_bwd(loaded: Loaded, name: str, dout3, tokens, p, cfg, grads):
+    B, T, d = dout3.shape
+    dx2 = layernorm_bwd(loaded, f"{name}.ln", dout3.reshape(B * T, d),
+                        p["emb.ln_g"], grads, "emb.ln_g", "emb.ln_b")
+    dx3 = dx2.reshape(B, T, d)
+    dtok = jnp.zeros_like(p["emb.tok"]).at[tokens].add(dx3)
+    accumulate(grads, "emb.tok", dtok)
+    accumulate(grads, "emb.pos", jnp.sum(dx3, axis=0))

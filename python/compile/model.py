@@ -1,0 +1,353 @@
+"""L2: RoBERTa-style encoder with explicit residuals and hand-written bwd.
+
+Two entry points are lowered to HLO artifacts (plus one for eval):
+
+    fwd(params…, tokens, mask, labels, seed) -> (loss, logits, residuals…)
+    bwd(params…, tokens, mask, labels, seed, residuals…) -> (grads…[, probe…])
+    eval(params…, tokens, mask)              -> (logits,)
+
+The split at exactly the forward/backward boundary is deliberate: the Rust
+coordinator holds the residual buffers between the two calls, which makes
+the paper's memory claim a *measured* quantity (bytes of live PJRT
+literals), not a model.  See DESIGN.md §1.
+
+Architecture (post-LN, as RoBERTa): embeddings(+LN) → n_layers ×
+[MHA → add&LN → FFN → add&LN] → CLS pooler(tanh) → classifier.  All
+block-internal linear layers (Q/K/V/O, FFN1/FFN2) route through the RMM
+store (Algorithm 1) when ρ < 1; the pooler/classifier operate on B rows
+(not B·T) and stay exact, matching the paper's focus on *large* linear
+layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, rmm, variance
+from .layers import Loaded, Tape
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static model + batch geometry (one HLO artifact per distinct config)."""
+
+    vocab_size: int = 1024
+    seq_len: int = 64
+    batch_size: int = 16
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    n_classes: int = 2
+    regression: bool = False
+    rho: float = 1.0          # ≥ 1.0 disables RMM (baseline)
+    sketch: str = "gauss"     # gauss | rademacher | dct | dft | rowsample
+    use_kernels: bool = False  # route matmuls through the Pallas kernels
+    probe_layer: int = -1      # block index for the variance probe; -1 = off
+
+    @property
+    def rows(self) -> int:
+        return self.batch_size * self.seq_len
+
+    @property
+    def b_proj(self) -> int:
+        return rmm.b_proj_for(self.rows, self.rho)
+
+    def validate(self):
+        assert self.d_model % self.n_heads == 0
+        assert 0.0 < self.rho
+        assert self.sketch in ("gauss", "rademacher", "dct", "dft", "rowsample")
+        assert self.probe_layer < self.n_layers
+        if self.regression:
+            assert self.n_classes == 1
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the flat calling convention of the HLO."""
+    d, ff = cfg.d_model, cfg.d_ff
+    spec: List[Tuple[str, Tuple[int, ...]]] = [
+        ("emb.tok", (cfg.vocab_size, d)),
+        ("emb.pos", (cfg.seq_len, d)),
+        ("emb.ln_g", (d,)),
+        ("emb.ln_b", (d,)),
+    ]
+    for i in range(cfg.n_layers):
+        pre = f"blk{i}"
+        spec += [
+            (f"{pre}.q_w", (d, d)), (f"{pre}.q_b", (d,)),
+            (f"{pre}.k_w", (d, d)), (f"{pre}.k_b", (d,)),
+            (f"{pre}.v_w", (d, d)), (f"{pre}.v_b", (d,)),
+            (f"{pre}.o_w", (d, d)), (f"{pre}.o_b", (d,)),
+            (f"{pre}.ln1_g", (d,)), (f"{pre}.ln1_b", (d,)),
+            (f"{pre}.f1_w", (ff, d)), (f"{pre}.f1_b", (ff,)),
+            (f"{pre}.f2_w", (d, ff)), (f"{pre}.f2_b", (d,)),
+            (f"{pre}.ln2_g", (d,)), (f"{pre}.ln2_b", (d,)),
+        ]
+    spec += [
+        ("pool.w", (d, d)), ("pool.b", (d,)),
+        ("cls.w", (cfg.n_classes, d)), ("cls.b", (cfg.n_classes,)),
+    ]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, np.ndarray]:
+    """BERT-style init (trunc-normal 0.02 for matrices, zeros/ones for LN)."""
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+    for name, shape in param_spec(cfg):
+        if name.endswith(("ln_g", "ln1_g", "ln2_g")) or name.endswith("_g"):
+            params[name] = np.ones(shape, np.float32)
+        elif name.endswith("_b") or name.endswith(".b"):
+            params[name] = np.zeros(shape, np.float32)
+        elif len(shape) == 1:
+            params[name] = np.zeros(shape, np.float32)
+        else:
+            std = 0.02
+            w = rng.normal(0.0, std, size=shape)
+            params[name] = np.clip(w, -2 * std, 2 * std).astype(np.float32)
+    return params
+
+
+def params_to_list(cfg, params: Dict[str, np.ndarray]):
+    return [params[n] for n, _ in param_spec(cfg)]
+
+
+def params_from_list(cfg, lst) -> Dict[str, jnp.ndarray]:
+    return {n: a for (n, _), a in zip(param_spec(cfg), lst)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _block_fwd(tape: Tape, i: int, x3, mask, p, seed, cfg: ModelConfig):
+    B, T, d = x3.shape
+    pre = f"blk{i}"
+    a3 = layers.mha_fwd(tape, f"{pre}.mha", x3, mask, p, pre, seed, cfg)
+    h2 = layers.layernorm_fwd(tape, f"{pre}.ln1", (x3 + a3).reshape(B * T, d),
+                              p[f"{pre}.ln1_g"], p[f"{pre}.ln1_b"])
+    if cfg.probe_layer == i:
+        # The probe needs the *full* FFN1 input (eq. 9 uses per-row norms);
+        # stored in addition to the sketch, only in probe-enabled artifacts.
+        tape.save(f"{pre}.ffn.f1_probe_x", h2)  # name read by ffn_bwd
+    f2 = layers.ffn_fwd(tape, f"{pre}.ffn", h2, p, pre, seed, cfg)
+    out2 = layers.layernorm_fwd(tape, f"{pre}.ln2", h2 + f2,
+                                p[f"{pre}.ln2_g"], p[f"{pre}.ln2_b"])
+    return out2.reshape(B, T, d)
+
+
+def _heads_fwd(tape: Tape, x3, p, cfg: ModelConfig):
+    """CLS pooler + classifier (exact linears; B rows only)."""
+    x_cls = x3[:, 0, :]
+    tape.save("pool.in", x_cls)
+    z = layers.linear_fwd(x_cls, p["pool.w"], p["pool.b"], cfg.use_kernels)
+    t = jnp.tanh(z)
+    tape.save("pool.tanh", t)
+    logits = layers.linear_fwd(t, p["cls.w"], p["cls.b"], cfg.use_kernels)
+    return logits
+
+
+def _loss_fwd(logits, labels, cfg: ModelConfig):
+    if cfg.regression:
+        pred = logits[:, 0]
+        return jnp.mean(jnp.square(pred - labels))
+    shifted = logits - jnp.max(logits, axis=-1, keepdims=True)
+    logz = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    logp = jnp.take_along_axis(shifted, labels[:, None], axis=-1)[:, 0] - logz
+    return -jnp.mean(logp)
+
+
+def _dlogits(logits, labels, cfg: ModelConfig):
+    B = logits.shape[0]
+    if cfg.regression:
+        d = 2.0 * (logits[:, 0] - labels) / B
+        return d[:, None]
+    shifted = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(shifted)
+    sm = e / jnp.sum(e, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(labels, cfg.n_classes, dtype=jnp.float32)
+    return (sm - onehot) / B
+
+
+def forward(params: Dict, tokens, mask, labels, seed, cfg: ModelConfig):
+    """Full forward. Returns (loss, logits, tape)."""
+    tape = Tape()
+    x3 = layers.embed_fwd(tape, "emb", tokens, params, cfg)
+    for i in range(cfg.n_layers):
+        x3 = _block_fwd(tape, i, x3, mask, params, seed, cfg)
+    logits = _heads_fwd(tape, x3, params, cfg)
+    tape.save("logits", logits)
+    loss = _loss_fwd(logits, labels, cfg)
+    return loss, logits, tape
+
+
+def residual_names(cfg: ModelConfig) -> List[str]:
+    """Names of the tape entries, in order (defines the HLO interface)."""
+    cfg.validate()
+    tokens = jnp.zeros((cfg.batch_size, cfg.seq_len), jnp.int32)
+    mask = jnp.ones((cfg.batch_size, cfg.seq_len), jnp.float32)
+    labels = (jnp.zeros((cfg.batch_size,), jnp.float32) if cfg.regression
+              else jnp.zeros((cfg.batch_size,), jnp.int32))
+    seed = jnp.zeros((2,), jnp.uint32)
+    params = {n: jnp.zeros(s, jnp.float32) for n, s in param_spec(cfg)}
+
+    names: List[str] = []
+
+    def f(params, tokens, mask, labels, seed):
+        _, _, tape = forward(params, tokens, mask, labels, seed, cfg)
+        names.clear()
+        names.extend(tape.names())
+        return tuple(tape.arrays())
+
+    # eval_shape traces abstractly — no arrays materialize, but the tape
+    # still records its names (cheap even for big configs).
+    jax.eval_shape(f, params, tokens, mask, labels, seed)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+
+def backward(params: Dict, tokens, mask, labels, seed, loaded: Loaded,
+             cfg: ModelConfig):
+    """Hand-written full-model backward from the stored residuals.
+
+    Returns (grads dict, probe metrics dict or None).
+    """
+    B, T, d = cfg.batch_size, cfg.seq_len, cfg.d_model
+    grads: Dict[str, jnp.ndarray] = {}
+
+    logits = loaded["logits"]
+    dlogits = _dlogits(logits, labels, cfg)
+
+    # Heads.
+    t = loaded["pool.tanh"]
+    layers.accumulate(grads, "cls.w",
+                      jnp.dot(dlogits.T, t, preferred_element_type=jnp.float32))
+    layers.accumulate(grads, "cls.b", layers.linear_bwd_db(dlogits))
+    dt = layers.linear_bwd_dx(dlogits, params["cls.w"], cfg.use_kernels)
+    dz = dt * (1.0 - t * t)
+    x_cls = loaded["pool.in"]
+    layers.accumulate(grads, "pool.w",
+                      jnp.dot(dz.T, x_cls, preferred_element_type=jnp.float32))
+    layers.accumulate(grads, "pool.b", layers.linear_bwd_db(dz))
+    dx_cls = layers.linear_bwd_dx(dz, params["pool.w"], cfg.use_kernels)
+
+    dx3 = jnp.zeros((B, T, d), jnp.float32).at[:, 0, :].add(dx_cls)
+
+    probe: Optional[Dict] = {} if cfg.probe_layer >= 0 else None
+    probe_out = None
+    for i in reversed(range(cfg.n_layers)):
+        pre = f"blk{i}"
+        dout2 = layers.layernorm_bwd(loaded, f"{pre}.ln2",
+                                     dx3.reshape(B * T, d),
+                                     params[f"{pre}.ln2_g"], grads,
+                                     f"{pre}.ln2_g", f"{pre}.ln2_b")
+        # out2 = LN2(h + f): gradient flows to both h and f.
+        block_probe = probe if cfg.probe_layer == i else None
+        df2 = dout2
+        dh2 = layers.ffn_bwd(loaded, f"{pre}.ffn", df2, params, pre, seed,
+                             cfg, grads, probe=block_probe)
+        dh2 = dh2 + dout2  # skip connection
+        dsum2 = layers.layernorm_bwd(loaded, f"{pre}.ln1", dh2,
+                                     params[f"{pre}.ln1_g"], grads,
+                                     f"{pre}.ln1_g", f"{pre}.ln1_b")
+        da3 = dsum2.reshape(B, T, d)
+        dxa3 = layers.mha_bwd(loaded, f"{pre}.mha", da3, params, pre, seed,
+                              cfg, grads)
+        dx3 = da3 + dxa3  # skip connection: d(x + a)
+        if block_probe is not None and "x" in block_probe:
+            probe_out = variance.probe_metrics(
+                block_probe["x"], block_probe["y"], cfg.b_proj)
+
+    layers.embed_bwd(loaded, "emb", dx3, tokens, params, cfg, grads)
+    return grads, probe_out
+
+
+# ---------------------------------------------------------------------------
+# Flat entry points (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+PROBE_NAMES = ("d2_sgd", "d2_rmm", "alpha", "ratio_lhs", "bound_rhs")
+
+
+def make_fwd(cfg: ModelConfig):
+    names = [n for n, _ in param_spec(cfg)]
+
+    def fwd(*args):
+        plist = args[: len(names)]
+        tokens, mask, labels, seed = args[len(names):]
+        params = {n: a for n, a in zip(names, plist)}
+        loss, logits, tape = forward(params, tokens, mask, labels, seed, cfg)
+        return (loss, logits, *tape.arrays())
+
+    return fwd
+
+
+def make_bwd(cfg: ModelConfig):
+    names = [n for n, _ in param_spec(cfg)]
+    res_names = residual_names(cfg)
+
+    def bwd(*args):
+        plist = args[: len(names)]
+        tokens, mask, labels, seed = args[len(names): len(names) + 4]
+        res = args[len(names) + 4:]
+        params = {n: a for n, a in zip(names, plist)}
+        loaded = Loaded(res_names, list(res))
+        grads, probe_out = backward(params, tokens, mask, labels, seed,
+                                    loaded, cfg)
+        out = [grads[n] for n in names]
+        if cfg.probe_layer >= 0:
+            assert probe_out is not None
+            out += [probe_out[k] for k in PROBE_NAMES]
+        return tuple(out)
+
+    return bwd
+
+
+def make_eval(cfg: ModelConfig):
+    names = [n for n, _ in param_spec(cfg)]
+
+    def evalf(*args):
+        plist = args[: len(names)]
+        tokens, mask = args[len(names):]
+        params = {n: a for n, a in zip(names, plist)}
+        tape = Tape()
+        x3 = layers.embed_fwd(tape, "emb", tokens, params, cfg)
+        for i in range(cfg.n_layers):
+            x3 = _block_fwd(tape, i, x3, mask, params, seed_dummy(), cfg)
+        logits = _heads_fwd(tape, x3, params, cfg)
+        return (logits,)
+
+    return evalf
+
+
+def seed_dummy():
+    return jnp.zeros((2,), jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Pure-JAX training step (used by pytest oracles; never lowered)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn_autodiff(params: Dict, tokens, mask, labels, cfg: ModelConfig):
+    """Same forward, loss only — differentiable by jax.grad (RMM must be
+    off for gradient equality; with RMM on jax.grad would differentiate
+    *through* the sketch, which is not Algorithm 1)."""
+    loss, _, _ = forward(params, tokens, mask, labels, seed_dummy(), cfg)
+    return loss

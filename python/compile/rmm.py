@@ -1,0 +1,67 @@
+"""Sketch API used by the L2 layers: project rows, estimate ∂W from a sketch.
+
+Dispatches between the Pallas kernel path (``use_kernels=True``) and the
+pure-jnp reference path.  Both are numerically equivalent (pinned by
+pytest); the jnp path lowers to a leaner HLO for the large end-to-end
+training artifacts, while the kernel path exercises the fused
+generate-S-in-VMEM kernels (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import matmul as mm
+from .kernels import prng
+from .kernels import project as proj
+from .kernels import ref
+from .kernels import transform as tfm
+
+DENSE_KINDS = ("gauss", "rademacher")
+SORS_KINDS = ("dct", "dft")
+
+
+def derive_seed(seed, idx: int):
+    """Per-layer (2,)-u32 seed from the step seed, via one Philox block.
+
+    Evaluated identically in forward and backward lowerings, so each layer's
+    S is rematerialized bit-exactly (the paper's "PRNG state").
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    c0, c1, _, _ = prng.philox4x32(
+        jnp.uint32(idx), jnp.uint32(0x5EED), jnp.uint32(0), jnp.uint32(0),
+        seed[0], seed[1],
+    )
+    return jnp.stack([c0, c1])
+
+
+def b_proj_for(rows: int, rho: float) -> int:
+    """Static projected row count: B_proj = clamp(round(ρ·rows), 1, rows)."""
+    return max(1, min(rows, int(round(rho * rows))))
+
+
+def project_rows(x2d, seed, b_proj: int, kind: str, use_kernels: bool):
+    """X_proj = Sᵀ X (Algorithm 1 forward-side sketch)."""
+    if use_kernels:
+        if kind in DENSE_KINDS:
+            return proj.project(x2d, seed, b_proj, kind)
+        if kind in SORS_KINDS:
+            return tfm.sors_project(x2d, seed, b_proj, kind)
+        # rowsample has no kernel (it is a gather); fall through to ref.
+    return ref.project(x2d, seed[0], seed[1], b_proj, kind)
+
+
+def grad_w(dy2d, x_proj, seed, kind: str, use_kernels: bool):
+    """∂L/∂W ≈ (Sᵀ Y)ᵀ X_proj (Algorithm 1 backward side, eq. 4)."""
+    b_proj = x_proj.shape[0]
+    y_proj = project_rows(dy2d, seed, b_proj, kind, use_kernels)
+    if use_kernels:
+        return mm.matmul(y_proj.T, x_proj)
+    return jnp.dot(y_proj.T, x_proj, preferred_element_type=jnp.float32)
+
+
+def linear_matmul(a, b, use_kernels: bool):
+    """A @ B through the tiled kernel or jnp (forward-path contraction)."""
+    if use_kernels:
+        return mm.matmul(a, b)
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,32 @@
+"""Variance estimators of Section 2.3, as lowered into the bwd artifact.
+
+Thin jnp layer over the oracle formulas in ``kernels.ref`` (single source of
+truth); the Rust mirror lives in ``rust/src/rmm/variance.rs``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def probe_metrics(x, y, b_proj: int):
+    """All Fig. 4/7 series for one (X, Y) pair at one layer.
+
+    Returns a dict of scalars: d2_sgd (eq. 9), d2_rmm (eq. 11), alpha
+    (eq. 13), ratio_lhs (LHS of eq. 12) and bound_rhs ((α+1)/α).
+    """
+    d2s = ref.d2_sgd(x, y)
+    d2r = ref.d2_rmm(x, y, b_proj)
+    a = ref.alpha(x, y)
+    b = x.shape[0]
+    ratio = (b_proj / (b - 1.0)) * d2r / jnp.maximum(d2s, jnp.float32(1e-30))
+    bound = (a + 1.0) / jnp.maximum(a, jnp.float32(1e-30))
+    return {
+        "d2_sgd": d2s,
+        "d2_rmm": d2r,
+        "alpha": a,
+        "ratio_lhs": ratio,
+        "bound_rhs": bound,
+    }

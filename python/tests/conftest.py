@@ -1,0 +1,8 @@
+"""Make the build-time `compile` package importable regardless of whether
+pytest is invoked from the repo root (`pytest python/tests`) or from
+`python/` (`cd python && pytest tests`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

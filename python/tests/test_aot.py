@@ -1,0 +1,148 @@
+"""AOT pipeline: lowering, manifest schema, init-params blob, arg pinning."""
+
+import json
+import os
+import re
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def quick_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    rc = aot.main(["--out-dir", str(out), "--set", "quick", "--force"])
+    assert rc == 0
+    return out
+
+
+def load_manifest(quick_dir):
+    with open(os.path.join(quick_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+class TestManifestSchema:
+    def test_version_and_variants(self, quick_dir):
+        m = load_manifest(quick_dir)
+        assert m["version"] == aot.MANIFEST_VERSION
+        assert set(m["variants"]) == {
+            "tiny_cls2_r100_gauss",
+            "tiny_cls2_r50_gauss",
+            "tinyk_cls2_r50_gauss",
+        }
+
+    def test_entry_files_exist(self, quick_dir):
+        m = load_manifest(quick_dir)
+        for v in m["variants"].values():
+            for e in v["entries"].values():
+                path = os.path.join(quick_dir, e["file"])
+                assert os.path.exists(path), path
+                assert os.path.getsize(path) > 100
+
+    def test_arg_specs_complete(self, quick_dir):
+        m = load_manifest(quick_dir)
+        for vname, v in m["variants"].items():
+            fwd = v["entries"]["fwd"]
+            roles = [a["role"] for a in fwd["args"]]
+            n_params = roles.count("param")
+            assert roles == ["param"] * n_params + ["tokens", "mask", "labels", "seed"]
+            out_roles = [o["role"] for o in fwd["outputs"]]
+            assert out_roles[0] == "metric" and out_roles[1] == "logits"
+            assert all(r == "residual" for r in out_roles[2:])
+            bwd = v["entries"]["bwd"]
+            assert [o["role"] for o in bwd["outputs"]][:n_params] == ["grad"] * n_params
+            # fwd residual outputs align with bwd residual args
+            f_res = [o for o in fwd["outputs"] if o["role"] == "residual"]
+            b_res = [a for a in bwd["args"] if a["role"] == "residual"]
+            assert [o["name"] for o in f_res] == [a["name"] for a in b_res], vname
+            assert [o["shape"] for o in f_res] == [a["shape"] for a in b_res]
+
+    def test_rho_shrinks_residual_bytes(self, quick_dir):
+        m = load_manifest(quick_dir)
+
+        def resid_bytes(vname):
+            fwd = m["variants"][vname]["entries"]["fwd"]
+            return sum(
+                4 * int(np.prod(o["shape"] or [1]))
+                for o in fwd["outputs"]
+                if o["role"] == "residual"
+            )
+
+        assert resid_bytes("tiny_cls2_r50_gauss") < resid_bytes("tiny_cls2_r100_gauss")
+
+    def test_b_proj_recorded(self, quick_dir):
+        m = load_manifest(quick_dir)
+        v = m["variants"]["tiny_cls2_r50_gauss"]
+        assert v["b_proj"] == v["rows"] // 2
+
+
+class TestArgPinning:
+    def test_all_args_survive_conversion(self, quick_dir):
+        """The ρ=1 graph ignores `seed`; arg pinning must keep it (else the
+        runtime's buffer count desynchronizes — the bug this guards)."""
+        m = load_manifest(quick_dir)
+        for vname, v in m["variants"].items():
+            for ename, e in v["entries"].items():
+                path = os.path.join(quick_dir, e["file"])
+                with open(path) as f:
+                    txt = f.read()
+                entry = txt[txt.index("ENTRY"):]
+                params = set(re.findall(r"parameter\((\d+)\)", entry))
+                assert len(params) == len(e["args"]), f"{vname}/{ename}"
+
+
+class TestInitParams:
+    def test_blob_size_matches_spec(self, quick_dir):
+        m = load_manifest(quick_dir)
+        for v in m["variants"].values():
+            blob = os.path.join(quick_dir, v["init_params"])
+            assert os.path.getsize(blob) == 4 * v["param_count"]
+
+    def test_shared_geometry_shares_blob(self, quick_dir):
+        m = load_manifest(quick_dir)
+        a = m["variants"]["tiny_cls2_r100_gauss"]["init_params"]
+        b = m["variants"]["tiny_cls2_r50_gauss"]["init_params"]
+        assert a == b
+
+    def test_init_statistics(self, quick_dir):
+        m = load_manifest(quick_dir)
+        v = m["variants"]["tiny_cls2_r100_gauss"]
+        blob = np.fromfile(os.path.join(quick_dir, v["init_params"]), np.float32)
+        # trunc-normal(0.02) matrices + zeros/ones vectors
+        assert np.abs(blob).max() <= 1.0 + 1e-6
+        assert np.isfinite(blob).all()
+
+
+class TestIdempotence:
+    def test_second_run_is_noop(self, quick_dir, capsys):
+        rc = aot.main(["--out-dir", str(quick_dir), "--set", "quick"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "up to date" in out
+
+
+class TestVariantSets:
+    def test_default_set_covers_experiments(self):
+        v = aot.build_variants("default")
+        names = set(v)
+        # Table 2: all three heads × 5 rhos (gauss)
+        for head in ["cls2", "cls3", "reg"]:
+            for tag in ["r100", "r90", "r50", "r20", "r10"]:
+                assert f"small_{head}_{tag}_gauss" in names
+        # Table 4 sketch families
+        for kind in ["rademacher", "dct", "dft", "rowsample"]:
+            for tag in ["r50", "r20", "r10"]:
+                assert f"small_cls2_{tag}_{kind}" in names
+        # probe + batch sweep + kernel validation
+        assert "probe_cls2_r50_gauss" in names
+        for b in [8, 32, 64]:
+            assert f"small_cls2_b{b}_r50_gauss" in names
+        assert "tinyk_cls2_r50_gauss" in names
+
+    def test_configs_validate(self):
+        for name, (cfg, entries) in aot.build_variants("default").items():
+            cfg.validate()
+            assert "fwd" in entries or "eval" in entries, name

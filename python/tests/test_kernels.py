@@ -1,0 +1,155 @@
+"""L1 kernels vs pure-jnp oracles — hypothesis sweeps over shapes/seeds.
+
+This is the CORE correctness gate for the Pallas layer: every kernel must
+agree with ``ref.py`` on arbitrary (non-tile-aligned) shapes, which also
+exercises the zero-padding and logical-index seeding logic.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import project as proj
+from compile.kernels import ref
+from compile.kernels import transform as tfm
+
+settings.register_profile("kernels", max_examples=10, deadline=None)
+settings.load_profile("kernels")
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+class TestMatmulKernel:
+    @given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70),
+           seed=st.integers(0, 2**16))
+    def test_matches_ref(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        a, b = _arr(rng, m, k), _arr(rng, k, n)
+        np.testing.assert_allclose(
+            mm.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_tile_aligned(self):
+        rng = np.random.default_rng(0)
+        a, b = _arr(rng, 128, 128), _arr(rng, 128, 128)
+        np.testing.assert_allclose(
+            mm.matmul(a, b), ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_custom_tiles(self):
+        rng = np.random.default_rng(1)
+        a, b = _arr(rng, 40, 24), _arr(rng, 24, 56)
+        out = mm.matmul(a, b, tile_m=16, tile_n=16, tile_k=8)
+        np.testing.assert_allclose(out, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_shape_mismatch_raises(self):
+        rng = np.random.default_rng(2)
+        with pytest.raises(AssertionError):
+            mm.matmul(_arr(rng, 4, 5), _arr(rng, 6, 7))
+
+
+class TestProjectKernel:
+    @given(b=st.integers(2, 80), n=st.integers(1, 40),
+           frac=st.floats(0.05, 1.0), seed=st.integers(0, 2**16),
+           kind=st.sampled_from(["gauss", "rademacher"]))
+    def test_matches_ref(self, b, n, frac, seed, kind):
+        rng = np.random.default_rng(seed)
+        x = _arr(rng, b, n)
+        b_proj = max(1, int(frac * b))
+        s = jnp.asarray([seed & 0xFFFF, seed >> 4], jnp.uint32)
+        out = proj.project(x, s, b_proj, kind)
+        exp = ref.project(x, int(s[0]), int(s[1]), b_proj, kind)
+        np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+
+    def test_seed_changes_output(self):
+        rng = np.random.default_rng(3)
+        x = _arr(rng, 32, 8)
+        a = proj.project(x, jnp.asarray([1, 0], jnp.uint32), 8, "gauss")
+        b = proj.project(x, jnp.asarray([2, 0], jnp.uint32), 8, "gauss")
+        assert not np.allclose(a, b)
+
+    def test_fwd_bwd_same_sketch(self):
+        """The same seed must reproduce the identical S — eq. (4)'s premise."""
+        rng = np.random.default_rng(4)
+        x = _arr(rng, 24, 6)
+        y = _arr(rng, 24, 10)
+        s = jnp.asarray([11, 13], jnp.uint32)
+        smat = ref.sketch("gauss", 24, 8, 11, 13)
+        got = proj.rmm_grad_w(y, proj.project(x, s, 8, "gauss"), s, "gauss")
+        exp = np.asarray(y).T @ np.asarray(smat) @ np.asarray(smat).T @ np.asarray(x)
+        np.testing.assert_allclose(got, exp, rtol=1e-3, atol=1e-3)
+
+
+class TestSorsKernel:
+    @given(b=st.integers(2, 64), n=st.integers(1, 24),
+           frac=st.floats(0.05, 1.0), seed=st.integers(0, 2**16),
+           kind=st.sampled_from(["dct", "dft"]))
+    def test_matches_ref(self, b, n, frac, seed, kind):
+        rng = np.random.default_rng(seed)
+        x = _arr(rng, b, n)
+        b_proj = max(1, int(frac * b))
+        s = jnp.asarray([seed & 0xFFFF, seed >> 4], jnp.uint32)
+        out = tfm.sors_project(x, s, b_proj, kind)
+        exp = ref.project(x, int(s[0]), int(s[1]), b_proj, kind)
+        np.testing.assert_allclose(out, exp, rtol=1e-3, atol=1e-3)
+
+
+class TestTransformMatrices:
+    @pytest.mark.parametrize("kind", ["dct", "dft"])
+    @pytest.mark.parametrize("b", [2, 8, 16, 32, 33, 64])
+    def test_orthonormal(self, kind, b):
+        if kind == "dft" and b % 2 == 1:
+            pytest.skip("real DFT layout defined for even orders")
+        h = np.asarray(ref.transform_matrix(kind, b))
+        np.testing.assert_allclose(h @ h.T, np.eye(b), atol=2e-5)
+
+    def test_dct_dc_row(self):
+        h = np.asarray(ref.transform_matrix("dct", 16))
+        np.testing.assert_allclose(h[0], np.full(16, 1 / 4.0), atol=1e-6)
+
+
+class TestSketchStatistics:
+    """E[S Sᵀ] = I — the single requirement the paper imposes on S (§2.1)."""
+
+    @pytest.mark.parametrize("kind", ref.SKETCH_KINDS)
+    def test_unbiased_identity(self, kind):
+        b, b_proj, trials = 12, 6, 600
+        acc = np.zeros((b, b))
+        for t in range(trials):
+            s = ref.numpy_sketch(kind, b, b_proj, t * 9973 + 17)
+            acc += s @ s.T
+        acc /= trials
+        # per-entry MC std: rowsample diag entries have var ≈ B/B_proj, so
+        # std-of-mean ≈ sqrt(2/600) ≈ 0.06 — use a ≥3σ tolerance.
+        np.testing.assert_allclose(acc, np.eye(b), atol=0.2)
+
+    @pytest.mark.parametrize("kind", ref.SKETCH_KINDS)
+    def test_unbiased_matmul(self, kind):
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(10, 4)).astype(np.float32)
+        y = rng.normal(size=(10, 5)).astype(np.float32)
+        exact = x.T @ y
+        trials = 800
+        acc = np.zeros_like(exact)
+        for t in range(trials):
+            s = ref.numpy_sketch(kind, 10, 5, t * 31 + 7)
+            acc += x.T @ s @ s.T @ y
+        acc /= trials
+        # per-entry MC std ≈ sqrt(D²_RMM/(N·M))/sqrt(trials) ≈ 0.13 here;
+        # use a ≥3σ tolerance to keep the test deterministic-stable
+        np.testing.assert_allclose(acc, exact, atol=0.45)
+
+    def test_gauss_scale(self):
+        s = ref.numpy_sketch("gauss", 200, 100, 5)
+        # elements ~ N(0, 1/b_proj) → column norms ≈ sqrt(200/100)
+        assert abs(np.std(s) - 1 / np.sqrt(100)) < 0.002
+
+    def test_rowsample_columns_are_scaled_basis(self):
+        s = ref.numpy_sketch("rowsample", 16, 8, 3)
+        scale = np.sqrt(16 / 8)
+        for j in range(8):
+            col = s[:, j]
+            assert (col != 0).sum() == 1
+            assert np.isclose(np.abs(col).max(), scale)

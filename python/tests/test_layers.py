@@ -1,0 +1,194 @@
+"""Per-layer gradient checks: each hand-written bwd against jax.grad."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import layers
+from compile.layers import Loaded, Tape
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def check_grads(fwd_fn, bwd_fn, args, tol=2e-4):
+    """fwd_fn(*args, tape) -> out; bwd_fn(loaded, dout) -> grads dict keyed
+    like jax.grad over args dict."""
+    tape = Tape()
+    out = fwd_fn(tape)
+    dout = jnp.ones_like(out)
+    loaded = Loaded(tape.names(), tape.arrays())
+    got = bwd_fn(loaded, dout)
+
+    def scalar(args_):
+        t2 = Tape()
+        return jnp.sum(fwd_fn(t2, override=args_))
+
+    ad = jax.grad(scalar)(args)
+    for k in ad:
+        scale = float(jnp.max(jnp.abs(ad[k]))) + 1e-8
+        err = float(jnp.max(jnp.abs(ad[k] - got[k]))) / scale
+        assert err < tol, f"{k}: rel err {err}"
+
+
+class TestLayerNorm:
+    def test_grads(self):
+        rng = np.random.default_rng(0)
+        x = rand(rng, 6, 8)
+        g = rand(rng, 8)
+        b = rand(rng, 8)
+        args = {"x": x, "g": g, "b": b}
+
+        def fwd(tape, override=None):
+            a = override or args
+            return layers.layernorm_fwd(tape, "ln", a["x"], a["g"], a["b"])
+
+        def bwd(loaded, dout):
+            grads = {}
+            dx = layers.layernorm_bwd(loaded, "ln", dout, args["g"], grads, "g", "b")
+            grads["x"] = dx
+            return grads
+
+        check_grads(fwd, bwd, args)
+
+    def test_normalizes(self):
+        rng = np.random.default_rng(1)
+        x = rand(rng, 4, 16) * 10 + 3
+        tape = Tape()
+        out = layers.layernorm_fwd(tape, "ln", x, jnp.ones(16), jnp.zeros(16))
+        np.testing.assert_allclose(np.mean(out, -1), 0, atol=1e-5)
+        np.testing.assert_allclose(np.std(out, -1), 1, atol=1e-3)
+
+
+class TestGelu:
+    def test_grads(self):
+        rng = np.random.default_rng(2)
+        x = rand(rng, 5, 7)
+        args = {"x": x}
+
+        def fwd(tape, override=None):
+            a = override or args
+            return layers.gelu_fwd(tape, "g", a["x"])
+
+        def bwd(loaded, dout):
+            return {"x": layers.gelu_bwd(loaded, "g", dout)}
+
+        check_grads(fwd, bwd, args)
+
+    def test_matches_jax_gelu(self):
+        x = jnp.linspace(-4, 4, 41)
+        tape = Tape()
+        ours = layers.gelu_fwd(tape, "g", x)
+        theirs = jax.nn.gelu(x, approximate=True)
+        np.testing.assert_allclose(ours, theirs, atol=1e-5)
+
+
+class TestStoreRows:
+    def test_full_mode_stores_input(self):
+        rng = np.random.default_rng(3)
+        x = rand(rng, 10, 4)
+        tape = Tape()
+        layers.store_rows(tape, "s", x, jnp.zeros(2, jnp.uint32), 1.0, "gauss", False)
+        assert tape.items[0][0] == "s"
+        np.testing.assert_array_equal(tape.items[0][1], x)
+
+    @pytest.mark.parametrize("rho,expected", [(0.5, 5), (0.09, 1), (0.99, 10)])
+    def test_proj_mode_shrinks_rows(self, rho, expected):
+        rng = np.random.default_rng(4)
+        x = rand(rng, 10, 4)
+        tape = Tape()
+        layers.store_rows(tape, "s", x, jnp.zeros(2, jnp.uint32), rho, "gauss", False)
+        assert tape.items[0][1].shape == (expected, 4)
+
+    def test_grad_from_store_exact_vs_rmm(self):
+        rng = np.random.default_rng(5)
+        x = rand(rng, 64, 6)
+        dy = rand(rng, 64, 8)
+        seed = jnp.asarray([3, 7], jnp.uint32)
+        tape = Tape()
+        layers.store_rows(tape, "s", x, seed, 1.0, "gauss", False)
+        loaded = Loaded(tape.names(), tape.arrays())
+        exact = layers.grad_w_from_store(loaded, "s", dy, seed, 1.0, "gauss", False)
+        np.testing.assert_allclose(exact, dy.T @ x, rtol=1e-5, atol=1e-5)
+        # RMM estimate is unbiased: average over seeds approaches exact
+        acc = np.zeros((8, 6), np.float32)
+        trials = 300
+        for t in range(trials):
+            s = jnp.asarray([t * 13 + 1, 5], jnp.uint32)
+            t2 = Tape()
+            layers.store_rows(t2, "s", x, s, 0.5, "gauss", False)
+            l2 = Loaded(t2.names(), t2.arrays())
+            acc += np.asarray(
+                layers.grad_w_from_store(l2, "s", dy, s, 0.5, "gauss", False))
+        acc /= trials
+        exact_np = np.asarray(dy.T @ x)
+        rel = np.abs(acc - exact_np).max() / np.abs(exact_np).max()
+        assert rel < 0.25, rel
+
+
+class TestMha:
+    def _cfg(self):
+        import dataclasses
+        from compile import model as M
+
+        return M.ModelConfig(vocab_size=32, seq_len=6, batch_size=3,
+                             d_model=8, n_heads=2, n_layers=1, d_ff=16,
+                             n_classes=2, rho=1.0)
+
+    def test_grads_vs_autodiff(self):
+        cfg = self._cfg()
+        rng = np.random.default_rng(6)
+        x3 = rand(rng, 3, 6, 8)
+        mask = jnp.ones((3, 6), jnp.float32).at[0, 4:].set(0.0)
+        p = {
+            f"blk0.{n}_{s}": (rand(rng, 8, 8) * 0.3 if s == "w" else rand(rng, 8) * 0.1)
+            for n in ["q", "k", "v", "o"]
+            for s in ["w", "b"]
+        }
+        seed = jnp.zeros(2, jnp.uint32)
+
+        def f(p_and_x):
+            tape = Tape()
+            out = layers.mha_fwd(tape, "m", p_and_x["x"], mask, p_and_x, "blk0",
+                                 seed, cfg)
+            return jnp.sum(out)
+
+        args = dict(p)
+        args["x"] = x3
+        ad = jax.grad(f)(args)
+
+        tape = Tape()
+        out = layers.mha_fwd(tape, "m", x3, mask, p, "blk0", seed, cfg)
+        loaded = Loaded(tape.names(), tape.arrays())
+        grads = {}
+        dx = layers.mha_bwd(loaded, "m", jnp.ones_like(out), p, "blk0", seed,
+                            cfg, grads)
+        for k in p:
+            # floor the scale: k_b has ~zero true gradient (softmax is
+            # invariant to per-query constant score shifts), so a pure
+            # relative check would amplify float noise
+            scale = max(float(jnp.max(jnp.abs(ad[k]))), 1e-3)
+            err = float(jnp.max(jnp.abs(ad[k] - grads[k]))) / scale
+            assert err < 5e-4, f"{k}: {err}"
+        scale = float(jnp.max(jnp.abs(ad["x"]))) + 1e-8
+        err = float(jnp.max(jnp.abs(ad["x"] - dx))) / scale
+        assert err < 5e-4, f"x: {err}"
+
+    def test_mask_blocks_attention(self):
+        cfg = self._cfg()
+        rng = np.random.default_rng(7)
+        x3 = rand(rng, 3, 6, 8)
+        p = {
+            f"blk0.{n}_{s}": (rand(rng, 8, 8) * 0.3 if s == "w" else rand(rng, 8) * 0.1)
+            for n in ["q", "k", "v", "o"]
+            for s in ["w", "b"]
+        }
+        seed = jnp.zeros(2, jnp.uint32)
+        mask = jnp.ones((3, 6), jnp.float32).at[:, 3:].set(0.0)
+        tape = Tape()
+        layers.mha_fwd(tape, "m", x3, mask, p, "blk0", seed, cfg)
+        a = dict(zip(tape.names(), tape.arrays()))["m.a"]
+        # probabilities on masked keys must be ~0
+        assert float(jnp.max(a[..., 3:])) < 1e-6

@@ -1,0 +1,190 @@
+"""L2 model: hand-written backward vs jax.grad; RMM unbiasedness; shapes."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.layers import Loaded
+
+CFG = M.ModelConfig(vocab_size=64, seq_len=8, batch_size=4, d_model=16,
+                    n_heads=2, n_layers=2, d_ff=32, n_classes=3, rho=1.0)
+
+
+def make_batch(cfg, seed=1):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(cfg.batch_size, cfg.seq_len)),
+        jnp.int32)
+    mask = jnp.ones((cfg.batch_size, cfg.seq_len), jnp.float32)
+    mask = mask.at[0, cfg.seq_len - 2:].set(0.0)
+    if cfg.regression:
+        labels = jnp.asarray(rng.normal(size=(cfg.batch_size,)), jnp.float32)
+    else:
+        labels = jnp.asarray(
+            rng.integers(0, cfg.n_classes, size=(cfg.batch_size,)), jnp.int32)
+    return tokens, mask, labels
+
+
+def run_fwd_bwd(cfg, params, tokens, mask, labels, seed):
+    loss, logits, tape = M.forward(params, tokens, mask, labels, seed, cfg)
+    loaded = Loaded(tape.names(), tape.arrays())
+    grads, probe = M.backward(params, tokens, mask, labels, seed, loaded, cfg)
+    return loss, logits, grads, probe, tape
+
+
+@pytest.fixture(scope="module")
+def params():
+    return {k: jnp.asarray(v) for k, v in M.init_params(CFG, 0).items()}
+
+
+class TestHandBackwardVsAutodiff:
+    @pytest.mark.parametrize("head", ["cls", "reg"])
+    def test_grads_match(self, head):
+        cfg = CFG if head == "cls" else dataclasses.replace(
+            CFG, n_classes=1, regression=True)
+        p = {k: jnp.asarray(v) for k, v in M.init_params(cfg, 0).items()}
+        tokens, mask, labels = make_batch(cfg)
+        _, _, grads, _, _ = run_fwd_bwd(cfg, p, tokens, mask, labels,
+                                        M.seed_dummy())
+        ad = jax.grad(M.loss_fn_autodiff)(p, tokens, mask, labels, cfg)
+        assert set(ad) == set(grads)
+        for k in ad:
+            scale = float(jnp.max(jnp.abs(ad[k]))) + 1e-8
+            err = float(jnp.max(jnp.abs(ad[k] - grads[k]))) / scale
+            assert err < 1e-3, f"{k}: rel err {err}"
+
+    def test_loss_finite_and_positive(self, params):
+        tokens, mask, labels = make_batch(CFG)
+        loss, logits, *_ = run_fwd_bwd(CFG, params, tokens, mask, labels,
+                                       M.seed_dummy())
+        assert np.isfinite(float(loss)) and float(loss) > 0
+        assert logits.shape == (CFG.batch_size, CFG.n_classes)
+
+
+class TestResidualInterface:
+    def test_names_match_tape(self, params):
+        tokens, mask, labels = make_batch(CFG)
+        _, _, tape = M.forward(params, tokens, mask, labels, M.seed_dummy(),
+                               CFG)
+        assert M.residual_names(CFG) == tape.names()
+
+    def test_rmm_shrinks_residuals(self, params):
+        cfg_rmm = dataclasses.replace(CFG, rho=0.25)
+        tokens, mask, labels = make_batch(CFG)
+        _, _, t_full = M.forward(params, tokens, mask, labels, M.seed_dummy(),
+                                 CFG)
+        _, _, t_rmm = M.forward(params, tokens, mask, labels, M.seed_dummy(),
+                                cfg_rmm)
+        bytes_full = sum(a.size for a in t_full.arrays())
+        bytes_rmm = sum(a.size for a in t_rmm.arrays())
+        assert bytes_rmm < bytes_full
+        # linear-layer stores are (rows → ρ·rows); check one specifically
+        d_full = dict(zip(t_full.names(), t_full.arrays()))
+        d_rmm = dict(zip(t_rmm.names(), t_rmm.arrays()))
+        assert d_full["blk0.ffn.f1_in"].shape[0] == cfg_rmm.rows
+        assert d_rmm["blk0.ffn.f1_in"].shape[0] == cfg_rmm.b_proj
+
+    def test_probe_adds_full_input(self, params):
+        cfg = dataclasses.replace(CFG, rho=0.5, probe_layer=1)
+        names = M.residual_names(cfg)
+        assert "blk1.ffn.f1_probe_x" in names
+
+    def test_param_spec_covers_grads(self, params):
+        tokens, mask, labels = make_batch(CFG)
+        _, _, grads, _, _ = run_fwd_bwd(CFG, params, tokens, mask, labels,
+                                        M.seed_dummy())
+        spec_names = [n for n, _ in M.param_spec(CFG)]
+        assert set(spec_names) == set(grads)
+        for n, shape in M.param_spec(CFG):
+            assert grads[n].shape == shape
+
+
+class TestRmmGradient:
+    def test_unbiased_around_exact(self, params):
+        """Average RMM ∂W over seeds converges to the exact gradient."""
+        cfg = dataclasses.replace(CFG, rho=0.5)
+        tokens, mask, labels = make_batch(CFG)
+        _, _, g_exact, _, _ = run_fwd_bwd(CFG, params, tokens, mask, labels,
+                                          M.seed_dummy())
+        key = "blk0.f1_w"
+        acc = np.zeros(g_exact[key].shape, np.float32)
+        trials = 80
+        for s in range(trials):
+            seed = jnp.asarray([s * 13 + 1, s * 101 + 7], jnp.uint32)
+            _, _, g, _, _ = run_fwd_bwd(cfg, params, tokens, mask, labels,
+                                        seed)
+            acc += np.asarray(g[key])
+        acc /= trials
+        exact = np.asarray(g_exact[key])
+        rel = np.abs(acc - exact).max() / (np.abs(exact).max() + 1e-9)
+        assert rel < 0.35, rel  # MC error ~ 1/sqrt(trials)
+
+    def test_exact_parts_unaffected_by_rmm(self, params):
+        """∂L/∂b and LN grads do not depend on the sketch (eqs. 2–3)."""
+        cfg = dataclasses.replace(CFG, rho=0.5)
+        tokens, mask, labels = make_batch(CFG)
+        _, _, g_exact, _, _ = run_fwd_bwd(CFG, params, tokens, mask, labels,
+                                          M.seed_dummy())
+        _, _, g_rmm, _, _ = run_fwd_bwd(cfg, params, tokens, mask, labels,
+                                        jnp.asarray([5, 6], jnp.uint32))
+        # the *last* block's biases see exact upstream grads (RMM only
+        # perturbs ∂W; ∂X̂ paths into them are exact at the top of bwd)
+        np.testing.assert_allclose(g_exact["cls.b"], g_rmm["cls.b"],
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(g_exact["cls.w"], g_rmm["cls.w"],
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_seed_reproducibility(self, params):
+        cfg = dataclasses.replace(CFG, rho=0.5)
+        tokens, mask, labels = make_batch(CFG)
+        seed = jnp.asarray([9, 11], jnp.uint32)
+        _, _, g1, _, _ = run_fwd_bwd(cfg, params, tokens, mask, labels, seed)
+        _, _, g2, _, _ = run_fwd_bwd(cfg, params, tokens, mask, labels, seed)
+        for k in g1:
+            np.testing.assert_array_equal(np.asarray(g1[k]), np.asarray(g2[k]))
+
+    @pytest.mark.parametrize("kind", ["gauss", "rademacher", "dct", "dft",
+                                      "rowsample"])
+    def test_all_sketches_run(self, params, kind):
+        cfg = dataclasses.replace(CFG, rho=0.5, sketch=kind)
+        tokens, mask, labels = make_batch(CFG)
+        loss, _, grads, _, _ = run_fwd_bwd(cfg, params, tokens, mask, labels,
+                                           jnp.asarray([3, 4], jnp.uint32))
+        assert np.isfinite(float(loss))
+        for k, g in grads.items():
+            assert np.all(np.isfinite(np.asarray(g))), k
+
+
+class TestProbe:
+    def test_probe_outputs(self, params):
+        cfg = dataclasses.replace(CFG, rho=0.5, probe_layer=0)
+        tokens, mask, labels = make_batch(CFG)
+        _, _, _, probe, _ = run_fwd_bwd(cfg, params, tokens, mask, labels,
+                                        jnp.asarray([1, 2], jnp.uint32))
+        assert probe is not None
+        for k in M.PROBE_NAMES:
+            assert np.isfinite(float(probe[k])), k
+        assert float(probe["ratio_lhs"]) <= float(probe["bound_rhs"]) * 1.001
+
+
+class TestTrainingSanity:
+    def test_loss_decreases_under_sgd(self, params):
+        """A few SGD steps on a fixed batch reduce the loss (both modes)."""
+        for rho in (1.0, 0.5):
+            cfg = dataclasses.replace(CFG, rho=rho)
+            p = {k: jnp.asarray(v) for k, v in M.init_params(cfg, 0).items()}
+            tokens, mask, labels = make_batch(cfg)
+            first = last = None
+            for step in range(8):
+                seed = jnp.asarray([step * 7 + 1, 2], jnp.uint32)
+                loss, _, grads, _, _ = run_fwd_bwd(cfg, p, tokens, mask,
+                                                   labels, seed)
+                if first is None:
+                    first = float(loss)
+                last = float(loss)
+                p = {k: v - 0.5 * grads[k] for k, v in p.items()}
+            assert last < first, (rho, first, last)

@@ -1,0 +1,125 @@
+"""Philox PRNG: reference vectors, distributional checks, stream hygiene."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import prng
+
+
+def _run(c, k):
+    out = prng.philox4x32(*[jnp.uint32(x) for x in c], *[jnp.uint32(x) for x in k])
+    return [int(o) for o in out]
+
+
+class TestPhiloxVectors:
+    """Known-answer tests from the Random123 distribution (Salmon et al.)."""
+
+    def test_zero_counter_zero_key(self):
+        assert _run((0, 0, 0, 0), (0, 0)) == [
+            0x6627E8D5, 0xE169C58D, 0xBC57AC4C, 0x9B00DBD8]
+
+    def test_all_ones(self):
+        assert _run((0xFFFFFFFF,) * 4, (0xFFFFFFFF,) * 2) == [
+            0x408F276D, 0x41C83B0E, 0xA20BC7C6, 0x6D5451FD]
+
+    def test_pi_digits(self):
+        assert _run(
+            (0x243F6A88, 0x85A308D3, 0x13198A2E, 0x03707344),
+            (0xA4093822, 0x299F31D0),
+        ) == [0xD16CFE09, 0x94FDCCEB, 0x5001E420, 0x24126EA1]
+
+
+class TestMulhilo:
+    @pytest.mark.parametrize("a,b", [
+        (0, 0), (1, 1), (0xFFFFFFFF, 0xFFFFFFFF), (0xD2511F53, 0x12345678),
+        (0x10000, 0x10000), (0xDEADBEEF, 0xCAFEBABE), (1, 0xFFFFFFFF),
+    ])
+    def test_matches_64bit(self, a, b):
+        hi, lo = prng.mulhilo32(jnp.uint32(a), jnp.uint32(b))
+        prod = a * b
+        assert int(hi) == prod >> 32
+        assert int(lo) == prod & 0xFFFFFFFF
+
+    def test_vectorized_matches_scalar(self):
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, 2**32, size=100, dtype=np.uint32)
+        b = rng.integers(0, 2**32, size=100, dtype=np.uint32)
+        hi, lo = prng.mulhilo32(jnp.asarray(a), jnp.asarray(b))
+        exp = a.astype(np.uint64) * b.astype(np.uint64)
+        np.testing.assert_array_equal(np.asarray(hi), (exp >> 32).astype(np.uint32))
+        np.testing.assert_array_equal(np.asarray(lo), exp.astype(np.uint32))
+
+
+class TestDistributions:
+    def test_uniform01_range(self):
+        bits = jnp.arange(0, 2**32 - 1, 65537, dtype=jnp.uint32)
+        u = prng.uniform01(bits)
+        assert float(jnp.min(u)) > 0.0
+        assert float(jnp.max(u)) < 1.0
+
+    def test_normal_moments(self):
+        i = jnp.arange(20000, dtype=jnp.uint32)
+        z = prng.element_normal(i, jnp.uint32(0), 1, 2)
+        z = np.asarray(z)
+        assert abs(z.mean()) < 0.03
+        assert abs(z.std() - 1.0) < 0.03
+        # tail sanity: |z|>4 should be very rare
+        assert (np.abs(z) > 6).sum() == 0
+
+    def test_rademacher_balance(self):
+        i = jnp.arange(20000, dtype=jnp.uint32)
+        r = np.asarray(prng.element_rademacher(i, jnp.uint32(3), 5, 6))
+        assert set(np.unique(r)) == {-1.0, 1.0}
+        assert abs(r.mean()) < 0.03
+
+    def test_uniform_int_range_and_mean(self):
+        i = jnp.arange(20000, dtype=jnp.uint32)
+        v = np.asarray(prng.element_uniform_int(jnp.uint32(0), i, 11, 13, 97))
+        assert v.min() >= 0 and v.max() < 97
+        assert abs(v.mean() - 48.0) < 2.0
+
+    def test_streams_are_independent(self):
+        i = jnp.arange(1000, dtype=jnp.uint32)
+        a = np.asarray(prng.element_normal(i, jnp.uint32(0), 1, 2,
+                                           prng.STREAM_SKETCH))
+        b = np.asarray(prng.element_normal(i, jnp.uint32(0), 1, 2,
+                                           prng.STREAM_SIGNS))
+        assert not np.allclose(a, b)
+        corr = np.corrcoef(a, b)[0, 1]
+        assert abs(corr) < 0.1
+
+    def test_seed_sensitivity(self):
+        i = jnp.arange(1000, dtype=jnp.uint32)
+        a = np.asarray(prng.element_normal(i, jnp.uint32(0), 1, 2))
+        b = np.asarray(prng.element_normal(i, jnp.uint32(0), 1, 3))
+        c = np.asarray(prng.element_normal(i, jnp.uint32(0), 2, 2))
+        assert not np.allclose(a, b)
+        assert not np.allclose(a, c)
+
+    def test_determinism(self):
+        i = jnp.arange(64, dtype=jnp.uint32)[:, None]
+        j = jnp.arange(32, dtype=jnp.uint32)[None, :]
+        a = np.asarray(prng.element_normal(i, j, 42, 43))
+        b = np.asarray(prng.element_normal(i, j, 42, 43))
+        np.testing.assert_array_equal(a, b)
+
+    def test_position_stability(self):
+        """Element (i, j) value is independent of evaluation tile/order."""
+        full = np.asarray(prng.element_normal(
+            jnp.arange(16, dtype=jnp.uint32)[:, None],
+            jnp.arange(12, dtype=jnp.uint32)[None, :], 7, 8))
+        one = float(prng.element_normal(jnp.uint32(9), jnp.uint32(5), 7, 8))
+        assert full[9, 5] == one
+
+
+class TestSplitSeed:
+    def test_roundtrip(self):
+        lo, hi = prng.split_seed(0x1234567890ABCDEF)
+        assert lo == 0x90ABCDEF and hi == 0x12345678
+
+    def test_negative_and_large(self):
+        lo, hi = prng.split_seed(2**64 + 5)
+        assert lo == 5 and hi == 0

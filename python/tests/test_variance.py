@@ -1,0 +1,178 @@
+"""Variance theory (Section 2.3): Lemmas 2.1/2.2, Theorem 2.3, eq. 14–16."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile import variance
+
+settings.register_profile("var", max_examples=25, deadline=None)
+settings.load_profile("var")
+
+
+def _xy(seed, b=12, n=5, m=7):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(b, n)), jnp.float32),
+            jnp.asarray(rng.normal(size=(b, m)), jnp.float32))
+
+
+class TestLemma21:
+    def test_matches_direct_estimator(self):
+        """Eq. (9) equals the textbook per-sample variance estimator (eq. 20-21)."""
+        x, y = _xy(0)
+        b = x.shape[0]
+        xn, yn = np.asarray(x), np.asarray(y)
+        zbar = xn.T @ yn
+        # D²_Z = 1/B Σ‖B·x_k y_kᵀ − Z̄‖² ;  D²_SGD = D²_Z / (B−1)
+        d2z = sum(
+            np.linalg.norm(b * np.outer(xn[k], yn[k]) - zbar, "fro") ** 2
+            for k in range(b)) / b
+        expected = d2z / (b - 1)
+        got = float(ref.d2_sgd(x, y))
+        assert got == pytest.approx(expected, rel=1e-4)
+
+    @given(seed=st.integers(0, 10000), b=st.integers(2, 40),
+           n=st.integers(1, 16), m=st.integers(1, 16))
+    def test_nonnegative(self, seed, b, n, m):
+        x, y = _xy(seed, b, n, m)
+        assert float(ref.d2_sgd(x, y)) >= -1e-3
+
+    def test_zero_for_identical_rank_one(self):
+        """If every per-sample gradient equals the mean, variance is 0."""
+        x = jnp.ones((8, 3), jnp.float32)
+        y = jnp.ones((8, 4), jnp.float32)
+        assert float(ref.d2_sgd(x, y)) == pytest.approx(0.0, abs=1e-3)
+
+
+class TestLemma22:
+    @given(seed=st.integers(0, 10000), b=st.integers(2, 24),
+           n=st.integers(1, 8), m=st.integers(1, 8),
+           b_proj=st.integers(1, 24))
+    def test_nonnegative(self, seed, b, n, m, b_proj):
+        x, y = _xy(seed, b, n, m)
+        # Cauchy-Schwarz: ‖XᵀY‖²_F ≤ ‖X‖²_F ‖Y‖²_F
+        assert float(ref.d2_rmm(x, y, b_proj)) >= -1e-3
+
+    @pytest.mark.parametrize("b_proj", [2, 4, 8])
+    def test_exact_formula_matches_monte_carlo(self, b_proj):
+        """The *exact* variance (fourth moment included) matches MC.
+
+        The paper's eq. (11) misses +2‖XᵀY‖²/B_proj (proof of eq. 36 drops
+        the Gaussian excess kurtosis) — see EXPERIMENTS.md §Discrepancies.
+        """
+        x, y = _xy(1, b=10, n=4, m=3)
+        xn, yn = np.asarray(x), np.asarray(y)
+        exact = xn.T @ yn
+        trials = 3000
+        acc = 0.0
+        for t in range(trials):
+            s = ref.numpy_sketch("gauss", 10, b_proj, t * 101 + 3)
+            acc += np.linalg.norm(xn.T @ s @ s.T @ yn - exact, "fro") ** 2
+        mc = acc / trials
+        formula = float(ref.d2_rmm_exact(x, y, b_proj))
+        assert mc == pytest.approx(formula, rel=0.15)
+        # and the paper's form is a strict lower bound at the exact gap
+        paper = float(ref.d2_rmm(x, y, b_proj))
+        gap = 2 * float(np.linalg.norm(exact, "fro") ** 2) / b_proj
+        assert formula - paper == pytest.approx(gap, rel=1e-4)
+
+    def test_paper_form_accurate_when_alpha_small(self):
+        """α ≪ 1 (the training regime) ⇒ eq. (11) ≈ exact."""
+        x, y = _xy(3, b=64, n=8, m=8)
+        assert float(ref.alpha(x, y)) < 0.05
+        exact = float(ref.d2_rmm_exact(x, y, 8))
+        paper = float(ref.d2_rmm(x, y, 8))
+        assert (exact - paper) / exact < 0.1
+
+    def test_scaling_in_b_proj(self):
+        x, y = _xy(2)
+        assert float(ref.d2_rmm(x, y, 10)) == pytest.approx(
+            float(ref.d2_rmm(x, y, 5)) / 2, rel=1e-4)
+
+
+class TestTheorem23:
+    """Theorem 2.3 soundness finding (see EXPERIMENTS.md §Discrepancies):
+
+    the proof's step (43)→(45) silently drops a +2‖X‖²‖Y‖² term, so the
+    inequality as *stated* is false in general (hypothesis found e.g.
+    B=3, N=1, M=2, B_proj=1 violations).  What is true is the identity
+
+        B_proj·D²_RMM − (B−1)·((α+1)/α)·D²_SGD
+            = 2‖X‖²‖Y‖² − B·((α+1)/α)·Σ_k‖x_k‖²‖y_k‖²,
+
+    whose RHS is ≤ 0 in the training regime (per-row mass B·Σ‖x_k‖²‖y_k‖²
+    dominating ‖X‖²‖Y‖²), which is why the paper's Fig. 4 ratio does sit
+    below (α+1)/α empirically — our Fig 4 driver confirms the same.
+    """
+
+    @given(seed=st.integers(0, 20000), b=st.integers(3, 32),
+           n=st.integers(1, 12), m=st.integers(1, 12),
+           b_proj=st.integers(1, 32))
+    def test_corrected_identity(self, seed, b, n, m, b_proj):
+        x, y = _xy(seed, b, n, m)
+        xn, yn = np.asarray(x, np.float64), np.asarray(y, np.float64)
+        p = (xn**2).sum() * (yn**2).sum()
+        r = ((xn**2).sum(1) * (yn**2).sum(1)).sum()
+        q = np.linalg.norm(xn.T @ yn, "fro") ** 2
+        if q < 1e-9 * p:
+            return  # alpha -> 0: (α+1)/α diverges
+        a = q / p
+        lhs = (b_proj * float(ref.d2_rmm(x, y, b_proj))
+               - (b - 1) * ((a + 1) / a) * float(ref.d2_sgd(x, y)))
+        rhs = 2 * p - b * ((a + 1) / a) * r
+        assert lhs == pytest.approx(rhs, rel=2e-3, abs=1e-3 * abs(rhs) + 1e-4)
+
+    def test_paper_bound_has_counterexample(self):
+        """Pin the violation hypothesis discovered (B=3, N=1, M=2, B_proj=1)."""
+        x, y = _xy(3307, 3, 1, 2)
+        a = float(ref.alpha(x, y))
+        lhs = float(ref.variance_ratio_lhs(x, y, 1))
+        rhs = (a + 1) / a
+        assert lhs > rhs, "expected a Theorem 2.3 violation at this seed"
+
+    @given(seed=st.integers(0, 5000))
+    def test_bound_holds_in_training_regime(self, seed):
+        """With iid rows and enough of them (the regime of Fig. 4), the
+        per-row mass dominates and the paper's bound holds."""
+        x, y = _xy(seed, b=32, n=8, m=8)
+        a = float(ref.alpha(x, y))
+        if a < 1e-7:
+            return
+        lhs = float(ref.variance_ratio_lhs(x, y, 16))
+        rhs = (a + 1) / a
+        assert lhs <= rhs * (1 + 1e-3)
+
+    def test_alpha_in_unit_interval(self):
+        for seed in range(20):
+            x, y = _xy(seed)
+            a = float(ref.alpha(x, y))
+            assert -1e-6 <= a <= 1 + 1e-6
+
+    def test_adversarial_example_eq_14_16(self):
+        """The paper's ε example: XᵀY = 0 makes the ratio arbitrarily large."""
+        for eps in (0.5, 0.1, 0.01):
+            x = jnp.asarray([[1.0, 0.0], [-eps, 0.0]], jnp.float32)
+            y = jnp.asarray([[1.0, 0.0], [1.0 / eps, 0.0]], jnp.float32)
+            b, b_proj = 2, 1
+            # eq. (15): (B−1) D²_SGD = 4
+            assert float(ref.d2_sgd(x, y)) * (b - 1) == pytest.approx(4.0, rel=1e-3)
+            # eq. (16): B_proj D²_RMM = 2 + ε² + ε⁻²
+            assert float(ref.d2_rmm(x, y, b_proj)) * b_proj == pytest.approx(
+                2 + eps**2 + eps**-2, rel=1e-3)
+        # and the ratio grows without bound as ε → 0
+        ratios = []
+        for eps in (0.5, 0.1, 0.02):
+            x = jnp.asarray([[1.0, 0.0], [-eps, 0.0]], jnp.float32)
+            y = jnp.asarray([[1.0, 0.0], [1.0 / eps, 0.0]], jnp.float32)
+            ratios.append(float(ref.d2_rmm(x, y, 1)) / float(ref.d2_sgd(x, y)))
+        assert ratios[0] < ratios[1] < ratios[2]
+
+
+class TestProbeMetrics:
+    def test_keys_and_bound(self):
+        x, y = _xy(7, b=16)
+        m = variance.probe_metrics(x, y, b_proj=8)
+        assert set(m) == {"d2_sgd", "d2_rmm", "alpha", "ratio_lhs", "bound_rhs"}
+        assert float(m["ratio_lhs"]) <= float(m["bound_rhs"]) * (1 + 1e-3)

@@ -1,0 +1,37 @@
+//! The O(B²N) dense-sketch vs O(BN log B) fast-transform crossover
+//! (paper §3.5: DCT/DFT "have theoretically computational advantage" —
+//! here we measure where it actually materializes).
+
+use rmmlinear::rmm::fft::sors_project_fast;
+use rmmlinear::rmm::{self, SketchKind};
+use rmmlinear::rng::philox::PhiloxStream;
+use rmmlinear::tensor::Tensor;
+use rmmlinear::util::bench::{black_box, Bencher};
+
+fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut s = PhiloxStream::new(seed, 3);
+    Tensor::from_fn(rows, cols, |_, _| s.next_normal())
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let n = 64;
+    for log_b in [6usize, 8, 10, 12] {
+        let rows = 1 << log_b;
+        let b_proj = rows / 8;
+        let x = randt(rows, n, log_b as u64);
+        b.bench(&format!("dense_gauss/B={rows}"), || {
+            black_box(rmm::project(SketchKind::Gauss, &x, b_proj, (1, 2)));
+        });
+        b.bench(&format!("dense_dct/B={rows}"), || {
+            black_box(rmm::project(SketchKind::Dct, &x, b_proj, (1, 2)));
+        });
+        b.bench(&format!("fast_dct/B={rows}"), || {
+            black_box(sors_project_fast(true, &x, b_proj, (1, 2)));
+        });
+        b.bench(&format!("fast_dft/B={rows}"), || {
+            black_box(sors_project_fast(false, &x, b_proj, (1, 2)));
+        });
+    }
+    b.write_report("reports/bench_fft_crossover.json");
+}

@@ -1,0 +1,57 @@
+//! Micro-bench: the Table 1 cost model on the host reference —
+//! exact ∂W = YᵀX vs RMM's project+contract at several ρ, plus the
+//! streamed (O(1)-memory-for-S) projection vs dense-S materialization.
+//!
+//! Expected shape: RMM backward cost scales ~linearly with ρ; the
+//! crossover vs exact happens below ρ ≈ N_in/(B + N_in) (paper §2.4.2).
+
+use rmmlinear::rmm::{self, sketch, SketchKind};
+use rmmlinear::rng::philox::PhiloxStream;
+use rmmlinear::tensor::{matmul_at, Tensor};
+use rmmlinear::util::bench::{black_box, Bencher};
+
+fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut s = PhiloxStream::new(seed, 3);
+    Tensor::from_fn(rows, cols, |_, _| s.next_normal())
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let (rows, n_in, n_out) = (512, 64, 256);
+    let x = randt(rows, n_in, 1);
+    let y = randt(rows, n_out, 2);
+
+    b.bench("exact_grad_w/512x64x256", || {
+        black_box(rmm::exact_grad_w(&y, &x));
+    });
+
+    for rho in [0.5f64, 0.2, 0.1, 0.05] {
+        let b_proj = ((rho * rows as f64) as usize).max(1);
+        let x_proj = rmm::project(SketchKind::Gauss, &x, b_proj, (7, 8));
+        b.bench(&format!("rmm_grad_w/gauss/rho={rho}"), || {
+            black_box(rmm::rmm_grad_w(SketchKind::Gauss, &y, &x_proj, (7, 8)));
+        });
+        b.bench(&format!("project/gauss/rho={rho}"), || {
+            black_box(rmm::project(SketchKind::Gauss, &x, b_proj, (7, 8)));
+        });
+    }
+
+    // Streamed projection vs dense-S materialization (memory-traffic study)
+    let b_proj = 64;
+    b.bench("project_streamed/gauss", || {
+        black_box(sketch::project_streamed(SketchKind::Gauss, &x, b_proj, (3, 4)));
+    });
+    b.bench("project_dense_s/gauss", || {
+        let s = sketch::sketch(SketchKind::Gauss, rows, b_proj, (3, 4));
+        black_box(matmul_at(&s, &x));
+    });
+
+    // Sketch-family generation cost at fixed rho (Table 4's cost axis)
+    for kind in SketchKind::ALL {
+        b.bench(&format!("project/{}/rho=0.2", kind.name()), || {
+            black_box(rmm::project(kind, &x, 102, (5, 6)));
+        });
+    }
+
+    b.write_report("reports/bench_rmm_micro.json");
+}

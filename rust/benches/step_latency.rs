@@ -1,0 +1,60 @@
+//! End-to-end training-step latency through PJRT per compression ratio —
+//! the Fig. 6 measurement as a microbench (fwd + store + bwd + optimizer).
+//!
+//! Requires `make artifacts`; skips gracefully when artifacts are missing
+//! (e.g. bare `cargo bench` in CI before the AOT step).
+
+use std::path::Path;
+
+use rmmlinear::config::TrainConfig;
+use rmmlinear::coordinator::Trainer;
+use rmmlinear::data::{Batcher, Split, Task, TaskGen, Tokenizer};
+use rmmlinear::runtime::{Engine, Manifest};
+use rmmlinear::util::bench::Bencher;
+
+fn main() {
+    let manifest = match Manifest::load(Path::new("artifacts")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping step_latency bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let mut engine = Engine::cpu().expect("pjrt cpu");
+    let mut b = Bencher::new();
+
+    for tag in ["r100", "r50", "r20", "r10"] {
+        let vname = format!("small_cls2_{tag}_gauss");
+        let variant = match manifest.variant(&vname) {
+            Ok(v) => v,
+            Err(_) => continue,
+        };
+        let cfg = TrainConfig { steps: 1, warmup_steps: 0, ..Default::default() };
+        let tok = Tokenizer::new(variant.config.vocab_size);
+        let mut trainer =
+            Trainer::new(&manifest, variant, Task::Cola, cfg).expect("trainer");
+        let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, 1);
+        let batch = Batcher::new(&gen, Split::Train, variant.config.batch_size, 0)
+            .next()
+            .unwrap();
+        // warm the compile cache outside the timed region
+        trainer.train_step(&mut engine, &batch).expect("warmup step");
+        b.bench(&format!("train_step/{tag}"), || {
+            trainer.train_step(&mut engine, &batch).expect("step");
+        });
+    }
+
+    // eval-only latency (logits path)
+    if let Ok(variant) = manifest.variant("small_cls2_r100_gauss") {
+        let cfg = TrainConfig { steps: 1, warmup_steps: 0, ..Default::default() };
+        let tok = Tokenizer::new(variant.config.vocab_size);
+        let mut trainer =
+            Trainer::new(&manifest, variant, Task::Cola, cfg).expect("trainer");
+        trainer.evaluate(&mut engine, &tok).expect("warm eval");
+        b.bench("evaluate_dev/cola/r100", || {
+            trainer.evaluate(&mut engine, &tok).expect("eval");
+        });
+    }
+
+    b.write_report("reports/bench_step_latency.json");
+}

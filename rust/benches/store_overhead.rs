@@ -1,0 +1,48 @@
+//! ActivationStore bookkeeping overhead: the L3 store must be negligible
+//! next to a training step (paper's coordinator should never be the
+//! bottleneck).  Also benches the JSON codec and the literal staging copy
+//! that sit on the step path.
+
+use rmmlinear::memory::ActivationStore;
+use rmmlinear::util::bench::{black_box, Bencher};
+use rmmlinear::util::json::Json;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    // Typical step: ~32 residuals staged then drained.
+    let names: Vec<String> = (0..32).map(|i| format!("blk{}.res{}", i / 8, i)).collect();
+    b.bench("store/put_take_32", || {
+        let mut s: ActivationStore<Vec<f32>> = ActivationStore::new();
+        for n in &names {
+            s.put(n, vec![0.0f32; 16], 64);
+        }
+        for n in &names {
+            black_box(s.take(n));
+        }
+    });
+
+    // Host param clone (the per-step upload staging copy).
+    let params: Vec<Vec<f32>> = vec![vec![0.5f32; 4096]; 32];
+    b.bench("staging/clone_params_512k", || {
+        black_box(params.clone());
+    });
+
+    // Metrics JSON encode (log hot path).
+    b.bench("json/encode_metric_record", || {
+        let rec = Json::obj(vec![
+            ("step", Json::num(123.0)),
+            ("loss", Json::num(0.451)),
+            ("lr", Json::num(1e-4)),
+            ("grad_norm", Json::num(2.3)),
+        ]);
+        black_box(rec.to_string());
+    });
+
+    let manifest_like = r#"{"version":2,"variants":{"v":{"rows":512,"entries":{"fwd":{"file":"f","args":[],"outputs":[]}}}}}"#;
+    b.bench("json/parse_small_manifest", || {
+        black_box(Json::parse(manifest_like).unwrap());
+    });
+
+    b.write_report("reports/bench_store_overhead.json");
+}

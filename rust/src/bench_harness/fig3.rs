@@ -1,0 +1,95 @@
+//! Figure 3 / Figure 8: peak memory vs batch size for several ρ.
+//!
+//! Paper shape: stored-activation bytes grow ~linearly in B, with slope
+//! scaling with ρ for the linear-layer share (near-linear scaling "confirms
+//! correctness of the implementation", §3.2).  Measured store bytes for
+//! B ∈ {8,16,32,64} plus the analytic model and its RoBERTa-scale
+//! extrapolation; `--all-tasks` sweeps the task suite (Fig. 8).
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::Task;
+use crate::memory::{MemoryModel, ModelGeometry};
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Json;
+
+use super::runner::{run_finetune, RunOpts};
+
+pub const BATCHES: [usize; 4] = [8, 16, 32, 64];
+pub const RHOS: [f64; 4] = [1.0, 0.5, 0.2, 0.1];
+
+fn variant_for(bsz: usize, rho: f64) -> String {
+    let tag = match rho {
+        r if (r - 1.0).abs() < 1e-9 => "r100",
+        r if (r - 0.5).abs() < 1e-9 => "r50",
+        r if (r - 0.2).abs() < 1e-9 => "r20",
+        _ => "r10",
+    };
+    if bsz == 16 {
+        format!("small_cls2_{tag}_gauss")
+    } else {
+        format!("small_cls2_b{bsz}_{tag}_gauss")
+    }
+}
+
+pub fn run(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    tasks: &[Task],
+    steps: usize,
+) -> Result<Json> {
+    let mut series = Vec::new();
+    // Batch-size variants are lowered for the 2-class head geometry only.
+    let tasks: Vec<Task> = tasks
+        .iter()
+        .copied()
+        .filter(|t| !t.is_regression() && t.n_classes() == 2)
+        .collect();
+    for &task in &tasks {
+        println!("\nFig 3 (task {}): peak residual bytes vs batch size", task.name());
+        println!("{:>8} {:>8} {:>14} {:>14} {:>16}", "rho", "batch", "measured KiB", "model KiB", "roberta MiB");
+        for &rho in &RHOS {
+            for &bsz in &BATCHES {
+                let vname = variant_for(bsz, rho);
+                let variant = manifest.variant(&vname)?;
+                let train = TrainConfig {
+                    steps,
+                    warmup_steps: 0,
+                    log_every: steps.max(1),
+                    ..TrainConfig::default()
+                };
+                let res = run_finetune(
+                    engine,
+                    manifest,
+                    &vname,
+                    task,
+                    RunOpts { train, skip_eval: true, ..Default::default() },
+                )?;
+                let model = MemoryModel::new(variant.config.geometry(), rho);
+                let rob =
+                    MemoryModel::new(ModelGeometry::roberta_base(bsz * 2, 128), rho);
+                println!(
+                    "{:>8.2} {:>8} {:>14.1} {:>14.1} {:>16.1}",
+                    rho,
+                    bsz,
+                    res.peak_residual_bytes as f64 / 1024.0,
+                    model.residual_bytes() as f64 / 1024.0,
+                    rob.residual_bytes() as f64 / (1024.0 * 1024.0),
+                );
+                series.push(Json::obj(vec![
+                    ("task", Json::str(task.name())),
+                    ("rho", Json::num(rho)),
+                    ("batch", Json::num(bsz as f64)),
+                    ("measured_bytes", Json::num(res.peak_residual_bytes as f64)),
+                    ("model_bytes", Json::num(model.residual_bytes() as f64)),
+                    ("roberta_bytes", Json::num(rob.residual_bytes() as f64)),
+                ]));
+            }
+        }
+    }
+    Ok(Json::obj(vec![
+        ("experiment", Json::str("fig3")),
+        ("series", Json::Arr(series)),
+    ]))
+}

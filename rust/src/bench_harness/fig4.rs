@@ -1,0 +1,77 @@
+//! Figure 4 / Figure 7: evolution of the variance estimates during
+//! fine-tuning — D²_SGD (eq. 9), D²_RMM (eq. 11), the ratio LHS of
+//! Theorem 2.3's inequality (12), and α (eq. 13) — at the probe layer
+//! (FFN1 of the middle block, matching the paper's "transformer block #7").
+//!
+//! Paper shape: variances slowly increase, their ratio stabilizes, the
+//! bound always holds, α stays small.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::Task;
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Json;
+
+use super::runner::{run_finetune, RunOpts};
+
+pub fn run(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    train: TrainConfig,
+) -> Result<Json> {
+    let res = run_finetune(
+        engine,
+        manifest,
+        "probe_cls2_r50_gauss",
+        Task::Cola,
+        RunOpts { train, skip_eval: true, ..Default::default() },
+    )?;
+
+    println!("\nFig 4/7: variance probe series (CoLA, rho=0.5, gauss)");
+    println!(
+        "{:>6} {:>13} {:>13} {:>9} {:>11} {:>11}",
+        "step", "d2_sgd", "d2_rmm", "alpha", "ratio_lhs", "bound_rhs"
+    );
+    let stride = (res.probe_series.len() / 24).max(1);
+    let mut violations = 0usize;
+    for (i, (step, p)) in res.probe_series.iter().enumerate() {
+        if p[3] > p[4] * 1.001 {
+            violations += 1;
+        }
+        if i % stride == 0 || i + 1 == res.probe_series.len() {
+            println!(
+                "{:>6} {:>13.4e} {:>13.4e} {:>9.4} {:>11.4} {:>11.2}",
+                step, p[0], p[1], p[2], p[3], p[4]
+            );
+        }
+    }
+    println!(
+        "bound violations: {violations}/{} (Theorem 2.3 holds: {})",
+        res.probe_series.len(),
+        violations == 0
+    );
+
+    Ok(Json::obj(vec![
+        ("experiment", Json::str("fig4")),
+        ("bound_violations", Json::num(violations as f64)),
+        (
+            "series",
+            Json::Arr(
+                res.probe_series
+                    .iter()
+                    .map(|(s, p)| {
+                        Json::obj(vec![
+                            ("step", Json::num(*s as f64)),
+                            ("d2_sgd", Json::num(p[0])),
+                            ("d2_rmm", Json::num(p[1])),
+                            ("alpha", Json::num(p[2])),
+                            ("ratio_lhs", Json::num(p[3])),
+                            ("bound_rhs", Json::num(p[4])),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]))
+}

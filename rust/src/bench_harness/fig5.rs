@@ -1,0 +1,116 @@
+//! Figure 5 / Figure 9: train/eval cross-entropy curves vs ρ on the
+//! MNLI-like task.
+//!
+//! Paper shape: curves shift smoothly as ρ decreases — train loss rises
+//! (noisier gradients fit less) while the eval curve flattens; the
+//! overfitting point stays roughly in place.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::Task;
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Json;
+
+use super::runner::{head_for, run_finetune, variant_name, RunOpts};
+
+pub const RHOS: [f64; 4] = [1.0, 0.5, 0.2, 0.1];
+
+pub fn run(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    task: Task,
+    train: TrainConfig,
+) -> Result<Json> {
+    let mut curves = Vec::new();
+    for &rho in &RHOS {
+        let vname = variant_name("small", head_for(task), rho, "gauss");
+        eprintln!("fig5: rho={rho} -> {vname}");
+        let res = run_finetune(
+            engine,
+            manifest,
+            &vname,
+            task,
+            RunOpts {
+                train: train.clone(),
+                eval_loss_every: (train.steps / 16).max(1),
+                skip_eval: true,
+                ..Default::default()
+            },
+        )?;
+        curves.push((rho, res));
+    }
+
+    println!("\nFig 5/9: loss curves on {} (train | eval)", task.name());
+    print!("{:>6}", "step");
+    for (rho, _) in &curves {
+        print!("  tr r={rho:<4} ev r={rho:<4}");
+    }
+    println!();
+    let steps: Vec<usize> = curves[0].1.eval_losses.iter().map(|&(s, _)| s).collect();
+    for &s in &steps {
+        print!("{s:>6}");
+        for (_, res) in &curves {
+            let tr = res
+                .train_losses
+                .iter()
+                .min_by_key(|(ts, _)| ts.abs_diff(s))
+                .map(|&(_, l)| l)
+                .unwrap_or(f64::NAN);
+            let ev = res
+                .eval_losses
+                .iter()
+                .find(|&&(ts, _)| ts == s)
+                .map(|&(_, l)| l)
+                .unwrap_or(f64::NAN);
+            print!("  {tr:>9.4} {ev:>9.4}");
+        }
+        println!();
+    }
+
+    Ok(Json::obj(vec![
+        ("experiment", Json::str("fig5")),
+        ("task", Json::str(task.name())),
+        (
+            "curves",
+            Json::Arr(
+                curves
+                    .iter()
+                    .map(|(rho, res)| {
+                        Json::obj(vec![
+                            ("rho", Json::num(*rho)),
+                            (
+                                "train",
+                                Json::Arr(
+                                    res.train_losses
+                                        .iter()
+                                        .map(|&(s, l)| {
+                                            Json::arr(vec![
+                                                Json::num(s as f64),
+                                                Json::num(l),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                            (
+                                "eval",
+                                Json::Arr(
+                                    res.eval_losses
+                                        .iter()
+                                        .map(|&(s, l)| {
+                                            Json::arr(vec![
+                                                Json::num(s as f64),
+                                                Json::num(l),
+                                            ])
+                                        })
+                                        .collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]))
+}

@@ -1,0 +1,61 @@
+//! Figure 6: relative training throughput (samples/s vs baseline) as a
+//! function of compression ratio ρ.
+//!
+//! Paper shape: randomized layers cost extra at ρ≈0.5 (the projection adds
+//! work), approach parity as ρ shrinks, and win below ρ≈0.1 where the
+//! backward contraction's O(ρ·B·N_out·(B+N_in)) beats the baseline's
+//! O(B·N_in·N_out).
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::Task;
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Json;
+
+use super::runner::{head_for, run_finetune, variant_name, RunOpts};
+
+pub const RHOS: [f64; 5] = [1.0, 0.9, 0.5, 0.2, 0.1];
+
+pub fn run(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    task: Task,
+    steps: usize,
+) -> Result<Json> {
+    let mut rows = Vec::new();
+    let mut baseline = f64::NAN;
+    println!("\nFig 6: relative throughput vs compression ratio ({})", task.name());
+    println!("{:>8} {:>14} {:>12}", "rho", "samples/s", "relative");
+    for &rho in &RHOS {
+        let vname = variant_name("small", head_for(task), rho, "gauss");
+        let train = TrainConfig {
+            steps,
+            warmup_steps: 0,
+            log_every: steps.max(1),
+            ..TrainConfig::default()
+        };
+        let res = run_finetune(
+            engine,
+            manifest,
+            &vname,
+            task,
+            RunOpts { train, skip_eval: true, ..Default::default() },
+        )?;
+        if (rho - 1.0).abs() < 1e-9 {
+            baseline = res.samples_per_s;
+        }
+        let rel = res.samples_per_s / baseline;
+        println!("{:>8.2} {:>14.1} {:>12.3}", rho, res.samples_per_s, rel);
+        rows.push(Json::obj(vec![
+            ("rho", Json::num(rho)),
+            ("samples_per_s", Json::num(res.samples_per_s)),
+            ("relative", Json::num(rel)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("experiment", Json::str("fig6")),
+        ("task", Json::str(task.name())),
+        ("rows", Json::Arr(rows)),
+    ]))
+}

@@ -1,0 +1,28 @@
+//! Bench harness: one driver per paper table/figure (DESIGN.md §5).
+//!
+//! Each driver prints the paper-style rows and returns a JSON report the
+//! CLI writes under `reports/` for EXPERIMENTS.md regeneration.
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod runner;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Write a driver's JSON report under `reports/<name>.json`.
+pub fn write_report(dir: &Path, name: &str, report: &Json) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, report.to_string_pretty())?;
+    println!("report -> {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,197 @@
+//! Shared experiment runner: one fine-tuning run = (variant, task, config)
+//! → final metric, loss curves, throughput, memory stats.  Every table and
+//! figure driver composes this.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::{MetricsLog, Trainer};
+use crate::data::{Batcher, Split, Task, TaskGen, Tokenizer};
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Json;
+
+/// Everything measured in one run (a row of a table / a series of a fig).
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub variant: String,
+    pub task: String,
+    pub rho: f64,
+    pub sketch: String,
+    pub score: f64,
+    pub final_train_loss: f64,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub samples_per_s: f64,
+    pub peak_residual_bytes: usize,
+    pub train_losses: Vec<(usize, f64)>,
+    pub eval_losses: Vec<(usize, f64)>,
+    pub probe_series: Vec<(usize, [f64; 5])>,
+}
+
+impl RunResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant.clone())),
+            ("task", Json::str(self.task.clone())),
+            ("rho", Json::num(self.rho)),
+            ("sketch", Json::str(self.sketch.clone())),
+            ("score", Json::num(self.score)),
+            ("final_train_loss", Json::num(self.final_train_loss)),
+            ("steps", Json::num(self.steps as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("samples_per_s", Json::num(self.samples_per_s)),
+            ("peak_residual_bytes", Json::num(self.peak_residual_bytes as f64)),
+        ])
+    }
+}
+
+/// Options modulating a run (eval cadence, logging, warm start).
+pub struct RunOpts<'a> {
+    pub train: TrainConfig,
+    pub log: Option<&'a mut MetricsLog>,
+    /// Record eval loss every N steps (0 = never) — Fig. 5 series.
+    pub eval_loss_every: usize,
+    /// Warm-start encoder body from (names, params) if provided.
+    pub warm_start: Option<(&'a [String], &'a [Vec<f32>])>,
+    /// Skip the final dev-metric evaluation (memory/throughput-only runs).
+    pub skip_eval: bool,
+}
+
+impl<'a> Default for RunOpts<'a> {
+    fn default() -> Self {
+        Self {
+            train: TrainConfig::default(),
+            log: None,
+            eval_loss_every: 0,
+            warm_start: None,
+            skip_eval: false,
+        }
+    }
+}
+
+/// Fine-tune `variant` on `task` and measure everything.
+pub fn run_finetune(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    variant_name: &str,
+    task: Task,
+    mut opts: RunOpts<'_>,
+) -> Result<RunResult> {
+    let variant = manifest.variant(variant_name)?;
+    let tok = Tokenizer::new(variant.config.vocab_size);
+    let mut trainer = Trainer::new(manifest, variant, task, opts.train.clone())?;
+    if let Some((names, params)) = opts.warm_start {
+        let n = trainer.load_matching(names, params);
+        eprintln!("warm start: loaded {n}/{} params", trainer.params.len());
+    }
+
+    let gen = TaskGen::new(task, &tok, variant.config.seq_len, opts.train.seed);
+    let bsz = variant.config.batch_size;
+    let mut train_losses = Vec::new();
+    let mut eval_losses = Vec::new();
+    let mut probe_series = Vec::new();
+
+    let t0 = std::time::Instant::now();
+    let mut epoch = 0u64;
+    let mut batches = Batcher::new(&gen, Split::Train, bsz, epoch);
+    let mut compile_time = 0.0f64;
+    for step in 0..opts.train.steps {
+        let batch = match batches.next() {
+            Some(b) => b,
+            None => {
+                epoch += 1;
+                batches = Batcher::new(&gen, Split::Train, bsz, epoch);
+                batches.next().expect("empty task split")
+            }
+        };
+        let pre_compile = engine.stats.compile_s;
+        let stats = trainer.train_step(engine, &batch)?;
+        compile_time += engine.stats.compile_s - pre_compile;
+
+        if step % opts.train.log_every == 0 || step + 1 == opts.train.steps {
+            train_losses.push((step, stats.loss));
+            if let Some(log) = opts.log.as_deref_mut() {
+                let mut rec = vec![
+                    ("kind", Json::str("train")),
+                    ("step", Json::num(step as f64)),
+                    ("loss", Json::num(stats.loss)),
+                    ("lr", Json::num(stats.lr)),
+                    ("grad_norm", Json::num(stats.grad_norm)),
+                    ("residual_bytes", Json::num(stats.residual_bytes as f64)),
+                ];
+                if let Some(p) = stats.probe {
+                    rec.push(("d2_sgd", Json::num(p.d2_sgd)));
+                    rec.push(("d2_rmm", Json::num(p.d2_rmm)));
+                    rec.push(("alpha", Json::num(p.alpha)));
+                    rec.push(("ratio_lhs", Json::num(p.ratio_lhs)));
+                    rec.push(("bound_rhs", Json::num(p.bound_rhs)));
+                }
+                log.log(Json::obj(rec));
+            }
+        }
+        if let Some(p) = stats.probe {
+            probe_series.push((
+                step,
+                [p.d2_sgd, p.d2_rmm, p.alpha, p.ratio_lhs, p.bound_rhs],
+            ));
+        }
+        if opts.eval_loss_every > 0 && step % opts.eval_loss_every == 0 {
+            let dev = Batcher::new(&gen, Split::Dev, bsz, 0).next().unwrap();
+            let el = trainer.eval_loss(engine, &dev)?;
+            eval_losses.push((step, el));
+            if let Some(log) = opts.log.as_deref_mut() {
+                log.log(Json::obj(vec![
+                    ("kind", Json::str("eval_loss")),
+                    ("step", Json::num(step as f64)),
+                    ("loss", Json::num(el)),
+                ]));
+            }
+        }
+    }
+    // exclude one-time XLA compilation from throughput accounting
+    let wall_s = t0.elapsed().as_secs_f64() - compile_time;
+    let score = if opts.skip_eval {
+        f64::NAN
+    } else {
+        trainer.evaluate(engine, &tok)?
+    };
+    Ok(RunResult {
+        variant: variant_name.to_string(),
+        task: task.name().to_string(),
+        rho: variant.config.rho,
+        sketch: variant.config.sketch.clone(),
+        score,
+        final_train_loss: train_losses.last().map(|&(_, l)| l).unwrap_or(f64::NAN),
+        steps: opts.train.steps,
+        wall_s,
+        samples_per_s: (opts.train.steps * bsz) as f64 / wall_s.max(1e-9),
+        peak_residual_bytes: trainer.peak_residual_bytes,
+        train_losses,
+        eval_losses,
+        probe_series,
+    })
+}
+
+/// Variant name scheme shared with aot.py.
+pub fn variant_name(prefix: &str, head: &str, rho: f64, sketch: &str) -> String {
+    let tag = match rho {
+        r if (r - 1.0).abs() < 1e-9 => "r100".to_string(),
+        r if (r - 0.9).abs() < 1e-9 => "r90".to_string(),
+        r if (r - 0.5).abs() < 1e-9 => "r50".to_string(),
+        r if (r - 0.2).abs() < 1e-9 => "r20".to_string(),
+        r if (r - 0.1).abs() < 1e-9 => "r10".to_string(),
+        r => format!("r{:03}", (r * 100.0).round() as usize),
+    };
+    format!("{prefix}_{head}_{tag}_{sketch}")
+}
+
+/// Which head geometry a task uses (cls2/cls3/reg, matching aot.py HEADS).
+pub fn head_for(task: Task) -> &'static str {
+    if task.is_regression() {
+        "reg"
+    } else if task.n_classes() == 3 {
+        "cls3"
+    } else {
+        "cls2"
+    }
+}

@@ -1,0 +1,94 @@
+//! Table 2: GLUE scores vs compression ratio ρ (gauss sketch).
+//!
+//! Paper shape to reproduce: ρ=0.9/0.5 ≈ baseline, ρ=0.2 slightly lower,
+//! ρ=0.1 visibly lower — with small/noisy tasks (WNLI, RTE) degrading the
+//! most and occasional noise *wins* on individual tasks.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::Task;
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Json;
+
+use super::runner::{head_for, run_finetune, variant_name, RunOpts, RunResult};
+
+pub const RHOS: [f64; 5] = [1.0, 0.9, 0.5, 0.2, 0.1];
+
+pub fn tasks_from_arg(arg: Option<&str>) -> Vec<Task> {
+    match arg {
+        None | Some("all") => Task::ALL.to_vec(),
+        Some(list) => list
+            .split(',')
+            .filter_map(|t| Task::parse(t.trim()))
+            .collect(),
+    }
+}
+
+pub fn run(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    tasks: &[Task],
+    rhos: &[f64],
+    train: TrainConfig,
+) -> Result<Json> {
+    let mut rows: Vec<(f64, Vec<RunResult>)> = Vec::new();
+    for &rho in rhos {
+        let mut results = Vec::new();
+        for &task in tasks {
+            let vname = variant_name("small", head_for(task), rho, "gauss");
+            eprintln!("table2: rho={rho} task={} variant={vname}", task.name());
+            let res = run_finetune(
+                engine,
+                manifest,
+                &vname,
+                task,
+                RunOpts { train: train.clone(), ..Default::default() },
+            )?;
+            eprintln!("  -> score {:.2}", res.score);
+            results.push(res);
+        }
+        rows.push((rho, results));
+    }
+
+    // ---- paper-style table ----
+    println!("\nTable 2: fine-tuning scores vs compression ratio (gauss)");
+    print!("{:>8}", "rho");
+    for task in tasks {
+        print!("{:>9}", task.name().to_uppercase());
+    }
+    println!("{:>9}", "Avg");
+    for (rho, results) in &rows {
+        if (*rho - 1.0).abs() < 1e-9 {
+            print!("{:>8}", "No RMM");
+        } else {
+            print!("{:>7.0}%", rho * 100.0);
+        }
+        let mut sum = 0.0;
+        for r in results {
+            print!("{:>9.2}", r.score);
+            sum += r.score;
+        }
+        println!("{:>9.2}", sum / results.len() as f64);
+    }
+
+    Ok(Json::obj(vec![
+        ("experiment", Json::str("table2")),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|(rho, results)| {
+                        Json::obj(vec![
+                            ("rho", Json::num(*rho)),
+                            (
+                                "results",
+                                Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]))
+}

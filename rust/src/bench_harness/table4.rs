@@ -1,0 +1,82 @@
+//! Table 4: randomized-matmul variants (Gauss / Rademacher / DCT / DFT /
+//! RowSample) on the CoLA-like task — score + training time.
+//!
+//! Paper shape: all sketch families degrade gracefully with ρ; training
+//! time differs by family (their naive PyTorch DCT/DFT were *slower* than
+//! Gauss despite better asymptotics — our FFT crossover bench shows where
+//! the asymptotics win).
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::Task;
+use crate::runtime::{Engine, Manifest};
+use crate::util::json::Json;
+
+use super::runner::{run_finetune, RunOpts};
+
+pub const KINDS: [&str; 5] = ["gauss", "rademacher", "dct", "dft", "rowsample"];
+pub const RHOS: [f64; 3] = [0.5, 0.2, 0.1];
+
+pub fn run(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    train: TrainConfig,
+) -> Result<Json> {
+    let task = Task::Cola;
+    let mut rows = Vec::new();
+
+    // Baseline row (no RMM).
+    let base = run_finetune(
+        engine,
+        manifest,
+        "small_cls2_r100_gauss",
+        task,
+        RunOpts { train: train.clone(), ..Default::default() },
+    )?;
+    println!("\nTable 4: sketch variants on CoLA (score, train time)");
+    println!("{:>12} {:>6} {:>8} {:>10}", "matmul", "rate", "score", "time s");
+    println!("{:>12} {:>6} {:>8.2} {:>10.1}", "No RMM", "-", base.score, base.wall_s);
+    rows.push(Json::obj(vec![
+        ("kind", Json::str("none")),
+        ("rho", Json::num(1.0)),
+        ("score", Json::num(base.score)),
+        ("wall_s", Json::num(base.wall_s)),
+    ]));
+
+    for kind in KINDS {
+        for &rho in &RHOS {
+            let tag = match rho {
+                r if (r - 0.5).abs() < 1e-9 => "r50",
+                r if (r - 0.2).abs() < 1e-9 => "r20",
+                _ => "r10",
+            };
+            let vname = format!("small_cls2_{tag}_{kind}");
+            eprintln!("table4: {vname}");
+            let res = run_finetune(
+                engine,
+                manifest,
+                &vname,
+                task,
+                RunOpts { train: train.clone(), ..Default::default() },
+            )?;
+            println!(
+                "{:>12} {:>5.0}% {:>8.2} {:>10.1}",
+                kind,
+                rho * 100.0,
+                res.score,
+                res.wall_s
+            );
+            rows.push(Json::obj(vec![
+                ("kind", Json::str(kind)),
+                ("rho", Json::num(rho)),
+                ("score", Json::num(res.score)),
+                ("wall_s", Json::num(res.wall_s)),
+            ]));
+        }
+    }
+    Ok(Json::obj(vec![
+        ("experiment", Json::str("table4")),
+        ("rows", Json::Arr(rows)),
+    ]))
+}

@@ -1,0 +1,223 @@
+//! Typed experiment configuration (JSON-backed; see util::json for why not
+//! TOML/serde).  One `ExperimentConfig` fully describes a run: which
+//! artifact variant, which task, optimizer/schedule hyperparameters, and
+//! logging.  Defaults mirror the Fairseq GLUE fine-tuning recipe the paper
+//! uses (AdamW, linear warmup-decay), scaled to the small geometry.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub warmup_steps: usize,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub clip_norm: f64,
+    pub optimizer: String, // "adamw" | "adam" | "sgd" | "momentum"
+    pub schedule: String,  // "linear" | "const" | "poly"
+    pub eval_every: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            steps: 400,
+            warmup_steps: 24,
+            lr: 1e-3,
+            weight_decay: 0.01,
+            beta1: 0.9,
+            beta2: 0.98, // RoBERTa fine-tuning convention
+            eps: 1e-6,
+            clip_norm: 1.0,
+            optimizer: "adamw".to_string(),
+            schedule: "linear".to_string(),
+            eval_every: 100,
+            log_every: 20,
+            seed: 42,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Artifact variant name (a key of manifest.json), e.g.
+    /// "small_cls2_r50_gauss".
+    pub variant: String,
+    /// Task name from the synthetic GLUE suite.
+    pub task: String,
+    pub artifacts_dir: String,
+    pub out_dir: String,
+    pub train: TrainConfig,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            variant: "small_cls2_r100_gauss".to_string(),
+            task: "cola".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            out_dir: "runs".to_string(),
+            train: TrainConfig::default(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let obj = j.as_obj().context("config root must be an object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "variant" => cfg.variant = req_str(v, k)?,
+                "task" => cfg.task = req_str(v, k)?,
+                "artifacts_dir" => cfg.artifacts_dir = req_str(v, k)?,
+                "out_dir" => cfg.out_dir = req_str(v, k)?,
+                "train" => cfg.train = parse_train(v)?,
+                other => bail!("unknown config key '{other}'"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("variant", Json::str(self.variant.clone())),
+            ("task", Json::str(self.task.clone())),
+            ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
+            ("out_dir", Json::str(self.out_dir.clone())),
+            ("train", train_to_json(&self.train)),
+        ])
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if crate::data::Task::parse(&self.task).is_none() {
+            bail!("unknown task '{}'", self.task);
+        }
+        let t = &self.train;
+        if t.steps == 0 {
+            bail!("train.steps must be > 0");
+        }
+        if !(0.0..1.0).contains(&(t.warmup_steps as f64 / t.steps.max(1) as f64)) {
+            bail!("warmup_steps must be < steps");
+        }
+        if t.lr <= 0.0 || !t.lr.is_finite() {
+            bail!("train.lr must be positive");
+        }
+        if !matches!(t.optimizer.as_str(), "adamw" | "adam" | "sgd" | "momentum") {
+            bail!("unknown optimizer '{}'", t.optimizer);
+        }
+        if !matches!(t.schedule.as_str(), "linear" | "const" | "poly") {
+            bail!("unknown schedule '{}'", t.schedule);
+        }
+        Ok(())
+    }
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    v.as_str()
+        .map(|s| s.to_string())
+        .with_context(|| format!("'{key}' must be a string"))
+}
+
+fn parse_train(j: &Json) -> Result<TrainConfig> {
+    let mut t = TrainConfig::default();
+    let obj = j.as_obj().context("'train' must be an object")?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "steps" => t.steps = num(v, k)? as usize,
+            "warmup_steps" => t.warmup_steps = num(v, k)? as usize,
+            "lr" => t.lr = num(v, k)?,
+            "weight_decay" => t.weight_decay = num(v, k)?,
+            "beta1" => t.beta1 = num(v, k)?,
+            "beta2" => t.beta2 = num(v, k)?,
+            "eps" => t.eps = num(v, k)?,
+            "clip_norm" => t.clip_norm = num(v, k)?,
+            "optimizer" => t.optimizer = req_str(v, k)?,
+            "schedule" => t.schedule = req_str(v, k)?,
+            "eval_every" => t.eval_every = num(v, k)? as usize,
+            "log_every" => t.log_every = num(v, k)? as usize,
+            "seed" => t.seed = num(v, k)? as u64,
+            other => bail!("unknown train key '{other}'"),
+        }
+    }
+    Ok(t)
+}
+
+fn num(v: &Json, key: &str) -> Result<f64> {
+    v.as_f64().with_context(|| format!("'{key}' must be a number"))
+}
+
+fn train_to_json(t: &TrainConfig) -> Json {
+    Json::obj(vec![
+        ("steps", Json::num(t.steps as f64)),
+        ("warmup_steps", Json::num(t.warmup_steps as f64)),
+        ("lr", Json::num(t.lr)),
+        ("weight_decay", Json::num(t.weight_decay)),
+        ("beta1", Json::num(t.beta1)),
+        ("beta2", Json::num(t.beta2)),
+        ("eps", Json::num(t.eps)),
+        ("clip_norm", Json::num(t.clip_norm)),
+        ("optimizer", Json::str(t.optimizer.clone())),
+        ("schedule", Json::str(t.schedule.clone())),
+        ("eval_every", Json::num(t.eval_every as f64)),
+        ("log_every", Json::num(t.log_every as f64)),
+        ("seed", Json::num(t.seed as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.task = "mnli".into();
+        cfg.train.lr = 5e-4;
+        cfg.train.optimizer = "sgd".into();
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let j = Json::parse(r#"{"bogus": 1}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        for src in [
+            r#"{"task": "nope"}"#,
+            r#"{"train": {"steps": 0}}"#,
+            r#"{"train": {"optimizer": "rmsprop"}}"#,
+            r#"{"train": {"lr": -1}}"#,
+        ] {
+            let j = Json::parse(src).unwrap();
+            assert!(ExperimentConfig::from_json(&j).is_err(), "{src}");
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Checkpoints: raw-f32 parameter blobs + a JSON sidecar with the variant
+//! name, step and parameter sizes.  Format-compatible with the
+//! `artifacts/init_*.bin` blobs emitted by aot.py (same concatenation
+//! order), so a "pre-trained" checkpoint can seed any variant that shares
+//! the geometry — which is exactly how the Table 2 harness warm-starts
+//! fine-tuning.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub struct Checkpoint {
+    pub step: usize,
+    pub variant: String,
+    /// Parameter names aligned with `params` (enables name-matched partial
+    /// warm starts across head geometries).
+    pub names: Vec<String>,
+    pub params: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut blob = Vec::new();
+        for p in &self.params {
+            for v in p {
+                blob.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        std::fs::write(path, &blob).with_context(|| format!("writing {path:?}"))?;
+        let meta = Json::obj(vec![
+            ("step", Json::num(self.step as f64)),
+            ("variant", Json::str(self.variant.clone())),
+            (
+                "names",
+                Json::Arr(self.names.iter().map(|n| Json::str(n.clone())).collect()),
+            ),
+            (
+                "sizes",
+                Json::Arr(
+                    self.params.iter().map(|p| Json::num(p.len() as f64)).collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(meta_path(path), meta.to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let meta_text = std::fs::read_to_string(meta_path(path))
+            .with_context(|| format!("reading sidecar for {path:?}"))?;
+        let meta = Json::parse(&meta_text)?;
+        let sizes: Vec<usize> = meta
+            .get("sizes")
+            .as_arr()
+            .context("sizes")?
+            .iter()
+            .map(|s| s.as_usize().context("size"))
+            .collect::<Result<_>>()?;
+        let blob = std::fs::read(path)?;
+        let total: usize = sizes.iter().sum();
+        if blob.len() != total * 4 {
+            bail!("checkpoint {path:?}: blob is {} bytes, expected {}", blob.len(), total * 4);
+        }
+        let mut params = Vec::with_capacity(sizes.len());
+        let mut off = 0;
+        for n in sizes {
+            let vals: Vec<f32> = blob[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            params.push(vals);
+            off += n * 4;
+        }
+        let names = meta
+            .get("names")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .map(|n| n.as_str().unwrap_or("").to_string())
+                    .collect::<Vec<_>>()
+            })
+            .unwrap_or_default();
+        Ok(Checkpoint {
+            step: meta.get("step").as_usize().unwrap_or(0),
+            variant: meta.get("variant").as_str().unwrap_or("").to_string(),
+            names,
+            params,
+        })
+    }
+}
+
+fn meta_path(path: &Path) -> std::path::PathBuf {
+    let mut p = path.as_os_str().to_owned();
+    p.push(".json");
+    p.into()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("ckpt_{}", std::process::id()));
+        let path = dir.join("model.bin");
+        let ck = Checkpoint {
+            step: 7,
+            variant: "v".into(),
+            names: vec!["a".into(), "b".into()],
+            params: vec![vec![1.0, -2.5], vec![3.25]],
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 7);
+        assert_eq!(back.variant, "v");
+        assert_eq!(back.params, ck.params);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupted_blob_rejected() {
+        let dir = std::env::temp_dir().join(format!("ckpt2_{}", std::process::id()));
+        let path = dir.join("model.bin");
+        let ck = Checkpoint {
+            step: 0,
+            variant: "v".into(),
+            names: vec!["a".into()],
+            params: vec![vec![1.0]],
+        };
+        ck.save(&path).unwrap();
+        std::fs::write(&path, b"xx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,82 @@
+//! JSONL metrics sink: one JSON object per line, flushed eagerly so
+//! partial runs are still analyzable; the bench harness re-reads these
+//! files to assemble figures (loss curves, variance series, throughput).
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub struct MetricsLog {
+    writer: Option<BufWriter<File>>,
+}
+
+impl MetricsLog {
+    /// A sink writing to `path` (parents created), truncating any old file.
+    pub fn create(path: &Path) -> Result<MetricsLog> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("opening metrics log {path:?}"))?;
+        Ok(MetricsLog { writer: Some(BufWriter::new(f)) })
+    }
+
+    /// A no-op sink (for tests / ephemeral runs).
+    pub fn null() -> MetricsLog {
+        MetricsLog { writer: None }
+    }
+
+    pub fn log(&mut self, record: Json) {
+        if let Some(w) = &mut self.writer {
+            let _ = writeln!(w, "{}", record.to_string());
+            let _ = w.flush();
+        }
+    }
+
+    /// Read a JSONL file back into records.
+    pub fn read(path: &Path) -> Result<Vec<Json>> {
+        let f = File::open(path).with_context(|| format!("reading {path:?}"))?;
+        let mut out = Vec::new();
+        for line in BufReader::new(f).lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            out.push(Json::parse(&line).with_context(|| format!("bad line in {path:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mlog_{}", std::process::id()));
+        let path = dir.join("m.jsonl");
+        let mut log = MetricsLog::create(&path).unwrap();
+        log.log(Json::obj(vec![("step", Json::num(1.0)), ("loss", Json::num(0.5))]));
+        log.log(Json::obj(vec![("step", Json::num(2.0)), ("loss", Json::num(0.4))]));
+        drop(log);
+        let recs = MetricsLog::read(&path).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[1].get("loss").as_f64(), Some(0.4));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn null_sink_is_silent() {
+        let mut log = MetricsLog::null();
+        log.log(Json::num(1.0)); // must not panic
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: trainer (fwd → activation store → bwd → optimizer),
+//! optimizers, LR schedules, metrics logging and checkpoints.
+
+pub mod checkpoint;
+pub mod metrics_log;
+pub mod optimizer;
+pub mod schedule;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use metrics_log::MetricsLog;
+pub use optimizer::{Optimizer, OptimizerConfig};
+pub use schedule::Schedule;
+pub use trainer::{ProbeStats, StepStats, Trainer};

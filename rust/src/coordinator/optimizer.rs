@@ -1,0 +1,231 @@
+//! Host-side optimizers over the flat parameter list.
+//!
+//! Gradients come back from the `bwd` artifact as f32 vectors; the
+//! optimizer updates happen on the host (L3), which keeps the HLO programs
+//! pure functions and lets the coordinator own all mutable state.  AdamW
+//! with decoupled weight decay is the default (the Fairseq GLUE recipe the
+//! paper uses); SGD/momentum/Adam exist for ablations.
+
+use anyhow::{bail, Result};
+
+/// Which parameters receive weight decay (AdamW convention: matrices yes,
+/// biases and LayerNorm gains no).
+pub fn decay_mask(name: &str) -> bool {
+    name.ends_with("_w")
+        || name.ends_with(".w")
+        || name.ends_with(".tok")
+        || name.ends_with(".pos")
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OptimizerConfig {
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub momentum: f64,
+}
+
+impl Default for OptimizerConfig {
+    fn default() -> Self {
+        Self { weight_decay: 0.01, beta1: 0.9, beta2: 0.98, eps: 1e-6, momentum: 0.9 }
+    }
+}
+
+enum State {
+    Sgd,
+    Momentum { v: Vec<Vec<f32>> },
+    Adam { m: Vec<Vec<f32>>, v: Vec<Vec<f32>>, decoupled_decay: bool },
+}
+
+pub struct Optimizer {
+    state: State,
+    cfg: OptimizerConfig,
+    /// Per-parameter weight-decay applicability (from names).
+    decay: Vec<bool>,
+    t: usize,
+}
+
+impl Optimizer {
+    pub fn new(
+        kind: &str,
+        cfg: OptimizerConfig,
+        param_names: &[String],
+        param_sizes: &[usize],
+    ) -> Result<Optimizer> {
+        let zeros =
+            || param_sizes.iter().map(|&n| vec![0.0f32; n]).collect::<Vec<_>>();
+        let state = match kind {
+            "sgd" => State::Sgd,
+            "momentum" => State::Momentum { v: zeros() },
+            "adam" => State::Adam { m: zeros(), v: zeros(), decoupled_decay: false },
+            "adamw" => State::Adam { m: zeros(), v: zeros(), decoupled_decay: true },
+            other => bail!("unknown optimizer '{other}'"),
+        };
+        Ok(Optimizer {
+            state,
+            cfg,
+            decay: param_names.iter().map(|n| decay_mask(n)).collect(),
+            t: 0,
+        })
+    }
+
+    /// Global-norm gradient clipping; returns the pre-clip norm.
+    pub fn clip_gradients(grads: &mut [Vec<f32>], max_norm: f64) -> f64 {
+        let norm: f64 = grads
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt();
+        if max_norm > 0.0 && norm > max_norm {
+            let scale = (max_norm / norm) as f32;
+            for g in grads.iter_mut() {
+                for x in g.iter_mut() {
+                    *x *= scale;
+                }
+            }
+        }
+        norm
+    }
+
+    /// Apply one update with learning rate `lr`.
+    pub fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], lr: f64) {
+        assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let c = self.cfg;
+        match &mut self.state {
+            State::Sgd => {
+                for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+                    let wd = if self.decay[i] { c.weight_decay } else { 0.0 } as f32;
+                    for (pv, gv) in p.iter_mut().zip(g) {
+                        *pv -= (lr as f32) * (gv + wd * *pv);
+                    }
+                }
+            }
+            State::Momentum { v } => {
+                for (i, ((p, g), vi)) in
+                    params.iter_mut().zip(grads).zip(v.iter_mut()).enumerate()
+                {
+                    let wd = if self.decay[i] { c.weight_decay } else { 0.0 } as f32;
+                    let mu = c.momentum as f32;
+                    for k in 0..p.len() {
+                        vi[k] = mu * vi[k] + g[k] + wd * p[k];
+                        p[k] -= (lr as f32) * vi[k];
+                    }
+                }
+            }
+            State::Adam { m, v, decoupled_decay } => {
+                let b1 = c.beta1;
+                let b2 = c.beta2;
+                let bc1 = 1.0 - b1.powi(self.t as i32);
+                let bc2 = 1.0 - b2.powi(self.t as i32);
+                for i in 0..params.len() {
+                    let wd = if self.decay[i] { c.weight_decay } else { 0.0 };
+                    let (p, g) = (&mut params[i], &grads[i]);
+                    let (mi, vi) = (&mut m[i], &mut v[i]);
+                    for k in 0..p.len() {
+                        let gk = if *decoupled_decay {
+                            g[k] as f64
+                        } else {
+                            g[k] as f64 + wd * p[k] as f64 // classic Adam: L2 in grad
+                        };
+                        let mk = b1 * mi[k] as f64 + (1.0 - b1) * gk;
+                        let vk = b2 * vi[k] as f64 + (1.0 - b2) * gk * gk;
+                        mi[k] = mk as f32;
+                        vi[k] = vk as f32;
+                        let mhat = mk / bc1;
+                        let vhat = vk / bc2;
+                        let mut upd = lr * mhat / (vhat.sqrt() + c.eps);
+                        if *decoupled_decay {
+                            upd += lr * wd * p[k] as f64;
+                        }
+                        p[k] -= upd as f32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_descends(kind: &str) {
+        // minimize f(p) = 0.5‖p − target‖²; grad = p − target
+        let target = [3.0f32, -2.0, 0.5];
+        let names = vec!["x_w".to_string()];
+        let mut opt = Optimizer::new(
+            kind,
+            OptimizerConfig { weight_decay: 0.0, ..Default::default() },
+            &names,
+            &[3],
+        )
+        .unwrap();
+        let mut params = vec![vec![0.0f32; 3]];
+        for _ in 0..400 {
+            let grads =
+                vec![params[0].iter().zip(&target).map(|(p, t)| p - t).collect()];
+            opt.step(&mut params, &grads, 0.05);
+        }
+        for (p, t) in params[0].iter().zip(&target) {
+            assert!((p - t).abs() < 0.05, "{kind}: {p} vs {t}");
+        }
+    }
+
+    #[test]
+    fn all_optimizers_descend() {
+        for kind in ["sgd", "momentum", "adam", "adamw"] {
+            quadratic_descends(kind);
+        }
+    }
+
+    #[test]
+    fn unknown_optimizer_rejected() {
+        assert!(Optimizer::new("rmsprop", Default::default(), &[], &[]).is_err());
+    }
+
+    #[test]
+    fn clipping_scales_to_max_norm() {
+        let mut grads = vec![vec![3.0f32, 4.0]]; // norm 5
+        let norm = Optimizer::clip_gradients(&mut grads, 1.0);
+        assert!((norm - 5.0).abs() < 1e-9);
+        let new_norm: f64 = grads[0].iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+        assert!((new_norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn clipping_noop_below_threshold() {
+        let mut grads = vec![vec![0.3f32, 0.4]];
+        Optimizer::clip_gradients(&mut grads, 1.0);
+        assert_eq!(grads[0], vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn weight_decay_only_on_matrices() {
+        assert!(decay_mask("blk0.q_w"));
+        assert!(decay_mask("emb.tok"));
+        assert!(!decay_mask("blk0.q_b"));
+        assert!(!decay_mask("blk0.ln1_g"));
+    }
+
+    #[test]
+    fn adamw_decay_shrinks_weights_without_grads() {
+        let names = vec!["x_w".to_string()];
+        let mut opt = Optimizer::new(
+            "adamw",
+            OptimizerConfig { weight_decay: 0.1, ..Default::default() },
+            &names,
+            &[1],
+        )
+        .unwrap();
+        let mut params = vec![vec![1.0f32]];
+        let grads = vec![vec![0.0f32]];
+        for _ in 0..10 {
+            opt.step(&mut params, &grads, 0.1);
+        }
+        assert!(params[0][0] < 1.0);
+        assert!(params[0][0] > 0.8);
+    }
+}

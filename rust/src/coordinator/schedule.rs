@@ -1,0 +1,86 @@
+//! Learning-rate schedules (Fairseq GLUE recipe: linear warmup → linear
+//! decay; plus constant and polynomial variants for ablations).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// Linear warmup to `lr` over `warmup` steps, then linear decay to 0
+    /// at `total` steps.
+    Linear { lr: f64, warmup: usize, total: usize },
+    Constant { lr: f64, warmup: usize },
+    /// Polynomial decay with given power after warmup.
+    Poly { lr: f64, warmup: usize, total: usize, power: f64 },
+}
+
+impl Schedule {
+    pub fn from_config(name: &str, lr: f64, warmup: usize, total: usize) -> Schedule {
+        match name {
+            "const" => Schedule::Constant { lr, warmup },
+            "poly" => Schedule::Poly { lr, warmup, total, power: 2.0 },
+            _ => Schedule::Linear { lr, warmup, total },
+        }
+    }
+
+    /// LR for a 0-based step index.
+    pub fn lr_at(&self, step: usize) -> f64 {
+        let warm = |lr: f64, warmup: usize| -> Option<f64> {
+            if warmup > 0 && step < warmup {
+                Some(lr * (step + 1) as f64 / warmup as f64)
+            } else {
+                None
+            }
+        };
+        match *self {
+            Schedule::Linear { lr, warmup, total } => warm(lr, warmup).unwrap_or_else(|| {
+                let total = total.max(warmup + 1);
+                let frac = (total - step.min(total)) as f64 / (total - warmup) as f64;
+                lr * frac.clamp(0.0, 1.0)
+            }),
+            Schedule::Constant { lr, warmup } => warm(lr, warmup).unwrap_or(lr),
+            Schedule::Poly { lr, warmup, total, power } => {
+                warm(lr, warmup).unwrap_or_else(|| {
+                    let total = total.max(warmup + 1);
+                    let frac = (total - step.min(total)) as f64 / (total - warmup) as f64;
+                    lr * frac.clamp(0.0, 1.0).powf(power)
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_shape() {
+        let s = Schedule::Linear { lr: 1.0, warmup: 10, total: 110 };
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-12);
+        assert!((s.lr_at(9) - 1.0).abs() < 1e-12);
+        assert!(s.lr_at(40) < 1.0);
+        assert!(s.lr_at(109) < 0.05);
+        assert_eq!(s.lr_at(200), 0.0);
+    }
+
+    #[test]
+    fn constant_after_warmup() {
+        let s = Schedule::Constant { lr: 0.5, warmup: 4 };
+        assert!(s.lr_at(0) < 0.5);
+        assert_eq!(s.lr_at(4), 0.5);
+        assert_eq!(s.lr_at(1000), 0.5);
+    }
+
+    #[test]
+    fn poly_decays_faster_than_linear() {
+        let lin = Schedule::Linear { lr: 1.0, warmup: 0, total: 100 };
+        let pol = Schedule::Poly { lr: 1.0, warmup: 0, total: 100, power: 2.0 };
+        assert!(pol.lr_at(50) < lin.lr_at(50));
+    }
+
+    #[test]
+    fn monotone_during_warmup() {
+        let s = Schedule::Linear { lr: 1.0, warmup: 5, total: 50 };
+        for i in 1..5 {
+            assert!(s.lr_at(i) > s.lr_at(i - 1));
+        }
+    }
+}

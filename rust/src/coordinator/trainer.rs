@@ -1,0 +1,305 @@
+//! The training coordinator: fwd → activation store → bwd → optimizer.
+//!
+//! This is where the three layers meet at run time.  Each step:
+//!
+//! 1. upload params + batch + step seed, execute the `fwd` artifact;
+//! 2. stage every residual output in the [`ActivationStore`] — with RMM
+//!    variants these are the sketches `X_proj = SᵀX`, so the store's peak
+//!    byte count *is* the paper's stored-activation measurement;
+//! 3. drain the store into the `bwd` artifact (the same seed reproduces
+//!    every sketch matrix S bit-exactly inside the HLO);
+//! 4. clip gradients, step the schedule + optimizer on the host.
+
+use std::time::Instant;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::config::TrainConfig;
+use crate::data::{Batch, Batcher, MetricAccum, Split, Task, TaskGen, Tokenizer};
+use crate::memory::ActivationStore;
+use crate::rng::philox;
+use crate::runtime::{Engine, Entry, HostValue, Manifest, Role, Variant};
+
+use super::optimizer::{Optimizer, OptimizerConfig};
+use super::schedule::Schedule;
+
+/// Variance-probe scalars (Fig. 4/7 series), present for probe variants.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbeStats {
+    pub d2_sgd: f64,
+    pub d2_rmm: f64,
+    pub alpha: f64,
+    pub ratio_lhs: f64,
+    pub bound_rhs: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepStats {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+    pub grad_norm: f64,
+    /// Peak bytes held in the activation store during this step.
+    pub residual_bytes: usize,
+    pub probe: Option<ProbeStats>,
+    pub step_time_s: f64,
+}
+
+pub struct Trainer<'m> {
+    pub manifest: &'m Manifest,
+    pub variant: &'m Variant,
+    pub task: Task,
+    pub cfg: TrainConfig,
+    pub params: Vec<Vec<f32>>,
+    pub param_names: Vec<String>,
+    opt: Optimizer,
+    sched: Schedule,
+    pub step_idx: usize,
+    pub store: ActivationStore<HostValue>,
+    pub peak_residual_bytes: usize,
+}
+
+impl<'m> Trainer<'m> {
+    pub fn new(
+        manifest: &'m Manifest,
+        variant: &'m Variant,
+        task: Task,
+        cfg: TrainConfig,
+    ) -> Result<Trainer<'m>> {
+        // Consistency: the task's head must match the variant geometry.
+        if task.n_classes() != variant.config.n_classes
+            || task.is_regression() != variant.config.regression
+        {
+            bail!(
+                "task '{}' ({} classes, regression={}) does not match variant '{}' \
+                 ({} classes, regression={})",
+                task.name(),
+                task.n_classes(),
+                task.is_regression(),
+                variant.name,
+                variant.config.n_classes,
+                variant.config.regression
+            );
+        }
+        let params = manifest.load_init_params(variant)?;
+        let entry = variant.entry("fwd")?;
+        let param_specs: Vec<_> =
+            entry.args.iter().filter(|a| a.role == Role::Param).collect();
+        let param_names: Vec<String> =
+            param_specs.iter().map(|s| s.name.clone()).collect();
+        let sizes: Vec<usize> = param_specs.iter().map(|s| s.elements()).collect();
+        let opt = Optimizer::new(
+            &cfg.optimizer,
+            OptimizerConfig {
+                weight_decay: cfg.weight_decay,
+                beta1: cfg.beta1,
+                beta2: cfg.beta2,
+                eps: cfg.eps,
+                momentum: 0.9,
+            },
+            &param_names,
+            &sizes,
+        )?;
+        let sched =
+            Schedule::from_config(&cfg.schedule, cfg.lr, cfg.warmup_steps, cfg.steps);
+        Ok(Trainer {
+            manifest,
+            variant,
+            task,
+            cfg,
+            params,
+            param_names,
+            opt,
+            sched,
+            step_idx: 0,
+            store: ActivationStore::new(),
+            peak_residual_bytes: 0,
+        })
+    }
+
+    /// Warm-start parameters from a checkpoint by name+size match (loads
+    /// the encoder body, keeps the fresh task head when shapes differ).
+    pub fn load_matching(&mut self, names: &[String], params: &[Vec<f32>]) -> usize {
+        let mut loaded = 0;
+        for (name, value) in names.iter().zip(params) {
+            if let Some(i) = self.param_names.iter().position(|n| n == name) {
+                if self.params[i].len() == value.len() {
+                    self.params[i].clone_from(value);
+                    loaded += 1;
+                }
+            }
+        }
+        loaded
+    }
+
+    /// Per-step seed: Philox-derived from (cfg.seed, step) so every step's
+    /// sketches are independent but exactly reproducible.
+    pub fn step_seed(&self) -> [u32; 2] {
+        let (lo, hi) = philox::split_seed(self.cfg.seed);
+        let w = philox::philox4x32(
+            [self.step_idx as u32, (self.step_idx >> 32) as u32, 0x57E9, 0],
+            [lo, hi],
+        );
+        [w[0], w[1]]
+    }
+
+    fn batch_args(&self, entry: &Entry, batch: &Batch, seed: [u32; 2]) -> Result<Vec<HostValue>> {
+        let mut args = Vec::with_capacity(entry.args.len());
+        for spec in &entry.args {
+            match spec.role {
+                Role::Param => {
+                    let i = args.len(); // params come first and in order
+                    args.push(HostValue::F32(self.params[i].clone()));
+                }
+                Role::Tokens => args.push(HostValue::I32(batch.tokens.clone())),
+                Role::Mask => args.push(HostValue::F32(batch.mask.clone())),
+                Role::Labels => {
+                    if self.variant.config.regression {
+                        args.push(HostValue::F32(batch.labels_f.clone()));
+                    } else {
+                        args.push(HostValue::I32(batch.labels_i.clone()));
+                    }
+                }
+                Role::Seed => args.push(HostValue::U32(seed.to_vec())),
+                Role::Residual => break, // handled by the caller (bwd)
+                other => bail!("unexpected arg role {other:?} in entry"),
+            }
+        }
+        Ok(args)
+    }
+
+    /// One optimization step over a batch.
+    pub fn train_step(&mut self, engine: &mut Engine, batch: &Batch) -> Result<StepStats> {
+        let t0 = Instant::now();
+        let fwd = self.variant.entry("fwd")?;
+        let bwd = self.variant.entry("bwd")?;
+        let seed = self.step_seed();
+
+        // ---- forward ----
+        let args = self.batch_args(fwd, batch, seed)?;
+        let outputs = engine.execute(self.manifest, fwd, &args)?;
+
+        let mut loss = f64::NAN;
+        self.store.reset_peak();
+        for (spec, value) in fwd.outputs.iter().zip(outputs) {
+            match spec.role {
+                Role::Metric if spec.name == "loss" => {
+                    loss = value.as_f32()?[0] as f64;
+                }
+                Role::Residual => {
+                    let bytes = spec.bytes();
+                    self.store.put(&spec.name, value, bytes);
+                }
+                _ => {} // logits unused during training
+            }
+        }
+        let residual_bytes = self.store.stats().peak_bytes;
+        self.peak_residual_bytes = self.peak_residual_bytes.max(residual_bytes);
+
+        // ---- backward (drains the store in bwd-arg order) ----
+        let mut args = self.batch_args(bwd, batch, seed)?;
+        for spec in bwd.residual_args() {
+            let v = self
+                .store
+                .take(&spec.name)
+                .with_context(|| format!("missing residual '{}'", spec.name))?;
+            args.push(v);
+        }
+        if !self.store.is_empty() {
+            bail!("{} residuals left unconsumed", self.store.len());
+        }
+        let outputs = engine.execute(self.manifest, bwd, &args)?;
+
+        let mut grads: Vec<Vec<f32>> = Vec::with_capacity(self.params.len());
+        let mut probe_vals = Vec::new();
+        for (spec, value) in bwd.outputs.iter().zip(outputs) {
+            match spec.role {
+                Role::Grad => grads.push(match value {
+                    HostValue::F32(v) => v,
+                    _ => bail!("non-f32 gradient '{}'", spec.name),
+                }),
+                Role::Probe => probe_vals.push(value.as_f32()?[0] as f64),
+                _ => {}
+            }
+        }
+        if grads.len() != self.params.len() {
+            bail!("got {} grads for {} params", grads.len(), self.params.len());
+        }
+
+        // ---- host-side update ----
+        let grad_norm = Optimizer::clip_gradients(&mut grads, self.cfg.clip_norm);
+        let lr = self.sched.lr_at(self.step_idx);
+        self.opt.step(&mut self.params, &grads, lr);
+
+        let probe = (probe_vals.len() == 5).then(|| ProbeStats {
+            d2_sgd: probe_vals[0],
+            d2_rmm: probe_vals[1],
+            alpha: probe_vals[2],
+            ratio_lhs: probe_vals[3],
+            bound_rhs: probe_vals[4],
+        });
+
+        let stats = StepStats {
+            step: self.step_idx,
+            loss,
+            lr,
+            grad_norm,
+            residual_bytes,
+            probe,
+            step_time_s: t0.elapsed().as_secs_f64(),
+        };
+        self.step_idx += 1;
+        Ok(stats)
+    }
+
+    /// Forward-only loss over a batch (used for eval-loss curves, Fig. 5).
+    pub fn eval_loss(&mut self, engine: &mut Engine, batch: &Batch) -> Result<f64> {
+        let fwd = self.variant.entry("fwd")?;
+        let seed = [0u32, 0u32]; // fixed seed: eval determinism
+        let args = self.batch_args(fwd, batch, seed)?;
+        let outputs = engine.execute(self.manifest, fwd, &args)?;
+        for (spec, value) in fwd.outputs.iter().zip(outputs) {
+            if spec.role == Role::Metric && spec.name == "loss" {
+                return Ok(value.as_f32()?[0] as f64);
+            }
+        }
+        bail!("fwd entry has no loss output")
+    }
+
+    /// Dev-set evaluation with the task's GLUE metric (uses the `eval`
+    /// entry — logits only, no residuals).
+    pub fn evaluate(&mut self, engine: &mut Engine, tok: &Tokenizer) -> Result<f64> {
+        let eval = self.variant.entry("eval")?;
+        let gen = TaskGen::new(self.task, tok, self.variant.config.seq_len, self.cfg.seed);
+        let mut acc = MetricAccum::new();
+        let n_classes = self.variant.config.n_classes;
+        for batch in Batcher::new(&gen, Split::Dev, self.variant.config.batch_size, 0) {
+            let mut args = Vec::with_capacity(eval.args.len());
+            for spec in &eval.args {
+                match spec.role {
+                    Role::Param => {
+                        let i = args.len();
+                        args.push(HostValue::F32(self.params[i].clone()));
+                    }
+                    Role::Tokens => args.push(HostValue::I32(batch.tokens.clone())),
+                    Role::Mask => args.push(HostValue::F32(batch.mask.clone())),
+                    other => bail!("unexpected eval arg role {other:?}"),
+                }
+            }
+            let outputs = engine.execute(self.manifest, eval, &args)?;
+            let logits = outputs
+                .first()
+                .context("eval produced no outputs")?
+                .as_f32()?;
+            acc.add_logits(
+                self.task,
+                logits,
+                n_classes,
+                &batch.labels_i,
+                &batch.labels_f,
+                batch.valid,
+            );
+        }
+        Ok(acc.score(self.task))
+    }
+}

@@ -1,0 +1,172 @@
+//! Fixed-shape batching for XLA: pads/truncates to (batch, seq_len),
+//! emits attention masks, shuffles deterministically per epoch.
+//!
+//! XLA executables have static shapes, so the final partial batch of an
+//! epoch is padded by *wrapping around*; `Batch::valid` records how many
+//! leading rows are real (the evaluator weights metrics accordingly).
+
+use crate::rng::philox::{PhiloxStream, STREAM_DATA};
+
+use super::tasks::{Example, Split, TaskGen};
+use super::tokenizer::PAD;
+
+/// One fixed-shape batch, layout-ready for literal upload.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub tokens: Vec<i32>, // (batch, seq_len) row-major
+    pub mask: Vec<f32>,   // (batch, seq_len)
+    pub labels_i: Vec<i32>,
+    pub labels_f: Vec<f32>,
+    pub batch_size: usize,
+    pub seq_len: usize,
+    /// Number of non-wrapped (real) rows.
+    pub valid: usize,
+}
+
+impl Batch {
+    fn new(batch_size: usize, seq_len: usize) -> Self {
+        Self {
+            tokens: vec![PAD as i32; batch_size * seq_len],
+            mask: vec![0.0; batch_size * seq_len],
+            labels_i: vec![0; batch_size],
+            labels_f: vec![0.0; batch_size],
+            batch_size,
+            seq_len,
+            valid: 0,
+        }
+    }
+
+    fn fill_row(&mut self, row: usize, ex: &Example) {
+        let off = row * self.seq_len;
+        for (k, &t) in ex.tokens.iter().take(self.seq_len).enumerate() {
+            self.tokens[off + k] = t as i32;
+            self.mask[off + k] = 1.0;
+        }
+        self.labels_i[row] = ex.label as i32;
+        self.labels_f[row] = ex.label;
+    }
+}
+
+/// Deterministic epoch iterator over a task split.
+pub struct Batcher<'a> {
+    gen: &'a TaskGen<'a>,
+    split: Split,
+    order: Vec<usize>,
+    cursor: usize,
+    batch_size: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(gen: &'a TaskGen<'a>, split: Split, batch_size: usize, epoch: u64) -> Self {
+        let n = gen.task.split_size(split);
+        let mut order: Vec<usize> = (0..n).collect();
+        if split == Split::Train {
+            let mut r = PhiloxStream::new(
+                gen.seed ^ (epoch.wrapping_mul(0xA5A5_5A5A_1234_5678)),
+                STREAM_DATA,
+            );
+            r.shuffle(&mut order);
+        }
+        Self { gen, split, order, cursor: 0, batch_size }
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.order.len().div_ceil(self.batch_size)
+    }
+}
+
+impl<'a> Iterator for Batcher<'a> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        if self.cursor >= self.order.len() {
+            return None;
+        }
+        let mut batch = Batch::new(self.batch_size, self.gen.seq_len);
+        for row in 0..self.batch_size {
+            // wrap around for the final partial batch (static shapes)
+            let idx = self.order[(self.cursor + row) % self.order.len()];
+            let ex = self.gen.example(self.split, idx);
+            batch.fill_row(row, &ex);
+        }
+        batch.valid = (self.order.len() - self.cursor).min(self.batch_size);
+        self.cursor += self.batch_size;
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::Task;
+    use crate::data::tokenizer::{Tokenizer, CLS};
+
+    fn setup() -> (Tokenizer,) {
+        (Tokenizer::new(256),)
+    }
+
+    #[test]
+    fn shapes_and_mask() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Sst2, &tok, 16, 1);
+        let b = Batcher::new(&g, Split::Dev, 8, 0).next().unwrap();
+        assert_eq!(b.tokens.len(), 8 * 16);
+        assert_eq!(b.mask.len(), 8 * 16);
+        for row in 0..8 {
+            assert_eq!(b.tokens[row * 16], CLS as i32);
+            assert_eq!(b.mask[row * 16], 1.0);
+            // mask is a prefix of ones
+            let m = &b.mask[row * 16..(row + 1) * 16];
+            let ones = m.iter().take_while(|&&v| v == 1.0).count();
+            assert!(m[ones..].iter().all(|&v| v == 0.0));
+            // padded positions hold PAD
+            let t = &b.tokens[row * 16..(row + 1) * 16];
+            assert!(t[ones..].iter().all(|&v| v == PAD as i32));
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_examples() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Wnli, &tok, 16, 1);
+        let batcher = Batcher::new(&g, Split::Train, 32, 0);
+        let n = batcher.n_examples();
+        let total_valid: usize = batcher.map(|b| b.valid).sum();
+        assert_eq!(total_valid, n);
+    }
+
+    #[test]
+    fn shuffle_differs_across_epochs_but_not_runs() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Cola, &tok, 16, 1);
+        let b0: Vec<i32> = Batcher::new(&g, Split::Train, 4, 0).next().unwrap().tokens;
+        let b0_again: Vec<i32> =
+            Batcher::new(&g, Split::Train, 4, 0).next().unwrap().tokens;
+        let b1: Vec<i32> = Batcher::new(&g, Split::Train, 4, 1).next().unwrap().tokens;
+        assert_eq!(b0, b0_again);
+        assert_ne!(b0, b1);
+    }
+
+    #[test]
+    fn dev_split_is_not_shuffled() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Cola, &tok, 16, 1);
+        let a: Vec<i32> = Batcher::new(&g, Split::Dev, 4, 0).next().unwrap().tokens;
+        let b: Vec<i32> = Batcher::new(&g, Split::Dev, 4, 5).next().unwrap().tokens;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn last_batch_wraps() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Wnli, &tok, 16, 1);
+        let n = g.task.split_size(Split::Dev); // 70
+        let batches: Vec<Batch> = Batcher::new(&g, Split::Dev, 32, 0).collect();
+        assert_eq!(batches.len(), n.div_ceil(32));
+        assert_eq!(batches.last().unwrap().valid, n % 32);
+    }
+}

@@ -1,0 +1,181 @@
+//! GLUE-style task metrics computed from logits/labels (paper Table 2).
+
+use crate::util::stats;
+
+use super::tasks::{Metric, Task};
+
+/// Accumulates predictions over dev batches and produces the task metric.
+#[derive(Debug, Default)]
+pub struct MetricAccum {
+    preds: Vec<f64>,
+    labels: Vec<f64>,
+}
+
+impl MetricAccum {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add one batch of logits ((valid, n_classes) for classification,
+    /// (valid, 1) regression scores otherwise).
+    pub fn add_logits(
+        &mut self,
+        task: Task,
+        logits: &[f32],
+        n_classes: usize,
+        labels_i: &[i32],
+        labels_f: &[f32],
+        valid: usize,
+    ) {
+        for row in 0..valid {
+            if task.is_regression() {
+                self.preds.push(logits[row] as f64);
+                self.labels.push(labels_f[row] as f64);
+            } else {
+                let ls = &logits[row * n_classes..(row + 1) * n_classes];
+                let argmax = ls
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                self.preds.push(argmax as f64);
+                self.labels.push(labels_i[row] as f64);
+            }
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.preds.len()
+    }
+
+    /// The task's primary GLUE metric in percent (as paper Table 2).
+    pub fn score(&self, task: Task) -> f64 {
+        compute_metric(task.metric(), &self.preds, &self.labels) * 100.0
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.preds.is_empty() {
+            return 0.0;
+        }
+        let hits = self
+            .preds
+            .iter()
+            .zip(&self.labels)
+            .filter(|(p, l)| (*p - *l).abs() < 0.5)
+            .count();
+        hits as f64 / self.preds.len() as f64
+    }
+}
+
+/// Metric in [~-1, 1]/[0, 1] units (×100 for Table 2 display).
+pub fn compute_metric(metric: Metric, preds: &[f64], labels: &[f64]) -> f64 {
+    match metric {
+        Metric::Accuracy => {
+            if preds.is_empty() {
+                return 0.0;
+            }
+            preds
+                .iter()
+                .zip(labels)
+                .filter(|(p, l)| (*p - *l).abs() < 0.5)
+                .count() as f64
+                / preds.len() as f64
+        }
+        Metric::F1 => {
+            let (mut tp, mut fp, mut fn_, mut tn) = (0, 0, 0, 0);
+            count_confusion(preds, labels, &mut tp, &mut fp, &mut fn_, &mut tn);
+            stats::f1(tp, fp, fn_)
+        }
+        Metric::Matthews => {
+            let (mut tp, mut fp, mut fn_, mut tn) = (0, 0, 0, 0);
+            count_confusion(preds, labels, &mut tp, &mut fp, &mut fn_, &mut tn);
+            stats::matthews(tp, tn, fp, fn_)
+        }
+        Metric::PearsonSpearman => {
+            // GLUE reports the average of Pearson and Spearman for STS-B.
+            (stats::pearson(preds, labels) + stats::spearman(preds, labels)) / 2.0
+        }
+    }
+}
+
+fn count_confusion(
+    preds: &[f64],
+    labels: &[f64],
+    tp: &mut usize,
+    fp: &mut usize,
+    fn_: &mut usize,
+    tn: &mut usize,
+) {
+    for (p, l) in preds.iter().zip(labels) {
+        let p = *p >= 0.5;
+        let l = *l >= 0.5;
+        match (p, l) {
+            (true, true) => *tp += 1,
+            (true, false) => *fp += 1,
+            (false, true) => *fn_ += 1,
+            (false, false) => *tn += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::Task;
+
+    #[test]
+    fn accuracy_path() {
+        let mut acc = MetricAccum::new();
+        // logits for 3 rows, 2 classes; preds = [1, 0, 1]; labels [1, 1, 1]
+        acc.add_logits(
+            Task::Qnli,
+            &[0.1, 0.9, 0.8, 0.2, 0.0, 1.0],
+            2,
+            &[1, 1, 1],
+            &[],
+            3,
+        );
+        assert!((acc.score(Task::Qnli) - 200.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn valid_truncates() {
+        let mut acc = MetricAccum::new();
+        acc.add_logits(Task::Qnli, &[0.1, 0.9, 0.8, 0.2], 2, &[1, 0], &[], 1);
+        assert_eq!(acc.count(), 1);
+        assert!((acc.score(Task::Qnli) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matthews_perfect_and_inverted() {
+        let preds = vec![1.0, 0.0, 1.0, 0.0];
+        let labels = vec![1.0, 0.0, 1.0, 0.0];
+        assert!((compute_metric(Metric::Matthews, &preds, &labels) - 1.0).abs() < 1e-9);
+        let inv: Vec<f64> = labels.iter().map(|l| 1.0 - l).collect();
+        assert!((compute_metric(Metric::Matthews, &inv, &labels) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f1_mixed() {
+        let preds = vec![1.0, 1.0, 0.0, 0.0];
+        let labels = vec![1.0, 0.0, 1.0, 0.0];
+        // tp=1 fp=1 fn=1 → f1 = 2/(2+1+1) = 0.5
+        assert!((compute_metric(Metric::F1, &preds, &labels) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stsb_regression_path() {
+        let mut acc = MetricAccum::new();
+        acc.add_logits(
+            Task::Stsb,
+            &[1.0, 2.0, 3.0],
+            1,
+            &[],
+            &[1.1, 2.2, 2.9],
+            3,
+        );
+        let s = acc.score(Task::Stsb);
+        assert!(s > 95.0, "near-perfect correlation expected: {s}");
+    }
+}

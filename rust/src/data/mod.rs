@@ -1,0 +1,13 @@
+//! Data substrate: synthetic GLUE suite, tokenizer, fixed-shape batcher,
+//! and GLUE-style metrics.  See DESIGN.md §2 for the GLUE→synthetic
+//! substitution rationale.
+
+pub mod batcher;
+pub mod metrics;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::MetricAccum;
+pub use tasks::{Example, Metric, Split, Task, TaskGen};
+pub use tokenizer::Tokenizer;

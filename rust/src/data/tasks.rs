@@ -1,0 +1,529 @@
+//! Synthetic GLUE suite: nine generated tasks matching the *types* and
+//! relative scales of the GLUE benchmark (paper Table 2's substitution —
+//! see DESIGN.md §2).  Each task has a latent rule of controllable
+//! difficulty plus label noise, so fine-tuning quality degrades with
+//! gradient noise the same qualitative way the real benchmark does:
+//! big/easy tasks (MNLI-, SST2-like) are robust to RMM compression, small/
+//! noisy ones (WNLI-, RTE-like) are fragile.
+//!
+//! Every example is a pure function of (task, split, index, seed): the
+//! suite is fully deterministic, needs no storage, and both workers and
+//! tests can regenerate any example in O(seq_len).
+
+use crate::rng::philox::{PhiloxStream, STREAM_DATA};
+
+use super::tokenizer::{Tokenizer, CLS, SEP};
+
+/// Which GLUE metric a task reports (paper Table 2 conventions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    F1,
+    Matthews,
+    PearsonSpearman,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Dev,
+}
+
+/// One labelled example; `label` is a class index, or a score in [0, 5]
+/// for the regression task (STSB-like).
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub tokens: Vec<u32>,
+    pub label: f32,
+}
+
+/// Task identifiers, named after their GLUE counterparts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Cola,
+    Mnli,
+    MnliMM,
+    Mrpc,
+    Qnli,
+    Qqp,
+    Rte,
+    Sst2,
+    Stsb,
+    Wnli,
+}
+
+impl Task {
+    pub const ALL: [Task; 10] = [
+        Task::Cola,
+        Task::Mnli,
+        Task::MnliMM,
+        Task::Mrpc,
+        Task::Qnli,
+        Task::Qqp,
+        Task::Rte,
+        Task::Sst2,
+        Task::Stsb,
+        Task::Wnli,
+    ];
+
+    pub fn parse(s: &str) -> Option<Task> {
+        Some(match s.to_lowercase().as_str() {
+            "cola" => Task::Cola,
+            "mnli" => Task::Mnli,
+            "mnli-mm" | "mnlimm" => Task::MnliMM,
+            "mrpc" => Task::Mrpc,
+            "qnli" => Task::Qnli,
+            "qqp" => Task::Qqp,
+            "rte" => Task::Rte,
+            "sst2" | "sst-2" => Task::Sst2,
+            "stsb" | "sts-b" => Task::Stsb,
+            "wnli" => Task::Wnli,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Cola => "cola",
+            Task::Mnli => "mnli",
+            Task::MnliMM => "mnli-mm",
+            Task::Mrpc => "mrpc",
+            Task::Qnli => "qnli",
+            Task::Qqp => "qqp",
+            Task::Rte => "rte",
+            Task::Sst2 => "sst2",
+            Task::Stsb => "stsb",
+            Task::Wnli => "wnli",
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Task::Mnli | Task::MnliMM => 3,
+            Task::Stsb => 1,
+            _ => 2,
+        }
+    }
+
+    pub fn is_regression(&self) -> bool {
+        matches!(self, Task::Stsb)
+    }
+
+    pub fn metric(&self) -> Metric {
+        match self {
+            Task::Cola => Metric::Matthews,
+            Task::Mrpc | Task::Qqp => Metric::F1,
+            Task::Stsb => Metric::PearsonSpearman,
+            _ => Metric::Accuracy,
+        }
+    }
+
+    /// Scaled-down GLUE split sizes (relative ordering preserved).
+    pub fn split_size(&self, split: Split) -> usize {
+        let (train, dev) = match self {
+            Task::Mnli => (6000, 600),
+            Task::MnliMM => (6000, 600),
+            Task::Qqp => (6000, 600),
+            Task::Qnli => (3000, 400),
+            Task::Sst2 => (3000, 400),
+            Task::Cola => (2000, 300),
+            Task::Mrpc => (1200, 200),
+            Task::Stsb => (1200, 200),
+            Task::Rte => (600, 150),
+            Task::Wnli => (250, 70),
+        };
+        match split {
+            Split::Train => train,
+            Split::Dev => dev,
+        }
+    }
+
+    /// Label noise rate (fraction of flipped labels) — WNLI is famously
+    /// adversarial/noisy, RTE small and hard; the big tasks are clean.
+    fn noise(&self) -> f32 {
+        match self {
+            Task::Wnli => 0.35,
+            Task::Rte => 0.15,
+            Task::Cola => 0.08,
+            Task::Mrpc => 0.08,
+            Task::Stsb => 0.0, // noise injected on the score instead
+            _ => 0.03,
+        }
+    }
+}
+
+/// Deterministic generator over a task. Word classes carve up the lexicon:
+///   nouns    = [0, n/3)      verbs = [n/3, 2n/3)     modifiers = rest,
+/// with word *valence* = +1 for even lexicon index, −1 for odd (used by the
+/// SST2-like sentiment rule).
+pub struct TaskGen<'a> {
+    pub task: Task,
+    pub tok: &'a Tokenizer,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+impl<'a> TaskGen<'a> {
+    pub fn new(task: Task, tok: &'a Tokenizer, seq_len: usize, seed: u64) -> Self {
+        Self { task, tok, seq_len, seed }
+    }
+
+    fn rng_for(&self, split: Split, index: usize) -> PhiloxStream {
+        let split_tag = match split {
+            Split::Train => 0u64,
+            Split::Dev => 1u64,
+        };
+        let task_tag = self.task as u64;
+        // disjoint stream per (seed, task, split, index)
+        let mix = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(task_tag << 40 | split_tag << 32 | index as u64);
+        PhiloxStream::new(mix, STREAM_DATA)
+    }
+
+    fn n_words(&self) -> u32 {
+        self.tok.n_words()
+    }
+
+    fn noun(&self, r: &mut PhiloxStream) -> u32 {
+        r.next_below(self.n_words() / 3)
+    }
+
+    fn verb(&self, r: &mut PhiloxStream) -> u32 {
+        self.n_words() / 3 + r.next_below(self.n_words() / 3)
+    }
+
+    fn any_word(&self, r: &mut PhiloxStream) -> u32 {
+        r.next_below(self.n_words())
+    }
+
+    /// MNLI-MM draws content words from the *upper* half of the lexicon —
+    /// the "mismatched domain" analogue.
+    fn domain_word(&self, r: &mut PhiloxStream) -> u32 {
+        match self.task {
+            Task::MnliMM => self.n_words() / 2 + r.next_below(self.n_words() / 2),
+            _ => r.next_below(self.n_words() / 2),
+        }
+    }
+
+    pub fn example(&self, split: Split, index: usize) -> Example {
+        let mut r = self.rng_for(split, index);
+        let mut ex = match self.task {
+            Task::Cola => self.gen_cola(&mut r),
+            Task::Sst2 => self.gen_sst2(&mut r),
+            Task::Mrpc | Task::Qqp => self.gen_paraphrase(&mut r),
+            Task::Mnli | Task::MnliMM => self.gen_nli(&mut r),
+            Task::Qnli => self.gen_qnli(&mut r),
+            Task::Rte => self.gen_rte(&mut r),
+            Task::Stsb => self.gen_stsb(&mut r),
+            Task::Wnli => self.gen_rte(&mut r), // same family, noisier
+        };
+        // label noise (classification only)
+        let noise = self.task.noise();
+        if !self.task.is_regression() && noise > 0.0 && r.next_f32() < noise {
+            let c = self.task.n_classes() as u32;
+            ex.label = ((ex.label as u32 + 1 + r.next_below(c - 1)) % c) as f32;
+        }
+        // clip/pad to seq_len
+        ex.tokens.truncate(self.seq_len);
+        ex
+    }
+
+    fn word_tok(&self, lex: u32) -> u32 {
+        super::tokenizer::FIRST_WORD + lex
+    }
+
+    /// CoLA-like acceptability: "grammatical" = positive net valence.
+    /// The latent signal is weak (small per-example drift), so examples sit
+    /// near the decision boundary — CoLA is the paper's hardest task and
+    /// the first to degrade under gradient noise.
+    fn gen_cola(&self, r: &mut PhiloxStream) -> Example {
+        let len = 5 + r.next_below((self.seq_len as u32 - 6).min(12)) as usize;
+        let (tokens, sum) = self.counting_body(r, len, 0.14, false);
+        Example { tokens, label: if sum > 0 { 1.0 } else { 0.0 } }
+    }
+
+    /// SST2-like sentiment: label = sign of summed word valence, with a
+    /// strong per-example drift (easy, large task — robust under RMM).
+    fn gen_sst2(&self, r: &mut PhiloxStream) -> Example {
+        let len = 6 + r.next_below((self.seq_len as u32 - 7).min(16)) as usize;
+        let (tokens, sum) = self.counting_body(r, len, 0.3, false);
+        Example { tokens, label: if sum > 0 { 1.0 } else { 0.0 } }
+    }
+
+    /// MRPC/QQP-like "consistent pair": two segments (second drawn from the
+    /// upper lexicon half so the model can tell them apart lexically);
+    /// positive iff the pair's joint valence clears an off-center
+    /// threshold (off-center ⇒ class imbalance ⇒ F1 is the right metric,
+    /// as in GLUE).
+    fn gen_paraphrase(&self, r: &mut PhiloxStream) -> Example {
+        let (len, bias, thr) = match self.task {
+            Task::Qqp => (6 + r.next_below(6) as usize, 0.25, 0),
+            _ => (4 + r.next_below(5) as usize, 0.18, 1),
+        };
+        let (mut tokens, sum_a) = self.counting_body(r, len, bias, false);
+        tokens.push(SEP);
+        let (body_b, sum_b) = self.counting_body(r, len, bias, true);
+        tokens.extend(&body_b[1..]); // skip the CLS of the second body
+        let label = if sum_a + sum_b > thr { 1.0 } else { 0.0 };
+        Example { tokens, label }
+    }
+
+    /// MNLI-like 3-way: the pooled valence of premise+hypothesis buckets
+    /// into entail / neutral / contradict (two learnable thresholds on one
+    /// pooled feature; the large training set makes this the most
+    /// RMM-robust task, as MNLI is in the paper).
+    fn gen_nli(&self, r: &mut PhiloxStream) -> Example {
+        let plen = 5 + r.next_below(6) as usize;
+        let hlen = 4 + r.next_below(3) as usize;
+        // aim for one of three drift buckets, label from the ACTUAL sum
+        let bucket = r.next_below(3);
+        let bias = match bucket {
+            0 => 0.35,
+            1 => 0.0,
+            _ => -0.35,
+        };
+        let (mut tokens, sum_p) = self.counting_body_signed(r, plen, bias);
+        tokens.push(SEP);
+        let (body_h, sum_h) = self.counting_body_signed(r, hlen, bias);
+        tokens.extend(&body_h[1..]);
+        let s = sum_p + sum_h;
+        let label = if s >= 3 {
+            0.0
+        } else if s <= -3 {
+            2.0
+        } else {
+            1.0
+        };
+        Example { tokens, label }
+    }
+
+    /// QNLI-like: a decorative "question" prefix plus an answer sentence;
+    /// positive iff the sentence's valence is positive.  Mid-size, mid
+    /// difficulty.
+    fn gen_qnli(&self, r: &mut PhiloxStream) -> Example {
+        let q = self.domain_word(r);
+        let slen = 6 + r.next_below(8) as usize;
+        let (body, sum) = self.counting_body(r, slen, 0.22, false);
+        let mut tokens = vec![CLS, self.word_tok(q), SEP];
+        tokens.extend(&body[1..]);
+        Example { tokens, label: if sum > 0 { 1.0 } else { 0.0 } }
+    }
+
+    /// RTE/WNLI-like: the same pooled-valence rule with a weaker drift —
+    /// combined with their high label-noise rates and tiny training sets
+    /// these are the fragile tasks (as RTE/WNLI are in the paper).
+    fn gen_rte(&self, r: &mut PhiloxStream) -> Example {
+        let plen = 5 + r.next_below(6) as usize;
+        let hlen = 3 + r.next_below(3) as usize;
+        let (mut tokens, sum_p) = self.counting_body(r, plen, 0.16, false);
+        tokens.push(SEP);
+        let (body_h, sum_h) = self.counting_body(r, hlen, 0.16, true);
+        tokens.extend(&body_h[1..]);
+        Example { tokens, label: if sum_p + sum_h > 0 { 1.0 } else { 0.0 } }
+    }
+
+    /// STSB-like regression: score in [0, 5] is an affine map of the mean
+    /// valence plus mild observation noise.
+    fn gen_stsb(&self, r: &mut PhiloxStream) -> Example {
+        let len = 6 + r.next_below(8) as usize;
+        let (mut tokens, sum_a) = self.counting_body(r, len, 0.3, false);
+        tokens.push(SEP);
+        let (body_b, sum_b) = self.counting_body(r, len, 0.3, true);
+        tokens.extend(&body_b[1..]);
+        let mean = (sum_a + sum_b) as f32 / (2 * len) as f32; // in [-1, 1]
+        let score = 2.5 + 2.5 * mean + 0.12 * r.next_normal();
+        Example { tokens, label: score.clamp(0.0, 5.0) }
+    }
+
+    /// Shared generator core: `len` words drawn with a random per-example
+    /// drift of magnitude `bias` toward one valence; returns the token body
+    /// (starting with CLS) and the realized valence sum (word valence =
+    /// +1 for even lexicon ids, -1 for odd).  `upper` draws from the upper
+    /// lexicon half (segment-B / mismatched-domain encoding).
+    fn counting_body(
+        &self,
+        r: &mut PhiloxStream,
+        len: usize,
+        bias: f32,
+        upper: bool,
+    ) -> (Vec<u32>, i32) {
+        let dir = if r.next_u32() & 1 == 1 { 1.0 } else { -1.0 };
+        self.counting_body_dir(r, len, bias * dir, upper)
+    }
+
+    /// Like `counting_body` but with a signed bias (for bucketed tasks).
+    fn counting_body_signed(
+        &self,
+        r: &mut PhiloxStream,
+        len: usize,
+        bias: f32,
+    ) -> (Vec<u32>, i32) {
+        self.counting_body_dir(r, len, bias, false)
+    }
+
+    fn counting_body_dir(
+        &self,
+        r: &mut PhiloxStream,
+        len: usize,
+        bias: f32,
+        upper: bool,
+    ) -> (Vec<u32>, i32) {
+        let p_pos = 0.5 + bias.clamp(-0.45, 0.45);
+        let mut tokens = vec![CLS];
+        let mut sum = 0i32;
+        let n = self.n_words();
+        let (lo, span) = if upper || self.task == Task::MnliMM {
+            (n / 2, n / 2)
+        } else {
+            (0, n / 2)
+        };
+        for _ in 0..len {
+            let want_pos = r.next_f32() < p_pos;
+            // draw a word of the wanted valence from the domain slice
+            let w = loop {
+                let w = lo + r.next_below(span);
+                if (w % 2 == 0) == want_pos {
+                    break w;
+                }
+            };
+            sum += if w % 2 == 0 { 1 } else { -1 };
+            tokens.push(self.word_tok(w));
+        }
+        (tokens, sum)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(_task: Task) -> (Tokenizer, u64) {
+        (Tokenizer::new(256), 42)
+    }
+
+    #[test]
+    fn deterministic_examples() {
+        for task in Task::ALL {
+            let (tok, seed) = gen(task);
+            let g = TaskGen::new(task, &tok, 32, seed);
+            let a = g.example(Split::Train, 7);
+            let b = g.example(Split::Train, 7);
+            assert_eq!(a.tokens, b.tokens, "{task:?}");
+            assert_eq!(a.label, b.label, "{task:?}");
+        }
+    }
+
+    #[test]
+    fn splits_and_indices_differ() {
+        let (tok, seed) = gen(Task::Sst2);
+        let g = TaskGen::new(Task::Sst2, &tok, 32, seed);
+        let a = g.example(Split::Train, 0);
+        let b = g.example(Split::Dev, 0);
+        let c = g.example(Split::Train, 1);
+        assert_ne!(a.tokens, b.tokens);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn tokens_in_range_and_start_with_cls() {
+        for task in Task::ALL {
+            let (tok, seed) = gen(task);
+            let g = TaskGen::new(task, &tok, 32, seed);
+            for i in 0..50 {
+                let ex = g.example(Split::Train, i);
+                assert_eq!(ex.tokens[0], CLS, "{task:?}");
+                assert!(ex.tokens.len() <= 32);
+                assert!(ex.tokens.iter().all(|&t| (t as usize) < 256), "{task:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn labels_in_range() {
+        for task in Task::ALL {
+            let (tok, seed) = gen(task);
+            let g = TaskGen::new(task, &tok, 32, seed);
+            for i in 0..100 {
+                let ex = g.example(Split::Train, i);
+                if task.is_regression() {
+                    assert!((0.0..=5.0).contains(&ex.label), "{task:?} {}", ex.label);
+                } else {
+                    let c = ex.label as usize;
+                    assert!(c < task.n_classes(), "{task:?} {}", ex.label);
+                    assert_eq!(c as f32, ex.label);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn classes_roughly_balanced() {
+        for task in [Task::Cola, Task::Sst2, Task::Mnli, Task::Qnli] {
+            let (tok, seed) = gen(task);
+            let g = TaskGen::new(task, &tok, 32, seed);
+            let n = 600;
+            let mut counts = vec![0usize; task.n_classes()];
+            for i in 0..n {
+                counts[g.example(Split::Train, i).label as usize] += 1;
+            }
+            let expected = n / task.n_classes();
+            for (c, &cnt) in counts.iter().enumerate() {
+                assert!(
+                    cnt > expected / 2 && cnt < expected * 2,
+                    "{task:?} class {c}: {counts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mnli_mm_uses_shifted_domain() {
+        let tok = Tokenizer::new(256);
+        let g_m = TaskGen::new(Task::Mnli, &tok, 32, 1);
+        let g_mm = TaskGen::new(Task::MnliMM, &tok, 32, 1);
+        let lex_of = |ex: &Example| -> Vec<u32> {
+            ex.tokens
+                .iter()
+                .filter(|&&t| t >= super::super::tokenizer::FIRST_WORD)
+                .map(|&t| t - super::super::tokenizer::FIRST_WORD)
+                .collect()
+        };
+        let n_words = tok.n_words();
+        let mut mm_low = 0;
+        let mut m_high = 0;
+        for i in 0..100 {
+            for w in lex_of(&g_mm.example(Split::Train, i)) {
+                if w < n_words / 2 {
+                    mm_low += 1;
+                }
+            }
+            for w in lex_of(&g_m.example(Split::Train, i)) {
+                if w >= n_words / 2 {
+                    m_high += 1;
+                }
+            }
+        }
+        // antonym-flip (xor 1) can cross the boundary only at the midpoint,
+        // so leakage is negligible
+        assert!(mm_low < 10, "mm drew {mm_low} low-domain words");
+        assert!(m_high < 10, "m drew {m_high} high-domain words");
+    }
+
+    #[test]
+    fn split_sizes_ordered_like_glue() {
+        assert!(Task::Mnli.split_size(Split::Train) > Task::Rte.split_size(Split::Train));
+        assert!(Task::Rte.split_size(Split::Train) > Task::Wnli.split_size(Split::Train));
+        for task in Task::ALL {
+            assert!(task.split_size(Split::Dev) < task.split_size(Split::Train));
+        }
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for task in Task::ALL {
+            assert_eq!(Task::parse(task.name()), Some(task), "{task:?}");
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Word-level tokenizer + vocabulary for the synthetic GLUE suite.
+//!
+//! The synthetic corpus is made of lexicon words ("w017", …) plus the
+//! special tokens below.  Word ids are stable (lexicon order), so the
+//! vocabulary is a pure function of `vocab_size` and never needs to be
+//! shipped with checkpoints.
+
+use std::collections::HashMap;
+
+pub const PAD: u32 = 0;
+pub const CLS: u32 = 1;
+pub const SEP: u32 = 2;
+pub const UNK: u32 = 3;
+pub const FIRST_WORD: u32 = 4;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab_size: usize,
+    word_to_id: HashMap<String, u32>,
+    id_to_word: Vec<String>,
+}
+
+impl Tokenizer {
+    /// Build the deterministic lexicon for a model vocabulary of
+    /// `vocab_size` ids (ids 0..4 are the special tokens).
+    pub fn new(vocab_size: usize) -> Self {
+        assert!(vocab_size > FIRST_WORD as usize + 1, "vocab too small");
+        let mut id_to_word = vec![
+            "<pad>".to_string(),
+            "<cls>".to_string(),
+            "<sep>".to_string(),
+            "<unk>".to_string(),
+        ];
+        for w in FIRST_WORD..vocab_size as u32 {
+            id_to_word.push(format!("w{:03}", w - FIRST_WORD));
+        }
+        let word_to_id = id_to_word
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Self { vocab_size, word_to_id, id_to_word }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn n_words(&self) -> u32 {
+        self.vocab_size as u32 - FIRST_WORD
+    }
+
+    /// Word string for a lexicon index (0-based over content words).
+    pub fn word(&self, lexicon_idx: u32) -> &str {
+        &self.id_to_word[(FIRST_WORD + lexicon_idx) as usize]
+    }
+
+    pub fn encode_word(&self, word: &str) -> u32 {
+        *self.word_to_id.get(word).unwrap_or(&UNK)
+    }
+
+    /// Encode a whitespace-separated sentence, prepending CLS.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = vec![CLS];
+        for w in text.split_whitespace() {
+            out.push(self.encode_word(w));
+        }
+        out
+    }
+
+    /// Encode a sentence pair: CLS a… SEP b…
+    pub fn encode_pair(&self, a: &str, b: &str) -> Vec<u32> {
+        let mut out = self.encode(a);
+        out.push(SEP);
+        for w in b.split_whitespace() {
+            out.push(self.encode_word(w));
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                self.id_to_word
+                    .get(i as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<bad>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specials_are_fixed() {
+        let t = Tokenizer::new(64);
+        assert_eq!(t.encode_word("<pad>"), PAD);
+        assert_eq!(t.encode_word("<cls>"), CLS);
+        assert_eq!(t.encode_word("<sep>"), SEP);
+        assert_eq!(t.encode_word("nonsense"), UNK);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::new(64);
+        let ids = t.encode("w000 w005 w059");
+        assert_eq!(ids, vec![CLS, 4, 9, 63]);
+        assert_eq!(t.decode(&ids), "<cls> w000 w005 w059");
+    }
+
+    #[test]
+    fn pair_encoding_has_sep() {
+        let t = Tokenizer::new(64);
+        let ids = t.encode_pair("w000", "w001");
+        assert_eq!(ids, vec![CLS, 4, SEP, 5]);
+    }
+
+    #[test]
+    fn word_ids_are_dense_and_stable() {
+        let t = Tokenizer::new(100);
+        assert_eq!(t.n_words(), 96);
+        for i in 0..t.n_words() {
+            assert_eq!(t.encode_word(t.word(i)), FIRST_WORD + i);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn tiny_vocab_rejected() {
+        Tokenizer::new(4);
+    }
+}

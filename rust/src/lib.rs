@@ -1,0 +1,31 @@
+//! # rmmlinear
+//!
+//! Production-grade reproduction of **"Memory-Efficient Backpropagation
+//! through Large Linear Layers"** (Bershatsky et al., 2022) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas kernels (build-time Python) computing the randomized
+//!   projection `X_proj = SᵀX` with the sketch matrix generated *inside*
+//!   the kernel from a Philox counter PRNG (never materialized in HBM).
+//! * **L2** — an explicit-residual transformer encoder (build-time JAX)
+//!   whose hand-written backward implements the paper's Algorithm 1,
+//!   AOT-lowered to HLO-text artifacts.
+//! * **L3** — this crate: the training coordinator that loads the
+//!   artifacts via PJRT, owns the residual buffers between `fwd` and
+//!   `bwd` (making the paper's memory claim a measured quantity), runs
+//!   optimizers/schedules, generates the synthetic GLUE suite, and
+//!   regenerates every table and figure of the paper's evaluation.
+//!
+//! See DESIGN.md for the architecture and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod memory;
+pub mod rmm;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

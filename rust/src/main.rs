@@ -1,0 +1,393 @@
+//! `repro` — CLI for the rmmlinear coordinator.
+//!
+//! ```text
+//! repro train --variant small_cls2_r50_gauss --task cola --steps 400
+//! repro eval  --variant small_cls2_r50_gauss --task cola --checkpoint runs/ck.bin
+//! repro pretrain --steps 600 --out runs/pretrained.bin
+//! repro bench-table2 [--tasks cola,sst2] [--steps 300]
+//! repro bench-table3 | bench-table4 | bench-fig3 | bench-fig4 | bench-fig5 | bench-fig6
+//! repro inspect-artifacts
+//! repro memory-model --rho 0.1 [--roberta]
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use rmmlinear::bench_harness as bench;
+use rmmlinear::config::TrainConfig;
+use rmmlinear::coordinator::{Checkpoint, MetricsLog, Trainer};
+use rmmlinear::data::{Task, Tokenizer};
+use rmmlinear::memory::{MemoryModel, ModelGeometry};
+use rmmlinear::runtime::{Engine, Manifest};
+use rmmlinear::util::cli::Args;
+use rmmlinear::util::json::Json;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn train_config(args: &Args) -> TrainConfig {
+    let mut t = TrainConfig::default();
+    t.steps = args.get_usize("steps", t.steps);
+    t.warmup_steps = args.get_usize("warmup", (t.steps / 16).max(1));
+    t.lr = args.get_f64("lr", t.lr);
+    t.weight_decay = args.get_f64("weight-decay", t.weight_decay);
+    t.clip_norm = args.get_f64("clip-norm", t.clip_norm);
+    t.optimizer = args.get_or("optimizer", &t.optimizer).to_string();
+    t.schedule = args.get_or("schedule", &t.schedule).to_string();
+    t.log_every = args.get_usize("log-every", t.log_every);
+    t.seed = args.get_u64("seed", t.seed);
+    t
+}
+
+fn load_manifest(args: &Args) -> Result<Manifest> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    Manifest::load(&dir)
+}
+
+fn reports_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("reports", "reports"))
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv, &["roberta", "all-tasks", "verbose", "help"]);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "bench-table2" => cmd_table2(&args),
+        "bench-table3" => cmd_table3(&args),
+        "bench-table4" => cmd_table4(&args),
+        "bench-fig3" => cmd_fig3(&args),
+        "bench-fig4" => cmd_fig4(&args),
+        "bench-fig5" => cmd_fig5(&args),
+        "bench-fig6" => cmd_fig6(&args),
+        "inspect-artifacts" => cmd_inspect(&args),
+        "memory-model" => cmd_memory_model(&args),
+        "help" | _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+repro — Memory-Efficient Backpropagation through Large Linear Layers (repro)
+
+USAGE: repro <command> [--key value ...]
+
+COMMANDS
+  train             fine-tune a variant on a synthetic GLUE task
+                    --variant NAME --task NAME [--steps N --lr F --seed N]
+                    [--warm-start ck.bin] [--out runs/NAME]
+  eval              evaluate a checkpoint on a task's dev split
+                    --variant NAME --task NAME --checkpoint FILE
+  pretrain          train on the MNLI-like corpus and save a body checkpoint
+                    [--steps N] [--out runs/pretrained.bin]
+  bench-table2      GLUE scores vs rho sweep (paper Table 2)
+                    [--tasks cola,sst2,...|all] [--rhos 1.0,0.5,...] [--steps N]
+  bench-table3      peak memory + saving per (task, batch, rho) (Table 3)
+  bench-table4      sketch-family comparison on CoLA (Table 4)
+  bench-fig3        memory vs batch size [--all-tasks] (Fig 3/8)
+  bench-fig4        variance-probe series (Fig 4/7)
+  bench-fig5        loss curves vs rho [--task mnli] (Fig 5/9)
+  bench-fig6        relative throughput vs rho (Fig 6)
+  inspect-artifacts dump the manifest (variants, entries, arg counts)
+  memory-model      analytic memory model [--rho F] [--batch N] [--roberta]
+
+COMMON OPTIONS
+  --artifacts DIR   artifact directory (default: artifacts)
+  --reports DIR     bench report directory (default: reports)
+";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let vname = args.get("variant").context("--variant required")?;
+    let task = Task::parse(args.get("task").context("--task required")?)
+        .context("unknown task")?;
+    let cfg = train_config(args);
+    let variant = manifest.variant(vname)?;
+    let mut engine = Engine::cpu()?;
+    let tok = Tokenizer::new(variant.config.vocab_size);
+    let mut trainer = Trainer::new(&manifest, variant, task, cfg.clone())?;
+
+    if let Some(ck_path) = args.get("warm-start") {
+        let ck = Checkpoint::load(Path::new(ck_path))?;
+        let n = trainer.load_matching(&ck.names, &ck.params);
+        println!("warm start from {ck_path}: {n}/{} params", trainer.params.len());
+    }
+
+    let out_dir = PathBuf::from(args.get_or("out", "runs/train"));
+    let mut log = MetricsLog::create(&out_dir.join("metrics.jsonl"))?;
+
+    use rmmlinear::data::{Batcher, Split, TaskGen};
+    let gen = TaskGen::new(task, &tok, variant.config.seq_len, cfg.seed);
+    let mut epoch = 0u64;
+    let mut batches = Batcher::new(&gen, Split::Train, variant.config.batch_size, epoch);
+    println!(
+        "training {vname} on {} ({} params, rho={}, sketch={})",
+        task.name(),
+        variant.param_count,
+        variant.config.rho,
+        variant.config.sketch
+    );
+    for step in 0..cfg.steps {
+        let batch = match batches.next() {
+            Some(b) => b,
+            None => {
+                epoch += 1;
+                batches =
+                    Batcher::new(&gen, Split::Train, variant.config.batch_size, epoch);
+                batches.next().unwrap()
+            }
+        };
+        let s = trainer.train_step(&mut engine, &batch)?;
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            println!(
+                "step {:>5}  loss {:.4}  lr {:.2e}  |g| {:.3}  resid {:.1} KiB  {:.0} ms",
+                s.step,
+                s.loss,
+                s.lr,
+                s.grad_norm,
+                s.residual_bytes as f64 / 1024.0,
+                s.step_time_s * 1e3
+            );
+            log.log(Json::obj(vec![
+                ("step", Json::num(s.step as f64)),
+                ("loss", Json::num(s.loss)),
+                ("lr", Json::num(s.lr)),
+                ("grad_norm", Json::num(s.grad_norm)),
+            ]));
+        }
+        if cfg.eval_every != 0 && step > 0 && step % cfg.eval_every == 0 {
+            let score = trainer.evaluate(&mut engine, &tok)?;
+            println!("step {:>5}  dev {} = {:.2}", step, task.name(), score);
+        }
+    }
+    let score = trainer.evaluate(&mut engine, &tok)?;
+    println!("final dev {} = {score:.2}", task.name());
+    let ck = Checkpoint {
+        step: cfg.steps,
+        variant: vname.to_string(),
+        names: trainer.param_names.clone(),
+        params: trainer.params.clone(),
+    };
+    ck.save(&out_dir.join("checkpoint.bin"))?;
+    println!("checkpoint -> {}", out_dir.join("checkpoint.bin").display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let vname = args.get("variant").context("--variant required")?;
+    let task = Task::parse(args.get("task").context("--task required")?)
+        .context("unknown task")?;
+    let variant = manifest.variant(vname)?;
+    let mut engine = Engine::cpu()?;
+    let tok = Tokenizer::new(variant.config.vocab_size);
+    let mut trainer = Trainer::new(&manifest, variant, task, train_config(args))?;
+    if let Some(ck_path) = args.get("checkpoint") {
+        let ck = Checkpoint::load(Path::new(ck_path))?;
+        let n = trainer.load_matching(&ck.names, &ck.params);
+        println!("loaded {n} params from {ck_path}");
+    }
+    let score = trainer.evaluate(&mut engine, &tok)?;
+    println!("dev {} = {score:.2}", task.name());
+    Ok(())
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    // "Pre-training" analogue: train the encoder body on the biggest task
+    // (MNLI-like) so Table 2 fine-tuning can warm-start, mirroring the
+    // paper's pretrained-RoBERTa setting.
+    let manifest = load_manifest(args)?;
+    let mut engine = Engine::cpu()?;
+    let mut cfg = train_config(args);
+    if args.get("steps").is_none() {
+        cfg.steps = 600;
+    }
+    let variant = manifest.variant("small_cls3_r100_gauss")?;
+    let mut trainer = Trainer::new(&manifest, variant, Task::Mnli, cfg.clone())?;
+    let tok = Tokenizer::new(variant.config.vocab_size);
+    use rmmlinear::data::{Batcher, Split, TaskGen};
+    let gen = TaskGen::new(Task::Mnli, &tok, variant.config.seq_len, cfg.seed);
+    let mut epoch = 0;
+    let mut batches = Batcher::new(&gen, Split::Train, variant.config.batch_size, epoch);
+    for _ in 0..cfg.steps {
+        let batch = match batches.next() {
+            Some(b) => b,
+            None => {
+                epoch += 1;
+                batches =
+                    Batcher::new(&gen, Split::Train, variant.config.batch_size, epoch);
+                batches.next().unwrap()
+            }
+        };
+        trainer.train_step(&mut engine, &batch)?;
+    }
+    let score = trainer.evaluate(&mut engine, &tok)?;
+    println!("pretrain: mnli dev = {score:.2}");
+    let out = PathBuf::from(args.get_or("out", "runs/pretrained.bin"));
+    Checkpoint {
+        step: cfg.steps,
+        variant: "small_cls3_r100_gauss".into(),
+        names: trainer.param_names.clone(),
+        params: trainer.params.clone(),
+    }
+    .save(&out)?;
+    println!("pretrained body -> {}", out.display());
+    Ok(())
+}
+
+fn parse_rhos(args: &Args, default: &[f64]) -> Vec<f64> {
+    args.get("rhos")
+        .map(|s| s.split(',').filter_map(|r| r.trim().parse().ok()).collect())
+        .unwrap_or_else(|| default.to_vec())
+}
+
+fn cmd_table2(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let mut engine = Engine::cpu()?;
+    let tasks = bench::table2::tasks_from_arg(args.get("tasks"));
+    if tasks.is_empty() {
+        bail!("no valid tasks in --tasks");
+    }
+    let rhos = parse_rhos(args, &bench::table2::RHOS);
+    let mut cfg = train_config(args);
+    if args.get("steps").is_none() {
+        cfg.steps = 300;
+    }
+    cfg.eval_every = usize::MAX;
+    let report = bench::table2::run(&mut engine, &manifest, &tasks, &rhos, cfg)?;
+    bench::write_report(&reports_dir(args), "table2", &report)
+}
+
+fn cmd_table3(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let mut engine = Engine::cpu()?;
+    let steps = args.get_usize("steps", 5);
+    let report = bench::table3::run(&mut engine, &manifest, steps)?;
+    bench::write_report(&reports_dir(args), "table3", &report)
+}
+
+fn cmd_table4(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let mut engine = Engine::cpu()?;
+    let mut cfg = train_config(args);
+    if args.get("steps").is_none() {
+        cfg.steps = 300;
+    }
+    let report = bench::table4::run(&mut engine, &manifest, cfg)?;
+    bench::write_report(&reports_dir(args), "table4", &report)
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let mut engine = Engine::cpu()?;
+    let tasks = if args.has_flag("all-tasks") {
+        Task::ALL.to_vec()
+    } else {
+        vec![Task::Cola]
+    };
+    let steps = args.get_usize("steps", 3);
+    let report = bench::fig3::run(&mut engine, &manifest, &tasks, steps)?;
+    bench::write_report(&reports_dir(args), "fig3", &report)
+}
+
+fn cmd_fig4(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let mut engine = Engine::cpu()?;
+    let mut cfg = train_config(args);
+    if args.get("steps").is_none() {
+        cfg.steps = 200;
+    }
+    cfg.log_every = 1;
+    let report = bench::fig4::run(&mut engine, &manifest, cfg)?;
+    bench::write_report(&reports_dir(args), "fig4", &report)
+}
+
+fn cmd_fig5(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let mut engine = Engine::cpu()?;
+    let task = Task::parse(args.get_or("task", "mnli")).context("unknown task")?;
+    let mut cfg = train_config(args);
+    if args.get("steps").is_none() {
+        cfg.steps = 300;
+    }
+    cfg.log_every = (cfg.steps / 16).max(1);
+    let report = bench::fig5::run(&mut engine, &manifest, task, cfg)?;
+    bench::write_report(&reports_dir(args), "fig5", &report)
+}
+
+fn cmd_fig6(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    let mut engine = Engine::cpu()?;
+    let task = Task::parse(args.get_or("task", "cola")).context("unknown task")?;
+    let steps = args.get_usize("steps", 30);
+    let report = bench::fig6::run(&mut engine, &manifest, task, steps)?;
+    bench::write_report(&reports_dir(args), "fig6", &report)
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let manifest = load_manifest(args)?;
+    println!("{} variants in {}", manifest.variants.len(), manifest.dir.display());
+    for (name, v) in &manifest.variants {
+        let c = &v.config;
+        println!(
+            "{name:<34} rows={:<5} b_proj={:<5} rho={:<4} sketch={:<10} params={} entries=[{}]",
+            v.rows,
+            v.b_proj,
+            c.rho,
+            c.sketch,
+            v.param_count,
+            v.entries.keys().cloned().collect::<Vec<_>>().join(",")
+        );
+        if args.has_flag("verbose") {
+            for (ename, e) in &v.entries {
+                let resid = e.residual_args().count().max(e.residual_outputs().count());
+                println!(
+                    "    {ename}: {} args, {} outputs, {} residuals",
+                    e.args.len(),
+                    e.outputs.len(),
+                    resid
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_memory_model(args: &Args) -> Result<()> {
+    let rho = args.get_f64("rho", 0.1);
+    let geom = if args.has_flag("roberta") {
+        ModelGeometry::roberta_base(args.get_usize("batch", 128), args.get_usize("seq", 128))
+    } else {
+        ModelGeometry {
+            vocab_size: args.get_usize("vocab", 256),
+            seq_len: args.get_usize("seq", 32),
+            batch_size: args.get_usize("batch", 16),
+            d_model: args.get_usize("d-model", 64),
+            n_heads: args.get_usize("heads", 4),
+            n_layers: args.get_usize("layers", 2),
+            d_ff: args.get_usize("d-ff", 256),
+            n_classes: args.get_usize("classes", 2),
+        }
+    };
+    let m = MemoryModel::new(geom, rho);
+    let base = MemoryModel::new(geom, 1.0);
+    println!("geometry: {geom:?}");
+    println!("params:           {:>14}", m.geom.param_count());
+    println!("rho:              {rho:>14}");
+    println!("b_proj:           {:>14} (rows {})", m.b_proj(), geom.rows());
+    println!("residual bytes:   {:>14} (baseline {})", m.residual_bytes(), base.residual_bytes());
+    println!("total bytes:      {:>14} (baseline {})", m.total_bytes(), base.total_bytes());
+    println!("residual saving:  {:>13.1}%", m.residual_saving());
+    println!("total saving:     {:>13.1}%", m.saving_vs_baseline());
+    Ok(())
+}

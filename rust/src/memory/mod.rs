@@ -1,0 +1,10 @@
+//! Memory substrate: the activation store that holds residual buffers
+//! between the `fwd` and `bwd` executions (where the paper's saving is
+//! *measured*), plus the analytic whole-process memory model used to
+//! extrapolate Table 3 / Fig. 3 to paper-scale geometry.
+
+mod accounting;
+mod store;
+
+pub use accounting::{MemoryModel, ModelGeometry};
+pub use store::{ActivationStore, StoreStats};

@@ -1,0 +1,156 @@
+//! ActivationStore: owns the residual buffers between `fwd` and `bwd`.
+//!
+//! In a fused autodiff graph the forward→backward residency is decided by
+//! the compiler; by splitting the graph at exactly that boundary, the
+//! coordinator holds the residuals as named buffers, and "stored
+//! activations" becomes a measured byte count — the quantity in the
+//! paper's Table 3 / Fig. 3.  The store tracks live and peak bytes across
+//! the step lifecycle (put-all → consume-all), with per-name size
+//! breakdown for the memory reports.
+
+use std::collections::BTreeMap;
+
+/// A named residual buffer staged between fwd and bwd.
+pub struct Slot<T> {
+    pub value: T,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StoreStats {
+    pub live_bytes: usize,
+    pub peak_bytes: usize,
+    pub puts: usize,
+    pub takes: usize,
+}
+
+/// Generic over the buffer payload so unit tests run without PJRT (the
+/// trainer instantiates `ActivationStore<PjRtBuffer>`).
+pub struct ActivationStore<T> {
+    slots: BTreeMap<String, Slot<T>>,
+    stats: StoreStats,
+}
+
+impl<T> Default for ActivationStore<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> ActivationStore<T> {
+    pub fn new() -> Self {
+        Self { slots: BTreeMap::new(), stats: StoreStats::default() }
+    }
+
+    /// Stage a residual. Replacing an existing name is a bug upstream.
+    pub fn put(&mut self, name: &str, value: T, bytes: usize) {
+        let prev = self.slots.insert(name.to_string(), Slot { value, bytes });
+        assert!(prev.is_none(), "residual '{name}' staged twice");
+        self.stats.puts += 1;
+        self.stats.live_bytes += bytes;
+        self.stats.peak_bytes = self.stats.peak_bytes.max(self.stats.live_bytes);
+    }
+
+    /// Remove and return a residual (bwd consumes each exactly once).
+    pub fn take(&mut self, name: &str) -> Option<T> {
+        let slot = self.slots.remove(name)?;
+        self.stats.takes += 1;
+        self.stats.live_bytes -= slot.bytes;
+        Some(slot.value)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.slots.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        self.stats
+    }
+
+    /// Reset peak tracking (per-step accounting) without touching content.
+    pub fn reset_peak(&mut self) {
+        self.stats.peak_bytes = self.stats.live_bytes;
+    }
+
+    /// Per-name byte sizes, largest first (for the memory breakdown table).
+    pub fn breakdown(&self) -> Vec<(String, usize)> {
+        let mut v: Vec<(String, usize)> =
+            self.slots.iter().map(|(k, s)| (k.clone(), s.bytes)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v
+    }
+
+    /// Drop everything (e.g. on abort); accounting stays consistent.
+    pub fn clear(&mut self) {
+        self.stats.live_bytes = 0;
+        self.slots.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_take_accounting() {
+        let mut s: ActivationStore<Vec<u8>> = ActivationStore::new();
+        s.put("a", vec![0; 100], 100);
+        s.put("b", vec![0; 50], 50);
+        assert_eq!(s.stats().live_bytes, 150);
+        assert_eq!(s.stats().peak_bytes, 150);
+        assert!(s.take("a").is_some());
+        assert_eq!(s.stats().live_bytes, 50);
+        assert_eq!(s.stats().peak_bytes, 150); // peak persists
+        assert!(s.take("a").is_none());
+        assert!(s.take("b").is_some());
+        assert!(s.is_empty());
+        assert_eq!(s.stats().puts, 2);
+        assert_eq!(s.stats().takes, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "staged twice")]
+    fn double_put_panics() {
+        let mut s: ActivationStore<u32> = ActivationStore::new();
+        s.put("x", 1, 4);
+        s.put("x", 2, 4);
+    }
+
+    #[test]
+    fn peak_across_steps() {
+        let mut s: ActivationStore<u32> = ActivationStore::new();
+        s.put("x", 1, 1000);
+        s.take("x");
+        s.reset_peak();
+        s.put("y", 2, 10);
+        assert_eq!(s.stats().peak_bytes, 10);
+    }
+
+    #[test]
+    fn breakdown_sorted() {
+        let mut s: ActivationStore<u32> = ActivationStore::new();
+        s.put("small", 1, 10);
+        s.put("big", 2, 99);
+        assert_eq!(
+            s.breakdown(),
+            vec![("big".to_string(), 99), ("small".to_string(), 10)]
+        );
+    }
+
+    #[test]
+    fn clear_resets_live() {
+        let mut s: ActivationStore<u32> = ActivationStore::new();
+        s.put("x", 1, 7);
+        s.clear();
+        assert_eq!(s.stats().live_bytes, 0);
+        assert!(s.is_empty());
+    }
+}

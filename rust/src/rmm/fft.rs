@@ -1,0 +1,209 @@
+//! Fast transforms: radix-2 complex FFT, fast orthonormal DCT-II and the
+//! O(B log B) SORS projection path (paper §3.5's "theoretical computational
+//! advantage" made concrete).
+//!
+//! The Pallas kernels express the transforms as structured matmuls (the
+//! MXU-friendly form); this module provides the asymptotically-fast host
+//! implementation so the crossover between O(B²N) dense sketching and
+//! O(BN log B) structured sketching can actually be *measured*
+//! (`rust/benches/fft_crossover.rs`).
+
+use crate::rmm::sketch::{row_selection, sign_flips};
+use crate::tensor::Tensor;
+
+/// In-place iterative radix-2 Cooley-Tukey FFT over (re, im) pairs.
+/// `n` must be a power of two.
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64]) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "radix-2 FFT needs a power-of-two length");
+    // bit reversal
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cur_r, mut cur_i) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr, vi) = (
+                    re[i + k + len / 2] * cur_r - im[i + k + len / 2] * cur_i,
+                    re[i + k + len / 2] * cur_i + im[i + k + len / 2] * cur_r,
+                );
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let nr = cur_r * wr - cur_i * wi;
+                cur_i = cur_r * wi + cur_i * wr;
+                cur_r = nr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Orthonormal real-DFT coefficients of a real vector, in the row layout of
+/// `dft_entry` (DC, cos/sin pairs, Nyquist), computed in O(n log n).
+pub fn real_dft_ortho(x: &[f32]) -> Vec<f32> {
+    let n = x.len();
+    assert!(n.is_power_of_two() && n >= 2);
+    let mut re: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    let mut im = vec![0.0f64; n];
+    fft_inplace(&mut re, &mut im);
+    let mut out = vec![0.0f32; n];
+    let s1 = 1.0 / (n as f64).sqrt();
+    let s2 = (2.0 / n as f64).sqrt();
+    out[0] = (re[0] * s1) as f32;
+    for m in 1..n / 2 {
+        // row 2m−1: sqrt(2/n)·cos(2πmi/n) → Re F[m]; row 2m: sin → −Im F[m]
+        out[2 * m - 1] = (re[m] * s2) as f32;
+        out[2 * m] = (-im[m] * s2) as f32;
+    }
+    out[n - 1] = (re[n / 2] * s1) as f32;
+    out
+}
+
+/// Fast orthonormal DCT-II via a length-n FFT of the even-odd permuted
+/// sequence (Makhoul's method), O(n log n).
+pub fn dct2_ortho(x: &[f32]) -> Vec<f32> {
+    let n = x.len();
+    assert!(n.is_power_of_two() && n >= 2);
+    // v[i] = x[2i], v[n-1-i] = x[2i+1]
+    let mut re = vec![0.0f64; n];
+    let mut im = vec![0.0f64; n];
+    for i in 0..n / 2 {
+        re[i] = x[2 * i] as f64;
+        re[n - 1 - i] = x[2 * i + 1] as f64;
+    }
+    fft_inplace(&mut re, &mut im);
+    let mut out = vec![0.0f32; n];
+    for k in 0..n {
+        let ang = -std::f64::consts::PI * k as f64 / (2.0 * n as f64);
+        let val = re[k] * ang.cos() - im[k] * ang.sin();
+        let scale = if k == 0 {
+            (1.0 / n as f64).sqrt()
+        } else {
+            (2.0 / n as f64).sqrt()
+        };
+        out[k] = (val * scale) as f32;
+    }
+    out
+}
+
+/// O(B·N·log B) SORS projection: X_proj = sqrt(B/B_proj)·Rᵀ·H·D·X computed
+/// column-wise with the fast transform (B must be a power of two).
+pub fn sors_project_fast(
+    use_dct: bool,
+    x: &Tensor,
+    b_proj: usize,
+    seed: (u32, u32),
+) -> Tensor {
+    let (b, n) = (x.rows, x.cols);
+    assert!(b.is_power_of_two());
+    let sel = row_selection(b, b_proj, seed);
+    let signs = sign_flips(b, seed);
+    let scale = (b as f32 / b_proj as f32).sqrt();
+    let mut out = Tensor::zeros(b_proj, n);
+    let mut col = vec![0.0f32; b];
+    for c in 0..n {
+        for i in 0..b {
+            col[i] = signs[i] * x.at(i, c);
+        }
+        let coeffs = if use_dct { dct2_ortho(&col) } else { real_dft_ortho(&col) };
+        for (j, &s) in sel.iter().enumerate() {
+            *out.at_mut(j, c) = scale * coeffs[s];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmm::sketch::{dct_entry, dft_entry, sketch, SketchKind};
+    use crate::rng::philox::PhiloxStream;
+    use crate::tensor::matmul_at;
+
+    fn randv(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = PhiloxStream::new(seed, 3);
+        (0..n).map(|_| s.next_normal()).collect()
+    }
+
+    #[test]
+    fn fft_matches_dft_definition() {
+        let n = 16;
+        let x = randv(n, 1);
+        let mut re: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let mut im = vec![0.0; n];
+        fft_inplace(&mut re, &mut im);
+        for k in 0..n {
+            let (mut sr, mut si) = (0.0f64, 0.0f64);
+            for (i, &v) in x.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * i) as f64 / n as f64;
+                sr += v as f64 * ang.cos();
+                si += v as f64 * ang.sin();
+            }
+            assert!((re[k] - sr).abs() < 1e-8, "k={k}");
+            assert!((im[k] - si).abs() < 1e-8, "k={k}");
+        }
+    }
+
+    #[test]
+    fn real_dft_matches_matrix() {
+        for n in [4usize, 8, 32] {
+            let x = randv(n, 2);
+            let fast = real_dft_ortho(&x);
+            for k in 0..n {
+                let slow: f32 = (0..n).map(|i| dft_entry(k, i, n) * x[i]).sum();
+                assert!((fast[k] - slow).abs() < 1e-4, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn dct_matches_matrix() {
+        for n in [4usize, 8, 64] {
+            let x = randv(n, 3);
+            let fast = dct2_ortho(&x);
+            for k in 0..n {
+                let slow: f32 = (0..n).map(|i| dct_entry(k, i, n) * x[i]).sum();
+                assert!((fast[k] - slow).abs() < 1e-4, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_sors_matches_dense_sketch() {
+        let mut s = PhiloxStream::new(9, 3);
+        let x = Tensor::from_fn(32, 5, |_, _| s.next_normal());
+        for (kind, use_dct) in [(SketchKind::Dct, true), (SketchKind::Dft, false)] {
+            let dense = matmul_at(&sketch(kind, 32, 12, (5, 6)), &x);
+            let fast = sors_project_fast(use_dct, &x, 12, (5, 6));
+            assert!(dense.max_abs_diff(&fast) < 1e-4, "{kind:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn fft_rejects_non_power_of_two() {
+        let mut re = vec![0.0; 6];
+        let mut im = vec![0.0; 6];
+        fft_inplace(&mut re, &mut im);
+    }
+}

@@ -1,0 +1,96 @@
+//! Pure-Rust RMM reference: sketches, randomized matmul, variance theory,
+//! fast transforms.  This is the *CPU-side* mirror of the Pallas/JAX stack —
+//! used for property tests, cross-language golden checks, host baselines in
+//! the benches, and the Adelman-style comparison.
+
+pub mod fft;
+pub mod sketch;
+pub mod variance;
+
+pub use sketch::SketchKind;
+
+use crate::tensor::{matmul_at, Tensor};
+
+/// Exact ∂W = Yᵀ X (paper eq. 3; baseline path).
+pub fn exact_grad_w(y: &Tensor, x: &Tensor) -> Tensor {
+    matmul_at(y, x)
+}
+
+/// Algorithm 1 forward side: X_proj = Sᵀ X.
+pub fn project(kind: SketchKind, x: &Tensor, b_proj: usize, seed: (u32, u32)) -> Tensor {
+    sketch::project_streamed(kind, x, b_proj, seed)
+}
+
+/// Algorithm 1 backward side: ∂W ≈ (Sᵀ Y)ᵀ X_proj (paper eq. 4).
+pub fn rmm_grad_w(
+    kind: SketchKind,
+    y: &Tensor,
+    x_proj: &Tensor,
+    seed: (u32, u32),
+) -> Tensor {
+    let y_proj = sketch::project_streamed(kind, y, x_proj.rows, seed);
+    matmul_at(&y_proj, x_proj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::philox::PhiloxStream;
+
+    fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut s = PhiloxStream::new(seed, 3);
+        Tensor::from_fn(rows, cols, |_, _| s.next_normal())
+    }
+
+    #[test]
+    fn rmm_grad_is_unbiased() {
+        let x = randt(16, 4, 1);
+        let y = randt(16, 6, 2);
+        let exact = exact_grad_w(&y, &x);
+        for kind in SketchKind::ALL {
+            let trials = 800;
+            let mut acc = Tensor::zeros(6, 4);
+            for t in 0..trials {
+                let seed = (t as u32 * 31 + 1, 9);
+                let xp = project(kind, &x, 8, seed);
+                let g = rmm_grad_w(kind, &y, &xp, seed);
+                acc.add_assign(&g);
+            }
+            acc.scale(1.0 / trials as f32);
+            let scale = exact.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            assert!(
+                acc.max_abs_diff(&exact) < 0.25 * scale.max(1.0),
+                "{kind:?}: {}",
+                acc.max_abs_diff(&exact)
+            );
+        }
+    }
+
+    #[test]
+    fn rmm_grad_matches_explicit_sketch_algebra() {
+        let x = randt(12, 3, 3);
+        let y = randt(12, 5, 4);
+        let seed = (21, 22);
+        for kind in SketchKind::ALL {
+            let s = sketch::sketch(kind, 12, 6, seed);
+            let want = matmul_at(
+                &crate::tensor::matmul_at(&s, &y),
+                &crate::tensor::matmul_at(&s, &x),
+            ); // (Sᵀy)ᵀ(Sᵀx)
+            let got = rmm_grad_w(kind, &y, &project(kind, &x, 6, seed), seed);
+            assert!(got.max_abs_diff(&want) < 1e-3, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn full_width_gauss_sketch_approximates_exact() {
+        // With b_proj = many ≫ B the estimate concentrates near exact.
+        let x = randt(8, 3, 5);
+        let y = randt(8, 4, 6);
+        let exact = exact_grad_w(&y, &x);
+        let xp = project(SketchKind::Gauss, &x, 4096, (7, 8));
+        let g = rmm_grad_w(SketchKind::Gauss, &y, &xp, (7, 8));
+        let scale = exact.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(g.max_abs_diff(&exact) < 0.15 * scale, "{}", g.max_abs_diff(&exact));
+    }
+}

@@ -1,0 +1,258 @@
+//! Sketch matrices S ∈ R^{B×B_proj} with E[S Sᵀ] = I — the pure-Rust mirror
+//! of `python/compile/kernels/ref.py`.  Element values for gauss/rademacher
+//! and the SORS row-selection/signs are *bit-compatible* with the Python
+//! side (same Philox counters), so golden tests can pin the two stacks
+//! against each other.
+
+use crate::rng::philox::{
+    element_normal, element_rademacher, element_uniform_int, STREAM_ROWSEL,
+    STREAM_SIGNS, STREAM_SKETCH,
+};
+use crate::tensor::Tensor;
+
+/// Sketch families (paper §2.1, §3.5 + the Adelman-style row sampler).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchKind {
+    Gauss,
+    Rademacher,
+    Dct,
+    Dft,
+    RowSample,
+}
+
+impl SketchKind {
+    pub fn parse(s: &str) -> Option<SketchKind> {
+        Some(match s {
+            "gauss" => SketchKind::Gauss,
+            "rademacher" => SketchKind::Rademacher,
+            "dct" => SketchKind::Dct,
+            "dft" => SketchKind::Dft,
+            "rowsample" => SketchKind::RowSample,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SketchKind::Gauss => "gauss",
+            SketchKind::Rademacher => "rademacher",
+            SketchKind::Dct => "dct",
+            SketchKind::Dft => "dft",
+            SketchKind::RowSample => "rowsample",
+        }
+    }
+
+    pub const ALL: [SketchKind; 5] = [
+        SketchKind::Gauss,
+        SketchKind::Rademacher,
+        SketchKind::Dct,
+        SketchKind::Dft,
+        SketchKind::RowSample,
+    ];
+}
+
+/// Orthonormal DCT-II entry H[k, i] of order b (matches ref.dct_entry).
+pub fn dct_entry(k: usize, i: usize, b: usize) -> f32 {
+    let scale = if k == 0 { 1.0 / 2f32.sqrt() } else { 1.0 };
+    scale
+        * (2.0 / b as f32).sqrt()
+        * ((std::f32::consts::PI * (2.0 * i as f32 + 1.0) * k as f32)
+            / (2.0 * b as f32))
+            .cos()
+}
+
+/// Orthonormal real-DFT entry H[k, i] of order b (matches ref.dft_entry).
+pub fn dft_entry(k: usize, i: usize, b: usize) -> f32 {
+    if k == 0 {
+        return 1.0 / (b as f32).sqrt();
+    }
+    if b % 2 == 0 && k == b - 1 {
+        return if i % 2 == 0 { 1.0 } else { -1.0 } / (b as f32).sqrt();
+    }
+    let m = ((k + 1) / 2) as f32;
+    let ang = 2.0 * std::f32::consts::PI * m * i as f32 / b as f32;
+    let v = if k % 2 == 1 { ang.cos() } else { ang.sin() };
+    v * (2.0 / b as f32).sqrt()
+}
+
+/// SORS row selection: b_proj uniform indices in [0, b), with replacement.
+pub fn row_selection(b: usize, b_proj: usize, seed: (u32, u32)) -> Vec<usize> {
+    (0..b_proj)
+        .map(|j| element_uniform_int(0, j as u32, seed, b as u32, STREAM_ROWSEL) as usize)
+        .collect()
+}
+
+/// SORS sign flips: ±1 per input position.
+pub fn sign_flips(b: usize, seed: (u32, u32)) -> Vec<f32> {
+    (0..b)
+        .map(|i| element_rademacher(0, i as u32, seed, STREAM_SIGNS))
+        .collect()
+}
+
+/// Dense sketch matrix S (b × b_proj) — mirrors `ref.sketch`.
+pub fn sketch(kind: SketchKind, b: usize, b_proj: usize, seed: (u32, u32)) -> Tensor {
+    let inv = 1.0 / (b_proj as f32).sqrt();
+    match kind {
+        SketchKind::Gauss => Tensor::from_fn(b, b_proj, |i, j| {
+            element_normal(i as u32, j as u32, seed, STREAM_SKETCH) * inv
+        }),
+        SketchKind::Rademacher => Tensor::from_fn(b, b_proj, |i, j| {
+            element_rademacher(i as u32, j as u32, seed, STREAM_SKETCH) * inv
+        }),
+        SketchKind::Dct | SketchKind::Dft => {
+            let sel = row_selection(b, b_proj, seed);
+            let signs = sign_flips(b, seed);
+            let scale = (b as f32 / b_proj as f32).sqrt();
+            Tensor::from_fn(b, b_proj, |i, j| {
+                let h = match kind {
+                    SketchKind::Dct => dct_entry(sel[j], i, b),
+                    _ => dft_entry(sel[j], i, b),
+                };
+                scale * signs[i] * h
+            })
+        }
+        SketchKind::RowSample => {
+            let sel = row_selection(b, b_proj, seed);
+            let scale = (b as f32 / b_proj as f32).sqrt();
+            Tensor::from_fn(b, b_proj, |i, j| if sel[j] == i { scale } else { 0.0 })
+        }
+    }
+}
+
+/// X_proj = Sᵀ X without materializing S (streamed, row-generated) — the
+/// Rust analogue of the fused Pallas kernel's O(1)-memory-for-S property.
+pub fn project_streamed(
+    kind: SketchKind,
+    x: &Tensor,
+    b_proj: usize,
+    seed: (u32, u32),
+) -> Tensor {
+    let (b, n) = (x.rows, x.cols);
+    let mut out = Tensor::zeros(b_proj, n);
+    match kind {
+        SketchKind::Gauss => {
+            let inv = 1.0 / (b_proj as f32).sqrt();
+            for i in 0..b {
+                let xrow = x.row(i);
+                for j in 0..b_proj {
+                    let s = element_normal(i as u32, j as u32, seed, STREAM_SKETCH)
+                        * inv;
+                    let orow = &mut out.data[j * n..(j + 1) * n];
+                    for c in 0..n {
+                        orow[c] += s * xrow[c];
+                    }
+                }
+            }
+        }
+        SketchKind::Rademacher => {
+            let inv = 1.0 / (b_proj as f32).sqrt();
+            for i in 0..b {
+                let xrow = x.row(i);
+                for j in 0..b_proj {
+                    let s =
+                        element_rademacher(i as u32, j as u32, seed, STREAM_SKETCH) * inv;
+                    let orow = &mut out.data[j * n..(j + 1) * n];
+                    for c in 0..n {
+                        orow[c] += s * xrow[c];
+                    }
+                }
+            }
+        }
+        _ => {
+            // Structured kinds: row-generate S via entries.
+            let s = sketch(kind, b, b_proj, seed);
+            return crate::tensor::matmul_at(&s, x);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::philox::PhiloxStream;
+    use crate::tensor::{matmul, matmul_at, Tensor};
+
+    fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut s = PhiloxStream::new(seed, 3);
+        Tensor::from_fn(rows, cols, |_, _| s.next_normal())
+    }
+
+    #[test]
+    fn transform_orthonormal() {
+        for b in [4usize, 8, 16, 32] {
+            for entry in [dct_entry as fn(usize, usize, usize) -> f32, dft_entry] {
+                let h = Tensor::from_fn(b, b, |k, i| entry(k, i, b));
+                let hh = matmul_bt_local(&h);
+                for i in 0..b {
+                    for j in 0..b {
+                        let want = if i == j { 1.0 } else { 0.0 };
+                        assert!(
+                            (hh.at(i, j) - want).abs() < 2e-5,
+                            "b={b} ({i},{j}) = {}",
+                            hh.at(i, j)
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn matmul_bt_local(h: &Tensor) -> Tensor {
+        crate::tensor::matmul_bt(h, h)
+    }
+
+    #[test]
+    fn unbiased_identity_montecarlo() {
+        let (b, bp, trials) = (10, 5, 1500);
+        for kind in SketchKind::ALL {
+            let mut acc = Tensor::zeros(b, b);
+            for t in 0..trials {
+                let s = sketch(kind, b, bp, (t as u32 * 7919 + 3, 11));
+                let sst = matmul(&s, &s.transpose());
+                acc.add_assign(&sst);
+            }
+            acc.scale(1.0 / trials as f32);
+            for i in 0..b {
+                for j in 0..b {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (acc.at(i, j) - want).abs() < 0.2,
+                        "{kind:?} ({i},{j}) = {}",
+                        acc.at(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_matches_dense() {
+        let x = randt(24, 7, 5);
+        for kind in SketchKind::ALL {
+            let dense = matmul_at(&sketch(kind, 24, 9, (3, 4)), &x);
+            let streamed = project_streamed(kind, &x, 9, (3, 4));
+            assert!(dense.max_abs_diff(&streamed) < 1e-4, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in SketchKind::ALL {
+            assert_eq!(SketchKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(SketchKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn rowsample_structure() {
+        let s = sketch(SketchKind::RowSample, 16, 8, (1, 2));
+        let scale = (16.0f32 / 8.0).sqrt();
+        for j in 0..8 {
+            let nz: Vec<f32> =
+                (0..16).map(|i| s.at(i, j)).filter(|v| *v != 0.0).collect();
+            assert_eq!(nz.len(), 1);
+            assert!((nz[0] - scale).abs() < 1e-6);
+        }
+    }
+}

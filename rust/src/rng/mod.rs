@@ -1,0 +1,10 @@
+//! Deterministic randomness substrate (Philox4x32-10, counter-based).
+//!
+//! Everything random in the Rust layer — synthetic data generation, splits,
+//! host-side sketches, property-test case generation — flows through this
+//! module, so every run is exactly reproducible from (seed, stream) and
+//! bit-compatible with the Python/Pallas side where streams are shared.
+
+pub mod philox;
+
+pub use philox::{split_seed, PhiloxStream};

@@ -1,0 +1,265 @@
+//! Philox4x32-10 counter-based PRNG — bit-identical to the jnp version in
+//! `python/compile/kernels/prng.py` (both are pinned to the Random123
+//! reference vectors).  Counter-based means any element of any random
+//! stream is O(1) addressable, which is what lets the sketch matrix S be
+//! "stored" as a 64-bit seed.
+
+pub const PHILOX_M0: u32 = 0xD251_1F53;
+pub const PHILOX_M1: u32 = 0xCD9E_8D57;
+pub const PHILOX_W0: u32 = 0x9E37_79B9;
+pub const PHILOX_W1: u32 = 0xBB67_AE85;
+
+/// Stream tags, shared with the python side (prng.py).
+pub const STREAM_SKETCH: u32 = 0;
+pub const STREAM_ROWSEL: u32 = 1;
+pub const STREAM_SIGNS: u32 = 2;
+pub const STREAM_DATA: u32 = 3;
+
+#[inline]
+fn mulhilo(a: u32, b: u32) -> (u32, u32) {
+    let p = (a as u64) * (b as u64);
+    ((p >> 32) as u32, p as u32)
+}
+
+/// One Philox4x32 block: counter (c0..c3) + key (k0, k1) -> 4 u32 words.
+#[inline]
+pub fn philox4x32(mut c: [u32; 4], mut k: [u32; 2]) -> [u32; 4] {
+    for r in 0..10 {
+        let (hi0, lo0) = mulhilo(PHILOX_M0, c[0]);
+        let (hi1, lo1) = mulhilo(PHILOX_M1, c[2]);
+        c = [hi1 ^ c[1] ^ k[0], lo1, hi0 ^ c[3] ^ k[1], lo0];
+        if r != 9 {
+            k[0] = k[0].wrapping_add(PHILOX_W0);
+            k[1] = k[1].wrapping_add(PHILOX_W1);
+        }
+    }
+    c
+}
+
+/// The element-addressed form used for sketch matrices: counter encodes
+/// (i, j, stream, 0), key is the 64-bit seed.
+#[inline]
+pub fn element_words(i: u32, j: u32, seed: (u32, u32), stream: u32) -> [u32; 4] {
+    philox4x32([i, j, stream, 0], [seed.0, seed.1])
+}
+
+/// A convenient sequential stream over Philox blocks (for host-side data
+/// generation where element addressing is unnecessary).
+pub struct PhiloxStream {
+    key: [u32; 2],
+    counter: u64,
+    buf: [u32; 4],
+    pos: usize,
+    stream: u32,
+}
+
+impl PhiloxStream {
+    pub fn new(seed: u64, stream: u32) -> Self {
+        Self {
+            key: [seed as u32, (seed >> 32) as u32],
+            counter: 0,
+            buf: [0; 4],
+            pos: 4,
+            stream,
+        }
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.pos == 4 {
+            self.buf = philox4x32(
+                [
+                    self.counter as u32,
+                    (self.counter >> 32) as u32,
+                    self.stream,
+                    1, // sequential-mode marker: disjoint from element mode (c3 = 0)
+                ],
+                self.key,
+            );
+            self.counter += 1;
+            self.pos = 0;
+        }
+        let v = self.buf[self.pos];
+        self.pos += 1;
+        v
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        (self.next_u32() as u64) << 32 | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, bound) via the multiply-shift trick (negligible bias).
+    #[inline]
+    pub fn next_below(&mut self, bound: u32) -> u32 {
+        (((self.next_u32() as u64) * (bound as u64)) >> 32) as u32
+    }
+
+    /// Uniform in the open interval (0, 1), top-24-bit construction —
+    /// matches prng.uniform01 on the python side.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        uniform01(self.next_u32())
+    }
+
+    /// Standard normal via Box-Muller.
+    #[inline]
+    pub fn next_normal(&mut self) -> f32 {
+        let a = self.next_u32();
+        let b = self.next_u32();
+        normal_pair(a, b).0
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// u32 -> f32 uniform in (0, 1); identical construction to the jnp side.
+#[inline]
+pub fn uniform01(bits: u32) -> f32 {
+    ((bits >> 8) as f32 + 0.5) * (1.0 / (1 << 24) as f32)
+}
+
+/// Box-Muller: two u32 words -> two standard normals.
+#[inline]
+pub fn normal_pair(a: u32, b: u32) -> (f32, f32) {
+    let u1 = uniform01(a);
+    let u2 = uniform01(b);
+    let r = (-2.0 * u1.ln()).sqrt();
+    let theta = 2.0 * std::f32::consts::PI * u2;
+    (r * theta.cos(), r * theta.sin())
+}
+
+/// Sketch-element draws, bit-compatible with prng.element_normal /
+/// element_rademacher / element_uniform_int on the python side.
+/// (A pair-mapped variant was tried and reverted — see EXPERIMENTS.md
+/// §Perf iteration 1 — to keep the mapping identical to the lowered HLO.)
+#[inline]
+pub fn element_normal(i: u32, j: u32, seed: (u32, u32), stream: u32) -> f32 {
+    let w = element_words(i, j, seed, stream);
+    normal_pair(w[0], w[1]).0
+}
+
+#[inline]
+pub fn element_rademacher(i: u32, j: u32, seed: (u32, u32), stream: u32) -> f32 {
+    let w = element_words(i, j, seed, stream);
+    if w[0] & 1 == 1 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+#[inline]
+pub fn element_uniform_int(
+    i: u32,
+    j: u32,
+    seed: (u32, u32),
+    bound: u32,
+    stream: u32,
+) -> u32 {
+    let w = element_words(i, j, seed, stream);
+    (((w[0] as u64) * (bound as u64)) >> 32) as u32
+}
+
+/// Split a 64-bit seed into the (lo, hi) pair used as the Philox key.
+#[inline]
+pub fn split_seed(seed: u64) -> (u32, u32) {
+    (seed as u32, (seed >> 32) as u32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Random123 reference vectors (Salmon et al., SC'11) — the same three
+    /// pinned on the python side in test_prng.py.
+    #[test]
+    fn reference_vectors() {
+        assert_eq!(
+            philox4x32([0; 4], [0; 2]),
+            [0x6627_e8d5, 0xe169_c58d, 0xbc57_ac4c, 0x9b00_dbd8]
+        );
+        assert_eq!(
+            philox4x32([u32::MAX; 4], [u32::MAX; 2]),
+            [0x408f_276d, 0x41c8_3b0e, 0xa20b_c7c6, 0x6d54_51fd]
+        );
+        assert_eq!(
+            philox4x32(
+                [0x243f_6a88, 0x85a3_08d3, 0x1319_8a2e, 0x0370_7344],
+                [0xa409_3822, 0x299f_31d0]
+            ),
+            [0xd16c_fe09, 0x94fd_cceb, 0x5001_e420, 0x2412_6ea1]
+        );
+    }
+
+    #[test]
+    fn stream_determinism() {
+        let mut a = PhiloxStream::new(42, STREAM_DATA);
+        let mut b = PhiloxStream::new(42, STREAM_DATA);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn stream_seed_sensitivity() {
+        let mut a = PhiloxStream::new(1, STREAM_DATA);
+        let mut b = PhiloxStream::new(2, STREAM_DATA);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 3);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut s = PhiloxStream::new(7, STREAM_DATA);
+        let n = 40_000;
+        let xs: Vec<f32> = (0..n).map(|_| s.next_normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn next_below_is_in_range_and_uniformish() {
+        let mut s = PhiloxStream::new(9, STREAM_DATA);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[s.next_below(7) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut s = PhiloxStream::new(3, STREAM_DATA);
+        let mut v: Vec<u32> = (0..100).collect();
+        s.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn element_mode_disjoint_from_sequential() {
+        // same seed: element draws and stream draws must not collide
+        let w1 = element_words(0, 0, (5, 0), STREAM_SKETCH);
+        let mut s = PhiloxStream::new(5, STREAM_SKETCH);
+        let w2 = [s.next_u32(), s.next_u32(), s.next_u32(), s.next_u32()];
+        assert_ne!(w1, w2);
+    }
+
+    #[test]
+    fn split_seed_roundtrip() {
+        assert_eq!(split_seed(0x1234_5678_90AB_CDEF), (0x90AB_CDEF, 0x1234_5678));
+    }
+}

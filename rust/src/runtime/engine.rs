@@ -1,0 +1,259 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them once,
+//! and executes them with host values.  This is the only module that talks
+//! to the `xla` crate; everything above works with `HostValue`s and specs.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::manifest::{ArgSpec, Dtype, Entry, Manifest};
+
+/// A host-side tensor value (flattened, row-major) ready for upload.
+#[derive(Debug, Clone)]
+pub enum HostValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl HostValue {
+    pub fn len(&self) -> usize {
+        match self {
+            HostValue::F32(v) => v.len(),
+            HostValue::I32(v) => v.len(),
+            HostValue::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostValue::F32(_) => Dtype::F32,
+            HostValue::I32(_) => Dtype::I32,
+            HostValue::U32(_) => Dtype::U32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostValue::F32(v) => Ok(v),
+            _ => bail!("expected f32 host value"),
+        }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            HostValue::F32(v) => bytemuck_f32(v),
+            HostValue::I32(v) => bytemuck_i32(v),
+            HostValue::U32(v) => bytemuck_u32(v),
+        }
+    }
+
+    /// Upload to a literal with the spec's shape.
+    pub fn to_literal(&self, spec: &ArgSpec) -> Result<xla::Literal> {
+        if self.len() != spec.elements() {
+            bail!(
+                "'{}': value has {} elements, spec {:?} wants {}",
+                spec.name,
+                self.len(),
+                spec.shape,
+                spec.elements()
+            );
+        }
+        if self.dtype() != spec.dtype {
+            bail!("'{}': dtype mismatch", spec.name);
+        }
+        xla::Literal::create_from_shape_and_untyped_data(
+            spec.dtype.element_type(),
+            &spec.shape,
+            self.bytes(),
+        )
+        .map_err(|e| anyhow::anyhow!("literal upload '{}': {e:?}", spec.name))
+    }
+
+    /// Download from a literal according to its dtype.
+    pub fn from_literal(lit: &xla::Literal, dtype: Dtype) -> Result<HostValue> {
+        Ok(match dtype {
+            Dtype::F32 => HostValue::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            ),
+            Dtype::I32 => HostValue::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            ),
+            Dtype::U32 => HostValue::U32(
+                lit.to_vec::<u32>().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+            ),
+        })
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+fn bytemuck_u32(v: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Timing counters for the perf pass (EXPERIMENTS.md §Perf).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub compile_s: f64,
+    pub executions: usize,
+    pub execute_s: f64,
+    pub upload_s: f64,
+    pub download_s: f64,
+}
+
+/// PJRT CPU engine with a compile cache keyed by artifact path.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: EngineStats,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Engine { client, cache: HashMap::new(), stats: EngineStats::default() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for an entry.
+    pub fn load(&mut self, manifest: &Manifest, entry: &Entry) -> Result<()> {
+        let path = manifest.hlo_path(entry);
+        let key = path.to_string_lossy().to_string();
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let exe = self.compile_file(&path)?;
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    fn compile_file(&mut self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow::anyhow!("parsing HLO {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))?;
+        self.stats.compiles += 1;
+        self.stats.compile_s += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    /// Execute an entry with host values matched 1:1 to `entry.args`.
+    /// Returns outputs matched 1:1 to `entry.outputs`.
+    pub fn execute(
+        &mut self,
+        manifest: &Manifest,
+        entry: &Entry,
+        args: &[HostValue],
+    ) -> Result<Vec<HostValue>> {
+        if args.len() != entry.args.len() {
+            bail!("expected {} args, got {}", entry.args.len(), args.len());
+        }
+        let path = manifest.hlo_path(entry);
+        let key = path.to_string_lossy().to_string();
+        if !self.cache.contains_key(&key) {
+            let exe = self.compile_file(&path)?;
+            self.cache.insert(key.clone(), exe);
+        }
+
+        let t_up = Instant::now();
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .zip(&entry.args)
+            .map(|(v, spec)| v.to_literal(spec))
+            .collect::<Result<_>>()?;
+        self.stats.upload_s += t_up.elapsed().as_secs_f64();
+
+        let exe = self.cache.get(&key).unwrap();
+        let t_ex = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {key}: {e:?}"))?;
+        self.stats.executions += 1;
+        self.stats.execute_s += t_ex.elapsed().as_secs_f64();
+
+        let t_dn = Instant::now();
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → always a tuple literal.
+        let parts = tuple.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        if parts.len() != entry.outputs.len() {
+            bail!("expected {} outputs, got {}", entry.outputs.len(), parts.len());
+        }
+        let out = parts
+            .iter()
+            .zip(&entry.outputs)
+            .map(|(lit, spec)| HostValue::from_literal(lit, spec.dtype))
+            .collect::<Result<Vec<_>>>()?;
+        self.stats.download_s += t_dn.elapsed().as_secs_f64();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Role;
+
+    fn spec(shape: &[usize], dtype: Dtype) -> ArgSpec {
+        ArgSpec {
+            name: "t".into(),
+            shape: shape.to_vec(),
+            dtype,
+            role: Role::Residual,
+        }
+    }
+
+    #[test]
+    fn hostvalue_shape_checks() {
+        let v = HostValue::F32(vec![1.0; 6]);
+        assert!(v.to_literal(&spec(&[2, 3], Dtype::F32)).is_ok());
+        assert!(v.to_literal(&spec(&[2, 4], Dtype::F32)).is_err());
+        assert!(v.to_literal(&spec(&[6], Dtype::I32)).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let v = HostValue::I32(vec![1, -2, 3, 4]);
+        let lit = v.to_literal(&spec(&[2, 2], Dtype::I32)).unwrap();
+        let back = HostValue::from_literal(&lit, Dtype::I32).unwrap();
+        match back {
+            HostValue::I32(xs) => assert_eq!(xs, vec![1, -2, 3, 4]),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn u32_roundtrip() {
+        let v = HostValue::U32(vec![7, u32::MAX]);
+        let lit = v.to_literal(&spec(&[2], Dtype::U32)).unwrap();
+        match HostValue::from_literal(&lit, Dtype::U32).unwrap() {
+            HostValue::U32(xs) => assert_eq!(xs, vec![7, u32::MAX]),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,355 @@
+//! Artifact manifest: the typed contract between the AOT compile path
+//! (python/compile/aot.py) and the Rust runtime.  Parses
+//! `artifacts/manifest.json` into variant/entry/arg-spec types so the
+//! coordinator stays generic over model geometry, ρ, sketch kind and the
+//! residual interface.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub const MANIFEST_VERSION: i64 = 2;
+
+/// Value dtype of one argument/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    U32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "float32" => Dtype::F32,
+            "int32" => Dtype::I32,
+            "uint32" => Dtype::U32,
+            other => bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I32 => xla::ElementType::S32,
+            Dtype::U32 => xla::ElementType::U32,
+        }
+    }
+}
+
+/// Semantic role of an argument/output (drives the trainer's plumbing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Param,
+    Tokens,
+    Mask,
+    Labels,
+    Seed,
+    Residual,
+    Grad,
+    Metric,
+    Logits,
+    Probe,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "param" => Role::Param,
+            "tokens" => Role::Tokens,
+            "mask" => Role::Mask,
+            "labels" => Role::Labels,
+            "seed" => Role::Seed,
+            "residual" => Role::Residual,
+            "grad" => Role::Grad,
+            "metric" => Role::Metric,
+            "logits" => Role::Logits,
+            "probe" => Role::Probe,
+            other => bail!("unknown role '{other}'"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub role: Role,
+}
+
+impl ArgSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * self.dtype.size()
+    }
+
+    fn from_json(j: &Json) -> Result<ArgSpec> {
+        let name = j.get("name").as_str().context("spec.name")?.to_string();
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .context("spec.shape")?
+            .iter()
+            .map(|d| d.as_usize().context("shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArgSpec {
+            name,
+            shape,
+            dtype: Dtype::parse(j.get("dtype").as_str().context("spec.dtype")?)?,
+            role: Role::parse(j.get("role").as_str().context("spec.role")?)?,
+        })
+    }
+}
+
+/// One lowered entry point (fwd / bwd / eval).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub file: String,
+    pub args: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+impl Entry {
+    fn from_json(j: &Json) -> Result<Entry> {
+        let specs = |key: &str| -> Result<Vec<ArgSpec>> {
+            j.get(key)
+                .as_arr()
+                .with_context(|| format!("entry.{key}"))?
+                .iter()
+                .map(ArgSpec::from_json)
+                .collect()
+        };
+        Ok(Entry {
+            file: j.get("file").as_str().context("entry.file")?.to_string(),
+            args: specs("args")?,
+            outputs: specs("outputs")?,
+        })
+    }
+
+    pub fn residual_args(&self) -> impl Iterator<Item = &ArgSpec> {
+        self.args.iter().filter(|a| a.role == Role::Residual)
+    }
+
+    pub fn residual_outputs(&self) -> impl Iterator<Item = &ArgSpec> {
+        self.outputs.iter().filter(|a| a.role == Role::Residual)
+    }
+}
+
+/// The static model geometry the variant was lowered with.
+#[derive(Debug, Clone)]
+pub struct VariantConfig {
+    pub vocab_size: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+    pub regression: bool,
+    pub rho: f64,
+    pub sketch: String,
+    pub use_kernels: bool,
+    pub probe_layer: i64,
+}
+
+impl VariantConfig {
+    fn from_json(j: &Json) -> Result<VariantConfig> {
+        let u = |k: &str| j.get(k).as_usize().with_context(|| format!("config.{k}"));
+        Ok(VariantConfig {
+            vocab_size: u("vocab_size")?,
+            seq_len: u("seq_len")?,
+            batch_size: u("batch_size")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            n_layers: u("n_layers")?,
+            d_ff: u("d_ff")?,
+            n_classes: u("n_classes")?,
+            regression: j.get("regression").as_bool().context("config.regression")?,
+            rho: j.get("rho").as_f64().context("config.rho")?,
+            sketch: j.get("sketch").as_str().context("config.sketch")?.to_string(),
+            use_kernels: j.get("use_kernels").as_bool().unwrap_or(false),
+            probe_layer: j.get("probe_layer").as_i64().unwrap_or(-1),
+        })
+    }
+
+    pub fn geometry(&self) -> crate::memory::ModelGeometry {
+        crate::memory::ModelGeometry {
+            vocab_size: self.vocab_size,
+            seq_len: self.seq_len,
+            batch_size: self.batch_size,
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            n_layers: self.n_layers,
+            d_ff: self.d_ff,
+            n_classes: self.n_classes,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub config: VariantConfig,
+    pub rows: usize,
+    pub b_proj: usize,
+    pub init_params: String,
+    pub param_count: usize,
+    pub entries: BTreeMap<String, Entry>,
+}
+
+impl Variant {
+    pub fn entry(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .get(name)
+            .with_context(|| format!("variant '{}' has no '{name}' entry", self.name))
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let version = j.get("version").as_i64().context("manifest.version")?;
+        if version != MANIFEST_VERSION {
+            bail!("manifest version {version} != expected {MANIFEST_VERSION}");
+        }
+        let mut variants = BTreeMap::new();
+        for (name, vj) in j.get("variants").as_obj().context("manifest.variants")? {
+            let mut entries = BTreeMap::new();
+            for (ename, ej) in vj.get("entries").as_obj().context("entries")? {
+                entries.insert(ename.clone(), Entry::from_json(ej)?);
+            }
+            variants.insert(
+                name.clone(),
+                Variant {
+                    name: name.clone(),
+                    config: VariantConfig::from_json(vj.get("config"))?,
+                    rows: vj.get("rows").as_usize().context("rows")?,
+                    b_proj: vj.get("b_proj").as_usize().context("b_proj")?,
+                    init_params: vj
+                        .get("init_params")
+                        .as_str()
+                        .context("init_params")?
+                        .to_string(),
+                    param_count: vj.get("param_count").as_usize().context("param_count")?,
+                    entries,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant> {
+        self.variants.get(name).with_context(|| {
+            format!(
+                "no variant '{name}' in manifest (have: {})",
+                self.variants.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, entry: &Entry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    pub fn init_params_path(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.init_params)
+    }
+
+    /// Load the raw-f32 initial parameter blob for a variant, split into
+    /// per-parameter vectors following the entry's param arg specs.
+    pub fn load_init_params(&self, v: &Variant) -> Result<Vec<Vec<f32>>> {
+        let entry = v
+            .entries
+            .values()
+            .next()
+            .with_context(|| format!("variant '{}' has no entries", v.name))?;
+        let path = self.init_params_path(v);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        for spec in entry.args.iter().filter(|a| a.role == Role::Param) {
+            let n = spec.elements();
+            let end = off + n * 4;
+            if end > bytes.len() {
+                bail!("init params {path:?} too short at '{}'", spec.name);
+            }
+            let vals: Vec<f32> = bytes[off..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            out.push(vals);
+            off = end;
+        }
+        if off != bytes.len() {
+            bail!(
+                "init params {path:?}: {} trailing bytes (spec mismatch)",
+                bytes.len() - off
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_and_role_parse() {
+        assert_eq!(Dtype::parse("float32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("int32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("float64").is_err());
+        assert_eq!(Role::parse("residual").unwrap(), Role::Residual);
+        assert!(Role::parse("whatever").is_err());
+    }
+
+    #[test]
+    fn argspec_bytes() {
+        let j = Json::parse(
+            r#"{"name":"x","shape":[4,8],"dtype":"float32","role":"residual"}"#,
+        )
+        .unwrap();
+        let s = ArgSpec::from_json(&j).unwrap();
+        assert_eq!(s.elements(), 32);
+        assert_eq!(s.bytes(), 128);
+    }
+
+    #[test]
+    fn scalar_spec_has_one_element() {
+        let j = Json::parse(r#"{"name":"loss","shape":[],"dtype":"float32","role":"metric"}"#)
+            .unwrap();
+        assert_eq!(ArgSpec::from_json(&j).unwrap().elements(), 1);
+    }
+
+    #[test]
+    fn manifest_version_checked() {
+        let dir = std::env::temp_dir().join(format!("mani_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"version": 999, "variants": {}}"#)
+            .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

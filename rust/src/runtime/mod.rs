@@ -1,0 +1,11 @@
+//! Runtime: PJRT engine + artifact manifest (the AOT boundary).
+//!
+//! Python appears only at build time (`make artifacts`); this module loads
+//! the resulting HLO-text artifacts and executes them on the PJRT CPU
+//! client from the training hot path.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineStats, HostValue};
+pub use manifest::{ArgSpec, Dtype, Entry, Manifest, Role, Variant};

@@ -1,0 +1,141 @@
+//! Blocked matmul kernels for the host tensor type.
+//!
+//! Used by the pure-Rust RMM reference and the criterion-style micro
+//! benches (Table 4's cost model, the FFT crossover study).  Single-core
+//! cache-blocked f32 with a k-innermost microkernel; fast enough that the
+//! Rust-side baseline is a fair comparator for the sketch algebra.
+
+use super::Tensor;
+
+const BLOCK: usize = 64;
+
+/// C = A · B.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Tensor::zeros(m, n);
+    // i-k-j loop order with blocking: B rows stream through cache, C rows
+    // accumulate in registers/L1.
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ · B  (A: (k, m), B: (k, n) -> C: (m, n)) without materializing Aᵀ.
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.rows, b.rows, "matmul_at row mismatch");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Tensor::zeros(m, n);
+    for kk in 0..k {
+        let arow = &a.data[kk * m..(kk + 1) * m];
+        let brow = &b.data[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aik = arow[i];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A · Bᵀ  (A: (m, k), B: (n, k) -> C: (m, n)) without materializing Bᵀ.
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.cols, b.cols, "matmul_bt col mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Tensor::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            crow[j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::philox::PhiloxStream;
+
+    fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut s = PhiloxStream::new(seed, 3);
+        Tensor::from_fn(rows, cols, |_, _| s.next_normal())
+    }
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let mut c = Tensor::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (70, 65, 130), (128, 64, 64)] {
+            let a = randt(m, k, 1);
+            let b = randt(k, n, 2);
+            let c = matmul(&a, &b);
+            assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-3, "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn at_variant_matches_transpose() {
+        let a = randt(40, 17, 3);
+        let b = randt(40, 23, 4);
+        let c1 = matmul_at(&a, &b);
+        let c2 = matmul(&a.transpose(), &b);
+        assert!(c1.max_abs_diff(&c2) < 1e-4);
+    }
+
+    #[test]
+    fn bt_variant_matches_transpose() {
+        let a = randt(19, 31, 5);
+        let b = randt(27, 31, 6);
+        let c1 = matmul_bt(&a, &b);
+        let c2 = matmul(&a, &b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatch_panics() {
+        matmul(&Tensor::zeros(2, 3), &Tensor::zeros(4, 2));
+    }
+}

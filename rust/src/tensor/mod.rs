@@ -1,0 +1,158 @@
+//! Host tensor substrate: row-major f32 matrices/vectors for everything the
+//! coordinator does outside XLA — optimizer math, the pure-Rust RMM
+//! reference, metric computation, and literal staging.
+//!
+//! Deliberately minimal: the heavy lifting runs inside compiled HLO; this
+//! exists so the hot host paths (optimizer update, variance estimators,
+//! bench baselines) are allocation-disciplined and dependency-free.
+
+mod matmul;
+pub mod ops;
+
+pub use matmul::{matmul, matmul_at, matmul_bt};
+pub use ops::{axpy, dot, global_norm};
+
+use std::fmt;
+
+/// Dense row-major f32 matrix (rows × cols).  A vector is `rows == 1`.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor[{}x{}]", self.rows, self.cols)
+    }
+}
+
+impl Tensor {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Squared Frobenius norm ‖A‖²_F.
+    pub fn fro2(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Squared L2 norm of row i.
+    pub fn row_norm2(&self, i: usize) -> f64 {
+        self.row(i).iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Tensor::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    /// Max |a - b| over elements — for test assertions.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_accessors() {
+        let t = Tensor::from_fn(2, 3, |i, j| (i * 10 + j) as f32);
+        assert_eq!(t.at(1, 2), 12.0);
+        assert_eq!(t.row(1), &[10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let t = Tensor::from_fn(3, 5, |i, j| (i * 7 + j * 3) as f32);
+        assert_eq!(t.transpose().transpose(), t);
+    }
+
+    #[test]
+    fn fro2_matches_manual() {
+        let t = Tensor::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((t.fro2() - 30.0).abs() < 1e-9);
+        assert!((t.row_norm2(1) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(2, 2, vec![1.0; 3]);
+    }
+}

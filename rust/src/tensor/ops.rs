@@ -1,0 +1,47 @@
+//! Elementwise / reduction helpers used by optimizers and metrics.
+
+use super::Tensor;
+
+/// Frobenius inner product ⟨A, B⟩_F.
+pub fn dot(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| x as f64 * y as f64)
+        .sum()
+}
+
+/// Global L2 norm over a list of tensors (for gradient clipping).
+pub fn global_norm(ts: &[&Tensor]) -> f64 {
+    ts.iter().map(|t| t.fro2()).sum::<f64>().sqrt()
+}
+
+/// In-place a += s * b (axpy).
+pub fn axpy(a: &mut Tensor, s: f32, b: &Tensor) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += s * y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_norms() {
+        let a = Tensor::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(1, 3, vec![4.0, 5.0, 6.0]);
+        assert!((dot(&a, &b) - 32.0).abs() < 1e-9);
+        assert!((global_norm(&[&a, &b]) - (14.0f64 + 77.0).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut a = Tensor::from_vec(1, 2, vec![1.0, 1.0]);
+        let b = Tensor::from_vec(1, 2, vec![2.0, 4.0]);
+        axpy(&mut a, 0.5, &b);
+        assert_eq!(a.data, vec![2.0, 3.0]);
+    }
+}

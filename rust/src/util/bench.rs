@@ -1,0 +1,136 @@
+//! Bench runner (criterion is unavailable offline): warmup + timed
+//! iterations with mean/std/percentiles, criterion-like console output and
+//! a JSON report for EXPERIMENTS.md regeneration.
+
+use std::time::Instant;
+
+use super::json::Json;
+use super::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("std_ns", Json::num(self.std_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+        ])
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    pub results: Vec<BenchResult>,
+    /// Target wall-time per benchmark (seconds).
+    pub budget_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let budget_s = std::env::var("BENCH_BUDGET_S")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1.0);
+        Self { results: Vec::new(), budget_s }
+    }
+
+    /// Time `f`, auto-calibrating the iteration count to the budget.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        // calibration: run once to estimate cost
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().as_secs_f64().max(1e-9);
+        let target_iters = ((self.budget_s / once) as usize).clamp(5, 10_000);
+        // warmup ~10%
+        for _ in 0..(target_iters / 10).max(1) {
+            f();
+        }
+        let mut samples = Vec::with_capacity(target_iters);
+        for _ in 0..target_iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: target_iters,
+            mean_ns: stats::mean(&samples),
+            std_ns: stats::stddev(&samples),
+            p50_ns: stats::percentile(&samples, 50.0),
+            p95_ns: stats::percentile(&samples, 95.0),
+        };
+        println!(
+            "{:<52} time: [{} ± {}]  p95: {}  ({} iters)",
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.std_ns),
+            fmt_ns(res.p95_ns),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Write accumulated results as JSON (one file per bench binary).
+    pub fn write_report(&self, path: &str) {
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Err(e) = std::fs::write(path, arr.to_string_pretty()) {
+            eprintln!("warn: could not write bench report {path}: {e}");
+        } else {
+            println!("report -> {path}");
+        }
+    }
+}
+
+/// Opaque value sink preventing the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("BENCH_BUDGET_S", "0.05");
+        let mut b = Bencher::new();
+        let r = b.bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 5);
+    }
+}

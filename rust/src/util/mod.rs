@@ -1,0 +1,9 @@
+//! First-party utility substrates (the offline build has no serde/clap/
+//! criterion/proptest): JSON codec, CLI argument parsing, timing/statistics
+//! for the bench harness, and a seeded property-test runner.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod stats;

@@ -1,0 +1,163 @@
+//! Small statistics helpers shared by metrics and the bench harness.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Unbiased sample standard deviation (0.0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on a sorted copy. `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if x.len() < 2 {
+        return 0.0;
+    }
+    let (mx, my) = (mean(x), mean(y));
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..x.len() {
+        num += (x[i] - mx) * (y[i] - my);
+        dx += (x[i] - mx).powi(2);
+        dy += (y[i] - my).powi(2);
+    }
+    let den = (dx * dy).sqrt();
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+    .clamp(-1.0, 1.0 + f64::EPSILON * n)
+}
+
+/// Spearman rank correlation (average ranks for ties).
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut r = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            r[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    r
+}
+
+/// Matthews correlation coefficient for binary predictions (CoLA's metric).
+pub fn matthews(tp: usize, tn: usize, fp: usize, fn_: usize) -> f64 {
+    let (tp, tn, fp, fn_) = (tp as f64, tn as f64, fp as f64, fn_ as f64);
+    let den = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+    if den == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fn_) / den
+    }
+}
+
+/// F1 score for the positive class (MRPC/QQP's metric).
+pub fn f1(tp: usize, fp: usize, fn_: usize) -> f64 {
+    let denom = 2 * tp + fp + fn_;
+    if denom == 0 {
+        0.0
+    } else {
+        2.0 * tp as f64 / denom as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935299395).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect() {
+        let x = [1.0, 2.0, 3.0];
+        let y = [2.0, 4.0, 6.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-9);
+        let yneg = [3.0, 2.0, 1.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_monotone_nonlinear() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [1.0, 8.0, 27.0, 64.0];
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_ties() {
+        let x = [1.0, 1.0, 2.0];
+        let r = ranks(&x);
+        assert_eq!(r, vec![1.5, 1.5, 3.0]);
+    }
+
+    #[test]
+    fn matthews_known_values() {
+        assert!((matthews(10, 10, 0, 0) - 1.0).abs() < 1e-12);
+        assert!((matthews(0, 0, 10, 10) + 1.0).abs() < 1e-12);
+        assert_eq!(matthews(0, 0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn f1_known_values() {
+        assert!((f1(5, 0, 0) - 1.0).abs() < 1e-12);
+        assert!((f1(5, 5, 5) - 0.5).abs() < 1e-12);
+        assert_eq!(f1(0, 0, 0), 0.0);
+    }
+}

@@ -1,0 +1,269 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they use the `tiny*` variants
+//! (seconds to compile).  If artifacts are missing the tests panic with a
+//! pointed message rather than silently passing.
+
+use std::path::Path;
+
+use rmmlinear::config::TrainConfig;
+use rmmlinear::coordinator::Trainer;
+use rmmlinear::data::{Batcher, Split, Task, TaskGen, Tokenizer};
+use rmmlinear::memory::MemoryModel;
+use rmmlinear::runtime::{Engine, Manifest, Role};
+
+fn manifest() -> Manifest {
+    Manifest::load(Path::new("artifacts"))
+        .expect("artifacts missing — run `make artifacts` before `cargo test`")
+}
+
+fn cfg(steps: usize) -> TrainConfig {
+    TrainConfig {
+        steps,
+        warmup_steps: (steps / 8).min(4),
+        lr: 2e-3,
+        log_every: usize::MAX,
+        eval_every: usize::MAX,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn manifest_loads_and_specs_are_consistent() {
+    let m = manifest();
+    assert!(m.variants.len() >= 3);
+    for v in m.variants.values() {
+        for (ename, e) in &v.entries {
+            assert!(!e.args.is_empty(), "{}.{ename}", v.name);
+            assert!(!e.outputs.is_empty());
+            // params lead the arg list, in param_spec order
+            let n_params = e.args.iter().filter(|a| a.role == Role::Param).count();
+            assert!(e.args[..n_params].iter().all(|a| a.role == Role::Param));
+            if ename == "bwd" {
+                // fwd residual outputs == bwd residual args (names + shapes)
+                let fwd = &v.entries["fwd"];
+                let f: Vec<_> = fwd.residual_outputs().collect();
+                let b: Vec<_> = e.residual_args().collect();
+                assert_eq!(f.len(), b.len(), "{}", v.name);
+                for (fo, ba) in f.iter().zip(&b) {
+                    assert_eq!(fo.name, ba.name);
+                    assert_eq!(fo.shape, ba.shape);
+                }
+                let n_grads =
+                    e.outputs.iter().filter(|o| o.role == Role::Grad).count();
+                assert_eq!(n_grads, n_params, "{}", v.name);
+            }
+        }
+        // init params blob splits exactly across the param specs
+        let params = m.load_init_params(v).expect("init params");
+        assert_eq!(params.len(), {
+            let e = v.entries.values().next().unwrap();
+            e.args.iter().filter(|a| a.role == Role::Param).count()
+        });
+    }
+}
+
+#[test]
+fn tiny_baseline_overfits_a_fixed_batch() {
+    // Strongest end-to-end correctness signal: repeated steps on one batch
+    // must drive its loss down (fwd, residual store, bwd and the optimizer
+    // all have to be right for this to happen).
+    let m = manifest();
+    let variant = m.variant("tiny_cls2_r100_gauss").unwrap();
+    let mut engine = Engine::cpu().unwrap();
+    let tok = Tokenizer::new(variant.config.vocab_size);
+    let c = cfg(40);
+    let mut trainer = Trainer::new(&m, variant, Task::Cola, c.clone()).unwrap();
+    let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, 1);
+    let batch = Batcher::new(&gen, Split::Train, variant.config.batch_size, 0)
+        .next()
+        .unwrap();
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..c.steps {
+        let s = trainer.train_step(&mut engine, &batch).unwrap();
+        assert!(s.loss.is_finite());
+        first.get_or_insert(s.loss);
+        last = s.loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first - 0.08,
+        "loss did not overfit the fixed batch: {first} -> {last}"
+    );
+    // store must be empty between steps
+    assert!(trainer.store.is_empty());
+}
+
+#[test]
+fn tiny_rmm_trains_and_saves_memory() {
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    let tok = Tokenizer::new(64);
+    let mut peaks = Vec::new();
+    for vname in ["tiny_cls2_r100_gauss", "tiny_cls2_r50_gauss"] {
+        let variant = m.variant(vname).unwrap();
+        let c = cfg(10);
+        let mut trainer = Trainer::new(&m, variant, Task::Cola, c.clone()).unwrap();
+        let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, 1);
+        let mut batches =
+            Batcher::new(&gen, Split::Train, variant.config.batch_size, 0);
+        for _ in 0..c.steps {
+            let batch = batches.next().unwrap();
+            let s = trainer.train_step(&mut engine, &batch).unwrap();
+            assert!(s.loss.is_finite(), "{vname}");
+        }
+        peaks.push(trainer.peak_residual_bytes);
+    }
+    assert!(
+        peaks[1] < peaks[0],
+        "rmm variant should stage fewer residual bytes: {peaks:?}"
+    );
+}
+
+#[test]
+fn measured_store_matches_memory_model() {
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    let tok = Tokenizer::new(64);
+    for vname in ["tiny_cls2_r100_gauss", "tiny_cls2_r50_gauss"] {
+        let variant = m.variant(vname).unwrap();
+        let mut trainer = Trainer::new(&m, variant, Task::Cola, cfg(1)).unwrap();
+        let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, 1);
+        let batch = Batcher::new(&gen, Split::Train, variant.config.batch_size, 0)
+            .next()
+            .unwrap();
+        trainer.train_step(&mut engine, &batch).unwrap();
+        let model = MemoryModel::new(variant.config.geometry(), variant.config.rho);
+        assert_eq!(
+            trainer.peak_residual_bytes,
+            model.residual_bytes(),
+            "{vname}: analytic model must mirror the tape exactly"
+        );
+    }
+}
+
+#[test]
+fn training_is_deterministic_given_seed() {
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    let tok = Tokenizer::new(64);
+    let variant = m.variant("tiny_cls2_r50_gauss").unwrap();
+    let run = |engine: &mut Engine| -> Vec<f64> {
+        let c = cfg(5);
+        let mut trainer = Trainer::new(&m, variant, Task::Cola, c.clone()).unwrap();
+        let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, 1);
+        let mut batches =
+            Batcher::new(&gen, Split::Train, variant.config.batch_size, 0);
+        (0..c.steps)
+            .map(|_| {
+                trainer
+                    .train_step(engine, &batches.next().unwrap())
+                    .unwrap()
+                    .loss
+            })
+            .collect()
+    };
+    let a = run(&mut engine);
+    let b = run(&mut engine);
+    assert_eq!(a, b, "same seed must reproduce the loss trace exactly");
+}
+
+#[test]
+fn different_seeds_give_different_rmm_noise() {
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    let tok = Tokenizer::new(64);
+    let variant = m.variant("tiny_cls2_r50_gauss").unwrap();
+    let grads_with_seed = |engine: &mut Engine, seed: u64| -> Vec<f32> {
+        let mut c = cfg(1);
+        c.seed = seed;
+        let mut trainer = Trainer::new(&m, variant, Task::Cola, c).unwrap();
+        // same data seed for both runs — only the sketch seed differs
+        let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, 99);
+        let batch = Batcher::new(&gen, Split::Train, variant.config.batch_size, 0)
+            .next()
+            .unwrap();
+        trainer.train_step(engine, &batch).unwrap();
+        trainer.params[4].clone() // first block weight after one update
+    };
+    let a = grads_with_seed(&mut engine, 1);
+    let b = grads_with_seed(&mut engine, 2);
+    assert_ne!(a, b, "different sketch seeds must perturb the update");
+}
+
+#[test]
+fn pallas_kernel_variant_runs_through_pjrt() {
+    // The tinyk variant lowers the *Pallas kernel path* (fused seeded
+    // projection + tiled matmul, interpret mode) into its HLO; executing it
+    // proves the L1 kernels survive the full AOT → PJRT round trip.
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    let tok = Tokenizer::new(64);
+    let variant = m.variant("tinyk_cls2_r50_gauss").unwrap();
+    assert!(variant.config.use_kernels);
+    let c = cfg(3);
+    let mut trainer = Trainer::new(&m, variant, Task::Cola, c.clone()).unwrap();
+    let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, 1);
+    let mut batches = Batcher::new(&gen, Split::Train, variant.config.batch_size, 0);
+    for _ in 0..c.steps {
+        let s = trainer
+            .train_step(&mut engine, &batches.next().unwrap())
+            .unwrap();
+        assert!(s.loss.is_finite());
+    }
+}
+
+#[test]
+fn kernel_and_jnp_variants_agree_numerically() {
+    // tinyk (pallas kernels) and tiny (pure jnp) share geometry, init
+    // params, sketch seeds and data: their losses must match to float
+    // tolerance — the strongest cross-layer equivalence check we can run
+    // through the real runtime.
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    let tok = Tokenizer::new(64);
+    let mut losses = Vec::new();
+    for vname in ["tiny_cls2_r50_gauss", "tinyk_cls2_r50_gauss"] {
+        let variant = m.variant(vname).unwrap();
+        let mut trainer = Trainer::new(&m, variant, Task::Cola, cfg(2)).unwrap();
+        let gen = TaskGen::new(Task::Cola, &tok, variant.config.seq_len, 1);
+        let mut batches =
+            Batcher::new(&gen, Split::Train, variant.config.batch_size, 0);
+        let mut trace = Vec::new();
+        for _ in 0..2 {
+            trace.push(
+                trainer
+                    .train_step(&mut engine, &batches.next().unwrap())
+                    .unwrap()
+                    .loss,
+            );
+        }
+        losses.push(trace);
+    }
+    for (a, b) in losses[0].iter().zip(&losses[1]) {
+        assert!(
+            (a - b).abs() < 1e-3 * a.abs().max(1.0),
+            "kernel vs jnp loss mismatch: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn evaluate_produces_metric_in_range() {
+    let m = manifest();
+    let mut engine = Engine::cpu().unwrap();
+    let tok = Tokenizer::new(64);
+    let variant = m.variant("tiny_cls2_r100_gauss").unwrap();
+    let mut trainer = Trainer::new(&m, variant, Task::Cola, cfg(1)).unwrap();
+    let score = trainer.evaluate(&mut engine, &tok).unwrap();
+    assert!((-100.0..=100.0).contains(&score), "matthews% out of range: {score}");
+}
+
+#[test]
+fn task_head_mismatch_is_rejected() {
+    let m = manifest();
+    let variant = m.variant("tiny_cls2_r100_gauss").unwrap();
+    assert!(Trainer::new(&m, variant, Task::Mnli, cfg(1)).is_err());
+    assert!(Trainer::new(&m, variant, Task::Stsb, cfg(1)).is_err());
+}
