@@ -14,6 +14,12 @@ fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
 }
 
 fn main() {
+    rmmlinear::tensor::kernels::init_from_env();
+    println!(
+        "host backend: {} ({} threads)",
+        rmmlinear::tensor::kernels::active().name(),
+        rmmlinear::tensor::kernels::threads::num_threads()
+    );
     let mut b = Bencher::new();
     let n = 64;
     for log_b in [6usize, 8, 10, 12] {

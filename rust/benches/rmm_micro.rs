@@ -1,21 +1,77 @@
 //! Micro-bench: the Table 1 cost model on the host reference —
 //! exact ∂W = YᵀX vs RMM's project+contract at several ρ, plus the
-//! streamed (O(1)-memory-for-S) projection vs dense-S materialization.
+//! streamed (O(1)-memory-for-S) projection vs dense-S materialization,
+//! plus the kernel-backend GFLOP/s sweep (scalar vs packed per shape).
 //!
 //! Expected shape: RMM backward cost scales ~linearly with ρ; the
-//! crossover vs exact happens below ρ ≈ N_in/(B + N_in) (paper §2.4.2).
+//! crossover vs exact happens below ρ ≈ N_in/(B + N_in) (paper §2.4.2);
+//! the packed backend clears the scalar reference by ≥4× at 512³.
+//!
+//! `--json` additionally writes `reports/BENCH_kernels.json` (GFLOP/s per
+//! kernel × shape × backend + the 512³ speedup) so later PRs have a perf
+//! trajectory to diff against.
 
 use rmmlinear::rmm::{self, sketch, SketchKind};
 use rmmlinear::rng::philox::PhiloxStream;
+use rmmlinear::tensor::kernels::{self, Backend, PACKED, SCALAR};
 use rmmlinear::tensor::{matmul_at, Tensor};
 use rmmlinear::util::bench::{black_box, Bencher};
+use rmmlinear::util::json::Json;
 
 fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
     let mut s = PhiloxStream::new(seed, 3);
     Tensor::from_fn(rows, cols, |_, _| s.next_normal())
 }
 
+struct KernelRow {
+    kernel: &'static str,
+    backend: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    mean_ns: f64,
+    gflops: f64,
+}
+
+impl KernelRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kernel", Json::str(self.kernel)),
+            ("backend", Json::str(self.backend)),
+            ("m", Json::num(self.m as f64)),
+            ("k", Json::num(self.k as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("gflops", Json::num(self.gflops)),
+        ])
+    }
+}
+
+/// Time one kernel invocation and derive its GFLOP/s row (all BENCH_kernels
+/// rows share the 2·m·k·n useful-flops accounting).
+fn bench_row(
+    b: &mut Bencher,
+    kernel: &'static str,
+    backend: &'static str,
+    label: &str,
+    (m, k, n): (usize, usize, usize),
+    f: impl FnMut(),
+) -> KernelRow {
+    let mean_ns = b.bench(label, f).mean_ns;
+    KernelRow {
+        kernel,
+        backend,
+        m,
+        k,
+        n,
+        mean_ns,
+        gflops: 2.0 * (m * k * n) as f64 / mean_ns,
+    }
+}
+
 fn main() {
+    kernels::init_from_env();
+    let json_mode = std::env::args().any(|a| a == "--json");
     let mut b = Bencher::new();
     let (rows, n_in, n_out) = (512, 64, 256);
     let x = randt(rows, n_in, 1);
@@ -36,7 +92,8 @@ fn main() {
         });
     }
 
-    // Streamed projection vs dense-S materialization (memory-traffic study)
+    // Streamed (fused, tile-generated S) projection vs dense-S
+    // materialization (memory-traffic study)
     let b_proj = 64;
     b.bench("project_streamed/gauss", || {
         black_box(sketch::project_streamed(SketchKind::Gauss, &x, b_proj, (3, 4)));
@@ -46,12 +103,100 @@ fn main() {
         black_box(matmul_at(&s, &x));
     });
 
-    // Sketch-family generation cost at fixed rho (Table 4's cost axis)
+    // Sketch-family generation cost at fixed rho (Table 4's cost axis);
+    // dct/dft/rowsample now run the fused path instead of dense fallback.
     for kind in SketchKind::ALL {
         b.bench(&format!("project/{}/rho=0.2", kind.name()), || {
             black_box(rmm::project(kind, &x, 102, (5, 6)));
         });
     }
 
+    // ---- kernel backend sweep: GFLOP/s per kernel × shape × backend ----
+    let backends: [(&'static str, &'static dyn Backend); 2] =
+        [("scalar", &SCALAR), ("packed", &PACKED)];
+    let mut krows: Vec<KernelRow> = Vec::new();
+
+    for &(m, k, n) in
+        &[(64usize, 64usize, 64usize), (128, 128, 128), (256, 256, 256), (384, 256, 512), (512, 512, 512)]
+    {
+        let a = randt(m, k, 11);
+        let bm = randt(k, n, 12);
+        for (bname, bk) in backends {
+            let label = format!("gemm/{bname}/{m}x{k}x{n}");
+            krows.push(bench_row(&mut b, "matmul", bname, &label, (m, k, n), || {
+                black_box(bk.matmul(&a, &bm));
+            }));
+        }
+    }
+
+    // transpose variants at one representative shape
+    {
+        let (m, k, n) = (256usize, 256usize, 256usize);
+        let at = randt(k, m, 13); // (k, m) operand for Aᵀ·B
+        let bn = randt(k, n, 14);
+        let bt = randt(n, k, 15); // (n, k) operand for A·Bᵀ
+        let am = randt(m, k, 16);
+        for (bname, bk) in backends {
+            let label = format!("gemm_at/{bname}/{m}x{k}x{n}");
+            krows.push(bench_row(&mut b, "matmul_at", bname, &label, (m, k, n), || {
+                black_box(bk.matmul_at(&at, &bn));
+            }));
+            let label = format!("gemm_bt/{bname}/{m}x{k}x{n}");
+            krows.push(bench_row(&mut b, "matmul_bt", bname, &label, (m, k, n), || {
+                black_box(bk.matmul_bt(&am, &bt));
+            }));
+        }
+    }
+
+    // fused projection throughput per family (2·B·B_proj·N useful flops)
+    {
+        let (bb, nn, bp) = (512usize, 256usize, 128usize);
+        let xp = randt(bb, nn, 17);
+        for kind in SketchKind::ALL {
+            let label = format!("project_fused/{}/{bb}x{bp}x{nn}", kind.name());
+            krows.push(bench_row(
+                &mut b,
+                "project_streamed",
+                kind.name(),
+                &label,
+                (bb, bp, nn),
+                || {
+                    black_box(sketch::project_streamed(kind, &xp, bp, (5, 6)));
+                },
+            ));
+        }
+    }
+
+    let speedup_512 = {
+        let find = |bname: &str| {
+            krows
+                .iter()
+                .find(|r| r.kernel == "matmul" && r.backend == bname && r.m == 512)
+                .map(|r| r.mean_ns)
+        };
+        match (find("scalar"), find("packed")) {
+            (Some(s), Some(p)) if p > 0.0 => s / p,
+            _ => f64::NAN,
+        }
+    };
+    println!("packed vs scalar speedup @ 512x512x512: {speedup_512:.2}x");
+
     b.write_report("reports/bench_rmm_micro.json");
+    if json_mode {
+        let report = Json::obj(vec![
+            ("experiment", Json::str("kernels")),
+            ("threads", Json::num(kernels::threads::num_threads() as f64)),
+            ("default_backend", Json::str(kernels::active().name())),
+            ("speedup_512", Json::num(speedup_512)),
+            ("rows", Json::Arr(krows.iter().map(|r| r.to_json()).collect())),
+        ]);
+        let path = "reports/BENCH_kernels.json";
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        match std::fs::write(path, report.to_string_pretty()) {
+            Ok(()) => println!("report -> {path}"),
+            Err(e) => eprintln!("warn: could not write {path}: {e}"),
+        }
+    }
 }

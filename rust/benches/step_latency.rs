@@ -13,6 +13,7 @@ use rmmlinear::runtime::{Engine, Manifest};
 use rmmlinear::util::bench::Bencher;
 
 fn main() {
+    rmmlinear::tensor::kernels::init_from_env();
     let manifest = match Manifest::load(Path::new("artifacts")) {
         Ok(m) => m,
         Err(e) => {

@@ -8,6 +8,7 @@ use rmmlinear::util::bench::{black_box, Bencher};
 use rmmlinear::util::json::Json;
 
 fn main() {
+    rmmlinear::tensor::kernels::init_from_env();
     let mut b = Bencher::new();
 
     // Typical step: ~32 residuals staged then drained.

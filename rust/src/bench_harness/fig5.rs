@@ -79,6 +79,8 @@ pub fn run(
                     .map(|(rho, res)| {
                         Json::obj(vec![
                             ("rho", Json::num(*rho)),
+                            ("backend", Json::str(res.backend.clone())),
+                            ("host_rmm_ms", super::runner::num_or_null(res.host_rmm_ms)),
                             (
                                 "train",
                                 Json::Arr(

@@ -7,7 +7,10 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::coordinator::{MetricsLog, Trainer};
 use crate::data::{Batcher, Split, Task, TaskGen, Tokenizer};
-use crate::runtime::{Engine, Manifest};
+use crate::rmm::{self, SketchKind};
+use crate::rng::philox::PhiloxStream;
+use crate::runtime::{Engine, Manifest, Variant};
+use crate::tensor::{kernels, Tensor};
 use crate::util::json::Json;
 
 /// Everything measured in one run (a row of a table / a series of a fig).
@@ -23,9 +26,25 @@ pub struct RunResult {
     pub wall_s: f64,
     pub samples_per_s: f64,
     pub peak_residual_bytes: usize,
+    /// Host GEMM backend the baselines below were measured with.
+    pub backend: String,
+    /// Host-side exact ∂W = YᵀX at this variant's geometry (ms/step).
+    pub host_exact_ms: f64,
+    /// Host-side RMM project + contract at this variant's geometry (ms/step).
+    pub host_rmm_ms: f64,
     pub train_losses: Vec<(usize, f64)>,
     pub eval_losses: Vec<(usize, f64)>,
     pub probe_series: Vec<(usize, [f64; 5])>,
+}
+
+/// Finite number or JSON null (the codec rejects NaN/Infinity, so a
+/// skipped measurement must not leak an unparseable literal into reports).
+pub fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::num(v)
+    } else {
+        Json::Null
+    }
 }
 
 impl RunResult {
@@ -35,14 +54,83 @@ impl RunResult {
             ("task", Json::str(self.task.clone())),
             ("rho", Json::num(self.rho)),
             ("sketch", Json::str(self.sketch.clone())),
-            ("score", Json::num(self.score)),
+            ("score", num_or_null(self.score)),
             ("final_train_loss", Json::num(self.final_train_loss)),
             ("steps", Json::num(self.steps as f64)),
             ("wall_s", Json::num(self.wall_s)),
             ("samples_per_s", Json::num(self.samples_per_s)),
             ("peak_residual_bytes", Json::num(self.peak_residual_bytes as f64)),
+            ("backend", Json::str(self.backend.clone())),
+            ("host_exact_ms", num_or_null(self.host_exact_ms)),
+            ("host_rmm_ms", num_or_null(self.host_rmm_ms)),
         ])
     }
+}
+
+/// Host-baseline cost of the gradient contraction at a variant's geometry,
+/// measured through the *selected kernel backend* so every reported
+/// baseline number reflects the optimized path: returns
+/// `(exact ∂W = YᵀX, RMM project + contract)` in ms/step (best of 3 after
+/// a warmup).  Results are cached per (geometry, sketch, backend) so a
+/// Table 4 / Fig 5 sweep measures each distinct baseline once instead of
+/// once per row.
+pub fn host_grad_baseline(variant: &Variant) -> (f64, f64) {
+    use std::collections::HashMap;
+    use std::sync::{Mutex, OnceLock};
+    type Key = (usize, usize, usize, usize, String, &'static str);
+    static CACHE: OnceLock<Mutex<HashMap<Key, (f64, f64)>>> = OnceLock::new();
+
+    let g = variant.config.geometry();
+    let key: Key = (
+        variant.rows,
+        variant.b_proj,
+        g.d_model,
+        g.d_ff,
+        variant.config.sketch.clone(),
+        kernels::active().name(),
+    );
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(&hit) = cache.lock().unwrap().get(&key) {
+        return hit;
+    }
+    let result = measure_grad_baseline(variant);
+    cache.lock().unwrap().insert(key, result);
+    result
+}
+
+fn measure_grad_baseline(variant: &Variant) -> (f64, f64) {
+    let g = variant.config.geometry();
+    let rows = variant.rows.max(1);
+    let b_proj = variant.b_proj.max(1);
+    let mut s = PhiloxStream::new(0xB45E, 3);
+    let x = Tensor::from_fn(rows, g.d_model, |_, _| s.next_normal());
+    let y = Tensor::from_fn(rows, g.d_ff, |_, _| s.next_normal());
+    let seed = (7, 8);
+
+    let time_best = |f: &dyn Fn()| -> f64 {
+        f(); // warm
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t = std::time::Instant::now();
+            f();
+            best = best.min(t.elapsed().as_secs_f64() * 1e3);
+        }
+        best
+    };
+    let exact_ms = time_best(&|| {
+        std::hint::black_box(rmm::exact_grad_w(&y, &x));
+    });
+    // Only measure the RMM side when the variant actually names a sketch
+    // family; fabricating a default-Gauss number for a no-RMM variant
+    // would put a concrete-but-wrong timing in the report.
+    let rmm_ms = match SketchKind::parse(&variant.config.sketch) {
+        Some(kind) => time_best(&|| {
+            let xp = rmm::project(kind, &x, b_proj, seed);
+            std::hint::black_box(rmm::rmm_grad_w(kind, &y, &xp, seed));
+        }),
+        None => f64::NAN,
+    };
+    (exact_ms, rmm_ms)
 }
 
 /// Options modulating a run (eval cadence, logging, warm start).
@@ -155,12 +243,16 @@ pub fn run_finetune(
     } else {
         trainer.evaluate(engine, &tok)?
     };
+    let (host_exact_ms, host_rmm_ms) = host_grad_baseline(variant);
     Ok(RunResult {
         variant: variant_name.to_string(),
         task: task.name().to_string(),
         rho: variant.config.rho,
         sketch: variant.config.sketch.clone(),
         score,
+        backend: kernels::active().name().to_string(),
+        host_exact_ms,
+        host_rmm_ms,
         final_train_loss: train_losses.last().map(|&(_, l)| l).unwrap_or(f64::NAN),
         steps: opts.train.steps,
         wall_s,

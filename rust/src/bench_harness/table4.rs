@@ -34,14 +34,26 @@ pub fn run(
         task,
         RunOpts { train: train.clone(), ..Default::default() },
     )?;
-    println!("\nTable 4: sketch variants on CoLA (score, train time)");
-    println!("{:>12} {:>6} {:>8} {:>10}", "matmul", "rate", "score", "time s");
-    println!("{:>12} {:>6} {:>8.2} {:>10.1}", "No RMM", "-", base.score, base.wall_s);
+    println!(
+        "\nTable 4: sketch variants on CoLA (score, train time; host grads \
+         via the '{}' backend)",
+        base.backend
+    );
+    println!(
+        "{:>12} {:>6} {:>8} {:>10} {:>12} {:>12}",
+        "matmul", "rate", "score", "time s", "host exact", "host rmm"
+    );
+    println!(
+        "{:>12} {:>6} {:>8.2} {:>10.1} {:>10.2}ms {:>12}",
+        "No RMM", "-", base.score, base.wall_s, base.host_exact_ms, "-"
+    );
     rows.push(Json::obj(vec![
         ("kind", Json::str("none")),
         ("rho", Json::num(1.0)),
         ("score", Json::num(base.score)),
         ("wall_s", Json::num(base.wall_s)),
+        ("backend", Json::str(base.backend.clone())),
+        ("host_exact_ms", Json::num(base.host_exact_ms)),
     ]));
 
     for kind in KINDS {
@@ -61,17 +73,22 @@ pub fn run(
                 RunOpts { train: train.clone(), ..Default::default() },
             )?;
             println!(
-                "{:>12} {:>5.0}% {:>8.2} {:>10.1}",
+                "{:>12} {:>5.0}% {:>8.2} {:>10.1} {:>10.2}ms {:>10.2}ms",
                 kind,
                 rho * 100.0,
                 res.score,
-                res.wall_s
+                res.wall_s,
+                res.host_exact_ms,
+                res.host_rmm_ms
             );
             rows.push(Json::obj(vec![
                 ("kind", Json::str(kind)),
                 ("rho", Json::num(rho)),
                 ("score", Json::num(res.score)),
                 ("wall_s", Json::num(res.wall_s)),
+                ("backend", Json::str(res.backend.clone())),
+                ("host_exact_ms", Json::num(res.host_exact_ms)),
+                ("host_rmm_ms", Json::num(res.host_rmm_ms)),
             ]));
         }
     }

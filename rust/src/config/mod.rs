@@ -56,6 +56,10 @@ pub struct ExperimentConfig {
     pub task: String,
     pub artifacts_dir: String,
     pub out_dir: String,
+    /// Host GEMM backend: "packed" or "scalar" (reference).  `None` means
+    /// the config expresses no preference and lower-precedence sources
+    /// (env var, built-in default) decide.
+    pub backend: Option<String>,
     pub train: TrainConfig,
 }
 
@@ -66,6 +70,7 @@ impl Default for ExperimentConfig {
             task: "cola".to_string(),
             artifacts_dir: "artifacts".to_string(),
             out_dir: "runs".to_string(),
+            backend: None,
             train: TrainConfig::default(),
         }
     }
@@ -81,6 +86,7 @@ impl ExperimentConfig {
                 "task" => cfg.task = req_str(v, k)?,
                 "artifacts_dir" => cfg.artifacts_dir = req_str(v, k)?,
                 "out_dir" => cfg.out_dir = req_str(v, k)?,
+                "backend" => cfg.backend = Some(req_str(v, k)?),
                 "train" => cfg.train = parse_train(v)?,
                 other => bail!("unknown config key '{other}'"),
             }
@@ -97,18 +103,42 @@ impl ExperimentConfig {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut j = Json::obj(vec![
             ("variant", Json::str(self.variant.clone())),
             ("task", Json::str(self.task.clone())),
             ("artifacts_dir", Json::str(self.artifacts_dir.clone())),
             ("out_dir", Json::str(self.out_dir.clone())),
             ("train", train_to_json(&self.train)),
-        ])
+        ]);
+        if let Some(b) = &self.backend {
+            if let Json::Obj(map) = &mut j {
+                map.insert("backend".to_string(), Json::str(b.clone()));
+            }
+        }
+        j
+    }
+
+    /// Install this config's backend as the process-global dispatch.
+    /// Returns whether the config actually named one — callers use this
+    /// to decide if lower-precedence sources (env) still apply.
+    pub fn apply_backend(&self) -> bool {
+        match self.backend.as_deref().and_then(crate::tensor::kernels::BackendKind::parse) {
+            Some(kind) => {
+                crate::tensor::kernels::set_backend(kind);
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn validate(&self) -> Result<()> {
         if crate::data::Task::parse(&self.task).is_none() {
             bail!("unknown task '{}'", self.task);
+        }
+        if let Some(b) = &self.backend {
+            if crate::tensor::kernels::BackendKind::parse(b).is_none() {
+                bail!("unknown backend '{b}' (expected packed|scalar)");
+            }
         }
         let t = &self.train;
         if t.steps == 0 {
@@ -209,9 +239,22 @@ mod tests {
     }
 
     #[test]
+    fn backend_selection_parses() {
+        let j = Json::parse(r#"{"backend": "scalar"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.backend.as_deref(), Some("scalar"));
+        // absent key -> no preference: applies nothing, leaving the
+        // decision to lower-precedence sources (env var / default)
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.backend, None);
+        assert!(!cfg.apply_backend());
+    }
+
+    #[test]
     fn rejects_bad_values() {
         for src in [
             r#"{"task": "nope"}"#,
+            r#"{"backend": "cuda"}"#,
             r#"{"train": {"steps": 0}}"#,
             r#"{"train": {"optimizer": "rmsprop"}}"#,
             r#"{"train": {"lr": -1}}"#,

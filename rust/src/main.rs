@@ -56,6 +56,22 @@ fn reports_dir(args: &Args) -> PathBuf {
 
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &["roberta", "all-tasks", "verbose", "help"]);
+    use rmmlinear::tensor::kernels;
+    // Backend precedence: --backend flag > config file > RMM_BACKEND env.
+    let mut backend_chosen = false;
+    if let Some(path) = args.get("config") {
+        let cfg = rmmlinear::config::ExperimentConfig::load(Path::new(path))?;
+        backend_chosen = cfg.apply_backend(); // false if no 'backend' key
+    }
+    if let Some(bk) = args.get("backend") {
+        let kind = kernels::BackendKind::parse(bk)
+            .with_context(|| format!("unknown --backend '{bk}' (packed|scalar)"))?;
+        kernels::set_backend(kind);
+        backend_chosen = true;
+    }
+    if !backend_chosen {
+        kernels::init_from_env(); // RMM_BACKEND, default packed
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -104,6 +120,10 @@ COMMANDS
 COMMON OPTIONS
   --artifacts DIR   artifact directory (default: artifacts)
   --reports DIR     bench report directory (default: reports)
+  --config FILE     experiment config JSON (applies its 'backend' key)
+  --backend NAME    host GEMM backend: packed (default) | scalar
+                    (overrides --config; env override: RMM_BACKEND;
+                    threads: RMM_THREADS)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {

@@ -108,6 +108,10 @@ pub fn dct2_ortho(x: &[f32]) -> Vec<f32> {
 
 /// O(B·N·log B) SORS projection: X_proj = sqrt(B/B_proj)·Rᵀ·H·D·X computed
 /// column-wise with the fast transform (B must be a power of two).
+///
+/// Columns are independent, so they are fanned out over the kernel thread
+/// pool in contiguous bands; each band scatters into the shared output
+/// afterwards (per-column results are identical to the serial loop).
 pub fn sors_project_fast(
     use_dct: bool,
     x: &Tensor,
@@ -120,14 +124,75 @@ pub fn sors_project_fast(
     let signs = sign_flips(b, seed);
     let scale = (b as f32 / b_proj as f32).sqrt();
     let mut out = Tensor::zeros(b_proj, n);
-    let mut col = vec![0.0f32; b];
-    for c in 0..n {
-        for i in 0..b {
-            col[i] = signs[i] * x.at(i, c);
+    if n == 0 || b_proj == 0 {
+        return out;
+    }
+
+    // Spawn threads only when the transform work dwarfs spawn/join cost —
+    // the crossover bench starts at B=64 where per-column FFTs are ~µs,
+    // and inflating that regime would distort the very crossover measured.
+    let work = n as f64 * b as f64 * (b as f64).log2().max(1.0);
+    let nt = if work < 2.0e5 {
+        1
+    } else {
+        crate::tensor::kernels::threads::num_threads().min(n)
+    };
+
+    if nt <= 1 {
+        // Serial path: write straight into the output, no staging buffer.
+        let mut col = vec![0.0f32; b];
+        for c in 0..n {
+            for i in 0..b {
+                col[i] = signs[i] * x.at(i, c);
+            }
+            let coeffs = if use_dct { dct2_ortho(&col) } else { real_dft_ortho(&col) };
+            for (j, &s) in sel.iter().enumerate() {
+                *out.at_mut(j, c) = scale * coeffs[s];
+            }
         }
-        let coeffs = if use_dct { dct2_ortho(&col) } else { real_dft_ortho(&col) };
-        for (j, &s) in sel.iter().enumerate() {
-            *out.at_mut(j, c) = scale * coeffs[s];
+        return out;
+    }
+
+    // Parallel path: contiguous column bands, each worker returning the
+    // selected coefficients in column-major band layout
+    // (local_c * b_proj + j), scattered into `out` afterwards.
+    let band_coeffs = |c0: usize, c1: usize| -> Vec<f32> {
+        let mut res = vec![0.0f32; (c1 - c0) * b_proj];
+        let mut col = vec![0.0f32; b];
+        for c in c0..c1 {
+            for i in 0..b {
+                col[i] = signs[i] * x.at(i, c);
+            }
+            let coeffs = if use_dct { dct2_ortho(&col) } else { real_dft_ortho(&col) };
+            let dst = &mut res[(c - c0) * b_proj..(c - c0 + 1) * b_proj];
+            for (d, &s) in dst.iter_mut().zip(&sel) {
+                *d = scale * coeffs[s];
+            }
+        }
+        res
+    };
+    let bands: Vec<(usize, usize)> = (0..nt)
+        .map(|t| {
+            let base = n / nt;
+            let extra = n % nt;
+            let c0 = t * base + t.min(extra);
+            let c1 = c0 + base + usize::from(t < extra);
+            (c0, c1)
+        })
+        .collect();
+    let results: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = bands
+            .iter()
+            .map(|&(c0, c1)| s.spawn(move || band_coeffs(c0, c1)))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    for (&(c0, c1), res) in bands.iter().zip(&results) {
+        for c in c0..c1 {
+            let src = &res[(c - c0) * b_proj..(c - c0 + 1) * b_proj];
+            for (j, &v) in src.iter().enumerate() {
+                *out.at_mut(j, c) = v;
+            }
         }
     }
     out

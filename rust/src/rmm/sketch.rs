@@ -3,11 +3,22 @@
 //! and the SORS row-selection/signs are *bit-compatible* with the Python
 //! side (same Philox counters), so golden tests can pin the two stacks
 //! against each other.
+//!
+//! `project_streamed` is the fused analogue of the Pallas kernel: S is
+//! generated tile-by-tile from the Philox counters *inside* the blocked
+//! accumulation loop and never materialized — for any sketch family,
+//! including the structured DCT/DFT/rowsample paths that previously fell
+//! back to dense `sketch()` + `matmul_at`.  Output rows are fanned out
+//! over threads (disjoint bands, see `tensor::kernels::threads`), and per
+//! output element the input rows accumulate in ascending order, so the
+//! result is bit-identical to the original streaming loop regardless of
+//! tiling or thread count.
 
 use crate::rng::philox::{
     element_normal, element_rademacher, element_uniform_int, STREAM_ROWSEL,
     STREAM_SIGNS, STREAM_SKETCH,
 };
+use crate::tensor::kernels::threads;
 use crate::tensor::Tensor;
 
 /// Sketch families (paper §2.1, §3.5 + the Adelman-style row sampler).
@@ -90,6 +101,10 @@ pub fn sign_flips(b: usize, seed: (u32, u32)) -> Vec<f32> {
 }
 
 /// Dense sketch matrix S (b × b_proj) — mirrors `ref.sketch`.
+///
+/// The structured kinds precompute the selection/sign vectors once and
+/// fill rows directly (no per-element closure recomputation); RowSample
+/// writes only its b_proj non-zeros.
 pub fn sketch(kind: SketchKind, b: usize, b_proj: usize, seed: (u32, u32)) -> Tensor {
     let inv = 1.0 / (b_proj as f32).sqrt();
     match kind {
@@ -103,24 +118,103 @@ pub fn sketch(kind: SketchKind, b: usize, b_proj: usize, seed: (u32, u32)) -> Te
             let sel = row_selection(b, b_proj, seed);
             let signs = sign_flips(b, seed);
             let scale = (b as f32 / b_proj as f32).sqrt();
-            Tensor::from_fn(b, b_proj, |i, j| {
-                let h = match kind {
-                    SketchKind::Dct => dct_entry(sel[j], i, b),
-                    _ => dft_entry(sel[j], i, b),
-                };
-                scale * signs[i] * h
-            })
+            let mut t = Tensor::zeros(b, b_proj);
+            for i in 0..b {
+                let w = scale * signs[i];
+                let row = t.row_mut(i);
+                for (rv, &k) in row.iter_mut().zip(&sel) {
+                    let h = match kind {
+                        SketchKind::Dct => dct_entry(k, i, b),
+                        _ => dft_entry(k, i, b),
+                    };
+                    *rv = w * h;
+                }
+            }
+            t
         }
         SketchKind::RowSample => {
-            let sel = row_selection(b, b_proj, seed);
-            let scale = (b as f32 / b_proj as f32).sqrt();
-            Tensor::from_fn(b, b_proj, |i, j| if sel[j] == i { scale } else { 0.0 })
+            let mut t = Tensor::zeros(b, b_proj);
+            if b > 0 {
+                let sel = row_selection(b, b_proj, seed);
+                let scale = (b as f32 / b_proj as f32).sqrt();
+                for (j, &i) in sel.iter().enumerate() {
+                    *t.at_mut(i, j) = scale;
+                }
+            }
+            t
         }
     }
 }
 
-/// X_proj = Sᵀ X without materializing S (streamed, row-generated) — the
-/// Rust analogue of the fused Pallas kernel's O(1)-memory-for-S property.
+/// Tile extents for the fused streamed projection: S is generated in
+/// TILE_I × TILE_J pieces (16 KiB) that live entirely in L1 while the
+/// corresponding X rows stream through the axpy loop.
+const TILE_I: usize = 64;
+const TILE_J: usize = 64;
+
+/// Below this many multiply-adds the thread fan-out costs more than it
+/// saves; stay on the caller's thread.
+const PAR_MADD_THRESHOLD: f64 = 2.0e5;
+
+/// Shared driver for the element-generated families: out = Sᵀ X where
+/// `elem(i, j)` yields S[i, j] on the fly.  Parallel over output rows,
+/// ascending-i accumulation per element (bit-identical to the serial
+/// i-outer/j-inner reference loop).
+fn project_streamed_elem<F>(x: &Tensor, b_proj: usize, elem: &F) -> Tensor
+where
+    F: Fn(usize, usize) -> f32 + Sync,
+{
+    let (b, n) = (x.rows, x.cols);
+    let mut out = Tensor::zeros(b_proj, n);
+    if b == 0 || n == 0 || b_proj == 0 {
+        return out;
+    }
+    let work = b as f64 * b_proj as f64 * n as f64;
+    let nt = if work < PAR_MADD_THRESHOLD { 1 } else { threads::num_threads() };
+    threads::par_row_bands(nt, b_proj, n, &mut out.data, &|j0, jrows, band| {
+        let mut tile = [0.0f32; TILE_I * TILE_J];
+        let mut jt = 0;
+        while jt < jrows {
+            let jb = TILE_J.min(jrows - jt);
+            let mut i0 = 0;
+            while i0 < b {
+                let ib = TILE_I.min(b - i0);
+                // generate the S tile for (i0.., j0+jt..) straight from
+                // the Philox counters — S never exists outside this tile
+                for di in 0..ib {
+                    for dj in 0..jb {
+                        tile[di * TILE_J + dj] = elem(i0 + di, j0 + jt + dj);
+                    }
+                }
+                // rank-ib update of the band's rows, i ascending
+                for di in 0..ib {
+                    let xrow = x.row(i0 + di);
+                    for dj in 0..jb {
+                        let s = tile[di * TILE_J + dj];
+                        let orow = &mut band[(jt + dj) * n..(jt + dj + 1) * n];
+                        for (o, &xv) in orow.iter_mut().zip(xrow) {
+                            *o += s * xv;
+                        }
+                    }
+                }
+                i0 += TILE_I;
+            }
+            jt += TILE_J;
+        }
+    });
+    out
+}
+
+/// X_proj = Sᵀ X without materializing S (streamed, tile-generated) — the
+/// Rust analogue of the fused Pallas kernel's O(1)-memory-for-S property,
+/// now covering *all* sketch families:
+///
+/// * gauss / rademacher: S tiles generated from Philox element counters
+///   inside the blocked axpy loop;
+/// * dct / dft: selection + sign vectors hoisted once, transform entries
+///   generated per tile (no dense S, no `matmul_at` fallback);
+/// * rowsample: explicit sparsity-aware gather — b_proj scaled row copies,
+///   no multiply-accumulate at all.
 pub fn project_streamed(
     kind: SketchKind,
     x: &Tensor,
@@ -128,43 +222,52 @@ pub fn project_streamed(
     seed: (u32, u32),
 ) -> Tensor {
     let (b, n) = (x.rows, x.cols);
-    let mut out = Tensor::zeros(b_proj, n);
     match kind {
         SketchKind::Gauss => {
             let inv = 1.0 / (b_proj as f32).sqrt();
-            for i in 0..b {
-                let xrow = x.row(i);
-                for j in 0..b_proj {
-                    let s = element_normal(i as u32, j as u32, seed, STREAM_SKETCH)
-                        * inv;
-                    let orow = &mut out.data[j * n..(j + 1) * n];
-                    for c in 0..n {
-                        orow[c] += s * xrow[c];
-                    }
-                }
-            }
+            let elem = move |i: usize, j: usize| {
+                element_normal(i as u32, j as u32, seed, STREAM_SKETCH) * inv
+            };
+            project_streamed_elem(x, b_proj, &elem)
         }
         SketchKind::Rademacher => {
             let inv = 1.0 / (b_proj as f32).sqrt();
-            for i in 0..b {
-                let xrow = x.row(i);
-                for j in 0..b_proj {
-                    let s =
-                        element_rademacher(i as u32, j as u32, seed, STREAM_SKETCH) * inv;
-                    let orow = &mut out.data[j * n..(j + 1) * n];
-                    for c in 0..n {
-                        orow[c] += s * xrow[c];
-                    }
+            let elem = move |i: usize, j: usize| {
+                element_rademacher(i as u32, j as u32, seed, STREAM_SKETCH) * inv
+            };
+            project_streamed_elem(x, b_proj, &elem)
+        }
+        SketchKind::Dct | SketchKind::Dft => {
+            let sel = row_selection(b, b_proj, seed);
+            let signs = sign_flips(b, seed);
+            let scale = (b as f32 / b_proj as f32).sqrt();
+            let use_dct = kind == SketchKind::Dct;
+            let elem = move |i: usize, j: usize| {
+                let h = if use_dct {
+                    dct_entry(sel[j], i, b)
+                } else {
+                    dft_entry(sel[j], i, b)
+                };
+                (scale * signs[i]) * h
+            };
+            project_streamed_elem(x, b_proj, &elem)
+        }
+        SketchKind::RowSample => {
+            let mut out = Tensor::zeros(b_proj, n);
+            if b == 0 {
+                return out; // no rows to sample
+            }
+            let sel = row_selection(b, b_proj, seed);
+            let scale = (b as f32 / b_proj as f32).sqrt();
+            for (j, &src) in sel.iter().enumerate() {
+                let xrow = x.row(src);
+                for (o, &xv) in out.row_mut(j).iter_mut().zip(xrow) {
+                    *o = scale * xv;
                 }
             }
-        }
-        _ => {
-            // Structured kinds: row-generate S via entries.
-            let s = sketch(kind, b, b_proj, seed);
-            return crate::tensor::matmul_at(&s, x);
+            out
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -236,6 +339,10 @@ mod tests {
         }
     }
 
+    // NOTE: exact (bit-level) agreement of the fused tiled path with the
+    // seed streaming loop is pinned in rust/tests/prop_kernels.rs — kept
+    // in one place so the reference loop cannot drift.
+
     #[test]
     fn parse_roundtrip() {
         for kind in SketchKind::ALL {
@@ -254,5 +361,20 @@ mod tests {
             assert_eq!(nz.len(), 1);
             assert!((nz[0] - scale).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn empty_shapes_do_not_panic() {
+        for kind in SketchKind::ALL {
+            let x = Tensor::zeros(8, 0);
+            let p = project_streamed(kind, &x, 4, (1, 2));
+            assert_eq!((p.rows, p.cols), (4, 0));
+        }
+        let x = Tensor::zeros(8, 3);
+        let p = project_streamed(SketchKind::Gauss, &x, 0, (1, 2));
+        assert_eq!((p.rows, p.cols), (0, 3));
+        let empty = Tensor::zeros(0, 3);
+        let p = project_streamed(SketchKind::RowSample, &empty, 4, (1, 2));
+        assert_eq!(p.data, vec![0.0f32; 12]);
     }
 }

@@ -5,14 +5,25 @@
 //! Interchange is HLO *text* (`HloModuleProto::from_text_file`): jax ≥ 0.5
 //! serialized protos use 64-bit instruction ids which xla_extension 0.5.1
 //! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate is only present in the AOT toolchain image, so the PJRT
+//! engine is gated behind the off-by-default `xla` cargo feature.  Without
+//! it a stub `Engine` with the identical API is compiled: construction
+//! succeeds (so CLI plumbing and host-side benches run), but `execute`
+//! fails fast with a pointed message.
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
+#[cfg(feature = "xla")]
 use std::path::Path;
+#[cfg(feature = "xla")]
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::manifest::{ArgSpec, Dtype, Entry, Manifest};
+use super::manifest::{Dtype, Entry, Manifest};
+#[cfg(feature = "xla")]
+use super::manifest::ArgSpec;
 
 /// A host-side tensor value (flattened, row-major) ready for upload.
 #[derive(Debug, Clone)]
@@ -50,6 +61,7 @@ impl HostValue {
         }
     }
 
+    #[cfg(feature = "xla")]
     fn bytes(&self) -> &[u8] {
         match self {
             HostValue::F32(v) => bytemuck_f32(v),
@@ -59,6 +71,7 @@ impl HostValue {
     }
 
     /// Upload to a literal with the spec's shape.
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self, spec: &ArgSpec) -> Result<xla::Literal> {
         if self.len() != spec.elements() {
             bail!(
@@ -81,6 +94,7 @@ impl HostValue {
     }
 
     /// Download from a literal according to its dtype.
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal, dtype: Dtype) -> Result<HostValue> {
         Ok(match dtype {
             Dtype::F32 => HostValue::F32(
@@ -96,12 +110,15 @@ impl HostValue {
     }
 }
 
+#[cfg(feature = "xla")]
 fn bytemuck_f32(v: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
+#[cfg(feature = "xla")]
 fn bytemuck_i32(v: &[i32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
+#[cfg(feature = "xla")]
 fn bytemuck_u32(v: &[u32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
@@ -118,12 +135,14 @@ pub struct EngineStats {
 }
 
 /// PJRT CPU engine with a compile cache keyed by artifact path.
+#[cfg(feature = "xla")]
 pub struct Engine {
     client: xla::PjRtClient,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
     pub stats: EngineStats,
 }
 
+#[cfg(feature = "xla")]
 impl Engine {
     pub fn cpu() -> Result<Engine> {
         let client =
@@ -214,10 +233,79 @@ impl Engine {
     }
 }
 
+/// Stub engine compiled when the `xla` feature is off: same API, but any
+/// attempt to compile or execute an artifact fails with a pointed message.
+#[cfg(not(feature = "xla"))]
+pub struct Engine {
+    pub stats: EngineStats,
+}
+
+#[cfg(not(feature = "xla"))]
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { stats: EngineStats::default() })
+    }
+
+    pub fn platform(&self) -> String {
+        "stub (built without the `xla` feature)".to_string()
+    }
+
+    pub fn load(&mut self, _manifest: &Manifest, _entry: &Entry) -> Result<()> {
+        bail!(
+            "PJRT runtime unavailable: this binary was built without the \
+             `xla` cargo feature (see rust/Cargo.toml); host-side kernels, \
+             benches and tests still work"
+        )
+    }
+
+    pub fn execute(
+        &mut self,
+        _manifest: &Manifest,
+        _entry: &Entry,
+        _args: &[HostValue],
+    ) -> Result<Vec<HostValue>> {
+        bail!(
+            "PJRT runtime unavailable: this binary was built without the \
+             `xla` cargo feature (see rust/Cargo.toml); host-side kernels, \
+             benches and tests still work"
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::manifest::Role;
+
+    #[test]
+    fn hostvalue_basics() {
+        let v = HostValue::F32(vec![1.0; 6]);
+        assert_eq!(v.len(), 6);
+        assert!(!v.is_empty());
+        assert_eq!(v.dtype(), Dtype::F32);
+        assert!(v.as_f32().is_ok());
+        assert!(HostValue::I32(vec![1]).as_f32().is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_engine_constructs_but_refuses_to_execute() {
+        let mut e = Engine::cpu().unwrap();
+        assert!(e.platform().contains("stub"));
+        let err = e
+            .execute(
+                &Manifest { dir: std::path::PathBuf::new(), variants: Default::default() },
+                &Entry { file: "x.hlo".into(), args: vec![], outputs: vec![] },
+                &[],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("xla"), "{err}");
+    }
+}
+
+#[cfg(all(test, feature = "xla"))]
+mod xla_tests {
+    use super::*;
+    use crate::runtime::manifest::{ArgSpec, Role};
 
     fn spec(shape: &[usize], dtype: Dtype) -> ArgSpec {
         ArgSpec {

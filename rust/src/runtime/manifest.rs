@@ -35,6 +35,7 @@ impl Dtype {
         4
     }
 
+    #[cfg(feature = "xla")]
     pub fn element_type(&self) -> xla::ElementType {
         match self {
             Dtype::F32 => xla::ElementType::F32,

@@ -1,0 +1,94 @@
+//! Panel packing: copy cache-block-sized pieces of A and B into contiguous
+//! microkernel-order buffers (k-major MR-row / NR-column panels), zero-
+//! padding block edges so the microkernel never branches on bounds.
+//!
+//! Packing reads through a strided [`MatRef`] view, which is how the `Aᵀ·B`
+//! and `A·Bᵀ` variants reuse the same kernel without materializing a
+//! transpose: the view swaps strides instead.
+
+use super::micro::{MR, NR};
+use super::packed::MatRef;
+
+/// Pack the `mc × kc` block of `a` starting at (`i0`, `k0`) into MR-row
+/// panels: `dst[p*MR*kc + k*MR + r] = a[i0 + p*MR + r, k0 + k]`, rows past
+/// `mc` zero-filled.  `dst` must hold `ceil(mc/MR)*MR*kc` floats.
+pub fn pack_a(dst: &mut [f32], a: MatRef<'_>, i0: usize, mc: usize, k0: usize, kc: usize) {
+    let panels = (mc + MR - 1) / MR;
+    debug_assert!(dst.len() >= panels * MR * kc);
+    for p in 0..panels {
+        let base = p * MR * kc;
+        let rows = MR.min(mc - p * MR);
+        for k in 0..kc {
+            let d = &mut dst[base + k * MR..base + k * MR + MR];
+            for (r, dv) in d.iter_mut().enumerate() {
+                *dv = if r < rows { a.at(i0 + p * MR + r, k0 + k) } else { 0.0 };
+            }
+        }
+    }
+}
+
+/// Pack the `kc × nc` block of `b` starting at (`k0`, `j0`) into NR-column
+/// panels: `dst[p*NR*kc + k*NR + c] = b[k0 + k, j0 + p*NR + c]`, columns
+/// past `nc` zero-filled.  `dst` must hold `ceil(nc/NR)*NR*kc` floats.
+pub fn pack_b(dst: &mut [f32], b: MatRef<'_>, k0: usize, kc: usize, j0: usize, nc: usize) {
+    let panels = (nc + NR - 1) / NR;
+    debug_assert!(dst.len() >= panels * NR * kc);
+    for p in 0..panels {
+        let base = p * NR * kc;
+        let cols = NR.min(nc - p * NR);
+        if b.col_stride == 1 && cols == NR {
+            // Contiguous rows (the dense row-major case): straight memcpy
+            // of each k-row of the panel.
+            for k in 0..kc {
+                let src0 = (k0 + k) * b.row_stride + (j0 + p * NR);
+                dst[base + k * NR..base + k * NR + NR]
+                    .copy_from_slice(&b.data[src0..src0 + NR]);
+            }
+        } else {
+            for k in 0..kc {
+                let d = &mut dst[base + k * NR..base + k * NR + NR];
+                for (c, dv) in d.iter_mut().enumerate() {
+                    *dv = if c < cols { b.at(k0 + k, j0 + p * NR + c) } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        let t = Tensor::from_fn(5, 4, |i, j| (i * 10 + j) as f32);
+        let a = MatRef::dense(&t);
+        let (mc, kc) = (5, 3);
+        let mut dst = vec![f32::NAN; ((mc + MR - 1) / MR) * MR * kc];
+        pack_a(&mut dst, a, 0, mc, 1, kc);
+        // element (i=2, k=1) -> a[2, 2] = 22, stored at k*MR + r = 1*8 + 2
+        assert_eq!(dst[MR + 2], 22.0);
+        // padded rows are zero
+        assert_eq!(dst[MR + 7], 0.0);
+    }
+
+    #[test]
+    fn pack_b_dense_and_strided_agree() {
+        let t = Tensor::from_fn(6, 9, |i, j| (i * 100 + j) as f32);
+        let dense = MatRef::dense(&t);
+        let tt = t.transpose(); // 9 x 6
+        let strided = MatRef::transposed(&tt); // logical 6 x 9 again
+        let (kc, nc) = (4, 9);
+        let npanels = (nc + NR - 1) / NR;
+        let mut d1 = vec![f32::NAN; npanels * NR * kc];
+        let mut d2 = vec![f32::NAN; npanels * NR * kc];
+        pack_b(&mut d1, dense, 1, kc, 0, nc);
+        pack_b(&mut d2, strided, 1, kc, 0, nc);
+        assert_eq!(d1, d2);
+        // spot check: (k=0, j=3) -> b[1, 3] = 103 at panel 0, offset 0*NR+3
+        assert_eq!(d1[3], 103.0);
+        // padded col in panel 1: j = 8 valid (108..), j = 9.. zero
+        assert_eq!(d1[NR * kc + 1], 0.0); // panel 1, k=0, c=1 -> j=9 -> pad
+    }
+}

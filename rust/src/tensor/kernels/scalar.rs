@@ -1,0 +1,74 @@
+//! Reference scalar backend: the seed crate's single-threaded blocked
+//! loops, kept as the correctness baseline the `Packed` backend is pinned
+//! against (and as the honest "before" side of BENCH_kernels.json).
+//!
+//! One deliberate change from the seed: the `if aik == 0.0 { continue; }`
+//! branch inside the k-loop is gone.  It bought nothing on dense inputs
+//! and put a data-dependent branch in front of every vectorizable axpy;
+//! the only genuinely sparse sketch family (RowSample) now has an explicit
+//! gather path in `rmm::sketch` instead of relying on zero-skipping here.
+
+use crate::tensor::Tensor;
+
+const BLOCK: usize = 64;
+
+/// C = A · B, i-k-j loop order with blocking.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Tensor::zeros(m, n);
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..k).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(k);
+            for i in i0..i1 {
+                let arow = &a.data[i * k..(i + 1) * k];
+                let crow = &mut c.data[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ · B  (A: (k, m), B: (k, n) → C: (m, n)) without materializing Aᵀ.
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Tensor::zeros(m, n);
+    for kk in 0..k {
+        let arow = &a.data[kk * m..(kk + 1) * m];
+        let brow = &b.data[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aik = arow[i];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += aik * bv;
+            }
+        }
+    }
+    c
+}
+
+/// C = A · Bᵀ  (A: (m, k), B: (n, k) → C: (m, n)) without materializing Bᵀ.
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Tensor::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (j, cv) in crow.iter_mut().enumerate() {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (av, bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *cv = acc;
+        }
+    }
+    c
+}

@@ -1,84 +1,31 @@
-//! Blocked matmul kernels for the host tensor type.
+//! Host matmul entry points, dispatching to the selected kernel backend
+//! (`tensor::kernels`): `Packed` (cache-blocked, register-tiled, multi-
+//! threaded) by default, `Scalar` (the seed reference loop) on request.
 //!
-//! Used by the pure-Rust RMM reference and the criterion-style micro
-//! benches (Table 4's cost model, the FFT crossover study).  Single-core
-//! cache-blocked f32 with a k-innermost microkernel; fast enough that the
-//! Rust-side baseline is a fair comparator for the sketch algebra.
+//! Every host hot path — the pure-Rust RMM reference, the Table 4 cost
+//! model, the FFT crossover study and the micro benches — goes through
+//! these three functions, so backend selection changes *all* reported
+//! host-baseline numbers coherently.
 
+use super::kernels;
 use super::Tensor;
-
-const BLOCK: usize = 64;
 
 /// C = A · B.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.cols, b.rows, "matmul inner-dim mismatch");
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Tensor::zeros(m, n);
-    // i-k-j loop order with blocking: B rows stream through cache, C rows
-    // accumulate in registers/L1.
-    for i0 in (0..m).step_by(BLOCK) {
-        let i1 = (i0 + BLOCK).min(m);
-        for k0 in (0..k).step_by(BLOCK) {
-            let k1 = (k0 + BLOCK).min(k);
-            for i in i0..i1 {
-                let arow = &a.data[i * k..(i + 1) * k];
-                let crow = &mut c.data[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &b.data[kk * n..(kk + 1) * n];
-                    for j in 0..n {
-                        crow[j] += aik * brow[j];
-                    }
-                }
-            }
-        }
-    }
-    c
+    kernels::active().matmul(a, b)
 }
 
 /// C = Aᵀ · B  (A: (k, m), B: (k, n) -> C: (m, n)) without materializing Aᵀ.
 pub fn matmul_at(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.rows, b.rows, "matmul_at row mismatch");
-    let (k, m, n) = (a.rows, a.cols, b.cols);
-    let mut c = Tensor::zeros(m, n);
-    for kk in 0..k {
-        let arow = &a.data[kk * m..(kk + 1) * m];
-        let brow = &b.data[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let aik = arow[i];
-            if aik == 0.0 {
-                continue;
-            }
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
-            }
-        }
-    }
-    c
+    kernels::active().matmul_at(a, b)
 }
 
 /// C = A · Bᵀ  (A: (m, k), B: (n, k) -> C: (m, n)) without materializing Bᵀ.
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.cols, b.cols, "matmul_bt col mismatch");
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Tensor::zeros(m, n);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            crow[j] = acc;
-        }
-    }
-    c
+    kernels::active().matmul_bt(a, b)
 }
 
 #[cfg(test)]
@@ -137,5 +84,15 @@ mod tests {
     #[should_panic]
     fn mismatch_panics() {
         matmul(&Tensor::zeros(2, 3), &Tensor::zeros(4, 2));
+    }
+
+    #[test]
+    fn both_backends_match_naive_directly() {
+        use crate::tensor::kernels::{Backend, PACKED, SCALAR};
+        let a = randt(33, 47, 7);
+        let b = randt(47, 21, 8);
+        let want = naive(&a, &b);
+        assert!(SCALAR.matmul(&a, &b).max_abs_diff(&want) < 1e-3);
+        assert!(PACKED.matmul(&a, &b).max_abs_diff(&want) < 1e-3);
     }
 }

@@ -6,6 +6,7 @@
 //! exists so the hot host paths (optimizer update, variance estimators,
 //! bench baselines) are allocation-disciplined and dependency-free.
 
+pub mod kernels;
 mod matmul;
 pub mod ops;
 
@@ -63,6 +64,11 @@ impl Tensor {
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     pub fn len(&self) -> usize {

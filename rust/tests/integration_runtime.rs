@@ -2,7 +2,10 @@
 //!
 //! These need `make artifacts` to have run; they use the `tiny*` variants
 //! (seconds to compile).  If artifacts are missing the tests panic with a
-//! pointed message rather than silently passing.
+//! pointed message rather than silently passing.  The whole file is gated
+//! on the `xla` cargo feature: without the PJRT runtime there is nothing
+//! real to integrate against (the stub engine fails by design).
+#![cfg(feature = "xla")]
 
 use std::path::Path;
 

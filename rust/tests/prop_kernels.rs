@@ -1,0 +1,208 @@
+//! Property tests pinning the `Packed` kernel backend against the naive
+//! triple loop on adversarial shapes, and the fused streamed sketch
+//! projection against the dense `SᵀX` algebra for every `SketchKind` —
+//! including exact (bit-level) agreement with the seed crate's streaming
+//! accumulation order.
+
+use rmmlinear::rmm::sketch::{self, SketchKind};
+use rmmlinear::rng::philox::{
+    element_normal, element_rademacher, PhiloxStream, STREAM_SKETCH,
+};
+use rmmlinear::tensor::kernels::{Backend, PACKED, SCALAR};
+use rmmlinear::tensor::Tensor;
+use rmmlinear::util::prop::prop_check;
+
+fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut s = PhiloxStream::new(seed, 3);
+    Tensor::from_fn(rows, cols, |_, _| s.next_normal())
+}
+
+/// f64-accumulated reference C = A · B.
+fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let mut c = Tensor::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut acc = 0.0f64;
+            for k in 0..a.cols {
+                acc += (a.at(i, k) as f64) * (b.at(k, j) as f64);
+            }
+            *c.at_mut(i, j) = acc as f32;
+        }
+    }
+    c
+}
+
+/// Tolerance scaled to the contraction depth (f32 accumulation noise).
+fn tol(k: usize) -> f32 {
+    1e-4 * (k.max(1) as f32).sqrt().max(1.0)
+}
+
+/// Adversarial fixed shapes: unit dims, primes, dims straddling every
+/// block boundary (MR/NR = 8, MC = 128, KC = 256, NC = 1024), zero dims.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 257, 1),
+    (2, 3, 5),
+    (7, 11, 13),
+    (8, 8, 8),
+    (9, 17, 31),
+    (64, 64, 64),
+    (65, 129, 127),
+    (127, 259, 67),
+    (130, 300, 140),
+    (300, 129, 1030),
+    (0, 5, 7),
+    (5, 0, 7),
+    (5, 7, 0),
+];
+
+#[test]
+fn packed_matmul_matches_naive_on_adversarial_shapes() {
+    for &(m, k, n) in SHAPES {
+        let a = randt(m, k, 1);
+        let b = randt(k, n, 2);
+        let want = naive(&a, &b);
+        let got = PACKED.matmul(&a, &b);
+        assert_eq!((got.rows, got.cols), (m, n));
+        if m * n > 0 {
+            assert!(got.max_abs_diff(&want) < tol(k), "packed ({m},{k},{n})");
+        }
+        let got_s = SCALAR.matmul(&a, &b);
+        if m * n > 0 {
+            assert!(got_s.max_abs_diff(&want) < tol(k), "scalar ({m},{k},{n})");
+        }
+    }
+}
+
+#[test]
+fn packed_transpose_variants_match_naive_on_adversarial_shapes() {
+    for &(m, k, n) in SHAPES {
+        // Aᵀ·B with A stored (k, m)
+        let a = randt(k, m, 3);
+        let b = randt(k, n, 4);
+        let want = naive(&a.transpose(), &b);
+        let got = PACKED.matmul_at(&a, &b);
+        if m * n > 0 {
+            assert!(got.max_abs_diff(&want) < tol(k), "at ({m},{k},{n})");
+        }
+
+        // A·Bᵀ with B stored (n, k)
+        let a2 = randt(m, k, 5);
+        let b2 = randt(n, k, 6);
+        let want2 = naive(&a2, &b2.transpose());
+        let got2 = PACKED.matmul_bt(&a2, &b2);
+        if m * n > 0 {
+            assert!(got2.max_abs_diff(&want2) < tol(k), "bt ({m},{k},{n})");
+        }
+    }
+}
+
+#[test]
+fn prop_packed_equals_scalar_on_random_shapes() {
+    prop_check("packed == scalar (random shapes)", 60, |g| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 40);
+        let n = g.usize_in(1, 40);
+        let a = g.tensor(m..=m, k..=k);
+        let b = g.tensor(k..=k, n..=n);
+        let p = PACKED.matmul(&a, &b);
+        let s = SCALAR.matmul(&a, &b);
+        assert!(p.max_abs_diff(&s) < tol(k), "({m},{k},{n})");
+    });
+}
+
+/// The seed crate's streaming loop (i outer, j inner) for the RNG
+/// families — the bit-compat reference for the fused tiled path.
+fn seed_streamed(kind: SketchKind, x: &Tensor, b_proj: usize, seed: (u32, u32)) -> Tensor {
+    let (b, n) = (x.rows, x.cols);
+    let inv = 1.0 / (b_proj as f32).sqrt();
+    let mut out = Tensor::zeros(b_proj, n);
+    for i in 0..b {
+        let xrow = x.row(i);
+        for j in 0..b_proj {
+            let s = match kind {
+                SketchKind::Gauss => {
+                    element_normal(i as u32, j as u32, seed, STREAM_SKETCH) * inv
+                }
+                SketchKind::Rademacher => {
+                    element_rademacher(i as u32, j as u32, seed, STREAM_SKETCH) * inv
+                }
+                _ => unreachable!(),
+            };
+            let orow = &mut out.data[j * n..(j + 1) * n];
+            for c in 0..n {
+                orow[c] += s * xrow[c];
+            }
+        }
+    }
+    out
+}
+
+/// Dense reference with the same per-element accumulation order the fused
+/// structured path uses (ascending input row), computed from the dense S.
+fn dense_ordered(s: &Tensor, x: &Tensor) -> Tensor {
+    let (b, b_proj) = (s.rows, s.cols);
+    let n = x.cols;
+    let mut out = Tensor::zeros(b_proj, n);
+    for i in 0..b {
+        let xrow = x.row(i);
+        for j in 0..b_proj {
+            let sv = s.at(i, j);
+            let orow = &mut out.data[j * n..(j + 1) * n];
+            for c in 0..n {
+                orow[c] += sv * xrow[c];
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn fused_rng_projection_is_bit_identical_to_seed_stream() {
+    // shapes straddling the 64×64 S-tile and the thread-band split; the
+    // last one is big enough to take the multithreaded path
+    for &(b, n, bp) in
+        &[(5usize, 3usize, 2usize), (64, 16, 64), (129, 9, 65), (200, 4, 130), (300, 50, 80)]
+    {
+        let x = randt(b, n, 7);
+        for kind in [SketchKind::Gauss, SketchKind::Rademacher] {
+            let want = seed_streamed(kind, &x, bp, (3, 4));
+            let got = sketch::project_streamed(kind, &x, bp, (3, 4));
+            assert_eq!(want.data, got.data, "{kind:?} ({b},{n},{bp})");
+        }
+    }
+}
+
+#[test]
+fn fused_projection_matches_dense_sketch_for_all_kinds() {
+    prop_check("fused project == dense SᵀX (all kinds)", 25, |g| {
+        let b = g.usize_in(1, 70);
+        let n = g.usize_in(1, 12);
+        let bp = g.usize_in(1, 70);
+        let seed = g.seed_pair();
+        let x = g.tensor(b..=b, n..=n);
+        for kind in SketchKind::ALL {
+            // Every family shares entry formulas and ascending-row
+            // accumulation order with the dense construction, so the
+            // agreement is exact, not approximate.
+            let s = sketch::sketch(kind, b, bp, seed);
+            let want = dense_ordered(&s, &x);
+            let got = sketch::project_streamed(kind, &x, bp, seed);
+            assert_eq!(want.data, got.data, "{kind:?} ({b},{n},{bp})");
+        }
+    });
+}
+
+#[test]
+fn fused_projection_never_needs_huge_b_proj_edgecases() {
+    // b_proj ≫ b and b ≫ b_proj, both across the tile boundary
+    for &(b, bp) in &[(3usize, 300usize), (300, 3), (1, 1), (65, 1), (1, 65)] {
+        let x = randt(b, 5, 9);
+        for kind in SketchKind::ALL {
+            let s = sketch::sketch(kind, b, bp, (1, 2));
+            let want = dense_ordered(&s, &x);
+            let got = sketch::project_streamed(kind, &x, bp, (1, 2));
+            assert_eq!(want.data, got.data, "{kind:?} ({b},{bp})");
+        }
+    }
+}

@@ -1,0 +1,248 @@
+//! Offline stand-in for the `anyhow` crate, covering exactly the subset the
+//! workspace uses: `Result`/`Error`, `anyhow!`, `bail!`, and the `Context`
+//! extension trait (`.context(..)` / `.with_context(..)` on `Result` and
+//! `Option`).  Error chains render like upstream anyhow: `{}` shows the
+//! outermost message, `{:#}` the colon-joined chain, `{:?}` a multi-line
+//! "Caused by" listing.
+//!
+//! Mirrors upstream's coherence trick: `Error` deliberately does NOT
+//! implement `std::error::Error`, which is what lets the blanket
+//! `From<E: std::error::Error>` impl and the `Context` impls coexist.
+
+use std::fmt;
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamic error with a chain of context messages.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Construct from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error { msg: ctx.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// Capture a `std::error::Error` together with its source chain.
+    pub fn from_std(e: &(dyn std::error::Error + 'static)) -> Error {
+        let source = e.source().map(|s| Box::new(Error::from_std(s)));
+        Error { msg: e.to_string(), source }
+    }
+
+    /// Iterate the chain from the outermost message inward.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self) }
+    }
+
+    /// The innermost error message.
+    pub fn root_cause(&self) -> &Error {
+        let mut cur = self;
+        while let Some(s) = &cur.source {
+            cur = s;
+        }
+        cur
+    }
+}
+
+/// Iterator over an error chain (see [`Error::chain`]).
+pub struct Chain<'a> {
+    next: Option<&'a Error>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a Error;
+
+    fn next(&mut self) -> Option<&'a Error> {
+        let cur = self.next?;
+        self.next = cur.source.as_deref();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            let mut cur = self.source.as_deref();
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = e.source.as_deref();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            let mut cur = self.source.as_deref();
+            let mut i = 0usize;
+            while let Some(e) = cur {
+                write!(f, "\n    {i}: {}", e.msg)?;
+                cur = e.source.as_deref();
+                i += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+// `Error: !std::error::Error`, so this cannot overlap `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+mod ext {
+    use super::Error;
+
+    /// Sealed conversion helper so `Context` covers both plain
+    /// `std::error::Error` values and `anyhow::Error` itself.
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoError for E {
+        fn into_error(self) -> Error {
+            Error::from_std(&self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: ext::IntoError> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_error().context(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_render() {
+        let r: Result<()> = Err(io_err()).context("opening config");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "opening config");
+        assert_eq!(format!("{e:#}"), "opening config: gone");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn option_context_and_bail() {
+        fn f(x: Option<u32>) -> Result<u32> {
+            let v = x.context("missing")?;
+            if v == 0 {
+                bail!("zero not allowed: {v}");
+            }
+            Ok(v)
+        }
+        assert_eq!(f(Some(3)).unwrap(), 3);
+        assert_eq!(format!("{}", f(None).unwrap_err()), "missing");
+        assert_eq!(format!("{}", f(Some(0)).unwrap_err()), "zero not allowed: 0");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn with_context_and_chain_iter() {
+        let r: Result<(), Error> = Err(Error::msg("inner"));
+        let e = r.with_context(|| format!("outer {}", 1)).unwrap_err();
+        let msgs: Vec<String> = e.chain().map(|x| x.msg.clone()).collect();
+        assert_eq!(msgs, vec!["outer 1".to_string(), "inner".to_string()]);
+        assert_eq!(format!("{}", e.root_cause()), "inner");
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = anyhow!("plain");
+        let b = anyhow!("x = {}", 2);
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(format!("{a}"), "plain");
+        assert_eq!(format!("{b}"), "x = 2");
+        assert_eq!(format!("{c}"), "owned");
+    }
+}
