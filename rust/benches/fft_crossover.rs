@@ -1,11 +1,12 @@
 //! The O(B²N) dense-sketch vs O(BN log B) fast-transform crossover
 //! (paper §3.5: DCT/DFT "have theoretically computational advantage" —
-//! here we measure where it actually materializes).
+//! here we measure where it actually materializes), plus the batched
+//! (panel-FFT, pool-dispatched) vs column-by-column SORS comparison.
 
-use rmmlinear::rmm::fft::sors_project_fast;
+use rmmlinear::rmm::fft::{sors_project_cols, sors_project_fast};
 use rmmlinear::rmm::{self, SketchKind};
 use rmmlinear::rng::philox::PhiloxStream;
-use rmmlinear::tensor::Tensor;
+use rmmlinear::tensor::{kernels, pool, Tensor};
 use rmmlinear::util::bench::{black_box, Bencher};
 
 fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
@@ -14,11 +15,12 @@ fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
 }
 
 fn main() {
-    rmmlinear::tensor::kernels::init_from_env();
+    kernels::init_from_env();
     println!(
-        "host backend: {} ({} threads)",
-        rmmlinear::tensor::kernels::active().name(),
-        rmmlinear::tensor::kernels::threads::num_threads()
+        "host backend: {} ({} threads, {} pool workers)",
+        kernels::active().name(),
+        kernels::threads::num_threads(),
+        pool::global().workers(),
     );
     let mut b = Bencher::new();
     let n = 64;
@@ -32,12 +34,28 @@ fn main() {
         b.bench(&format!("dense_dct/B={rows}"), || {
             black_box(rmm::project(SketchKind::Dct, &x, b_proj, (1, 2)));
         });
-        b.bench(&format!("fast_dct/B={rows}"), || {
+        // batched panel path (the default) under its own label, with the
+        // column-by-column reference alongside for the same shape
+        b.bench(&format!("fast_dct_batched/B={rows}"), || {
             black_box(sors_project_fast(true, &x, b_proj, (1, 2)));
         });
-        b.bench(&format!("fast_dft/B={rows}"), || {
+        b.bench(&format!("fast_dct_cols/B={rows}"), || {
+            black_box(sors_project_cols(true, &x, b_proj, (1, 2)));
+        });
+        b.bench(&format!("fast_dft_batched/B={rows}"), || {
             black_box(sors_project_fast(false, &x, b_proj, (1, 2)));
         });
+        b.bench(&format!("fast_dft_cols/B={rows}"), || {
+            black_box(sors_project_cols(false, &x, b_proj, (1, 2)));
+        });
+    }
+    // The batched path must be visible in the report under its own label
+    // (downstream tooling diffs on these names).
+    for needle in ["fast_dct_batched/", "fast_dft_batched/", "fast_dct_cols/"] {
+        assert!(
+            b.results.iter().any(|r| r.name.contains(needle)),
+            "missing '{needle}' series in the crossover report"
+        );
     }
     b.write_report("reports/bench_fft_crossover.json");
 }

@@ -8,13 +8,15 @@
 //! the packed backend clears the scalar reference by ≥4× at 512³.
 //!
 //! `--json` additionally writes `reports/BENCH_kernels.json` (GFLOP/s per
-//! kernel × shape × backend + the 512³ speedup) so later PRs have a perf
-//! trajectory to diff against.
+//! kernel × shape × backend, the 512³ speedup, the compute pool's task
+//! grain / steal counters, and the batched-vs-column SORS comparison) so
+//! later PRs have a perf trajectory to diff against.
 
-use rmmlinear::rmm::{self, sketch, SketchKind};
+use rmmlinear::bench_harness::runner::num_or_null;
+use rmmlinear::rmm::{self, fft, sketch, SketchKind};
 use rmmlinear::rng::philox::PhiloxStream;
-use rmmlinear::tensor::kernels::{self, Backend, PACKED, SCALAR};
-use rmmlinear::tensor::{matmul_at, Tensor};
+use rmmlinear::tensor::kernels::{self, packed, Backend, PACKED, SCALAR};
+use rmmlinear::tensor::{matmul_at, pool, Tensor};
 use rmmlinear::util::bench::{black_box, Bencher};
 use rmmlinear::util::json::Json;
 
@@ -167,6 +169,31 @@ fn main() {
         }
     }
 
+    // ---- batched vs column-by-column SORS (the fft.rs rewrite) ----
+    let mut sors_batched_speedup_1024 = f64::NAN;
+    for &bb in &[1024usize, 2048] {
+        let (nn, bp) = (64usize, bb / 8);
+        let xs = randt(bb, nn, 23);
+        let batched = {
+            let label = format!("sors_fast/batched/B={bb}");
+            bench_row(&mut b, "sors_fast", "batched", &label, (bb, bp, nn), || {
+                black_box(fft::sors_project_fast(true, &xs, bp, (5, 6)));
+            })
+        };
+        let cols = {
+            let label = format!("sors_fast/cols/B={bb}");
+            bench_row(&mut b, "sors_fast", "cols", &label, (bb, bp, nn), || {
+                black_box(fft::sors_project_cols(true, &xs, bp, (5, 6)));
+            })
+        };
+        if bb == 1024 && batched.mean_ns > 0.0 {
+            sors_batched_speedup_1024 = cols.mean_ns / batched.mean_ns;
+        }
+        krows.push(batched);
+        krows.push(cols);
+    }
+    println!("batched vs column SORS speedup @ B=1024: {sors_batched_speedup_1024:.2}x");
+
     let speedup_512 = {
         let find = |bname: &str| {
             krows
@@ -181,13 +208,52 @@ fn main() {
     };
     println!("packed vs scalar speedup @ 512x512x512: {speedup_512:.2}x");
 
+    // ---- pool observability: task grain + steal counts for one 512³ ----
+    let nt = kernels::threads::num_threads();
+    let pool_512 = {
+        let a = randt(512, 512, 21);
+        let bm = randt(512, 512, 22);
+        let before = pool::stats();
+        black_box(PACKED.matmul(&a, &bm));
+        pool::stats().delta_since(before)
+    };
+    let totals = pool::stats();
+    println!(
+        "pool: {} threads ({} workers), 512³ grain {} rows, {} tasks / {} steals per 512³ gemm",
+        nt,
+        pool::global().workers(),
+        packed::gemm_task_grain(512, nt),
+        pool_512.tasks,
+        pool_512.steals,
+    );
+
     b.write_report("reports/bench_rmm_micro.json");
     if json_mode {
         let report = Json::obj(vec![
             ("experiment", Json::str("kernels")),
-            ("threads", Json::num(kernels::threads::num_threads() as f64)),
+            ("threads", Json::num(nt as f64)),
             ("default_backend", Json::str(kernels::active().name())),
-            ("speedup_512", Json::num(speedup_512)),
+            // num_or_null: the JSON codec rejects NaN, and either speedup
+            // can be NaN if a timing came back degenerate
+            ("speedup_512", num_or_null(speedup_512)),
+            ("sors_batched_speedup_1024", num_or_null(sors_batched_speedup_1024)),
+            (
+                "pool",
+                Json::obj(vec![
+                    ("threads", Json::num(nt as f64)),
+                    ("workers", Json::num(pool::global().workers() as f64)),
+                    (
+                        "gemm_grain_512",
+                        Json::num(packed::gemm_task_grain(512, nt) as f64),
+                    ),
+                    ("tasks_per_512_gemm", Json::num(pool_512.tasks as f64)),
+                    ("steals_per_512_gemm", Json::num(pool_512.steals as f64)),
+                    ("total_runs", Json::num(totals.runs as f64)),
+                    ("total_par_runs", Json::num(totals.par_runs as f64)),
+                    ("total_tasks", Json::num(totals.tasks as f64)),
+                    ("total_steals", Json::num(totals.steals as f64)),
+                ]),
+            ),
             ("rows", Json::Arr(krows.iter().map(|r| r.to_json()).collect())),
         ]);
         let path = "reports/BENCH_kernels.json";

@@ -10,7 +10,7 @@ use crate::data::{Batcher, Split, Task, TaskGen, Tokenizer};
 use crate::rmm::{self, SketchKind};
 use crate::rng::philox::PhiloxStream;
 use crate::runtime::{Engine, Manifest, Variant};
-use crate::tensor::{kernels, Tensor};
+use crate::tensor::{kernels, pool, Tensor};
 use crate::util::json::Json;
 
 /// Everything measured in one run (a row of a table / a series of a fig).
@@ -32,6 +32,12 @@ pub struct RunResult {
     pub host_exact_ms: f64,
     /// Host-side RMM project + contract at this variant's geometry (ms/step).
     pub host_rmm_ms: f64,
+    /// Compute-pool thread policy in force during the run.
+    pub pool_threads: usize,
+    /// Pool tasks executed over the whole run (host kernels only).
+    pub pool_tasks: u64,
+    /// Tasks claimed cross-queue (work stealing) over the whole run.
+    pub pool_steals: u64,
     pub train_losses: Vec<(usize, f64)>,
     pub eval_losses: Vec<(usize, f64)>,
     pub probe_series: Vec<(usize, [f64; 5])>,
@@ -63,6 +69,9 @@ impl RunResult {
             ("backend", Json::str(self.backend.clone())),
             ("host_exact_ms", num_or_null(self.host_exact_ms)),
             ("host_rmm_ms", num_or_null(self.host_rmm_ms)),
+            ("pool_threads", Json::num(self.pool_threads as f64)),
+            ("pool_tasks", Json::num(self.pool_tasks as f64)),
+            ("pool_steals", Json::num(self.pool_steals as f64)),
         ])
     }
 }
@@ -166,6 +175,7 @@ pub fn run_finetune(
     mut opts: RunOpts<'_>,
 ) -> Result<RunResult> {
     let variant = manifest.variant(variant_name)?;
+    let pool_before = pool::stats();
     let tok = Tokenizer::new(variant.config.vocab_size);
     let mut trainer = Trainer::new(manifest, variant, task, opts.train.clone())?;
     if let Some((names, params)) = opts.warm_start {
@@ -244,6 +254,7 @@ pub fn run_finetune(
         trainer.evaluate(engine, &tok)?
     };
     let (host_exact_ms, host_rmm_ms) = host_grad_baseline(variant);
+    let pool_delta = pool::stats().delta_since(pool_before);
     Ok(RunResult {
         variant: variant_name.to_string(),
         task: task.name().to_string(),
@@ -253,6 +264,9 @@ pub fn run_finetune(
         backend: kernels::active().name().to_string(),
         host_exact_ms,
         host_rmm_ms,
+        pool_threads: kernels::threads::num_threads(),
+        pool_tasks: pool_delta.tasks,
+        pool_steals: pool_delta.steals,
         final_train_loss: train_losses.last().map(|&(_, l)| l).unwrap_or(f64::NAN),
         steps: opts.train.steps,
         wall_s,

@@ -47,6 +47,26 @@ impl Default for TrainConfig {
     }
 }
 
+/// Compute-pool knobs (see `tensor::pool`).  `None` fields express no
+/// preference: the `RMM_THREADS` / `RMM_POOL_GRAIN` env vars and the
+/// built-in derivations then decide per run.  Neither knob can change
+/// results — the pool is deterministic for any setting — they only trade
+/// dispatch overhead against load balance.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PoolConfig {
+    /// Participants per parallel run (caller + workers), >= 1.
+    pub threads: Option<usize>,
+    /// Rows per task for row-partitioned kernels, >= 1 (kernels align and
+    /// clamp it to their block geometry).
+    pub grain_rows: Option<usize>,
+}
+
+impl PoolConfig {
+    pub fn is_unset(&self) -> bool {
+        self.threads.is_none() && self.grain_rows.is_none()
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     /// Artifact variant name (a key of manifest.json), e.g.
@@ -60,6 +80,8 @@ pub struct ExperimentConfig {
     /// the config expresses no preference and lower-precedence sources
     /// (env var, built-in default) decide.
     pub backend: Option<String>,
+    /// Compute-pool thread-count / task-grain overrides.
+    pub pool: PoolConfig,
     pub train: TrainConfig,
 }
 
@@ -71,6 +93,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".to_string(),
             out_dir: "runs".to_string(),
             backend: None,
+            pool: PoolConfig::default(),
             train: TrainConfig::default(),
         }
     }
@@ -87,6 +110,7 @@ impl ExperimentConfig {
                 "artifacts_dir" => cfg.artifacts_dir = req_str(v, k)?,
                 "out_dir" => cfg.out_dir = req_str(v, k)?,
                 "backend" => cfg.backend = Some(req_str(v, k)?),
+                "pool" => cfg.pool = parse_pool(v)?,
                 "train" => cfg.train = parse_train(v)?,
                 other => bail!("unknown config key '{other}'"),
             }
@@ -115,6 +139,18 @@ impl ExperimentConfig {
                 map.insert("backend".to_string(), Json::str(b.clone()));
             }
         }
+        if !self.pool.is_unset() {
+            let mut p = Vec::new();
+            if let Some(t) = self.pool.threads {
+                p.push(("threads", Json::num(t as f64)));
+            }
+            if let Some(g) = self.pool.grain_rows {
+                p.push(("grain_rows", Json::num(g as f64)));
+            }
+            if let Json::Obj(map) = &mut j {
+                map.insert("pool".to_string(), Json::obj(p));
+            }
+        }
         j
     }
 
@@ -131,6 +167,19 @@ impl ExperimentConfig {
         }
     }
 
+    /// Install this config's pool overrides (thread count, task grain) as
+    /// process-global settings.  Unset fields are left to the `RMM_*` env
+    /// vars / built-in derivations; returns whether anything was applied.
+    pub fn apply_pool(&self) -> bool {
+        if let Some(t) = self.pool.threads {
+            crate::tensor::kernels::threads::set_threads_override(t);
+        }
+        if let Some(g) = self.pool.grain_rows {
+            crate::tensor::pool::set_grain_override(g);
+        }
+        !self.pool.is_unset()
+    }
+
     pub fn validate(&self) -> Result<()> {
         if crate::data::Task::parse(&self.task).is_none() {
             bail!("unknown task '{}'", self.task);
@@ -139,6 +188,12 @@ impl ExperimentConfig {
             if crate::tensor::kernels::BackendKind::parse(b).is_none() {
                 bail!("unknown backend '{b}' (expected packed|scalar)");
             }
+        }
+        if self.pool.threads == Some(0) {
+            bail!("pool.threads must be >= 1");
+        }
+        if self.pool.grain_rows == Some(0) {
+            bail!("pool.grain_rows must be >= 1");
         }
         let t = &self.train;
         if t.steps == 0 {
@@ -164,6 +219,19 @@ fn req_str(v: &Json, key: &str) -> Result<String> {
     v.as_str()
         .map(|s| s.to_string())
         .with_context(|| format!("'{key}' must be a string"))
+}
+
+fn parse_pool(j: &Json) -> Result<PoolConfig> {
+    let mut p = PoolConfig::default();
+    let obj = j.as_obj().context("'pool' must be an object")?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "threads" => p.threads = Some(num(v, k)? as usize),
+            "grain_rows" => p.grain_rows = Some(num(v, k)? as usize),
+            other => bail!("unknown pool key '{other}'"),
+        }
+    }
+    Ok(p)
 }
 
 fn parse_train(j: &Json) -> Result<TrainConfig> {
@@ -258,9 +326,32 @@ mod tests {
             r#"{"train": {"steps": 0}}"#,
             r#"{"train": {"optimizer": "rmsprop"}}"#,
             r#"{"train": {"lr": -1}}"#,
+            r#"{"pool": {"threads": 0}}"#,
+            r#"{"pool": {"grain_rows": 0}}"#,
+            r#"{"pool": {"bogus": 1}}"#,
         ] {
             let j = Json::parse(src).unwrap();
             assert!(ExperimentConfig::from_json(&j).is_err(), "{src}");
         }
+    }
+
+    #[test]
+    fn pool_section_parses_roundtrips_and_applies() {
+        let _g = crate::tensor::pool::knob_test_lock();
+        let j = Json::parse(r#"{"pool": {"threads": 3, "grain_rows": 16}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.pool.threads, Some(3));
+        assert_eq!(cfg.pool.grain_rows, Some(16));
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        assert!(cfg.apply_pool());
+        // restore process defaults for the other tests in this binary
+        crate::tensor::kernels::threads::set_threads_override(0);
+        crate::tensor::pool::set_grain_override(0);
+
+        // absent section -> no preference, nothing applied
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(cfg.pool.is_unset());
+        assert!(!cfg.apply_pool());
     }
 }

@@ -57,11 +57,15 @@ fn reports_dir(args: &Args) -> PathBuf {
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv, &["roberta", "all-tasks", "verbose", "help"]);
     use rmmlinear::tensor::kernels;
+    use rmmlinear::tensor::pool;
     // Backend precedence: --backend flag > config file > RMM_BACKEND env.
+    // Pool knobs follow the same layering (flag > config > RMM_THREADS /
+    // RMM_POOL_GRAIN env, which the pool re-reads per run).
     let mut backend_chosen = false;
     if let Some(path) = args.get("config") {
         let cfg = rmmlinear::config::ExperimentConfig::load(Path::new(path))?;
         backend_chosen = cfg.apply_backend(); // false if no 'backend' key
+        cfg.apply_pool(); // no-op if no 'pool' section
     }
     if let Some(bk) = args.get("backend") {
         let kind = kernels::BackendKind::parse(bk)
@@ -71,6 +75,22 @@ fn run(argv: &[String]) -> Result<()> {
     }
     if !backend_chosen {
         kernels::init_from_env(); // RMM_BACKEND, default packed
+    }
+    if let Some(t) = args.get("threads") {
+        let n: usize = t
+            .parse()
+            .ok()
+            .filter(|&n| n >= 1)
+            .with_context(|| format!("--threads must be a positive integer, got '{t}'"))?;
+        kernels::threads::set_threads_override(n);
+    }
+    if let Some(g) = args.get("pool-grain") {
+        let n: usize = g
+            .parse()
+            .ok()
+            .filter(|&n| n >= 1)
+            .with_context(|| format!("--pool-grain must be a positive integer, got '{g}'"))?;
+        pool::set_grain_override(n);
     }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
@@ -120,10 +140,16 @@ COMMANDS
 COMMON OPTIONS
   --artifacts DIR   artifact directory (default: artifacts)
   --reports DIR     bench report directory (default: reports)
-  --config FILE     experiment config JSON (applies its 'backend' key)
+  --config FILE     experiment config JSON (applies its 'backend' key and
+                    'pool' section: {\"threads\": N, \"grain_rows\": N})
   --backend NAME    host GEMM backend: packed (default) | scalar
-                    (overrides --config; env override: RMM_BACKEND;
-                    threads: RMM_THREADS)
+                    (overrides --config; env override: RMM_BACKEND)
+  --threads N       compute-pool participants per parallel run
+                    (overrides --config; env: RMM_THREADS, re-read per
+                    run; results are bit-identical for every value)
+  --pool-grain N    rows per pool task for row-partitioned kernels
+                    (overrides --config; env: RMM_POOL_GRAIN; load
+                    balance only, never affects results)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {

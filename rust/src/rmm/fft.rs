@@ -7,8 +7,24 @@
 //! implementation so the crossover between O(B²N) dense sketching and
 //! O(BN log B) structured sketching can actually be *measured*
 //! (`rust/benches/fft_crossover.rs`).
+//!
+//! # Batched SORS
+//!
+//! [`sors_project_fast`] no longer transforms X column-by-column: columns
+//! are grouped into [`FFT_PANEL_W`]-wide panels, each panel is one task on
+//! the persistent work-stealing pool (`tensor::pool`), and
+//! [`fft_panel_inplace`] runs the butterfly schedule once per panel with
+//! the column index as the unit-stride inner loop — twiddle factors are
+//! computed once per (stage, k) instead of once per column, and the
+//! per-lane arithmetic vectorizes.  Every lane executes *exactly* the
+//! f64 operation sequence of the scalar [`fft_inplace`], so the batched
+//! path is **bit-identical** to the column-by-column reference
+//! ([`sors_project_cols`], kept for the crossover bench and the equality
+//! tests) for any panel width, task grain and thread count.
 
 use crate::rmm::sketch::{row_selection, sign_flips};
+use crate::tensor::kernels::threads;
+use crate::tensor::pool::{self, SharedMut};
 use crate::tensor::Tensor;
 
 /// In-place iterative radix-2 Cooley-Tukey FFT over (re, im) pairs.
@@ -48,6 +64,70 @@ pub fn fft_inplace(re: &mut [f64], im: &mut [f64]) {
                 im[i + k] = ui + vi;
                 re[i + k + len / 2] = ur - vr;
                 im[i + k + len / 2] = ui - vi;
+                let nr = cur_r * wr - cur_i * wi;
+                cur_i = cur_r * wi + cur_i * wr;
+                cur_r = nr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Columns per batched-FFT panel (one pool task transforms one panel).
+/// Eight f64 lanes keep a B=4096 panel's re+im working set ≈ 512 KiB and
+/// give the stage loops a unit-stride inner dimension to vectorize over.
+pub const FFT_PANEL_W: usize = 8;
+
+/// Batched in-place radix-2 FFT over `w` interleaved complex sequences of
+/// length `n` (layout: element `i` of lane `l` at `[i * w + l]`).
+///
+/// Runs the exact butterfly schedule of [`fft_inplace`] with an inner
+/// loop over lanes; per lane the f64 operation sequence — bit-reversal
+/// swaps, twiddle recurrence, butterfly adds — is identical to the scalar
+/// code, so each lane's result is bit-identical to transforming that
+/// column alone.
+pub fn fft_panel_inplace(re: &mut [f64], im: &mut [f64], n: usize, w: usize) {
+    assert!(w >= 1);
+    assert_eq!(re.len(), n * w);
+    assert_eq!(im.len(), n * w);
+    assert!(n.is_power_of_two(), "radix-2 FFT needs a power-of-two length");
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            for l in 0..w {
+                re.swap(i * w + l, j * w + l);
+                im.swap(i * w + l, j * w + l);
+            }
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * std::f64::consts::PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cur_r, mut cur_i) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let u = (i + k) * w;
+                let v = (i + k + len / 2) * w;
+                for l in 0..w {
+                    let (ur, ui) = (re[u + l], im[u + l]);
+                    let (vr, vi) = (
+                        re[v + l] * cur_r - im[v + l] * cur_i,
+                        re[v + l] * cur_i + im[v + l] * cur_r,
+                    );
+                    re[u + l] = ur + vr;
+                    im[u + l] = ui + vi;
+                    re[v + l] = ur - vr;
+                    im[v + l] = ui - vi;
+                }
                 let nr = cur_r * wr - cur_i * wi;
                 cur_i = cur_r * wi + cur_i * wr;
                 cur_r = nr;
@@ -106,12 +186,17 @@ pub fn dct2_ortho(x: &[f32]) -> Vec<f32> {
     out
 }
 
-/// O(B·N·log B) SORS projection: X_proj = sqrt(B/B_proj)·Rᵀ·H·D·X computed
-/// column-wise with the fast transform (B must be a power of two).
-///
-/// Columns are independent, so they are fanned out over the kernel thread
-/// pool in contiguous bands; each band scatters into the shared output
-/// afterwards (per-column results are identical to the serial loop).
+/// Below this `N·B·log₂B` work estimate the transform stays on the
+/// caller's thread — the crossover bench starts at B=64 where per-column
+/// FFTs are ~µs, and inflating that regime would distort the very
+/// crossover being measured.
+const PAR_WORK_THRESHOLD: f64 = 2.0e5;
+
+/// O(B·N·log B) SORS projection, batched: X_proj = sqrt(B/B_proj)·Rᵀ·H·D·X
+/// with columns transformed a panel at a time (B must be a power of two,
+/// ≥ 2).  Panels are pool tasks writing disjoint column ranges of the
+/// output; results are bit-identical to [`sors_project_cols`] for any
+/// thread count.
 pub fn sors_project_fast(
     use_dct: bool,
     x: &Tensor,
@@ -119,7 +204,7 @@ pub fn sors_project_fast(
     seed: (u32, u32),
 ) -> Tensor {
     let (b, n) = (x.rows, x.cols);
-    assert!(b.is_power_of_two());
+    assert!(b.is_power_of_two() && b >= 2, "SORS fast path needs power-of-two B >= 2");
     let sel = row_selection(b, b_proj, seed);
     let signs = sign_flips(b, seed);
     let scale = (b as f32 / b_proj as f32).sqrt();
@@ -127,75 +212,137 @@ pub fn sors_project_fast(
     if n == 0 || b_proj == 0 {
         return out;
     }
-
-    // Spawn threads only when the transform work dwarfs spawn/join cost —
-    // the crossover bench starts at B=64 where per-column FFTs are ~µs,
-    // and inflating that regime would distort the very crossover measured.
+    let panels = (n + FFT_PANEL_W - 1) / FFT_PANEL_W;
     let work = n as f64 * b as f64 * (b as f64).log2().max(1.0);
-    let nt = if work < 2.0e5 {
-        1
-    } else {
-        crate::tensor::kernels::threads::num_threads().min(n)
-    };
+    let nt = if work < PAR_WORK_THRESHOLD { 1 } else { threads::num_threads().min(panels) };
+    let optr = SharedMut::new(out.data.as_mut_ptr());
+    let (sel, signs) = (&sel, &signs);
+    pool::global().run(nt, panels, |p| {
+        let c0 = p * FFT_PANEL_W;
+        let w = FFT_PANEL_W.min(n - c0);
+        sors_panel(use_dct, x, c0, w, signs, sel, scale, optr, n, b);
+    });
+    out
+}
 
-    if nt <= 1 {
-        // Serial path: write straight into the output, no staging buffer.
-        let mut col = vec![0.0f32; b];
-        for c in 0..n {
-            for i in 0..b {
-                col[i] = signs[i] * x.at(i, c);
-            }
-            let coeffs = if use_dct { dct2_ortho(&col) } else { real_dft_ortho(&col) };
-            for (j, &s) in sel.iter().enumerate() {
-                *out.at_mut(j, c) = scale * coeffs[s];
-            }
-        }
+/// Column-by-column SORS projection (the PR-1 serial path): one scalar
+/// FFT/DCT per column via [`real_dft_ortho`] / [`dct2_ortho`].  Kept as
+/// the reference the batched path is pinned against — exactly, not
+/// approximately — and as the "before" side of the crossover bench.
+pub fn sors_project_cols(
+    use_dct: bool,
+    x: &Tensor,
+    b_proj: usize,
+    seed: (u32, u32),
+) -> Tensor {
+    let (b, n) = (x.rows, x.cols);
+    assert!(b.is_power_of_two() && b >= 2, "SORS fast path needs power-of-two B >= 2");
+    let sel = row_selection(b, b_proj, seed);
+    let signs = sign_flips(b, seed);
+    let scale = (b as f32 / b_proj as f32).sqrt();
+    let mut out = Tensor::zeros(b_proj, n);
+    if n == 0 || b_proj == 0 {
         return out;
     }
-
-    // Parallel path: contiguous column bands, each worker returning the
-    // selected coefficients in column-major band layout
-    // (local_c * b_proj + j), scattered into `out` afterwards.
-    let band_coeffs = |c0: usize, c1: usize| -> Vec<f32> {
-        let mut res = vec![0.0f32; (c1 - c0) * b_proj];
-        let mut col = vec![0.0f32; b];
-        for c in c0..c1 {
-            for i in 0..b {
-                col[i] = signs[i] * x.at(i, c);
-            }
-            let coeffs = if use_dct { dct2_ortho(&col) } else { real_dft_ortho(&col) };
-            let dst = &mut res[(c - c0) * b_proj..(c - c0 + 1) * b_proj];
-            for (d, &s) in dst.iter_mut().zip(&sel) {
-                *d = scale * coeffs[s];
-            }
+    let mut col = vec![0.0f32; b];
+    for c in 0..n {
+        for (i, cv) in col.iter_mut().enumerate() {
+            *cv = signs[i] * x.at(i, c);
         }
-        res
-    };
-    let bands: Vec<(usize, usize)> = (0..nt)
-        .map(|t| {
-            let base = n / nt;
-            let extra = n % nt;
-            let c0 = t * base + t.min(extra);
-            let c1 = c0 + base + usize::from(t < extra);
-            (c0, c1)
-        })
-        .collect();
-    let results: Vec<Vec<f32>> = std::thread::scope(|s| {
-        let handles: Vec<_> = bands
-            .iter()
-            .map(|&(c0, c1)| s.spawn(move || band_coeffs(c0, c1)))
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    for (&(c0, c1), res) in bands.iter().zip(&results) {
-        for c in c0..c1 {
-            let src = &res[(c - c0) * b_proj..(c - c0 + 1) * b_proj];
-            for (j, &v) in src.iter().enumerate() {
-                *out.at_mut(j, c) = v;
-            }
+        let coeffs = if use_dct { dct2_ortho(&col) } else { real_dft_ortho(&col) };
+        for (j, &s) in sel.iter().enumerate() {
+            *out.at_mut(j, c) = scale * coeffs[s];
         }
     }
     out
+}
+
+/// Transform one `w`-column panel (columns `c0 .. c0 + w` of X) and
+/// scatter the selected, scaled coefficient rows into the output.
+///
+/// Mirrors the scalar pipeline operation-for-operation: sign flip in f32,
+/// widen to f64, batched FFT ([`fft_panel_inplace`]), the
+/// [`real_dft_ortho`] / [`dct2_ortho`] post-processing per *selected* row
+/// only (coefficients nobody selected are never finalized), cast to f32,
+/// scale in f32.
+#[allow(clippy::too_many_arguments)]
+fn sors_panel(
+    use_dct: bool,
+    x: &Tensor,
+    c0: usize,
+    w: usize,
+    signs: &[f32],
+    sel: &[usize],
+    scale: f32,
+    out: SharedMut<f32>,
+    n: usize,
+    b: usize,
+) {
+    let mut re = vec![0.0f64; b * w];
+    let mut im = vec![0.0f64; b * w];
+    if use_dct {
+        // Makhoul permutation of the sign-flipped columns:
+        // v[i] = col[2i], v[b-1-i] = col[2i+1].
+        for i in 0..b / 2 {
+            let even = x.row(2 * i);
+            let odd = x.row(2 * i + 1);
+            for l in 0..w {
+                re[i * w + l] = (signs[2 * i] * even[c0 + l]) as f64;
+                re[(b - 1 - i) * w + l] = (signs[2 * i + 1] * odd[c0 + l]) as f64;
+            }
+        }
+    } else {
+        for i in 0..b {
+            let row = x.row(i);
+            for l in 0..w {
+                re[i * w + l] = (signs[i] * row[c0 + l]) as f64;
+            }
+        }
+    }
+    fft_panel_inplace(&mut re, &mut im, b, w);
+
+    if use_dct {
+        for (j, &s) in sel.iter().enumerate() {
+            let ang = -std::f64::consts::PI * s as f64 / (2.0 * b as f64);
+            let (ca, sa) = (ang.cos(), ang.sin());
+            let sc = if s == 0 {
+                (1.0 / b as f64).sqrt()
+            } else {
+                (2.0 / b as f64).sqrt()
+            };
+            for l in 0..w {
+                let val = re[s * w + l] * ca - im[s * w + l] * sa;
+                let cf = (val * sc) as f32;
+                // SAFETY: this task owns columns [c0, c0 + w) of every
+                // output row; j*n + c0 + l is inside that region.
+                unsafe {
+                    *out.ptr().add(j * n + c0 + l) = scale * cf;
+                }
+            }
+        }
+    } else {
+        let s1 = 1.0 / (b as f64).sqrt();
+        let s2 = (2.0 / b as f64).sqrt();
+        for (j, &s) in sel.iter().enumerate() {
+            for l in 0..w {
+                // Row layout of `real_dft_ortho`: DC, (cos, sin) pairs,
+                // Nyquist (b is even, so row b−1 is the Nyquist row).
+                let cf = if s == 0 {
+                    (re[l] * s1) as f32
+                } else if s == b - 1 {
+                    (re[(b / 2) * w + l] * s1) as f32
+                } else if s % 2 == 1 {
+                    (re[((s + 1) / 2) * w + l] * s2) as f32
+                } else {
+                    (-im[(s / 2) * w + l] * s2) as f32
+                };
+                // SAFETY: as above — disjoint column range per task.
+                unsafe {
+                    *out.ptr().add(j * n + c0 + l) = scale * cf;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -208,6 +355,11 @@ mod tests {
     fn randv(n: usize, seed: u64) -> Vec<f32> {
         let mut s = PhiloxStream::new(seed, 3);
         (0..n).map(|_| s.next_normal()).collect()
+    }
+
+    fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut s = PhiloxStream::new(seed, 3);
+        Tensor::from_fn(rows, cols, |_, _| s.next_normal())
     }
 
     #[test]
@@ -226,6 +378,24 @@ mod tests {
             }
             assert!((re[k] - sr).abs() < 1e-8, "k={k}");
             assert!((im[k] - si).abs() < 1e-8, "k={k}");
+        }
+    }
+
+    #[test]
+    fn panel_fft_is_bit_identical_to_scalar_fft_per_lane() {
+        let (n, w) = (32usize, 3usize);
+        let src = randv(n * w, 4);
+        let mut pre: Vec<f64> = src.iter().map(|&v| v as f64).collect();
+        let mut pim = vec![0.0f64; n * w];
+        fft_panel_inplace(&mut pre, &mut pim, n, w);
+        for l in 0..w {
+            let mut re: Vec<f64> = (0..n).map(|i| src[i * w + l] as f64).collect();
+            let mut im = vec![0.0f64; n];
+            fft_inplace(&mut re, &mut im);
+            for i in 0..n {
+                assert_eq!(pre[i * w + l], re[i], "lane {l} re[{i}]");
+                assert_eq!(pim[i * w + l], im[i], "lane {l} im[{i}]");
+            }
         }
     }
 
@@ -254,6 +424,28 @@ mod tests {
     }
 
     #[test]
+    fn batched_sors_exactly_matches_column_reference() {
+        // Exact (bit-level) equality: every panel lane runs the same f64
+        // op sequence as the scalar per-column pipeline.  Shapes cover
+        // partial panels (n % FFT_PANEL_W != 0), n < panel, b_proj > b.
+        for &(b, n, bp) in &[
+            (2usize, 3usize, 2usize),
+            (4, 1, 7),
+            (32, 5, 12),
+            (64, 8, 16),
+            (64, 19, 64),
+            (256, 9, 32),
+        ] {
+            let x = randt(b, n, b as u64 + n as u64);
+            for use_dct in [true, false] {
+                let cols = sors_project_cols(use_dct, &x, bp, (5, 6));
+                let fast = sors_project_fast(use_dct, &x, bp, (5, 6));
+                assert_eq!(cols.data, fast.data, "b={b} n={n} bp={bp} dct={use_dct}");
+            }
+        }
+    }
+
+    #[test]
     fn fast_sors_matches_dense_sketch() {
         let mut s = PhiloxStream::new(9, 3);
         let x = Tensor::from_fn(32, 5, |_, _| s.next_normal());
@@ -262,6 +454,16 @@ mod tests {
             let fast = sors_project_fast(use_dct, &x, 12, (5, 6));
             assert!(dense.max_abs_diff(&fast) < 1e-4, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn empty_sors_shapes() {
+        let x = Tensor::zeros(8, 0);
+        let p = sors_project_fast(true, &x, 4, (1, 2));
+        assert_eq!((p.rows, p.cols), (4, 0));
+        let x = Tensor::zeros(8, 3);
+        let p = sors_project_fast(false, &x, 0, (1, 2));
+        assert_eq!((p.rows, p.cols), (0, 3));
     }
 
     #[test]

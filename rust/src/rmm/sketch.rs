@@ -8,17 +8,19 @@
 //! generated tile-by-tile from the Philox counters *inside* the blocked
 //! accumulation loop and never materialized — for any sketch family,
 //! including the structured DCT/DFT/rowsample paths that previously fell
-//! back to dense `sketch()` + `matmul_at`.  Output rows are fanned out
-//! over threads (disjoint bands, see `tensor::kernels::threads`), and per
+//! back to dense `sketch()` + `matmul_at`.  Output row blocks are
+//! dispatched as tasks on the persistent work-stealing pool
+//! (`tensor::pool`; disjoint `&mut` blocks, stealable grain), and per
 //! output element the input rows accumulate in ascending order, so the
 //! result is bit-identical to the original streaming loop regardless of
-//! tiling or thread count.
+//! tiling, task grain or thread count.
 
 use crate::rng::philox::{
     element_normal, element_rademacher, element_uniform_int, STREAM_ROWSEL,
     STREAM_SIGNS, STREAM_SKETCH,
 };
 use crate::tensor::kernels::threads;
+use crate::tensor::pool;
 use crate::tensor::Tensor;
 
 /// Sketch families (paper §2.1, §3.5 + the Adelman-style row sampler).
@@ -171,7 +173,12 @@ where
     }
     let work = b as f64 * b_proj as f64 * n as f64;
     let nt = if work < PAR_MADD_THRESHOLD { 1 } else { threads::num_threads() };
-    threads::par_row_bands(nt, b_proj, n, &mut out.data, &|j0, jrows, band| {
+    // Row blocks as pool tasks: 8-row alignment (finer than TILE_J, for
+    // load balance at small b_proj — blocks may split an S tile, which
+    // only shortens jb, never changes results) and a 4·TILE_J cap so
+    // steals stay possible.
+    let grain = pool::task_grain(b_proj, nt, 8, 4 * TILE_J);
+    pool::par_row_blocks(nt, b_proj, n, grain, &mut out.data, &|j0, jrows, band| {
         let mut tile = [0.0f32; TILE_I * TILE_J];
         let mut jt = 0;
         while jt < jrows {

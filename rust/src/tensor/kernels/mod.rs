@@ -32,11 +32,14 @@
 //!   updated by rank-1 steps; fixed trip counts + `chunks_exact` let LLVM
 //!   keep the tile in vector registers and emit FMA lanes without any
 //!   intrinsics (portable across x86/aarch64).
-//! * **Threading** ([`threads`]): C's rows are split into contiguous
-//!   bands, one scoped std thread per band (rayon is unavailable offline).
-//!   Bands own disjoint `&mut` output slices — no locks — and per-element
-//!   accumulation order is band-independent, so results are bit-identical
-//!   for any thread count (`RMM_THREADS` to pin).
+//! * **Threading** ([`threads`] + [`crate::tensor::pool`]): work is cut
+//!   into `(jc, row-block)` cache-block tasks and dispatched through the
+//!   persistent work-stealing pool (workers spawned once, parked between
+//!   runs — rayon is unavailable offline).  Tasks own disjoint output
+//!   regions — no locks — and per-element accumulation order is
+//!   task-independent, so results are bit-identical for any thread count
+//!   (`RMM_THREADS`, re-read per run) and any task grain
+//!   (`RMM_POOL_GRAIN`).
 //!
 //! The [`Scalar`] backend is the seed's single-threaded blocked loop
 //! (minus its vectorization-hostile zero-skip branch), kept as the
@@ -46,7 +49,10 @@
 //!
 //! `Packed` is the default.  Override order: `ExperimentConfig::backend`
 //! (config file) / `--backend` (CLI) → [`set_backend`]; `RMM_BACKEND`
-//! env var → [`init_from_env`]; thread count via `RMM_THREADS`.
+//! env var → [`init_from_env`].  Thread count and task grain follow the
+//! same layering through `ExperimentConfig::pool` / `--threads` /
+//! `--pool-grain` and the `RMM_THREADS` / `RMM_POOL_GRAIN` env vars
+//! (see [`threads`] and [`crate::tensor::pool`]).
 
 pub mod micro;
 pub mod pack;

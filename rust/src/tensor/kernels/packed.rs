@@ -2,29 +2,51 @@
 //! matrix view that lets one driver serve `A·B`, `Aᵀ·B` and `A·Bᵀ`.
 //!
 //! Loop nest (BLIS/GotoBLAS order): NC-wide column slabs of C, KC-deep
-//! k-blocks (B panel packed once per slab×block), MC-tall row blocks
-//! (A panel packed per block), then NR×MR microkernel tiles.  C tiles are
-//! loaded, updated and stored through a stack tile so edge handling stays
-//! out of the hot loop.
+//! k-blocks, MC-tall row blocks, then NR×MR microkernel tiles.  C tiles
+//! are loaded, updated and stored through a stack tile so edge handling
+//! stays out of the hot loop.
+//!
+//! # Pool dispatch
+//!
+//! Parallelism comes from the persistent work-stealing pool
+//! (`tensor::pool`), two waves per NC-wide C column slab:
+//!
+//! 1. **Pack B** — the slab's `pc` k-blocks are packed into one shared
+//!    staging buffer, one pool task per block (disjoint destination
+//!    ranges at the closed-form offset `pcols · pc`).  The buffer is
+//!    allocated once per GEMM and bounded at `padded(min(n, NC)) · k`
+//!    floats — the full-k image of ONE column slab, not of all of B —
+//!    and is read-only during the compute wave.
+//! 2. **Compute C** — tasks are row blocks of the slab (height from
+//!    `pool::task_grain`, MR-aligned, at most MC).  Each task owns its
+//!    C block outright: it loops over the k-blocks ascending, packs its
+//!    own A panel per block, and sweeps the microtiles.
 //!
 //! Per C element the k-accumulation order is ascending (KC blocks in
-//! order, k ascending inside the kernel), independent of blocking and of
-//! the thread count — results are deterministic.
+//! order, k ascending inside the kernel) and is entirely contained in the
+//! element's owning task — independent of blocking, task grain, steal
+//! order and thread count — so results are bit-identical for any
+//! `RMM_THREADS`.
 
 use super::micro::{kernel, MR, NR};
 use super::pack::{pack_a, pack_b};
 use super::threads;
+use crate::tensor::pool::{self, SharedMut};
 use crate::tensor::Tensor;
 
-/// Rows of C per A-pack block (L2-sized: MC·KC·4B ≈ 128 KiB).
+/// Max rows of C per task / A-pack block (L2-sized: MC·KC·4B ≈ 128 KiB).
 const MC: usize = 128;
-/// k-depth per packed block (panel strips stay L1-resident).
+/// k-depth per packed block (panel strips stay L1-resident; one
+/// NC × KC block of the staged slab is ≈ 1 MiB, L3-resident).
 const KC: usize = 256;
-/// Columns of C per B-pack slab (B slab ≈ 1 MiB, L3-resident).
+/// Columns of C per B-pack slab.  The staging buffer holds one slab at
+/// full k-depth (`padded_cols(min(n, NC)) · k` floats — ~16 MiB for
+/// k = 4096), but the microtile sweep only streams the current KC-deep
+/// block of it, so the working set per k-block stays L3-sized.
 const NC: usize = 1024;
 
-/// Minimum FLOP count before fanning out to threads (below this the spawn
-/// cost dominates).
+/// Minimum FLOP count before fanning out to the pool (below this the
+/// dispatch cost dominates).
 const PAR_FLOP_THRESHOLD: f64 = 4.0e6;
 
 /// Read-only strided view of a logical `rows × cols` f32 matrix.
@@ -67,11 +89,20 @@ impl<'a> MatRef<'a> {
     }
 }
 
+/// Rounded-up panel width of a `nc`-column B slab.
+#[inline]
+fn padded_cols(nc: usize) -> usize {
+    (nc + NR - 1) / NR * NR
+}
+
+/// The row-block task grain the pool driver picks for an `m`-row GEMM at
+/// `nt` participants (MR-aligned, at most MC).  Exposed so the benches
+/// can report the grain next to the GFLOP/s numbers.
+pub fn gemm_task_grain(m: usize, nt: usize) -> usize {
+    pool::task_grain(m, nt, MR, MC)
+}
+
 /// out = a · b for logical views (out must be zeroed, `a.cols == b.rows`).
-///
-/// The B slab for each (column slab, k-block) is packed **once** on the
-/// calling thread and shared read-only across the row bands, so the
-/// O(k·n) packing work does not scale with the thread count.
 pub fn gemm(a: MatRef<'_>, b: MatRef<'_>, out: &mut Tensor) {
     let (m, k, n) = (a.rows, a.cols, b.cols);
     debug_assert_eq!(a.cols, b.rows);
@@ -82,67 +113,96 @@ pub fn gemm(a: MatRef<'_>, b: MatRef<'_>, out: &mut Tensor) {
     let flops = 2.0 * m as f64 * k as f64 * n as f64;
     let nt = if flops < PAR_FLOP_THRESHOLD { 1 } else { threads::num_threads() };
 
-    let b_panel_cols = ((n.min(NC) + NR - 1) / NR) * NR;
-    let mut bbuf = vec![0.0f32; b_panel_cols * k.min(KC)];
+    let n_pc = (k + KC - 1) / KC;
+    let grain = gemm_task_grain(m, nt);
+    let n_ic = (m + grain - 1) / grain;
+    // Staging for one NC-wide column slab of B at full k-depth; block pci
+    // lives at the closed-form offset pcols·pc (its k-blocks are pcols·kc
+    // each, stacked in pc order).
+    let mut bbuf = vec![0.0f32; padded_cols(n.min(NC)) * k];
+    let cptr = SharedMut::new(out.data.as_mut_ptr());
 
     let mut jc = 0;
     while jc < n {
         let nc = NC.min(n - jc);
-        let mut pc = 0;
-        while pc < k {
-            let kc = KC.min(k - pc);
-            pack_b(&mut bbuf, b, pc, kc, jc, nc);
-            let bshared: &[f32] = &bbuf;
-            threads::par_row_bands(nt, m, n, &mut out.data, &|i0, band_rows, band| {
-                gemm_rows(a, bshared, kc, pc, jc, nc, i0, band_rows, band, n);
+        let pcols = padded_cols(nc);
+        // ---- wave 1: pack this slab's k-blocks (one pool task each) ----
+        {
+            let bptr = SharedMut::new(bbuf.as_mut_ptr());
+            pool::global().run(nt, n_pc, |pci| {
+                let pc = pci * KC;
+                let kc = KC.min(k - pc);
+                // SAFETY: destination ranges [pcols·pc, pcols·(pc + kc))
+                // are disjoint across tasks and within bbuf's prefix.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(bptr.ptr().add(pcols * pc), pcols * kc)
+                };
+                pack_b(dst, b, pc, kc, jc, nc);
             });
-            pc += KC;
         }
+        let bslab = &bbuf[..pcols * k];
+
+        // ---- wave 2: row-block compute tasks over disjoint C blocks ----
+        pool::global().run(nt, n_ic, |ici| {
+            let i0 = ici * grain;
+            let mrows = grain.min(m - i0);
+            gemm_block(a, bslab, pcols, k, n, jc, nc, i0, mrows, cptr);
+        });
         jc += NC;
     }
 }
 
-/// Microtile sweep for C rows `i_off .. i_off + mrows` against one packed
-/// B slab (`bbuf`, covering columns `jc .. jc + nc` at k-depth `kc` from
-/// `pc`).  `c` is the row band's slice of the full `? × n` C buffer.
+/// Compute the C block rows `i0 .. i0 + mrows` × columns `jc .. jc + nc`
+/// against the slab's pre-packed B image (`bslab`, k-blocks stacked at
+/// `pcols·pc`).  The block is owned exclusively by this task: k-blocks
+/// accumulate in ascending order through a stack tile, so every element's
+/// f32 accumulation sequence is fixed.
 #[allow(clippy::too_many_arguments)]
-fn gemm_rows(
+fn gemm_block(
     a: MatRef<'_>,
-    bbuf: &[f32],
-    kc: usize,
-    pc: usize,
+    bslab: &[f32],
+    pcols: usize,
+    k: usize,
+    n: usize,
     jc: usize,
     nc: usize,
-    i_off: usize,
+    i0: usize,
     mrows: usize,
-    c: &mut [f32],
-    n: usize,
+    c: SharedMut<f32>,
 ) {
     if mrows == 0 {
         return;
     }
-    let a_panel_rows = ((mrows.min(MC) + MR - 1) / MR) * MR;
-    let mut abuf = vec![0.0f32; a_panel_rows * kc];
+    let a_panel_rows = (mrows + MR - 1) / MR * MR; // mrows <= MC by grain clamp
+    let mut abuf = vec![0.0f32; a_panel_rows * KC.min(k)];
     let mut tile = [[0.0f32; NR]; MR];
 
-    let mut ic = 0;
-    while ic < mrows {
-        let mc = MC.min(mrows - ic);
-        pack_a(&mut abuf, a, i_off + ic, mc, pc, kc);
+    let mut pci = 0;
+    while pci * KC < k {
+        let pc = pci * KC;
+        let kc = KC.min(k - pc);
+        pack_a(&mut abuf, a, i0, mrows, pc, kc);
+        let slab = &bslab[pcols * pc..pcols * pc + pcols * kc];
+
         let mut jp = 0;
         while jp < nc {
             let nr = NR.min(nc - jp);
-            let bp = &bbuf[(jp / NR) * NR * kc..(jp / NR) * NR * kc + NR * kc];
+            let bp = &slab[(jp / NR) * NR * kc..(jp / NR) * NR * kc + NR * kc];
             let mut ip = 0;
-            while ip < mc {
-                let mr = MR.min(mc - ip);
+            while ip < mrows {
+                let mr = MR.min(mrows - ip);
                 let ap = &abuf[(ip / MR) * MR * kc..(ip / MR) * MR * kc + MR * kc];
                 // load C tile (padded lanes start at zero; the packers
                 // zero-pad A/B so they stay inert)
                 for (r, trow) in tile.iter_mut().enumerate() {
                     if r < mr {
-                        let c0 = (ic + ip + r) * n + jc + jp;
-                        trow[..nr].copy_from_slice(&c[c0..c0 + nr]);
+                        let c0 = (i0 + ip + r) * n + jc + jp;
+                        // SAFETY: this task owns C rows [i0, i0+mrows)
+                        // × cols [jc, jc+nc); c0..c0+nr is inside it.
+                        let src = unsafe {
+                            std::slice::from_raw_parts(c.ptr().add(c0) as *const f32, nr)
+                        };
+                        trow[..nr].copy_from_slice(src);
                         for v in trow[nr..].iter_mut() {
                             *v = 0.0;
                         }
@@ -152,14 +212,17 @@ fn gemm_rows(
                 }
                 kernel(kc, ap, bp, &mut tile);
                 for (r, trow) in tile.iter().enumerate().take(mr) {
-                    let c0 = (ic + ip + r) * n + jc + jp;
-                    c[c0..c0 + nr].copy_from_slice(&trow[..nr]);
+                    let c0 = (i0 + ip + r) * n + jc + jp;
+                    // SAFETY: same exclusive region as the load above.
+                    let dst =
+                        unsafe { std::slice::from_raw_parts_mut(c.ptr().add(c0), nr) };
+                    dst.copy_from_slice(&trow[..nr]);
                 }
                 ip += MR;
             }
             jp += NR;
         }
-        ic += MC;
+        pci += 1;
     }
 }
 
@@ -228,31 +291,31 @@ mod tests {
     }
 
     #[test]
-    fn gemm_is_deterministic_across_thread_counts() {
-        // Band splits must agree bit-for-bit because each element's
-        // accumulation order is band-independent.  (97, 61, 83) fits one
-        // (jc, pc) block, so one shared packed B slab serves all bands.
-        let (m, k, n) = (97usize, 61usize, 83usize);
+    fn gemm_is_bit_identical_across_thread_counts_and_grains() {
+        let _g = pool::knob_test_lock();
+        // Shape big enough to clear PAR_FLOP_THRESHOLD and straddle the
+        // MR/KC boundaries; every (threads, grain) combination must agree
+        // bit-for-bit because each C element's accumulation order lives
+        // entirely inside its owning task.
+        let (m, k, n) = (163usize, 291usize, 137usize);
         let a = randt(m, k, 7);
         let b = randt(k, n, 8);
-        let b_panel_cols = ((n + NR - 1) / NR) * NR;
-        let mut bbuf = vec![0.0f32; b_panel_cols * k];
-        pack_b(&mut bbuf, MatRef::dense(&b), 0, k, 0, n);
-        let bshared: &[f32] = &bbuf;
-
-        let mut c1 = Tensor::zeros(m, n);
-        let mut c2 = Tensor::zeros(m, n);
-        threads::par_row_bands(1, m, n, &mut c1.data, &|i0, br, band| {
-            gemm_rows(MatRef::dense(&a), bshared, k, 0, 0, n, i0, br, band, n);
-        });
-        threads::par_row_bands(4, m, n, &mut c2.data, &|i0, br, band| {
-            gemm_rows(MatRef::dense(&a), bshared, k, 0, 0, n, i0, br, band, n);
-        });
-        assert_eq!(c1.data, c2.data);
-
-        // and the public entry point agrees with the manual sweep
-        let mut c3 = Tensor::zeros(m, n);
-        gemm(MatRef::dense(&a), MatRef::dense(&b), &mut c3);
-        assert_eq!(c1.data, c3.data);
+        let reference = {
+            threads::set_threads_override(1);
+            let mut c = Tensor::zeros(m, n);
+            gemm(MatRef::dense(&a), MatRef::dense(&b), &mut c);
+            c
+        };
+        for nt in [2usize, 3, 16] {
+            for grain in [0usize, 8, 40] {
+                threads::set_threads_override(nt);
+                pool::set_grain_override(grain);
+                let mut c = Tensor::zeros(m, n);
+                gemm(MatRef::dense(&a), MatRef::dense(&b), &mut c);
+                assert_eq!(c.data, reference.data, "nt={nt} grain={grain}");
+            }
+        }
+        threads::set_threads_override(0);
+        pool::set_grain_override(0);
     }
 }

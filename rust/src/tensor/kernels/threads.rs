@@ -1,51 +1,61 @@
-//! Row-band work dispatch over scoped std threads (rayon is unavailable
-//! offline).  All parallel host kernels in this crate split their *output*
-//! rows into contiguous bands, so every band owns a disjoint `&mut` slice
-//! of the result buffer and no synchronization is ever needed.  Each output
-//! element is always accumulated by exactly one thread in the same order as
-//! the serial code, so results are bit-identical for any thread count.
+//! Thread-count policy for the compute pool (`tensor::pool`).
+//!
+//! PR-1's `par_row_bands` (scoped per-call thread spawns) lived here; the
+//! dispatch itself moved to the persistent work-stealing pool, and this
+//! module now only answers "how many participants should a parallel run
+//! use?".
+//!
+//! # The env contract (and the cache bug this fixes)
+//!
+//! `RMM_THREADS` is read **on every call**.  The PR-1 implementation
+//! cached the first read in a `OnceLock`, which silently ignored any
+//! later change — in particular the per-test overrides that
+//! `rust/tests/prop_pool.rs` and the dual-thread-count CI run rely on.
+//! Precedence, highest first:
+//!
+//! 1. [`set_threads_override`] — installed by the config file's
+//!    `pool.threads` key or the `--threads` CLI flag;
+//! 2. `RMM_THREADS` env var (≥ 1), re-read per call;
+//! 3. the machine parallelism (cached — it cannot change mid-process).
+//!
+//! The count only controls how many pool participants a run recruits;
+//! results are bit-identical for every value (see `tensor::pool`).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
-/// Worker count: `RMM_THREADS` env override, else the machine parallelism.
-pub fn num_threads() -> usize {
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install a process-global thread-count override (config / CLI layer).
+/// `0` clears it, restoring the `RMM_THREADS`-or-machine default.
+pub fn set_threads_override(n: usize) {
+    OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// The machine's available parallelism (cached once; this is a hardware
+/// fact, not a knob).
+pub fn machine_parallelism() -> usize {
     static N: OnceLock<usize> = OnceLock::new();
     *N.get_or_init(|| {
-        if let Ok(v) = std::env::var("RMM_THREADS") {
-            if let Ok(n) = v.trim().parse::<usize>() {
-                if n >= 1 {
-                    return n;
-                }
-            }
-        }
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     })
 }
 
-/// Split `rows` into at most `nt` contiguous bands and run
-/// `f(first_row, band_rows, band_slice)` for each, where `band_slice` is
-/// the `&mut` sub-slice of `data` covering those rows (`ld` floats per
-/// row).  With `nt <= 1` (or a single row) this degenerates to one plain
-/// call on the current thread — no spawn overhead on small problems.
-pub fn par_row_bands<F>(nt: usize, rows: usize, ld: usize, data: &mut [f32], f: &F)
-where
-    F: Fn(usize, usize, &mut [f32]) + Sync,
-{
-    debug_assert_eq!(data.len(), rows * ld);
-    let nt = nt.min(rows.max(1));
-    if nt <= 1 || ld == 0 {
-        f(0, rows, data);
-        return;
+/// Participants a parallel run should use right now: override, else
+/// `RMM_THREADS` (re-read per call), else the machine parallelism.
+pub fn num_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::Relaxed);
+    if o >= 1 {
+        return o;
     }
-    // ceil(rows / nt) rows per band: at most nt bands, last may be short.
-    let band_rows = (rows + nt - 1) / nt;
-    std::thread::scope(|s| {
-        for (idx, chunk) in data.chunks_mut(band_rows * ld).enumerate() {
-            let r0 = idx * band_rows;
-            let br = chunk.len() / ld;
-            s.spawn(move || f(r0, br, chunk));
+    if let Ok(v) = std::env::var("RMM_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
         }
-    });
+    }
+    machine_parallelism()
 }
 
 #[cfg(test)]
@@ -53,26 +63,21 @@ mod tests {
     use super::*;
 
     #[test]
-    fn bands_cover_all_rows_exactly_once() {
-        for rows in [0usize, 1, 2, 3, 7, 16, 17] {
-            for nt in [1usize, 2, 3, 8] {
-                let ld = 3;
-                let mut data = vec![0.0f32; rows * ld];
-                par_row_bands(nt, rows, ld, &mut data, &|r0, br, band| {
-                    assert_eq!(band.len(), br * ld);
-                    for (i, v) in band.iter_mut().enumerate() {
-                        *v += (r0 * ld + i) as f32 + 1.0;
-                    }
-                });
-                for (i, v) in data.iter().enumerate() {
-                    assert_eq!(*v, i as f32 + 1.0, "rows={rows} nt={nt} i={i}");
-                }
-            }
-        }
+    fn num_threads_is_at_least_one() {
+        assert!(num_threads() >= 1);
+        assert!(machine_parallelism() >= 1);
     }
 
     #[test]
-    fn num_threads_is_at_least_one() {
+    fn override_beats_env_and_clears() {
+        // Other tests read num_threads() concurrently — that only
+        // modulates their parallelism, never their results (pool
+        // determinism) — but tests that *assert* on knob values share
+        // the knob lock.
+        let _g = crate::tensor::pool::knob_test_lock();
+        set_threads_override(3);
+        assert_eq!(num_threads(), 3);
+        set_threads_override(0);
         assert!(num_threads() >= 1);
     }
 }

@@ -9,6 +9,7 @@
 pub mod kernels;
 mod matmul;
 pub mod ops;
+pub mod pool;
 
 pub use matmul::{matmul, matmul_at, matmul_bt};
 pub use ops::{axpy, dot, global_norm};

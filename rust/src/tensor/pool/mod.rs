@@ -1,0 +1,508 @@
+//! Persistent work-stealing compute pool shared by every parallel host
+//! kernel: the packed GEMM driver, the fused streamed sketch projection,
+//! and the batched SORS FFT.
+//!
+//! # Why a pool
+//!
+//! The PR-1 kernels spawned scoped `std::thread`s per call
+//! (`par_row_bands`), which is fine for one 512³ GEMM but charges a full
+//! spawn/join round-trip to every small matmul in the optimizer path and
+//! to every k-block of a blocked GEMM.  Here the workers are spawned
+//! **once** (lazily, on first parallel run), parked on a condvar between
+//! runs, and handed cache-block tasks through per-participant deques with
+//! work stealing ([`queue::TaskQueues`]) — dispatching a run costs one
+//! mutex store plus a wakeup instead of N thread spawns.
+//!
+//! # Determinism guarantee
+//!
+//! Every task **owns a disjoint region of the output buffer**, and the
+//! accumulation order *within* each output element is fixed by the kernel
+//! (ascending k-block, ascending k for GEMM; ascending input row for the
+//! fused projection; the serial FFT butterfly order per column panel for
+//! batched SORS).  Work stealing only changes *which thread* runs a task,
+//! never what the task computes, so results are **bit-identical for any
+//! `RMM_THREADS` value and any task grain** — including the fully serial
+//! inline path.  `rust/tests/prop_pool.rs` and the dual-thread-count CI
+//! run (`scripts/ci.sh`) enforce this.
+//!
+//! # Knobs (precedence: config/CLI override > `RMM_*` env > derived)
+//!
+//! * **Thread count** — `ExperimentConfig.pool.threads` / `--threads`
+//!   install a process override via
+//!   [`threads::set_threads_override`](crate::tensor::kernels::threads);
+//!   otherwise `RMM_THREADS` is read **per run** (the PR-1 `OnceLock`
+//!   cache made later env changes silently invisible), falling back to
+//!   the machine parallelism.  Values above the worker count are clamped;
+//!   `1` runs inline on the caller with zero pool traffic.
+//! * **Task grain** — `ExperimentConfig.pool.grain_rows` /
+//!   `--pool-grain` via [`set_grain_override`], else `RMM_POOL_GRAIN`,
+//!   else derived as ~`rows / (4 · threads)` so each participant sees ~4
+//!   stealable tasks ([`task_grain`]).  Grain affects load balance only,
+//!   never results.
+//!
+//! Counters for runs/tasks/steals are process-global ([`stats`]) and are
+//! surfaced by `rmm_micro --json` next to the GFLOP/s rows and by the
+//! bench harness runner.
+
+pub mod queue;
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use queue::TaskQueues;
+
+/// Stealable tasks targeted per participant when deriving a grain.
+const OVERSUBSCRIBE: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Process-global instrumentation
+// ---------------------------------------------------------------------------
+
+static RUNS: AtomicU64 = AtomicU64::new(0);
+static PAR_RUNS: AtomicU64 = AtomicU64::new(0);
+static TASKS: AtomicU64 = AtomicU64::new(0);
+static STEALS: AtomicU64 = AtomicU64::new(0);
+
+/// Monotone counters since process start; read twice and subtract to
+/// attribute pool traffic to a region of interest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// `run` invocations (including inline/serial ones).
+    pub runs: u64,
+    /// Runs that actually fanned out to workers.
+    pub par_runs: u64,
+    /// Tasks executed.
+    pub tasks: u64,
+    /// Tasks claimed from a queue other than the claimant's home queue.
+    pub steals: u64,
+}
+
+impl PoolStats {
+    pub fn delta_since(self, earlier: PoolStats) -> PoolStats {
+        PoolStats {
+            runs: self.runs - earlier.runs,
+            par_runs: self.par_runs - earlier.par_runs,
+            tasks: self.tasks - earlier.tasks,
+            steals: self.steals - earlier.steals,
+        }
+    }
+}
+
+pub fn stats() -> PoolStats {
+    PoolStats {
+        runs: RUNS.load(Ordering::Relaxed),
+        par_runs: PAR_RUNS.load(Ordering::Relaxed),
+        tasks: TASKS.load(Ordering::Relaxed),
+        steals: STEALS.load(Ordering::Relaxed),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Task grain policy
+// ---------------------------------------------------------------------------
+
+static GRAIN_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Install a process-global task-grain override in rows (config / CLI
+/// layer).  `0` clears it, restoring `RMM_POOL_GRAIN`-or-derived.
+pub fn set_grain_override(rows: usize) {
+    GRAIN_OVERRIDE.store(rows, Ordering::Relaxed);
+}
+
+fn grain_override() -> usize {
+    let o = GRAIN_OVERRIDE.load(Ordering::Relaxed);
+    if o > 0 {
+        return o;
+    }
+    if let Ok(v) = std::env::var("RMM_POOL_GRAIN") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    0
+}
+
+/// Rows per task for a kernel splitting `rows` across `nt` participants:
+/// the override if set, else `rows / (4·nt)` — rounded up to `align`
+/// (microtile height for GEMM, S-tile height for the projection) and
+/// clamped to `[align, max_rows]`.  Purely a load-balance choice; see the
+/// module doc for why it cannot affect results.
+pub fn task_grain(rows: usize, nt: usize, align: usize, max_rows: usize) -> usize {
+    let align = align.max(1);
+    let max_rows = max_rows.max(align);
+    let o = grain_override();
+    let target = if o > 0 {
+        o
+    } else {
+        (rows / (nt.max(1) * OVERSUBSCRIBE)).max(1)
+    };
+    let rounded = (target + align - 1) / align * align;
+    rounded.clamp(align, max_rows)
+}
+
+// ---------------------------------------------------------------------------
+// Disjoint-write pointer wrapper
+// ---------------------------------------------------------------------------
+
+/// A raw pointer that kernels share across pool tasks to write disjoint
+/// regions of one output buffer (row blocks of C, column panels of
+/// X_proj).  The wrapper only makes the pointer `Send + Sync`; every
+/// dereference stays `unsafe` and every call site must guarantee that no
+/// two concurrent tasks touch the same element.
+pub struct SharedMut<T>(*mut T);
+
+impl<T> SharedMut<T> {
+    pub fn new(p: *mut T) -> Self {
+        SharedMut(p)
+    }
+
+    pub fn ptr(&self) -> *mut T {
+        self.0
+    }
+}
+
+impl<T> Clone for SharedMut<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SharedMut<T> {}
+// SAFETY: the wrapper adds no aliasing rules of its own; call sites
+// partition the pointee so concurrent tasks never alias an element.
+unsafe impl<T> Send for SharedMut<T> {}
+unsafe impl<T> Sync for SharedMut<T> {}
+
+// ---------------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------------
+
+struct Slot {
+    epoch: u64,
+    job: Option<Arc<Job>>,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work_cv: Condvar,
+}
+
+/// One parallel run: a lifetime-erased task closure plus the queues and
+/// completion bookkeeping.  Workers hold it through an `Arc`; the closure
+/// pointer is only dereferenced for claimed tasks, and all claims finish
+/// before `Pool::run` returns, so the borrow never escapes the call.
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    queues: TaskQueues,
+    joined: AtomicUsize,
+    remaining: AtomicUsize,
+    panicked: AtomicBool,
+    done_m: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `data` points at an `F: Fn(usize) + Sync` owned by the caller
+// of `Pool::run`, which blocks until `remaining == 0`; every dereference
+// happens between claim and that completion signal.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim-and-execute loop for one participant.
+    fn work(&self, home: usize) {
+        while let Some(t) = self.queues.next(home) {
+            let ok = catch_unwind(AssertUnwindSafe(|| unsafe { (self.call)(self.data, t) }));
+            if ok.is_err() {
+                self.panicked.store(true, Ordering::Relaxed);
+            }
+            if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut d = self.done_m.lock().unwrap();
+                *d = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let job: Arc<Job> = {
+            let mut s = shared.slot.lock().unwrap();
+            loop {
+                if s.epoch != seen {
+                    seen = s.epoch;
+                    if let Some(j) = s.job.clone() {
+                        break j;
+                    }
+                }
+                s = shared.work_cv.wait(s).unwrap();
+            }
+        };
+        // Claim a home queue; latecomers to an already-saturated (or
+        // finished) job simply go back to sleep.
+        let home = job.joined.fetch_add(1, Ordering::Relaxed);
+        if home < job.queues.len() {
+            job.work(home);
+        }
+    }
+}
+
+pub struct Pool {
+    shared: Arc<Shared>,
+    n_workers: usize,
+}
+
+impl Pool {
+    fn spawn() -> Pool {
+        let want =
+            crate::tensor::kernels::threads::machine_parallelism().saturating_sub(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot { epoch: 0, job: None }),
+            work_cv: Condvar::new(),
+        });
+        let mut n_workers = 0;
+        for i in 0..want {
+            let sh = Arc::clone(&shared);
+            let ok = std::thread::Builder::new()
+                .name(format!("rmm-pool-{i}"))
+                .spawn(move || worker_loop(sh))
+                .is_ok();
+            if ok {
+                n_workers += 1;
+            }
+        }
+        Pool { shared, n_workers }
+    }
+
+    /// Worker threads backing this pool (the caller participates too, so
+    /// peak parallelism is `workers() + 1`).
+    pub fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Execute `f(0), f(1), …, f(tasks - 1)` exactly once each across at
+    /// most `nt` participants (the caller plus woken workers), returning
+    /// when all tasks have finished.
+    ///
+    /// With `nt <= 1`, no workers, or a single task, every task runs
+    /// inline on the caller in ascending order — the serial reference
+    /// path.  Tasks must write disjoint data (see [`SharedMut`]); under
+    /// that contract the result is independent of `nt`, the grain, and
+    /// which participant ran which task.
+    ///
+    /// A panic inside a task is caught on the worker (keeping the pool
+    /// alive), the run completes, and the panic is re-raised here.
+    pub fn run<F>(&self, nt: usize, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if tasks == 0 {
+            return;
+        }
+        RUNS.fetch_add(1, Ordering::Relaxed);
+        TASKS.fetch_add(tasks as u64, Ordering::Relaxed);
+        let nt = nt.max(1).min(tasks).min(self.n_workers + 1);
+        if nt <= 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+        PAR_RUNS.fetch_add(1, Ordering::Relaxed);
+
+        unsafe fn shim<F: Fn(usize) + Sync>(p: *const (), i: usize) {
+            (*(p as *const F))(i);
+        }
+        let job = Arc::new(Job {
+            data: &f as *const F as *const (),
+            call: shim::<F>,
+            queues: TaskQueues::split(tasks, nt),
+            joined: AtomicUsize::new(1), // caller is participant 0
+            remaining: AtomicUsize::new(tasks),
+            panicked: AtomicBool::new(false),
+            done_m: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        let installed_epoch = {
+            let mut s = self.shared.slot.lock().unwrap();
+            s.epoch += 1;
+            s.job = Some(Arc::clone(&job));
+            s.epoch
+        };
+        self.shared.work_cv.notify_all();
+
+        // The caller is participant 0: drain its queue, steal, then wait
+        // for in-flight tasks on other participants.
+        job.work(0);
+        {
+            let mut d = job.done_m.lock().unwrap();
+            while !*d {
+                d = job.done_cv.wait(d).unwrap();
+            }
+        }
+        {
+            let mut s = self.shared.slot.lock().unwrap();
+            if s.epoch == installed_epoch {
+                s.job = None;
+            }
+        }
+        STEALS.fetch_add(job.queues.steals(), Ordering::Relaxed);
+        if job.panicked.load(Ordering::Relaxed) {
+            panic!("pool task panicked (original panic reported above)");
+        }
+    }
+}
+
+/// The process-wide pool, spawned on first use and parked between runs.
+pub fn global() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(Pool::spawn)
+}
+
+/// Serializes tests that mutate or assert on the process-global knobs
+/// (grain/thread overrides) so they stay stable under the parallel test
+/// runner.  Production code never takes this lock; knob *values* cannot
+/// affect results either way — this only quiets assertions about
+/// specific settings.
+#[doc(hidden)]
+pub fn knob_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: Mutex<()> = Mutex::new(());
+    L.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Split `rows` (each `ld` floats) into `grain`-row blocks and run
+/// `f(first_row, block_rows, block_slice)` for each as pool tasks, where
+/// `block_slice` is the disjoint `&mut` sub-slice of `data` covering the
+/// block.  The pool-backed successor of PR-1's `par_row_bands`: same
+/// disjoint-rows contract, but block-grained and stealable instead of one
+/// fat band per thread.
+pub fn par_row_blocks<F>(nt: usize, rows: usize, ld: usize, grain: usize, data: &mut [f32], f: &F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(data.len(), rows * ld);
+    if rows == 0 || ld == 0 || nt <= 1 || rows <= grain {
+        f(0, rows, data);
+        return;
+    }
+    let grain = grain.max(1);
+    let tasks = (rows + grain - 1) / grain;
+    let base = SharedMut::new(data.as_mut_ptr());
+    global().run(nt, tasks, |t| {
+        let r0 = t * grain;
+        let nr = grain.min(rows - r0);
+        // SAFETY: blocks [r0, r0 + nr) are disjoint across tasks and in
+        // bounds; `base` outlives the run (we block until completion).
+        let block = unsafe { std::slice::from_raw_parts_mut(base.ptr().add(r0 * ld), nr * ld) };
+        f(r0, nr, block);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn run_executes_every_task_exactly_once() {
+        for &tasks in &[1usize, 2, 3, 17, 64, 257] {
+            for &nt in &[1usize, 2, 3, 8] {
+                let hits: Vec<AtomicU32> = (0..tasks).map(|_| AtomicU32::new(0)).collect();
+                global().run(nt, tasks, |i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "tasks={tasks} nt={nt} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_tasks_is_a_noop() {
+        global().run(4, 0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn stats_counters_advance() {
+        // other tests in this binary pump the global counters
+        // concurrently, so assert monotone growth, not exact deltas
+        let before = stats();
+        global().run(2, 8, |_| {});
+        let d = stats().delta_since(before);
+        assert!(d.runs >= 1, "{d:?}");
+        assert!(d.tasks >= 8, "{d:?}");
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            global().run(2, 4, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // pool still works afterwards
+        let n = AtomicU32::new(0);
+        global().run(2, 16, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn par_row_blocks_covers_rows_like_the_old_bands() {
+        for rows in [0usize, 1, 2, 3, 7, 16, 17, 130] {
+            for nt in [1usize, 2, 3, 8] {
+                let ld = 3;
+                let mut data = vec![0.0f32; rows * ld];
+                par_row_blocks(nt, rows, ld, 4, &mut data, &|r0, nr, block| {
+                    assert_eq!(block.len(), nr * ld);
+                    for (i, v) in block.iter_mut().enumerate() {
+                        *v += (r0 * ld + i) as f32 + 1.0;
+                    }
+                });
+                for (i, v) in data.iter().enumerate() {
+                    assert_eq!(*v, i as f32 + 1.0, "rows={rows} nt={nt} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn task_grain_respects_align_clamp_and_override() {
+        let _g = knob_test_lock();
+        // derived: 512 rows / (4 participants * 4) = 32, already aligned
+        assert_eq!(task_grain(512, 4, 8, 128), 32);
+        // rounding up to align
+        assert_eq!(task_grain(100, 4, 8, 128), 8);
+        // clamped to max
+        assert_eq!(task_grain(10_000, 1, 8, 128), 128);
+        // clamped to align from below
+        assert_eq!(task_grain(1, 16, 8, 128), 8);
+        // override wins and is aligned
+        set_grain_override(20);
+        assert_eq!(task_grain(512, 4, 8, 128), 24);
+        set_grain_override(0);
+        assert_eq!(task_grain(512, 4, 8, 128), 32);
+    }
+
+    #[test]
+    fn nested_runs_complete() {
+        // a task issuing its own pool run must not deadlock: the inner
+        // caller drains inline/steals, never waiting on a parked worker.
+        let n = AtomicU32::new(0);
+        global().run(2, 4, |_| {
+            global().run(2, 4, |_| {
+                n.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 16);
+    }
+}

@@ -1,0 +1,126 @@
+//! Per-participant task queues with work stealing.
+//!
+//! A [`TaskQueues`] is built once per pool run: the task indices
+//! `0..tasks` are dealt out as contiguous runs, one queue per
+//! participant.  Each participant pops from the *front* of its home
+//! queue (so it walks its own tasks in ascending order, cache-friendly
+//! for adjacent cache blocks) and, when the home queue is empty, steals
+//! from the *back* of the other queues (so a thief takes the work
+//! farthest from the victim's current position).
+//!
+//! Queues are `Mutex<VecDeque>` rather than lock-free Chase-Lev deques:
+//! pool tasks are cache-block sized (microseconds to milliseconds), so a
+//! sub-100ns uncontended lock per claim is noise, and the Mutex version
+//! is trivially correct under the no-external-crates constraint.
+//! Which thread executes which task never affects results — every task
+//! owns a disjoint output region — so stealing is a pure load-balance
+//! mechanism.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub struct TaskQueues {
+    queues: Vec<Mutex<VecDeque<usize>>>,
+    steals: AtomicU64,
+}
+
+impl TaskQueues {
+    /// Deal `tasks` indices into `nq` queues as contiguous runs
+    /// (queue q gets `[q*per .. )` with the remainder spread over the
+    /// first queues, mirroring the old row-band split).
+    pub fn split(tasks: usize, nq: usize) -> TaskQueues {
+        let nq = nq.max(1).min(tasks.max(1));
+        let base = tasks / nq;
+        let extra = tasks % nq;
+        let mut queues = Vec::with_capacity(nq);
+        let mut next = 0usize;
+        for q in 0..nq {
+            let len = base + usize::from(q < extra);
+            queues.push(Mutex::new((next..next + len).collect()));
+            next += len;
+        }
+        debug_assert_eq!(next, tasks);
+        TaskQueues { queues, steals: AtomicU64::new(0) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queues.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queues.is_empty()
+    }
+
+    /// Claim the next task for participant `home`: own queue front first,
+    /// then steal from the back of the others (scanning forward from
+    /// `home + 1` so thieves spread over victims).  `None` means every
+    /// queue is empty — in-flight tasks may still be executing.
+    pub fn next(&self, home: usize) -> Option<usize> {
+        let nq = self.queues.len();
+        debug_assert!(home < nq);
+        if let Some(t) = self.queues[home].lock().unwrap().pop_front() {
+            return Some(t);
+        }
+        for d in 1..nq {
+            let victim = (home + d) % nq;
+            if let Some(t) = self.queues[victim].lock().unwrap().pop_back() {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Successful steals so far (monotone; read after the run completes).
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_every_task_once() {
+        for tasks in [0usize, 1, 2, 5, 7, 16, 33] {
+            for nq in [1usize, 2, 3, 8] {
+                let q = TaskQueues::split(tasks, nq);
+                let mut seen = vec![false; tasks];
+                for home in 0..q.len() {
+                    while let Some(t) = {
+                        let got = q.queues[home].lock().unwrap().pop_front();
+                        got
+                    } {
+                        assert!(!seen[t], "task {t} dealt twice");
+                        seen[t] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "tasks={tasks} nq={nq}");
+            }
+        }
+    }
+
+    #[test]
+    fn next_drains_all_tasks_and_counts_steals() {
+        let q = TaskQueues::split(10, 3);
+        // participant 0 drains everything: its own queue plus steals.
+        let mut got = Vec::new();
+        while let Some(t) = q.next(0) {
+            got.push(t);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        assert!(q.steals() > 0, "draining foreign queues must count as steals");
+    }
+
+    #[test]
+    fn more_queues_than_tasks_collapses() {
+        let q = TaskQueues::split(2, 8);
+        assert_eq!(q.len(), 2);
+        let q = TaskQueues::split(0, 4);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.next(0), None);
+    }
+}

@@ -1,0 +1,235 @@
+//! Determinism / property suite for the persistent work-stealing compute
+//! pool (`tensor::pool`) and every kernel dispatched through it.
+//!
+//! The pool's contract is that `RMM_THREADS` and `RMM_POOL_GRAIN` are
+//! pure performance knobs: every pool kernel — packed matmul /
+//! matmul_at / matmul_bt, the fused streamed projection for all five
+//! sketch families, and the batched SORS FFT — must produce
+//! **bit-identical** output for any thread count and any task grain, and
+//! must agree with its serial / scalar reference.  These tests sweep
+//! `RMM_THREADS ∈ {1, 2, 3, 7, 16}` through the env var itself (not a
+//! private hook) to also pin the per-call re-read semantics that PR-1's
+//! `OnceLock` cache broke.
+//!
+//! Env mutations are serialized through a file-local lock so the tests
+//! stay safe under the default parallel test runner.
+
+use std::sync::Mutex;
+
+use rmmlinear::rmm::fft::{sors_project_cols, sors_project_fast};
+use rmmlinear::rmm::sketch::{self, SketchKind};
+use rmmlinear::rng::philox::PhiloxStream;
+use rmmlinear::tensor::kernels::{threads, Backend, PACKED, SCALAR};
+use rmmlinear::tensor::{pool, Tensor};
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Thread counts the determinism contract is swept over (unit, even, odd,
+/// prime > cores, way over-subscribed).
+const THREAD_COUNTS: &[usize] = &[1, 2, 3, 7, 16];
+
+fn lock_env() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking test must not cascade into poisoning failures here —
+    // the guarded state is the process env, which each test resets.
+    ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn with_threads<T>(nt: usize, f: impl FnOnce() -> T) -> T {
+    std::env::set_var("RMM_THREADS", nt.to_string());
+    let r = f();
+    std::env::remove_var("RMM_THREADS");
+    r
+}
+
+fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut s = PhiloxStream::new(seed, 3);
+    Tensor::from_fn(rows, cols, |_, _| s.next_normal())
+}
+
+/// Tolerance for packed-vs-scalar agreement, scaled to contraction depth.
+fn tol(k: usize) -> f32 {
+    1e-4 * (k.max(1) as f32).sqrt().max(1.0)
+}
+
+/// Adversarial GEMM shapes: unit dims, primes, dims straddling the
+/// MR/NR = 8 and MC = 128 / KC = 256 block edges, a shape big enough to
+/// clear the parallel threshold, and zero dims.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (7, 11, 13),
+    (8, 8, 8),
+    (65, 129, 127),
+    (127, 259, 67),
+    (256, 256, 256),
+    (0, 5, 7),
+    (5, 0, 7),
+    (5, 7, 0),
+];
+
+/// Run `f` under every THREAD_COUNTS value and assert the outputs are
+/// bit-identical to the first (serial) one.
+fn sweep_bit_identical(label: &str, f: &dyn Fn() -> Tensor) {
+    let reference = with_threads(THREAD_COUNTS[0], f);
+    for &nt in &THREAD_COUNTS[1..] {
+        let got = with_threads(nt, f);
+        assert_eq!(got.data, reference.data, "{label} diverged at RMM_THREADS={nt}");
+    }
+}
+
+#[test]
+fn gemm_kernels_bit_identical_across_rmm_threads() {
+    let _g = lock_env();
+    for &(m, k, n) in SHAPES {
+        let a = randt(m, k, 1);
+        let b = randt(k, n, 2);
+        let at = randt(k, m, 3); // (k, m) operand for Aᵀ·B
+        let bt = randt(n, k, 4); // (n, k) operand for A·Bᵀ
+
+        sweep_bit_identical(&format!("matmul ({m},{k},{n})"), &|| PACKED.matmul(&a, &b));
+        sweep_bit_identical(&format!("matmul_at ({m},{k},{n})"), &|| {
+            PACKED.matmul_at(&at, &b)
+        });
+        sweep_bit_identical(&format!("matmul_bt ({m},{k},{n})"), &|| {
+            PACKED.matmul_bt(&a, &bt)
+        });
+
+        // ... and the pool path agrees with the serial Scalar reference
+        if m * n > 0 {
+            let scalar = SCALAR.matmul(&a, &b);
+            let packed = with_threads(7, || PACKED.matmul(&a, &b));
+            assert!(
+                packed.max_abs_diff(&scalar) < tol(k),
+                "packed vs scalar ({m},{k},{n})"
+            );
+            let scalar_at = SCALAR.matmul_at(&at, &b);
+            let packed_at = with_threads(7, || PACKED.matmul_at(&at, &b));
+            assert!(
+                packed_at.max_abs_diff(&scalar_at) < tol(k),
+                "packed_at vs scalar ({m},{k},{n})"
+            );
+            let scalar_bt = SCALAR.matmul_bt(&a, &bt);
+            let packed_bt = with_threads(7, || PACKED.matmul_bt(&a, &bt));
+            assert!(
+                packed_bt.max_abs_diff(&scalar_bt) < tol(k),
+                "packed_bt vs scalar ({m},{k},{n})"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_projection_bit_identical_across_rmm_threads() {
+    let _g = lock_env();
+    // (b, n, b_proj): tile edges, b_proj > b, and one shape past the
+    // parallel work threshold (300·80·50 = 1.2e6 madds).
+    for &(b, n, bp) in &[(5usize, 3usize, 2usize), (64, 16, 64), (129, 9, 65), (300, 50, 80)] {
+        let x = randt(b, n, 7);
+        for kind in SketchKind::ALL {
+            let reference = with_threads(THREAD_COUNTS[0], || {
+                sketch::project_streamed(kind, &x, bp, (3, 4))
+            });
+            for &nt in &THREAD_COUNTS[1..] {
+                let got =
+                    with_threads(nt, || sketch::project_streamed(kind, &x, bp, (3, 4)));
+                assert_eq!(
+                    got.data, reference.data,
+                    "{kind:?} ({b},{n},{bp}) diverged at RMM_THREADS={nt}"
+                );
+            }
+            // scalar-backend dense algebra agreement (approximate: the
+            // dense path sums in a different order)
+            let s = sketch::sketch(kind, b, bp, (3, 4));
+            let dense = SCALAR.matmul_at(&s, &x);
+            assert!(
+                reference.max_abs_diff(&dense) < tol(b) * 10.0,
+                "{kind:?} ({b},{n},{bp}) fused vs dense"
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_sors_bit_identical_across_rmm_threads_and_equals_cols() {
+    let _g = lock_env();
+    // (b, n, b_proj): small serial shape and one past the parallel
+    // threshold (256·100·8 = 2.05e5 work units).
+    for &(b, n, bp) in &[(32usize, 7usize, 12usize), (256, 100, 64)] {
+        let x = randt(b, n, 11);
+        for use_dct in [true, false] {
+            // the column-by-column path is fully serial: the exactness
+            // reference for every thread count
+            let cols = sors_project_cols(use_dct, &x, bp, (5, 6));
+            for &nt in THREAD_COUNTS {
+                let got = with_threads(nt, || sors_project_fast(use_dct, &x, bp, (5, 6)));
+                assert_eq!(
+                    got.data, cols.data,
+                    "sors dct={use_dct} ({b},{n},{bp}) diverged at RMM_THREADS={nt}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn task_grain_never_changes_results() {
+    let _g = lock_env();
+    std::env::set_var("RMM_THREADS", "3");
+    let (m, k, n) = (130usize, 300usize, 140usize);
+    let a = randt(m, k, 21);
+    let b = randt(k, n, 22);
+    let x = randt(300, 50, 23);
+    let reference = (
+        PACKED.matmul(&a, &b),
+        sketch::project_streamed(SketchKind::Gauss, &x, 80, (3, 4)),
+    );
+    for grain in ["1", "8", "64", "4096"] {
+        std::env::set_var("RMM_POOL_GRAIN", grain);
+        let c = PACKED.matmul(&a, &b);
+        let p = sketch::project_streamed(SketchKind::Gauss, &x, 80, (3, 4));
+        assert_eq!(c.data, reference.0.data, "gemm diverged at grain {grain}");
+        assert_eq!(p.data, reference.1.data, "projection diverged at grain {grain}");
+    }
+    std::env::remove_var("RMM_POOL_GRAIN");
+    std::env::remove_var("RMM_THREADS");
+}
+
+#[test]
+fn rmm_threads_env_is_read_per_call() {
+    // Regression for the PR-1 OnceLock cache: later env changes must be
+    // visible.  (This is exactly what lets the sweeps above work at all.)
+    let _g = lock_env();
+    std::env::set_var("RMM_THREADS", "2");
+    assert_eq!(threads::num_threads(), 2);
+    std::env::set_var("RMM_THREADS", "5");
+    assert_eq!(threads::num_threads(), 5, "RMM_THREADS change was ignored (stale cache)");
+    std::env::set_var("RMM_THREADS", "not-a-number");
+    assert!(threads::num_threads() >= 1, "garbage env must fall back, not panic");
+    std::env::remove_var("RMM_THREADS");
+    assert!(threads::num_threads() >= 1);
+}
+
+#[test]
+fn pool_survives_task_panics_and_keeps_counting() {
+    let _g = lock_env();
+    std::env::set_var("RMM_THREADS", "4");
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool::global().run(4, 8, |i| {
+            if i == 5 {
+                panic!("injected task panic");
+            }
+        });
+    }));
+    assert!(r.is_err(), "task panic must propagate to the caller");
+
+    // the pool must keep working afterwards, and its counters advance
+    let before = pool::stats();
+    let (m, k, n) = (160usize, 200usize, 180usize); // > PAR_FLOP_THRESHOLD
+    let a = randt(m, k, 31);
+    let b = randt(k, n, 32);
+    let got = PACKED.matmul(&a, &b);
+    let scalar = SCALAR.matmul(&a, &b);
+    assert!(got.max_abs_diff(&scalar) < tol(k));
+    let d = pool::stats().delta_since(before);
+    assert!(d.runs >= 1 && d.tasks >= 1, "pool counters must advance: {d:?}");
+    std::env::remove_var("RMM_THREADS");
+}

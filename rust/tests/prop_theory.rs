@@ -145,6 +145,40 @@ fn rmm_grad_matches_sketch_algebra_for_all_kinds() {
 }
 
 #[test]
+fn variance_regression_montecarlo_matches_closed_form_for_all_kinds() {
+    // Regression pin for the sampling kernels' statistical correctness:
+    // the empirical variance of the sketched gradient over 200 Philox
+    // seeds must match the closed-form Lemma 2.2 estimate in
+    // `rmm::variance`, for every sketch family.  X and Y are fixed iid
+    // normal draws, so α = ‖XᵀY‖²/(‖X‖²‖Y‖²) ≪ 1 and the paper's formula
+    // is the family-agnostic leading term — the non-Gaussian families
+    // (different fourth moments / sampling designs) agree to O(α) plus
+    // per-family O(1/B) corrections, hence the factor-2 band.  A
+    // normalization or Philox-stream regression in any sampler moves the
+    // ratio far outside it.
+    let mut g = rmmlinear::util::prop::Gen::new(0xC0FFEE);
+    let x = g.tensor(32..=32, 6..=6);
+    let y = g.tensor(32..=32, 5..=5);
+    let bp = 8;
+    let closed = variance::d2_rmm(&x, &y, bp);
+    assert!(closed > 0.0);
+    for kind in SketchKind::ALL {
+        let mc = variance::d2_montecarlo(kind, &x, &y, bp, 200, 1301);
+        let ratio = mc / closed;
+        assert!(
+            ratio > 0.5 && ratio < 2.0,
+            "{kind:?}: mc={mc} closed={closed} ratio={ratio}"
+        );
+    }
+    // Gauss additionally has an *exact* closed form (fourth moment
+    // included) — pin it tightly.
+    let exact = variance::d2_rmm_exact(&x, &y, bp);
+    let mc = variance::d2_montecarlo(SketchKind::Gauss, &x, &y, bp, 200, 1301);
+    let rel = (mc - exact).abs() / exact;
+    assert!(rel < 0.25, "gauss exact form: mc={mc} formula={exact} rel={rel}");
+}
+
+#[test]
 fn identity_sketch_recovers_exact_gradient() {
     // ρ = 1 with an orthonormal S (full-width DCT, no subsample collision
     // needed — use B_proj = B with rowsample replaced by full transform):

@@ -15,7 +15,14 @@ cargo clippy --workspace --all-targets || true
 echo "== cargo build --release =="
 cargo build --release
 
-echo "== cargo test =="
-cargo test -q
+# The test suite runs twice, serial and multi-threaded: the compute pool
+# guarantees bit-identical results for every RMM_THREADS value, and the
+# prop_pool/prop_kernels equality assertions fail this gate on any
+# divergence between the two configurations.
+echo "== cargo test (RMM_THREADS=1) =="
+RMM_THREADS=1 cargo test -q
+
+echo "== cargo test (RMM_THREADS=4) =="
+RMM_THREADS=4 cargo test -q
 
 echo "ci: all gates passed"
