@@ -13,6 +13,7 @@
 //! later PRs have a perf trajectory to diff against.
 
 use rmmlinear::bench_harness::runner::num_or_null;
+use rmmlinear::data::{AnyBatcher, Batcher, Split, Task, TaskGen, Tokenizer};
 use rmmlinear::rmm::{self, fft, sketch, SketchKind};
 use rmmlinear::rng::philox::PhiloxStream;
 use rmmlinear::tensor::kernels::{self, packed, Backend, PACKED, SCALAR};
@@ -194,6 +195,41 @@ fn main() {
     }
     println!("batched vs column SORS speedup @ B=1024: {sors_batched_speedup_1024:.2}x");
 
+    // ---- prefetch on/off step latency (the sweep cell's inner loop) ----
+    // One dev epoch of the SST2-like task with a small GEMM standing in
+    // for the per-step compute; prefetch overlaps batch assembly with it,
+    // so the per-batch delta is the data-pipeline latency bought back.
+    let tok = Tokenizer::new(256);
+    let gen = TaskGen::new(Task::Sst2, &tok, 32, 7);
+    let pbsz = 32usize;
+    let n_batches = Batcher::new(&gen, Split::Dev, pbsz, 0).n_batches() as f64;
+    let step_a = randt(48, 48, 31);
+    let step_b = randt(48, 48, 32);
+    let sync_epoch_ns = b
+        .bench("batcher/sync/sst2_dev_epoch", || {
+            for batch in AnyBatcher::new(&gen, Split::Dev, pbsz, 0, false) {
+                black_box(&batch);
+                black_box(PACKED.matmul(&step_a, &step_b));
+            }
+        })
+        .mean_ns;
+    let prefetch_epoch_ns = b
+        .bench("batcher/prefetch/sst2_dev_epoch", || {
+            for batch in AnyBatcher::new(&gen, Split::Dev, pbsz, 0, true) {
+                black_box(&batch);
+                black_box(PACKED.matmul(&step_a, &step_b));
+            }
+        })
+        .mean_ns;
+    let sync_ns_per_batch = sync_epoch_ns / n_batches;
+    let prefetch_ns_per_batch = prefetch_epoch_ns / n_batches;
+    println!(
+        "prefetch step latency: sync {:.1} µs/batch, prefetch {:.1} µs/batch ({:.2}x)",
+        sync_ns_per_batch / 1e3,
+        prefetch_ns_per_batch / 1e3,
+        sync_ns_per_batch / prefetch_ns_per_batch
+    );
+
     let speedup_512 = {
         let find = |bname: &str| {
             krows
@@ -237,6 +273,25 @@ fn main() {
             // can be NaN if a timing came back degenerate
             ("speedup_512", num_or_null(speedup_512)),
             ("sors_batched_speedup_1024", num_or_null(sors_batched_speedup_1024)),
+            (
+                "prefetch",
+                Json::obj(vec![
+                    ("task", Json::str("sst2")),
+                    ("split", Json::str("dev")),
+                    ("batch_size", Json::num(pbsz as f64)),
+                    ("batches_per_epoch", Json::num(n_batches)),
+                    ("sync_ns_per_batch", num_or_null(sync_ns_per_batch)),
+                    ("prefetch_ns_per_batch", num_or_null(prefetch_ns_per_batch)),
+                    (
+                        "delta_ns_per_batch",
+                        num_or_null(sync_ns_per_batch - prefetch_ns_per_batch),
+                    ),
+                    (
+                        "speedup",
+                        num_or_null(sync_ns_per_batch / prefetch_ns_per_batch),
+                    ),
+                ]),
+            ),
             (
                 "pool",
                 Json::obj(vec![

@@ -2,14 +2,16 @@
 //! → final metric, loss curves, throughput, memory stats.  Every table and
 //! figure driver composes this.
 
-use anyhow::Result;
+use anyhow::{bail, Context as _, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::{MetricsLog, Trainer};
-use crate::data::{Batcher, Split, Task, TaskGen, Tokenizer};
+use crate::data::{AnyBatcher, Batcher, Split, Task, TaskGen, Tokenizer};
+use crate::memory::{MemoryModel, ModelGeometry};
 use crate::rmm::{self, SketchKind};
 use crate::rng::philox::PhiloxStream;
 use crate::runtime::{Engine, Manifest, Variant};
+use crate::sweep::{mock_cell, Cell, SweepSpec};
 use crate::tensor::{kernels, pool, Tensor};
 use crate::util::json::Json;
 
@@ -61,7 +63,11 @@ impl RunResult {
             ("rho", Json::num(self.rho)),
             ("sketch", Json::str(self.sketch.clone())),
             ("score", num_or_null(self.score)),
-            ("final_train_loss", Json::num(self.final_train_loss)),
+            // num_or_null throughout: a skipped measurement (skip_eval, a
+            // zero-step run, a no-RMM variant) must serialize as null, not
+            // as an unparseable NaN literal — sweep fragments are parsed
+            // back during merge, so this is load-bearing, not cosmetic.
+            ("final_train_loss", num_or_null(self.final_train_loss)),
             ("steps", Json::num(self.steps as f64)),
             ("wall_s", Json::num(self.wall_s)),
             ("samples_per_s", Json::num(self.samples_per_s)),
@@ -191,14 +197,15 @@ pub fn run_finetune(
 
     let t0 = std::time::Instant::now();
     let mut epoch = 0u64;
-    let mut batches = Batcher::new(&gen, Split::Train, bsz, epoch);
+    let prefetch = opts.train.prefetch;
+    let mut batches = AnyBatcher::new(&gen, Split::Train, bsz, epoch, prefetch);
     let mut compile_time = 0.0f64;
     for step in 0..opts.train.steps {
         let batch = match batches.next() {
             Some(b) => b,
             None => {
                 epoch += 1;
-                batches = Batcher::new(&gen, Split::Train, bsz, epoch);
+                batches = AnyBatcher::new(&gen, Split::Train, bsz, epoch, prefetch);
                 batches.next().expect("empty task split")
             }
         };
@@ -276,6 +283,87 @@ pub fn run_finetune(
         eval_losses,
         probe_series,
     })
+}
+
+/// Execute one sweep cell — the shared executor behind `sweep-worker`
+/// and the inline `--shards 1` path, dispatched on the spec's experiment
+/// key.  The cell's result JSON is exactly what lands in its fragment
+/// manifest, so everything a driver's `assemble` needs (including the
+/// Table 3 memory-model numbers, which need manifest access) is computed
+/// here, inside the process that owns the engine.
+pub fn run_cell(
+    engine: &mut Engine,
+    manifest: &Manifest,
+    spec: &SweepSpec,
+    cell: &Cell,
+) -> Result<Json> {
+    let mut train = spec.train.clone();
+    train.seed = cell.seed;
+    match spec.experiment.as_str() {
+        "mock" => Ok(mock_cell(cell)),
+        "table2" | "table4" => {
+            let task = Task::parse(&cell.task)
+                .with_context(|| format!("unknown task '{}' in cell", cell.task))?;
+            eprintln!(
+                "{}: cell {} variant={} task={} rho={}",
+                spec.experiment, cell.index, cell.variant, cell.task, cell.rho
+            );
+            let res = run_finetune(
+                engine,
+                manifest,
+                &cell.variant,
+                task,
+                RunOpts { train, ..Default::default() },
+            )?;
+            eprintln!("  -> score {:.2}", res.score);
+            Ok(res.to_json())
+        }
+        "table3" => {
+            let task = Task::parse(&cell.task)
+                .with_context(|| format!("unknown task '{}' in cell", cell.task))?;
+            let steps = train.steps;
+            let train = TrainConfig {
+                steps,
+                warmup_steps: 1.min(steps.saturating_sub(1)),
+                eval_every: usize::MAX,
+                log_every: steps.max(1),
+                ..train
+            };
+            eprintln!(
+                "table3: cell {} variant={} task={} rho={}",
+                cell.index, cell.variant, cell.task, cell.rho
+            );
+            let res = run_finetune(
+                engine,
+                manifest,
+                &cell.variant,
+                task,
+                RunOpts { train, skip_eval: true, ..Default::default() },
+            )?;
+            let variant = manifest.variant(&cell.variant)?;
+            let model = MemoryModel::new(variant.config.geometry(), cell.rho);
+            // Paper-scale extrapolation: RoBERTa-base with the paper's
+            // batch geometry (batch×seq scaled up proportionally).
+            let rob = MemoryModel::new(
+                ModelGeometry::roberta_base(cell.batch * 2, 128),
+                cell.rho,
+            );
+            Ok(Json::obj(vec![
+                ("task", Json::str(cell.task.clone())),
+                ("batch", Json::num(cell.batch as f64)),
+                ("rho", Json::num(cell.rho)),
+                (
+                    "measured_residual_bytes",
+                    Json::num(res.peak_residual_bytes as f64),
+                ),
+                ("model_total_bytes", Json::num(model.total_bytes() as f64)),
+                ("model_saving_pct", Json::num(model.saving_vs_baseline())),
+                ("roberta_total_bytes", Json::num(rob.total_bytes() as f64)),
+                ("roberta_saving_pct", Json::num(rob.saving_vs_baseline())),
+            ]))
+        }
+        other => bail!("unknown sweep experiment '{other}'"),
+    }
 }
 
 /// Variant name scheme shared with aot.py.

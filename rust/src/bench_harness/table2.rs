@@ -3,15 +3,18 @@
 //! Paper shape to reproduce: ρ=0.9/0.5 ≈ baseline, ρ=0.2 slightly lower,
 //! ρ=0.1 visibly lower — with small/noisy tasks (WNLI, RTE) degrading the
 //! most and occasional noise *wins* on individual tasks.
-
-use anyhow::Result;
+//!
+//! The driver is a thin grid declaration: [`spec`] lays the (ρ × task ×
+//! seed) cells out in canonical order and [`assemble`] folds the merged
+//! cell results back into the paper-style table + JSON report.  Cell
+//! execution/sharding/resume all live in `sweep::` (see its module doc).
 
 use crate::config::TrainConfig;
 use crate::data::Task;
-use crate::runtime::{Engine, Manifest};
+use crate::sweep::{Cell, SweepSpec};
 use crate::util::json::Json;
 
-use super::runner::{head_for, run_finetune, variant_name, RunOpts, RunResult};
+use super::runner::{head_for, variant_name};
 
 pub const RHOS: [f64; 5] = [1.0, 0.9, 0.5, 0.2, 0.1];
 
@@ -25,70 +28,131 @@ pub fn tasks_from_arg(arg: Option<&str>) -> Vec<Task> {
     }
 }
 
-pub fn run(
-    engine: &mut Engine,
-    manifest: &Manifest,
-    tasks: &[Task],
-    rhos: &[f64],
-    train: TrainConfig,
-) -> Result<Json> {
-    let mut rows: Vec<(f64, Vec<RunResult>)> = Vec::new();
+/// The Table 2 grid: ρ outermost (so report rows group naturally), then
+/// task, then seed.
+pub fn spec(tasks: &[Task], rhos: &[f64], seeds: &[u64], train: TrainConfig) -> SweepSpec {
+    let mut spec = SweepSpec::new("table2", train);
     for &rho in rhos {
-        let mut results = Vec::new();
         for &task in tasks {
-            let vname = variant_name("small", head_for(task), rho, "gauss");
-            eprintln!("table2: rho={rho} task={} variant={vname}", task.name());
-            let res = run_finetune(
-                engine,
-                manifest,
-                &vname,
-                task,
-                RunOpts { train: train.clone(), ..Default::default() },
-            )?;
-            eprintln!("  -> score {:.2}", res.score);
-            results.push(res);
+            for &seed in seeds {
+                let vname = variant_name("small", head_for(task), rho, "gauss");
+                spec.push(vname, task.name(), rho, "gauss", seed, 0);
+            }
         }
-        rows.push((rho, results));
     }
+    spec
+}
 
-    // ---- paper-style table ----
+/// Fold merged cell results (one `RunResult` JSON per cell, in canonical
+/// cell order) into the paper-style console table and the report JSON.
+/// Pure in `(spec, results)` — the byte-identity across shard counts
+/// that `tests/prop_sweep.rs` verifies rests on this purity.
+pub fn assemble(spec: &SweepSpec, results: &[Json]) -> Json {
+    // Group (cell, result) pairs by the contiguous rho runs of the grid.
+    let mut rows: Vec<(f64, Vec<(&Cell, &Json)>)> = Vec::new();
+    for (cell, res) in spec.cells.iter().zip(results) {
+        match rows.last_mut() {
+            Some((rho, group)) if *rho == cell.rho => group.push((cell, res)),
+            _ => rows.push((cell.rho, vec![(cell, res)])),
+        }
+    }
+    // Distinct task order as laid out within a rho group.
+    let tasks: Vec<String> = rows
+        .first()
+        .map(|(_, group)| {
+            let mut ts: Vec<String> = Vec::new();
+            for (c, _) in group {
+                if !ts.contains(&c.task) {
+                    ts.push(c.task.clone());
+                }
+            }
+            ts
+        })
+        .unwrap_or_default();
+
     println!("\nTable 2: fine-tuning scores vs compression ratio (gauss)");
     print!("{:>8}", "rho");
-    for task in tasks {
-        print!("{:>9}", task.name().to_uppercase());
+    for task in &tasks {
+        print!("{:>9}", task.to_uppercase());
     }
     println!("{:>9}", "Avg");
-    for (rho, results) in &rows {
+    for (rho, group) in &rows {
         if (*rho - 1.0).abs() < 1e-9 {
             print!("{:>8}", "No RMM");
         } else {
             print!("{:>7.0}%", rho * 100.0);
         }
         let mut sum = 0.0;
-        for r in results {
-            print!("{:>9.2}", r.score);
-            sum += r.score;
+        for task in &tasks {
+            // average over the seed axis of this (rho, task)
+            let scores: Vec<f64> = group
+                .iter()
+                .filter(|(c, _)| &c.task == task)
+                .map(|(_, r)| r.get("score").as_f64().unwrap_or(f64::NAN))
+                .collect();
+            let avg = scores.iter().sum::<f64>() / scores.len().max(1) as f64;
+            print!("{:>9.2}", avg);
+            sum += avg;
         }
-        println!("{:>9.2}", sum / results.len() as f64);
+        println!("{:>9.2}", sum / tasks.len().max(1) as f64);
     }
 
-    Ok(Json::obj(vec![
+    Json::obj(vec![
         ("experiment", Json::str("table2")),
         (
             "rows",
             Json::Arr(
                 rows.iter()
-                    .map(|(rho, results)| {
+                    .map(|(rho, group)| {
                         Json::obj(vec![
                             ("rho", Json::num(*rho)),
                             (
                                 "results",
-                                Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+                                Json::Arr(
+                                    group.iter().map(|(_, r)| (*r).clone()).collect(),
+                                ),
                             ),
                         ])
                     })
                     .collect(),
             ),
         ),
-    ]))
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_order_is_rho_task_seed() {
+        let tasks = [Task::Cola, Task::Sst2];
+        let s = spec(&tasks, &[1.0, 0.5], &[1, 2], TrainConfig::default());
+        assert_eq!(s.cells.len(), 8);
+        assert_eq!(s.experiment, "table2");
+        assert_eq!(s.cells[0].task, "cola");
+        assert_eq!(s.cells[0].seed, 1);
+        assert_eq!(s.cells[1].seed, 2);
+        assert_eq!(s.cells[2].task, "sst2");
+        assert!((s.cells[4].rho - 0.5).abs() < 1e-12);
+        assert_eq!(s.cells[0].variant, "small_cls2_r100_gauss");
+        assert_eq!(s.cells[4].variant, "small_cls2_r50_gauss");
+    }
+
+    #[test]
+    fn assemble_groups_by_rho_and_is_pure() {
+        let tasks = [Task::Cola, Task::Wnli];
+        let s = spec(&tasks, &[1.0, 0.1], &[7], TrainConfig::default());
+        let results: Vec<Json> = s
+            .cells
+            .iter()
+            .map(|c| Json::obj(vec![("score", Json::num(c.index as f64))]))
+            .collect();
+        let a = assemble(&s, &results);
+        let b = assemble(&s, &results);
+        assert_eq!(a.to_string_pretty(), b.to_string_pretty());
+        let rows = a.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("results").as_arr().unwrap().len(), 2);
+    }
 }

@@ -5,16 +5,16 @@
 //! model (weights + grads + Adam state + residuals), plus the same model
 //! extrapolated to RoBERTa-base/V100 scale — the setting of the paper's
 //! actual table.
-
-use anyhow::Result;
+//!
+//! Thin grid declaration over `sweep::` — each cell's result (measured
+//! peak + model numbers, computed in `runner::run_cell` where the
+//! manifest lives) is independent; only the saving-vs-baseline column is
+//! cross-cell and is derived in [`assemble`] from the ρ=1.0 cell of the
+//! same (task, batch) group.
 
 use crate::config::TrainConfig;
-use crate::data::Task;
-use crate::memory::{MemoryModel, ModelGeometry};
-use crate::runtime::{Engine, Manifest};
+use crate::sweep::SweepSpec;
 use crate::util::json::Json;
-
-use super::runner::{run_finetune, RunOpts};
 
 /// (task, batch-variant) pairs — scaled-down analogues of the paper's
 /// MRPC/128, QNLI/16, SST2/256 rows (see DESIGN.md §2).
@@ -36,80 +36,116 @@ fn batch_variant(bsz: usize, rho: f64) -> String {
     }
 }
 
-pub fn run(
-    engine: &mut Engine,
-    manifest: &Manifest,
-    steps: usize,
-) -> Result<Json> {
+/// The Table 3 grid: (task, batch) settings outermost, ρ inner — the
+/// ρ=1.0 baseline of each group precedes its compressed cells.
+pub fn spec(train: TrainConfig) -> SweepSpec {
+    let seed = train.seed;
+    let mut spec = SweepSpec::new("table3", train);
+    for (task, bsz) in SETTINGS {
+        for &rho in &RHOS {
+            spec.push(batch_variant(bsz, rho), task, rho, "gauss", seed, bsz);
+        }
+    }
+    spec
+}
+
+/// Fold merged cell results into the console table + report JSON, adding
+/// the residual-saving column relative to each group's ρ=1.0 cell.
+pub fn assemble(spec: &SweepSpec, results: &[Json]) -> Json {
     let mut out_rows = Vec::new();
     println!("\nTable 3: peak memory and saving vs rho");
     println!(
         "{:>6} {:>6} {:>8} {:>14} {:>10} {:>14} {:>10} {:>14}",
         "task", "batch", "rate", "resid KiB", "saving%", "model MiB", "saving%", "roberta GiB"
     );
-    for (task_name, bsz) in SETTINGS {
-        let task = Task::parse(task_name).unwrap();
-        let mut base_resid = 0usize;
-        for &rho in &RHOS {
-            let vname = batch_variant(bsz, rho);
-            let variant = manifest.variant(&vname)?;
-            let train = TrainConfig {
-                steps,
-                warmup_steps: 1.min(steps.saturating_sub(1)),
-                eval_every: usize::MAX,
-                log_every: steps.max(1),
-                ..TrainConfig::default()
-            };
-            let res = run_finetune(
-                engine,
-                manifest,
-                &vname,
-                task,
-                RunOpts { train, skip_eval: true, ..Default::default() },
-            )?;
-            if (rho - 1.0).abs() < 1e-9 {
-                base_resid = res.peak_residual_bytes;
-            }
-            let resid_saving = 100.0
-                * (1.0 - res.peak_residual_bytes as f64 / base_resid.max(1) as f64);
-            let model = MemoryModel::new(variant.config.geometry(), rho);
-            // Paper-scale extrapolation: RoBERTa-base with the paper's batch
-            // geometry (batch×seq scaled up proportionally).
-            let rob = MemoryModel::new(
-                ModelGeometry::roberta_base(bsz * 2, 128),
-                rho,
-            );
-            let rate = if (rho - 1.0).abs() < 1e-9 {
-                "No RMM".to_string()
-            } else {
-                format!("{:.0}%", rho * 100.0)
-            };
-            println!(
-                "{:>6} {:>6} {:>8} {:>14.1} {:>10.1} {:>14.2} {:>10.1} {:>14.2}",
-                task_name,
-                bsz,
-                rate,
-                res.peak_residual_bytes as f64 / 1024.0,
-                resid_saving,
-                model.total_bytes() as f64 / (1024.0 * 1024.0),
-                model.saving_vs_baseline(),
-                rob.total_bytes() as f64 / (1024.0 * 1024.0 * 1024.0),
-            );
-            out_rows.push(Json::obj(vec![
-                ("task", Json::str(task_name)),
-                ("batch", Json::num(bsz as f64)),
-                ("rho", Json::num(rho)),
-                ("measured_residual_bytes", Json::num(res.peak_residual_bytes as f64)),
-                ("residual_saving_pct", Json::num(resid_saving)),
-                ("model_total_bytes", Json::num(model.total_bytes() as f64)),
-                ("model_saving_pct", Json::num(model.saving_vs_baseline())),
-                ("roberta_total_bytes", Json::num(rob.total_bytes() as f64)),
-                ("roberta_saving_pct", Json::num(rob.saving_vs_baseline())),
-            ]));
+    let mut base_resid = 0usize;
+    for (cell, res) in spec.cells.iter().zip(results) {
+        let resid = res.get("measured_residual_bytes").as_f64().unwrap_or(0.0) as usize;
+        if (cell.rho - 1.0).abs() < 1e-9 {
+            base_resid = resid; // the group's baseline cell comes first
         }
+        let resid_saving = 100.0 * (1.0 - resid as f64 / base_resid.max(1) as f64);
+        let model_total = res.get("model_total_bytes").as_f64().unwrap_or(f64::NAN);
+        let model_saving = res.get("model_saving_pct").as_f64().unwrap_or(f64::NAN);
+        let rob_total = res.get("roberta_total_bytes").as_f64().unwrap_or(f64::NAN);
+        let rate = if (cell.rho - 1.0).abs() < 1e-9 {
+            "No RMM".to_string()
+        } else {
+            format!("{:.0}%", cell.rho * 100.0)
+        };
+        println!(
+            "{:>6} {:>6} {:>8} {:>14.1} {:>10.1} {:>14.2} {:>10.1} {:>14.2}",
+            cell.task,
+            cell.batch,
+            rate,
+            resid as f64 / 1024.0,
+            resid_saving,
+            model_total / (1024.0 * 1024.0),
+            model_saving,
+            rob_total / (1024.0 * 1024.0 * 1024.0),
+        );
+        out_rows.push(Json::obj(vec![
+            ("task", Json::str(cell.task.clone())),
+            ("batch", Json::num(cell.batch as f64)),
+            ("rho", Json::num(cell.rho)),
+            ("measured_residual_bytes", Json::num(resid as f64)),
+            ("residual_saving_pct", Json::num(resid_saving)),
+            ("model_total_bytes", res.get("model_total_bytes").clone()),
+            ("model_saving_pct", res.get("model_saving_pct").clone()),
+            ("roberta_total_bytes", res.get("roberta_total_bytes").clone()),
+            ("roberta_saving_pct", res.get("roberta_saving_pct").clone()),
+        ]));
     }
-    Ok(Json::obj(vec![
+    Json::obj(vec![
         ("experiment", Json::str("table3")),
         ("rows", Json::Arr(out_rows)),
-    ]))
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_settings_times_rhos() {
+        let s = spec(TrainConfig::default());
+        assert_eq!(s.cells.len(), SETTINGS.len() * RHOS.len());
+        assert_eq!(s.experiment, "table3");
+        // each group starts with its rho=1.0 baseline
+        for g in 0..SETTINGS.len() {
+            let first = &s.cells[g * RHOS.len()];
+            assert!((first.rho - 1.0).abs() < 1e-12);
+            assert_eq!(first.task, SETTINGS[g].0);
+            assert_eq!(first.batch, SETTINGS[g].1);
+        }
+        assert_eq!(s.cells[0].variant, "small_cls2_b64_r100_gauss");
+    }
+
+    #[test]
+    fn assemble_computes_saving_vs_group_baseline() {
+        let s = spec(TrainConfig::default());
+        let results: Vec<Json> = s
+            .cells
+            .iter()
+            .map(|c| {
+                // baseline 1000 bytes, compressed cells scale with rho
+                let bytes = (1000.0 * c.rho).round();
+                Json::obj(vec![
+                    ("measured_residual_bytes", Json::num(bytes)),
+                    ("model_total_bytes", Json::num(1.0)),
+                    ("model_saving_pct", Json::num(0.0)),
+                    ("roberta_total_bytes", Json::num(1.0)),
+                    ("roberta_saving_pct", Json::num(0.0)),
+                ])
+            })
+            .collect();
+        let rep = assemble(&s, &results);
+        let rows = rep.get("rows").as_arr().unwrap();
+        // the rho=0.5 row of the first group saves ~50%
+        let saving = rows[1].get("residual_saving_pct").as_f64().unwrap();
+        assert!((saving - 50.0).abs() < 1e-9, "{saving}");
+        // baselines save 0%
+        let base = rows[0].get("residual_saving_pct").as_f64().unwrap();
+        assert!(base.abs() < 1e-9, "{base}");
+    }
 }

@@ -5,57 +5,22 @@
 //! time differs by family (their naive PyTorch DCT/DFT were *slower* than
 //! Gauss despite better asymptotics — our FFT crossover bench shows where
 //! the asymptotics win).
-
-use anyhow::Result;
+//!
+//! Thin grid declaration over `sweep::` — the no-RMM baseline is the
+//! sketch="none" cell at index 0, then (family × ρ) cells in order.
 
 use crate::config::TrainConfig;
-use crate::data::Task;
-use crate::runtime::{Engine, Manifest};
+use crate::sweep::SweepSpec;
 use crate::util::json::Json;
-
-use super::runner::{run_finetune, RunOpts};
 
 pub const KINDS: [&str; 5] = ["gauss", "rademacher", "dct", "dft", "rowsample"];
 pub const RHOS: [f64; 3] = [0.5, 0.2, 0.1];
 
-pub fn run(
-    engine: &mut Engine,
-    manifest: &Manifest,
-    train: TrainConfig,
-) -> Result<Json> {
-    let task = Task::Cola;
-    let mut rows = Vec::new();
-
-    // Baseline row (no RMM).
-    let base = run_finetune(
-        engine,
-        manifest,
-        "small_cls2_r100_gauss",
-        task,
-        RunOpts { train: train.clone(), ..Default::default() },
-    )?;
-    println!(
-        "\nTable 4: sketch variants on CoLA (score, train time; host grads \
-         via the '{}' backend)",
-        base.backend
-    );
-    println!(
-        "{:>12} {:>6} {:>8} {:>10} {:>12} {:>12}",
-        "matmul", "rate", "score", "time s", "host exact", "host rmm"
-    );
-    println!(
-        "{:>12} {:>6} {:>8.2} {:>10.1} {:>10.2}ms {:>12}",
-        "No RMM", "-", base.score, base.wall_s, base.host_exact_ms, "-"
-    );
-    rows.push(Json::obj(vec![
-        ("kind", Json::str("none")),
-        ("rho", Json::num(1.0)),
-        ("score", Json::num(base.score)),
-        ("wall_s", Json::num(base.wall_s)),
-        ("backend", Json::str(base.backend.clone())),
-        ("host_exact_ms", Json::num(base.host_exact_ms)),
-    ]));
-
+/// The Table 4 grid: the baseline cell first, then family-major.
+pub fn spec(train: TrainConfig) -> SweepSpec {
+    let seed = train.seed;
+    let mut spec = SweepSpec::new("table4", train);
+    spec.push("small_cls2_r100_gauss", "cola", 1.0, "none", seed, 0);
     for kind in KINDS {
         for &rho in &RHOS {
             let tag = match rho {
@@ -63,37 +28,110 @@ pub fn run(
                 r if (r - 0.2).abs() < 1e-9 => "r20",
                 _ => "r10",
             };
-            let vname = format!("small_cls2_{tag}_{kind}");
-            eprintln!("table4: {vname}");
-            let res = run_finetune(
-                engine,
-                manifest,
-                &vname,
-                task,
-                RunOpts { train: train.clone(), ..Default::default() },
-            )?;
+            spec.push(format!("small_cls2_{tag}_{kind}"), "cola", rho, kind, seed, 0);
+        }
+    }
+    spec
+}
+
+/// Fold merged cell results (`RunResult` JSON per cell) into the console
+/// table and the report rows (baseline row omits `host_rmm_ms`, matching
+/// its no-RMM semantics).
+pub fn assemble(spec: &SweepSpec, results: &[Json]) -> Json {
+    let backend = results
+        .first()
+        .map(|r| r.get("backend").as_str().unwrap_or("?").to_string())
+        .unwrap_or_else(|| "?".to_string());
+    println!(
+        "\nTable 4: sketch variants on CoLA (score, train time; host grads \
+         via the '{backend}' backend)"
+    );
+    println!(
+        "{:>12} {:>6} {:>8} {:>10} {:>12} {:>12}",
+        "matmul", "rate", "score", "time s", "host exact", "host rmm"
+    );
+    let mut rows = Vec::new();
+    for (cell, res) in spec.cells.iter().zip(results) {
+        let score = res.get("score").as_f64().unwrap_or(f64::NAN);
+        let wall_s = res.get("wall_s").as_f64().unwrap_or(f64::NAN);
+        let exact = res.get("host_exact_ms").as_f64().unwrap_or(f64::NAN);
+        if cell.sketch == "none" {
             println!(
-                "{:>12} {:>5.0}% {:>8.2} {:>10.1} {:>10.2}ms {:>10.2}ms",
-                kind,
-                rho * 100.0,
-                res.score,
-                res.wall_s,
-                res.host_exact_ms,
-                res.host_rmm_ms
+                "{:>12} {:>6} {:>8.2} {:>10.1} {:>10.2}ms {:>12}",
+                "No RMM", "-", score, wall_s, exact, "-"
             );
             rows.push(Json::obj(vec![
-                ("kind", Json::str(kind)),
-                ("rho", Json::num(rho)),
-                ("score", Json::num(res.score)),
-                ("wall_s", Json::num(res.wall_s)),
-                ("backend", Json::str(res.backend.clone())),
-                ("host_exact_ms", Json::num(res.host_exact_ms)),
-                ("host_rmm_ms", Json::num(res.host_rmm_ms)),
+                ("kind", Json::str("none")),
+                ("rho", Json::num(1.0)),
+                ("score", res.get("score").clone()),
+                ("wall_s", res.get("wall_s").clone()),
+                ("backend", res.get("backend").clone()),
+                ("host_exact_ms", res.get("host_exact_ms").clone()),
+            ]));
+        } else {
+            let rmm = res.get("host_rmm_ms").as_f64().unwrap_or(f64::NAN);
+            println!(
+                "{:>12} {:>5.0}% {:>8.2} {:>10.1} {:>10.2}ms {:>10.2}ms",
+                cell.sketch,
+                cell.rho * 100.0,
+                score,
+                wall_s,
+                exact,
+                rmm
+            );
+            rows.push(Json::obj(vec![
+                ("kind", Json::str(cell.sketch.clone())),
+                ("rho", Json::num(cell.rho)),
+                ("score", res.get("score").clone()),
+                ("wall_s", res.get("wall_s").clone()),
+                ("backend", res.get("backend").clone()),
+                ("host_exact_ms", res.get("host_exact_ms").clone()),
+                ("host_rmm_ms", res.get("host_rmm_ms").clone()),
             ]));
         }
     }
-    Ok(Json::obj(vec![
+    Json::obj(vec![
         ("experiment", Json::str("table4")),
         ("rows", Json::Arr(rows)),
-    ]))
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_has_baseline_then_family_major_cells() {
+        let s = spec(TrainConfig::default());
+        assert_eq!(s.cells.len(), 1 + KINDS.len() * RHOS.len());
+        assert_eq!(s.cells[0].sketch, "none");
+        assert_eq!(s.cells[0].variant, "small_cls2_r100_gauss");
+        assert_eq!(s.cells[1].sketch, "gauss");
+        assert_eq!(s.cells[1].variant, "small_cls2_r50_gauss");
+        assert_eq!(s.cells[4].sketch, "rademacher");
+        assert_eq!(s.cells[6].variant, "small_cls2_r10_rademacher");
+    }
+
+    #[test]
+    fn assemble_omits_host_rmm_on_baseline_only() {
+        let s = spec(TrainConfig::default());
+        let results: Vec<Json> = s
+            .cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("score", Json::num(c.index as f64)),
+                    ("wall_s", Json::num(1.0)),
+                    ("backend", Json::str("packed")),
+                    ("host_exact_ms", Json::num(2.0)),
+                    ("host_rmm_ms", Json::num(3.0)),
+                ])
+            })
+            .collect();
+        let rep = assemble(&s, &results);
+        let rows = rep.get("rows").as_arr().unwrap();
+        assert!(rows[0].get("host_rmm_ms").is_null());
+        assert_eq!(rows[1].get("host_rmm_ms").as_f64(), Some(3.0));
+        assert_eq!(rows[0].get("kind").as_str(), Some("none"));
+    }
 }

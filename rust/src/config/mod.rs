@@ -25,6 +25,20 @@ pub struct TrainConfig {
     pub eval_every: usize,
     pub log_every: usize,
     pub seed: u64,
+    /// Assemble the next batch on a background thread while the trainer
+    /// consumes the current one (`data::PrefetchBatcher`).  Bit-identical
+    /// to synchronous batching — a pure latency knob.
+    pub prefetch: bool,
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        train_to_json(self)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainConfig> {
+        parse_train(j)
+    }
 }
 
 impl Default for TrainConfig {
@@ -43,6 +57,7 @@ impl Default for TrainConfig {
             eval_every: 100,
             log_every: 20,
             seed: 42,
+            prefetch: false,
         }
     }
 }
@@ -67,6 +82,24 @@ impl PoolConfig {
     }
 }
 
+/// Sweep-orchestrator knobs (see `sweep::mod`).  `shards: None` expresses
+/// no preference (the `--shards` flag / built-in default of 1 decides).
+/// Neither knob can change merged-report *content* for deterministic
+/// cells — sharding and resume only change how cells are scheduled.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SweepConfig {
+    /// Worker processes a sweep driver shards its grid across, >= 1.
+    pub shards: Option<usize>,
+    /// Reuse completed-cell manifests from a previous (killed) sweep.
+    pub resume: bool,
+}
+
+impl SweepConfig {
+    pub fn is_unset(&self) -> bool {
+        self.shards.is_none() && !self.resume
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     /// Artifact variant name (a key of manifest.json), e.g.
@@ -82,6 +115,8 @@ pub struct ExperimentConfig {
     pub backend: Option<String>,
     /// Compute-pool thread-count / task-grain overrides.
     pub pool: PoolConfig,
+    /// Sweep-orchestrator defaults (shard count, resume).
+    pub sweep: SweepConfig,
     pub train: TrainConfig,
 }
 
@@ -94,6 +129,7 @@ impl Default for ExperimentConfig {
             out_dir: "runs".to_string(),
             backend: None,
             pool: PoolConfig::default(),
+            sweep: SweepConfig::default(),
             train: TrainConfig::default(),
         }
     }
@@ -111,6 +147,7 @@ impl ExperimentConfig {
                 "out_dir" => cfg.out_dir = req_str(v, k)?,
                 "backend" => cfg.backend = Some(req_str(v, k)?),
                 "pool" => cfg.pool = parse_pool(v)?,
+                "sweep" => cfg.sweep = parse_sweep(v)?,
                 "train" => cfg.train = parse_train(v)?,
                 other => bail!("unknown config key '{other}'"),
             }
@@ -149,6 +186,18 @@ impl ExperimentConfig {
             }
             if let Json::Obj(map) = &mut j {
                 map.insert("pool".to_string(), Json::obj(p));
+            }
+        }
+        if !self.sweep.is_unset() {
+            let mut s = Vec::new();
+            if let Some(n) = self.sweep.shards {
+                s.push(("shards", Json::num(n as f64)));
+            }
+            if self.sweep.resume {
+                s.push(("resume", Json::Bool(true)));
+            }
+            if let Json::Obj(map) = &mut j {
+                map.insert("sweep".to_string(), Json::obj(s));
             }
         }
         j
@@ -195,6 +244,9 @@ impl ExperimentConfig {
         if self.pool.grain_rows == Some(0) {
             bail!("pool.grain_rows must be >= 1");
         }
+        if self.sweep.shards == Some(0) {
+            bail!("sweep.shards must be >= 1");
+        }
         let t = &self.train;
         if t.steps == 0 {
             bail!("train.steps must be > 0");
@@ -234,6 +286,21 @@ fn parse_pool(j: &Json) -> Result<PoolConfig> {
     Ok(p)
 }
 
+fn parse_sweep(j: &Json) -> Result<SweepConfig> {
+    let mut s = SweepConfig::default();
+    let obj = j.as_obj().context("'sweep' must be an object")?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "shards" => s.shards = Some(num(v, k)? as usize),
+            "resume" => {
+                s.resume = v.as_bool().context("'resume' must be a bool")?
+            }
+            other => bail!("unknown sweep key '{other}'"),
+        }
+    }
+    Ok(s)
+}
+
 fn parse_train(j: &Json) -> Result<TrainConfig> {
     let mut t = TrainConfig::default();
     let obj = j.as_obj().context("'train' must be an object")?;
@@ -252,6 +319,9 @@ fn parse_train(j: &Json) -> Result<TrainConfig> {
             "eval_every" => t.eval_every = num(v, k)? as usize,
             "log_every" => t.log_every = num(v, k)? as usize,
             "seed" => t.seed = num(v, k)? as u64,
+            "prefetch" => {
+                t.prefetch = v.as_bool().context("'prefetch' must be a bool")?
+            }
             other => bail!("unknown train key '{other}'"),
         }
     }
@@ -277,6 +347,7 @@ fn train_to_json(t: &TrainConfig) -> Json {
         ("eval_every", Json::num(t.eval_every as f64)),
         ("log_every", Json::num(t.log_every as f64)),
         ("seed", Json::num(t.seed as f64)),
+        ("prefetch", Json::Bool(t.prefetch)),
     ])
 }
 
@@ -329,6 +400,10 @@ mod tests {
             r#"{"pool": {"threads": 0}}"#,
             r#"{"pool": {"grain_rows": 0}}"#,
             r#"{"pool": {"bogus": 1}}"#,
+            r#"{"sweep": {"shards": 0}}"#,
+            r#"{"sweep": {"bogus": 1}}"#,
+            r#"{"sweep": {"resume": 3}}"#,
+            r#"{"train": {"prefetch": "yes"}}"#,
         ] {
             let j = Json::parse(src).unwrap();
             assert!(ExperimentConfig::from_json(&j).is_err(), "{src}");
@@ -353,5 +428,28 @@ mod tests {
         let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert!(cfg.pool.is_unset());
         assert!(!cfg.apply_pool());
+    }
+
+    #[test]
+    fn sweep_section_parses_and_roundtrips() {
+        let j = Json::parse(r#"{"sweep": {"shards": 3, "resume": true}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.sweep.shards, Some(3));
+        assert!(cfg.sweep.resume);
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // absent section -> no preference
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(cfg.sweep.is_unset());
+    }
+
+    #[test]
+    fn train_prefetch_parses_and_roundtrips() {
+        let j = Json::parse(r#"{"train": {"prefetch": true}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert!(cfg.train.prefetch);
+        let back = TrainConfig::from_json(&cfg.train.to_json()).unwrap();
+        assert_eq!(cfg.train, back);
+        assert!(!TrainConfig::default().prefetch);
     }
 }

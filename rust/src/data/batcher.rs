@@ -3,12 +3,24 @@
 //!
 //! XLA executables have static shapes, so the final partial batch of an
 //! epoch is padded by *wrapping around*; `Batch::valid` records how many
-//! leading rows are real (the evaluator weights metrics accordingly).
+//! leading rows are real (the evaluator weights metrics accordingly —
+//! wrapped rows must never reach a metric, which `tests/prop_data.rs`
+//! pins exhaustively around the `n % batch_size` edge cases).
+//!
+//! [`PrefetchBatcher`] is the double-buffered async twin: the next batch
+//! is assembled on a background thread while the trainer consumes the
+//! current one.  Because every batch is a pure function of
+//! `(task, split, batch_size, epoch, seed)`, the prefetched stream is
+//! **bit-identical** to the synchronous iterator — prefetch is a latency
+//! knob, never a results knob (enforced by `tests/prop_sweep.rs`).
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::thread::JoinHandle;
 
 use crate::rng::philox::{PhiloxStream, STREAM_DATA};
 
 use super::tasks::{Example, Split, TaskGen};
-use super::tokenizer::PAD;
+use super::tokenizer::{Tokenizer, PAD};
 
 /// One fixed-shape batch, layout-ready for literal upload.
 #[derive(Debug, Clone)]
@@ -58,6 +70,9 @@ pub struct Batcher<'a> {
 
 impl<'a> Batcher<'a> {
     pub fn new(gen: &'a TaskGen<'a>, split: Split, batch_size: usize, epoch: u64) -> Self {
+        // batch_size == 0 would make `next` never advance the cursor (an
+        // infinite iterator of empty batches) — fail loudly instead.
+        assert!(batch_size > 0, "batch_size must be > 0");
         let n = gen.task.split_size(split);
         let mut order: Vec<usize> = (0..n).collect();
         if split == Split::Train {
@@ -96,6 +111,111 @@ impl<'a> Iterator for Batcher<'a> {
         batch.valid = (self.order.len() - self.cursor).min(self.batch_size);
         self.cursor += self.batch_size;
         Some(batch)
+    }
+}
+
+/// Double-buffered asynchronous batcher: a background thread regenerates
+/// the exact `Batcher` stream for `(task, split, batch_size, epoch,
+/// seed)` and hands batches over a rendezvous channel of depth 1, so at
+/// most one finished batch waits while the next is being assembled —
+/// classic double buffering.
+///
+/// The producer owns its own `Tokenizer`/`TaskGen` (both pure functions
+/// of their constructor arguments), so no borrow crosses the thread and
+/// the emitted sequence is bit-identical to the synchronous iterator.
+/// The compute pool's `run` API is a blocking fork-join and cannot host
+/// a producer that outlives the call, hence one dedicated thread here;
+/// intra-batch kernels still run on the pool.
+pub struct PrefetchBatcher {
+    rx: Option<Receiver<Batch>>,
+    worker: Option<JoinHandle<()>>,
+    n_examples: usize,
+    batch_size: usize,
+}
+
+impl PrefetchBatcher {
+    pub fn new(gen: &TaskGen<'_>, split: Split, batch_size: usize, epoch: u64) -> Self {
+        assert!(batch_size > 0, "batch_size must be > 0");
+        let task = gen.task;
+        let vocab = gen.tok.vocab_size();
+        let seq_len = gen.seq_len;
+        let seed = gen.seed;
+        let n_examples = task.split_size(split);
+        let (tx, rx) = sync_channel::<Batch>(1);
+        let worker = std::thread::Builder::new()
+            .name("rmm-prefetch".to_string())
+            .spawn(move || {
+                let tok = Tokenizer::new(vocab);
+                let gen = TaskGen::new(task, &tok, seq_len, seed);
+                for batch in Batcher::new(&gen, split, batch_size, epoch) {
+                    if tx.send(batch).is_err() {
+                        break; // consumer hung up early (e.g. drop mid-epoch)
+                    }
+                }
+            })
+            .expect("spawning prefetch thread");
+        PrefetchBatcher { rx: Some(rx), worker: Some(worker), n_examples, batch_size }
+    }
+
+    pub fn n_examples(&self) -> usize {
+        self.n_examples
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.n_examples.div_ceil(self.batch_size)
+    }
+}
+
+impl Iterator for PrefetchBatcher {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        self.rx.as_ref().and_then(|rx| rx.recv().ok())
+    }
+}
+
+impl Drop for PrefetchBatcher {
+    fn drop(&mut self) {
+        // Disconnect first so a producer blocked on `send` unblocks, then
+        // reap the thread (it exits promptly on the send error).
+        drop(self.rx.take());
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Either batching strategy behind one iterator type, selected by the
+/// `prefetch` train-config knob (`--prefetch` / `train.prefetch`).
+pub enum AnyBatcher<'a> {
+    Sync(Batcher<'a>),
+    Prefetch(PrefetchBatcher),
+}
+
+impl<'a> AnyBatcher<'a> {
+    pub fn new(
+        gen: &'a TaskGen<'a>,
+        split: Split,
+        batch_size: usize,
+        epoch: u64,
+        prefetch: bool,
+    ) -> Self {
+        if prefetch {
+            AnyBatcher::Prefetch(PrefetchBatcher::new(gen, split, batch_size, epoch))
+        } else {
+            AnyBatcher::Sync(Batcher::new(gen, split, batch_size, epoch))
+        }
+    }
+}
+
+impl Iterator for AnyBatcher<'_> {
+    type Item = Batch;
+
+    fn next(&mut self) -> Option<Batch> {
+        match self {
+            AnyBatcher::Sync(b) => b.next(),
+            AnyBatcher::Prefetch(p) => p.next(),
+        }
     }
 }
 
@@ -168,5 +288,51 @@ mod tests {
         let batches: Vec<Batch> = Batcher::new(&g, Split::Dev, 32, 0).collect();
         assert_eq!(batches.len(), n.div_ceil(32));
         assert_eq!(batches.last().unwrap().valid, n % 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch_size must be > 0")]
+    fn zero_batch_size_panics() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Wnli, &tok, 16, 1);
+        let _ = Batcher::new(&g, Split::Dev, 0, 0);
+    }
+
+    #[test]
+    fn prefetch_matches_sync_for_one_epoch() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Cola, &tok, 16, 9);
+        let sync: Vec<Batch> = Batcher::new(&g, Split::Train, 24, 2).collect();
+        let pre: Vec<Batch> = PrefetchBatcher::new(&g, Split::Train, 24, 2).collect();
+        assert_eq!(sync.len(), pre.len());
+        for (a, b) in sync.iter().zip(&pre) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.mask, b.mask);
+            assert_eq!(a.labels_i, b.labels_i);
+            assert_eq!(a.labels_f, b.labels_f);
+            assert_eq!(a.valid, b.valid);
+        }
+    }
+
+    #[test]
+    fn prefetch_drop_mid_epoch_does_not_hang() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Mnli, &tok, 16, 1);
+        let mut p = PrefetchBatcher::new(&g, Split::Train, 8, 0);
+        assert!(p.next().is_some());
+        drop(p); // producer is mid-stream; Drop must disconnect + join
+    }
+
+    #[test]
+    fn any_batcher_dispatches_both_modes() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Wnli, &tok, 16, 1);
+        let a: Vec<Batch> = AnyBatcher::new(&g, Split::Dev, 16, 0, false).collect();
+        let b: Vec<Batch> = AnyBatcher::new(&g, Split::Dev, 16, 0, true).collect();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.valid, y.valid);
+        }
     }
 }

@@ -7,7 +7,7 @@ pub mod metrics;
 pub mod tasks;
 pub mod tokenizer;
 
-pub use batcher::{Batch, Batcher};
+pub use batcher::{AnyBatcher, Batch, Batcher, PrefetchBatcher};
 pub use metrics::MetricAccum;
 pub use tasks::{Example, Metric, Split, Task, TaskGen};
 pub use tokenizer::Tokenizer;

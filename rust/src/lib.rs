@@ -27,5 +27,6 @@ pub mod memory;
 pub mod rmm;
 pub mod rng;
 pub mod runtime;
+pub mod sweep;
 pub mod tensor;
 pub mod util;

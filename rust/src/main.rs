@@ -4,8 +4,10 @@
 //! repro train --variant small_cls2_r50_gauss --task cola --steps 400
 //! repro eval  --variant small_cls2_r50_gauss --task cola --checkpoint runs/ck.bin
 //! repro pretrain --steps 600 --out runs/pretrained.bin
-//! repro bench-table2 [--tasks cola,sst2] [--steps 300]
+//! repro bench-table2 [--tasks cola,sst2] [--steps 300] [--shards 3] [--resume]
 //! repro bench-table3 | bench-table4 | bench-fig3 | bench-fig4 | bench-fig5 | bench-fig6
+//! repro sweep-worker --dir reports/sweep_table2 --shard 0/3
+//! repro sweep-selftest [--shards 2]
 //! repro inspect-artifacts
 //! repro memory-model --rho 0.1 [--roberta]
 //! ```
@@ -15,11 +17,12 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use rmmlinear::bench_harness as bench;
-use rmmlinear::config::TrainConfig;
+use rmmlinear::config::{SweepConfig, TrainConfig};
 use rmmlinear::coordinator::{Checkpoint, MetricsLog, Trainer};
 use rmmlinear::data::{Task, Tokenizer};
 use rmmlinear::memory::{MemoryModel, ModelGeometry};
 use rmmlinear::runtime::{Engine, Manifest};
+use rmmlinear::sweep::{self, Shard, SweepSpec};
 use rmmlinear::util::cli::Args;
 use rmmlinear::util::json::Json;
 
@@ -42,6 +45,7 @@ fn train_config(args: &Args) -> TrainConfig {
     t.schedule = args.get_or("schedule", &t.schedule).to_string();
     t.log_every = args.get_usize("log-every", t.log_every);
     t.seed = args.get_u64("seed", t.seed);
+    t.prefetch = args.has_flag("prefetch");
     t
 }
 
@@ -54,8 +58,66 @@ fn reports_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("reports", "reports"))
 }
 
+/// Sweep defaults from the `--config` file's `sweep` section (CLI flags
+/// take precedence).  `run()` already loaded and applied this file for
+/// backend/pool knobs; re-reading it here keeps the cmd handlers free of
+/// threading, and a failure *now* (file changed or vanished since) is an
+/// error, not a silent fall-back to defaults.
+fn sweep_defaults(args: &Args) -> Result<SweepConfig> {
+    match args.get("config") {
+        Some(p) => Ok(rmmlinear::config::ExperimentConfig::load(Path::new(p))?.sweep),
+        None => Ok(SweepConfig::default()),
+    }
+}
+
+fn parse_seeds(args: &Args, default: u64) -> Vec<u64> {
+    args.get("seeds")
+        .map(|s| {
+            s.split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect::<Vec<u64>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![default])
+}
+
+/// Run a sweep spec to completion and return the merged, cell-ordered
+/// results: `--shards 1` executes inline with one engine; `--shards N`
+/// self-spawns N `sweep-worker` processes (each with its own engine) and
+/// merges their fragments.  Both paths produce the same fragment set, so
+/// the merged report is identical for deterministic cells.
+fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
+    let defaults = sweep_defaults(args)?;
+    let shards = args.get_usize("shards", defaults.shards.unwrap_or(1)).max(1);
+    let resume = args.has_flag("resume") || defaults.resume;
+    let dir = reports_dir(args).join(format!("sweep_{name}"));
+    sweep::resume::prepare(&dir, spec, resume)?;
+    if shards <= 1 {
+        let manifest = load_manifest(args)?;
+        let mut engine = Engine::cpu()?;
+        let mut runner = |cell: &sweep::Cell| {
+            bench::runner::run_cell(&mut engine, &manifest, spec, cell)
+        };
+        sweep::run_shard(&dir, spec, Shard::SERIAL, &mut runner)?;
+    } else {
+        // pass the environment-shaping options through to the workers
+        let mut extra = Vec::new();
+        for key in ["artifacts", "backend", "threads", "pool-grain", "config", "reports"] {
+            if let Some(v) = args.get(key) {
+                extra.push(format!("--{key}"));
+                extra.push(v.to_string());
+            }
+        }
+        sweep::spawn_workers(&dir, shards, &extra)?;
+    }
+    sweep::merge::merge(&dir, spec)
+}
+
 fn run(argv: &[String]) -> Result<()> {
-    let args = Args::parse(argv, &["roberta", "all-tasks", "verbose", "help"]);
+    let args = Args::parse(
+        argv,
+        &["roberta", "all-tasks", "verbose", "help", "resume", "prefetch"],
+    );
     use rmmlinear::tensor::kernels;
     use rmmlinear::tensor::pool;
     // Backend precedence: --backend flag > config file > RMM_BACKEND env.
@@ -104,6 +166,8 @@ fn run(argv: &[String]) -> Result<()> {
         "bench-fig4" => cmd_fig4(&args),
         "bench-fig5" => cmd_fig5(&args),
         "bench-fig6" => cmd_fig6(&args),
+        "sweep-worker" => cmd_sweep_worker(&args),
+        "sweep-selftest" => cmd_sweep_selftest(&args),
         "inspect-artifacts" => cmd_inspect(&args),
         "memory-model" => cmd_memory_model(&args),
         "help" | _ => {
@@ -128,8 +192,15 @@ COMMANDS
                     [--steps N] [--out runs/pretrained.bin]
   bench-table2      GLUE scores vs rho sweep (paper Table 2)
                     [--tasks cola,sst2,...|all] [--rhos 1.0,0.5,...] [--steps N]
+                    [--seeds 1,2,3] [--shards N] [--resume]
   bench-table3      peak memory + saving per (task, batch, rho) (Table 3)
+                    [--shards N] [--resume]
   bench-table4      sketch-family comparison on CoLA (Table 4)
+                    [--shards N] [--resume]
+  sweep-worker      run one shard of a prepared sweep (self-spawned by the
+                    table drivers) --dir DIR --shard i/N
+  sweep-selftest    shard/merge/resume smoke over the mock grid: serial vs
+                    --shards N worker processes must merge byte-identically
   bench-fig3        memory vs batch size [--all-tasks] (Fig 3/8)
   bench-fig4        variance-probe series (Fig 4/7)
   bench-fig5        loss curves vs rho [--task mnli] (Fig 5/9)
@@ -150,6 +221,14 @@ COMMON OPTIONS
   --pool-grain N    rows per pool task for row-partitioned kernels
                     (overrides --config; env: RMM_POOL_GRAIN; load
                     balance only, never affects results)
+  --shards N        shard a sweep's grid across N self-spawned worker
+                    processes (default 1 = inline; config: sweep.shards;
+                    merged reports are cell-order independent)
+  --resume          reuse completed-cell manifests from a killed sweep
+                    (config: sweep.resume); only missing cells rerun
+  --prefetch        assemble the next batch on a background thread while
+                    the trainer consumes the current one (bit-identical
+                    to synchronous batching; config: train.prefetch)
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -298,8 +377,6 @@ fn parse_rhos(args: &Args, default: &[f64]) -> Vec<f64> {
 }
 
 fn cmd_table2(args: &Args) -> Result<()> {
-    let manifest = load_manifest(args)?;
-    let mut engine = Engine::cpu()?;
     let tasks = bench::table2::tasks_from_arg(args.get("tasks"));
     if tasks.is_empty() {
         bail!("no valid tasks in --tasks");
@@ -310,27 +387,91 @@ fn cmd_table2(args: &Args) -> Result<()> {
         cfg.steps = 300;
     }
     cfg.eval_every = usize::MAX;
-    let report = bench::table2::run(&mut engine, &manifest, &tasks, &rhos, cfg)?;
+    let seeds = parse_seeds(args, cfg.seed);
+    let spec = bench::table2::spec(&tasks, &rhos, &seeds, cfg);
+    let results = run_sweep(args, &spec, "table2")?;
+    let report = bench::table2::assemble(&spec, &results);
     bench::write_report(&reports_dir(args), "table2", &report)
 }
 
 fn cmd_table3(args: &Args) -> Result<()> {
-    let manifest = load_manifest(args)?;
-    let mut engine = Engine::cpu()?;
-    let steps = args.get_usize("steps", 5);
-    let report = bench::table3::run(&mut engine, &manifest, steps)?;
+    let mut cfg = TrainConfig::default();
+    cfg.steps = args.get_usize("steps", 5);
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.prefetch = args.has_flag("prefetch");
+    let spec = bench::table3::spec(cfg);
+    let results = run_sweep(args, &spec, "table3")?;
+    let report = bench::table3::assemble(&spec, &results);
     bench::write_report(&reports_dir(args), "table3", &report)
 }
 
 fn cmd_table4(args: &Args) -> Result<()> {
-    let manifest = load_manifest(args)?;
-    let mut engine = Engine::cpu()?;
     let mut cfg = train_config(args);
     if args.get("steps").is_none() {
         cfg.steps = 300;
     }
-    let report = bench::table4::run(&mut engine, &manifest, cfg)?;
+    let spec = bench::table4::spec(cfg);
+    let results = run_sweep(args, &spec, "table4")?;
+    let report = bench::table4::assemble(&spec, &results);
     bench::write_report(&reports_dir(args), "table4", &report)
+}
+
+/// One shard of a sweep, in this process — the contract `spawn_workers`
+/// relies on: load `sweep.json` from `--dir`, run the cells owned by
+/// `--shard i/N` that have no committed fragment yet, exit 0 iff all
+/// owned cells committed.  The "mock" experiment needs no artifacts or
+/// engine (used by sweep-selftest and the orchestration tests).
+fn cmd_sweep_worker(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.get("dir").context("--dir required")?);
+    let shard = Shard::parse(args.get("shard").context("--shard i/N required")?)?;
+    let spec = sweep::resume::load_spec(&dir)?;
+    let ran = if spec.experiment == "mock" {
+        sweep::run_shard(&dir, &spec, shard, &mut |c| Ok(sweep::mock_cell(c)))?
+    } else {
+        let manifest = load_manifest(args)?;
+        let mut engine = Engine::cpu()?;
+        let mut runner = |cell: &sweep::Cell| {
+            bench::runner::run_cell(&mut engine, &manifest, &spec, cell)
+        };
+        sweep::run_shard(&dir, &spec, shard, &mut runner)?
+    };
+    eprintln!("sweep-worker {shard}: ran {ran} cells");
+    Ok(())
+}
+
+/// End-to-end smoke of the shard/merge/resume machinery over the mock
+/// grid: a serial run and an `--shards N` run through real worker
+/// processes must merge to byte-identical reports.  CI's sweep gate.
+fn cmd_sweep_selftest(args: &Args) -> Result<()> {
+    let shards = args.get_usize("shards", 2).max(1);
+    let spec = sweep::selftest_spec();
+    let base = std::env::temp_dir()
+        .join(format!("rmm_sweep_selftest_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+
+    let serial_dir = base.join("serial");
+    sweep::resume::prepare(&serial_dir, &spec, false)?;
+    sweep::run_shard(&serial_dir, &spec, Shard::SERIAL, &mut |c| {
+        Ok(sweep::mock_cell(c))
+    })?;
+    let serial = Json::Arr(sweep::merge::merge(&serial_dir, &spec)?).to_string_pretty();
+
+    let sharded_dir = base.join("sharded");
+    sweep::resume::prepare(&sharded_dir, &spec, false)?;
+    sweep::spawn_workers(&sharded_dir, shards, &[])?;
+    let sharded =
+        Json::Arr(sweep::merge::merge(&sharded_dir, &spec)?).to_string_pretty();
+
+    std::fs::remove_dir_all(&base).ok();
+    if serial != sharded {
+        bail!("sweep selftest FAILED: {shards}-shard merged report differs from serial");
+    }
+    println!(
+        "sweep selftest: {} cells across {shards} worker processes, \
+         byte-identical merged report",
+        spec.cells.len()
+    );
+    Ok(())
 }
 
 fn cmd_fig3(args: &Args) -> Result<()> {

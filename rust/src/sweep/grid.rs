@@ -1,0 +1,215 @@
+//! Declarative sweep grids: a [`SweepSpec`] is the full, serializable
+//! description of one experiment sweep — the experiment key the worker
+//! dispatches on, the base [`TrainConfig`], and the ordered list of
+//! [`Cell`]s (variant × task × ρ × sketch × seed × batch).
+//!
+//! The spec's JSON form (`sweep.json` in the sweep directory) is the
+//! *only* thing a `sweep-worker` process needs besides its `--shard i/N`
+//! assignment: workers never rebuild the grid from CLI arguments, so the
+//! orchestrator and every worker are guaranteed to agree on cell indices.
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::util::json::Json;
+
+/// Largest cell seed that survives the JSON f64 round-trip losslessly
+/// (2^53).  Bigger seeds would make the orchestrator's in-memory cell
+/// disagree with every worker's parsed copy, so fragments could never
+/// validate and a sweep would rerun forever — reject them up front.
+pub const MAX_JSON_SEED: u64 = 1 << 53;
+
+/// One sweep cell — a single fine-tuning run.  `index` is the cell's
+/// position in the canonical grid order and doubles as its identity for
+/// sharding (`index % shards`), fragment naming, and merge ordering.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    pub index: usize,
+    /// Artifact variant name (a key of manifest.json).
+    pub variant: String,
+    /// Synthetic-GLUE task name.
+    pub task: String,
+    /// Compression ratio ρ (1.0 = no RMM).
+    pub rho: f64,
+    /// Sketch-family axis; "none" marks a no-RMM baseline row.
+    pub sketch: String,
+    /// Per-cell training seed (overrides the spec's base `train.seed`).
+    pub seed: u64,
+    /// Batch-size axis (Table 3); 0 = the variant's own batch size.
+    pub batch: usize,
+}
+
+impl Cell {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::num(self.index as f64)),
+            ("variant", Json::str(self.variant.clone())),
+            ("task", Json::str(self.task.clone())),
+            ("rho", Json::num(self.rho)),
+            ("sketch", Json::str(self.sketch.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("batch", Json::num(self.batch as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Cell> {
+        let seed_f = j.get("seed").as_f64().context("cell.seed")?;
+        if seed_f < 0.0 || seed_f.fract() != 0.0 || seed_f > MAX_JSON_SEED as f64 {
+            bail!("cell.seed {seed_f} outside the losslessly serializable range");
+        }
+        Ok(Cell {
+            index: j.get("index").as_usize().context("cell.index")?,
+            variant: j.get("variant").as_str().context("cell.variant")?.to_string(),
+            task: j.get("task").as_str().context("cell.task")?.to_string(),
+            rho: j.get("rho").as_f64().context("cell.rho")?,
+            sketch: j.get("sketch").as_str().context("cell.sketch")?.to_string(),
+            seed: seed_f as u64,
+            batch: j.get("batch").as_usize().context("cell.batch")?,
+        })
+    }
+}
+
+/// A full sweep: experiment key + base train config + canonical cell list.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Dispatch key for the cell runner: "table2" | "table3" | "table4"
+    /// | "mock" (the deterministic self-test grid).
+    pub experiment: String,
+    /// Base training config; each cell overrides `seed` with its own.
+    pub train: TrainConfig,
+    pub cells: Vec<Cell>,
+}
+
+impl SweepSpec {
+    pub fn new(experiment: impl Into<String>, train: TrainConfig) -> SweepSpec {
+        SweepSpec { experiment: experiment.into(), train, cells: Vec::new() }
+    }
+
+    /// Append a cell in canonical grid order (its index is its position).
+    /// Panics on a seed above [`MAX_JSON_SEED`] — such a cell could never
+    /// validate its own fragment after the spec's JSON round-trip.
+    pub fn push(
+        &mut self,
+        variant: impl Into<String>,
+        task: impl Into<String>,
+        rho: f64,
+        sketch: impl Into<String>,
+        seed: u64,
+        batch: usize,
+    ) {
+        assert!(
+            seed <= MAX_JSON_SEED,
+            "cell seed {seed} cannot round-trip JSON (must be <= 2^53)"
+        );
+        let index = self.cells.len();
+        self.cells.push(Cell {
+            index,
+            variant: variant.into(),
+            task: task.into(),
+            rho,
+            sketch: sketch.into(),
+            seed,
+            batch,
+        });
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("experiment", Json::str(self.experiment.clone())),
+            ("train", self.train.to_json()),
+            ("cells", Json::Arr(self.cells.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SweepSpec> {
+        let experiment = j
+            .get("experiment")
+            .as_str()
+            .context("sweep.experiment")?
+            .to_string();
+        if experiment.is_empty() {
+            bail!("sweep.experiment must be non-empty");
+        }
+        let train = TrainConfig::from_json(j.get("train")).context("sweep.train")?;
+        let cells = j
+            .get("cells")
+            .as_arr()
+            .context("sweep.cells")?
+            .iter()
+            .map(Cell::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        for (pos, cell) in cells.iter().enumerate() {
+            if cell.index != pos {
+                bail!(
+                    "sweep.cells out of canonical order: cell at position {pos} \
+                     has index {}",
+                    cell.index
+                );
+            }
+        }
+        Ok(SweepSpec { experiment, train, cells })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_spec() -> SweepSpec {
+        let mut s = SweepSpec::new("mock", TrainConfig::default());
+        s.push("v0", "cola", 1.0, "gauss", 42, 0);
+        s.push("v1", "sst2", 0.1, "dct", 7, 16);
+        s
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let s = demo_spec();
+        let j = s.to_json();
+        let back = SweepSpec::from_json(&j).unwrap();
+        assert_eq!(back.experiment, "mock");
+        assert_eq!(back.train, s.train);
+        assert_eq!(back.cells, s.cells);
+        // byte-stable re-encode (the merge contract relies on this)
+        assert_eq!(j.to_string_pretty(), back.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn push_assigns_sequential_indices() {
+        let s = demo_spec();
+        assert_eq!(s.cells[0].index, 0);
+        assert_eq!(s.cells[1].index, 1);
+        assert_eq!(s.cells[1].batch, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot round-trip JSON")]
+    fn push_rejects_unserializable_seed() {
+        let mut s = SweepSpec::new("mock", TrainConfig::default());
+        s.push("v", "cola", 1.0, "gauss", MAX_JSON_SEED + 1, 0);
+    }
+
+    #[test]
+    fn from_json_rejects_unserializable_seed() {
+        let mut j = demo_spec().to_json();
+        if let Json::Obj(map) = &mut j {
+            if let Some(Json::Arr(cells)) = map.get_mut("cells") {
+                if let Json::Obj(cell) = &mut cells[0] {
+                    cell.insert("seed".to_string(), Json::num(2f64.powi(54)));
+                }
+            }
+        }
+        assert!(SweepSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_out_of_order_cells() {
+        let mut j = demo_spec().to_json();
+        if let Json::Obj(map) = &mut j {
+            if let Some(Json::Arr(cells)) = map.get_mut("cells") {
+                cells.swap(0, 1);
+            }
+        }
+        assert!(SweepSpec::from_json(&j).is_err());
+    }
+}

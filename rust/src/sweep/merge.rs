@@ -1,0 +1,161 @@
+//! Per-cell manifest (fragment) IO and the cell-order-independent merge.
+//!
+//! Each completed cell is one JSON file `cells/cell_<index>.json` of the
+//! form `{"cell": <cell>, "result": <result>}`.  Fragments are written
+//! atomically (tmp + rename), so a killed worker can never leave a
+//! half-written manifest that a later resume would trust.  Reading
+//! validates the embedded cell against the current spec — a stale
+//! fragment from a different grid is treated as absent, never merged.
+//!
+//! `merge` walks the spec's canonical cell order and looks fragments up
+//! by index, so the merged result list — and any report assembled from
+//! it — is a pure function of the fragment *set*, independent of which
+//! shard produced a fragment or in what order cells completed.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::grid::{Cell, SweepSpec};
+use super::resume;
+
+/// Fragment path for a cell inside the sweep's `cells/` directory.
+pub fn fragment_path(cells_dir: &Path, cell: &Cell) -> PathBuf {
+    cells_dir.join(format!("cell_{:05}.json", cell.index))
+}
+
+/// Atomically commit a completed cell's manifest.  The fragment embeds
+/// both the cell it answers for *and* the spec's train config, so resume
+/// validation covers the full grid contract.
+pub fn write_fragment(
+    cells_dir: &Path,
+    spec: &SweepSpec,
+    cell: &Cell,
+    result: &Json,
+) -> Result<()> {
+    let body = Json::obj(vec![
+        ("cell", cell.to_json()),
+        ("train", spec.train.to_json()),
+        ("result", result.clone()),
+    ]);
+    let path = fragment_path(cells_dir, cell);
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, body.to_string_pretty())
+        .with_context(|| format!("writing fragment {tmp:?}"))?;
+    std::fs::rename(&tmp, &path).with_context(|| format!("committing {path:?}"))?;
+    Ok(())
+}
+
+/// The cell's result, iff its fragment exists, parses, embeds exactly
+/// this cell (same index, variant, task, ρ, sketch, seed, batch) *and*
+/// was produced under this spec's train config.  Any mismatch —
+/// truncated file, stale grid, different `--steps`/`--lr`, hand-edited
+/// cell — reads as "not completed" so the cell reruns instead of
+/// smuggling a stale row into the merge.
+pub fn read_fragment(cells_dir: &Path, spec: &SweepSpec, cell: &Cell) -> Option<Json> {
+    let text = std::fs::read_to_string(fragment_path(cells_dir, cell)).ok()?;
+    let j = Json::parse(&text).ok()?;
+    let embedded = Cell::from_json(j.get("cell")).ok()?;
+    if &embedded != cell {
+        return None;
+    }
+    // TrainConfig JSON round-trips byte-exactly (prop-pinned), so
+    // structural equality here is the "same training settings" check.
+    if j.get("train") != &spec.train.to_json() {
+        return None;
+    }
+    let result = j.get("result");
+    if result.is_null() {
+        return None;
+    }
+    Some(result.clone())
+}
+
+/// Merge every cell's result in canonical grid order.  Fails listing the
+/// missing/invalid cell indices if the sweep is incomplete.
+pub fn merge(dir: &Path, spec: &SweepSpec) -> Result<Vec<Json>> {
+    let cdir = resume::cells_dir(dir);
+    let mut out = Vec::with_capacity(spec.cells.len());
+    let mut missing = Vec::new();
+    for cell in &spec.cells {
+        match read_fragment(&cdir, spec, cell) {
+            Some(r) => out.push(r),
+            None => missing.push(cell.index),
+        }
+    }
+    if !missing.is_empty() {
+        let shown: Vec<String> =
+            missing.iter().take(8).map(|i| i.to_string()).collect();
+        bail!(
+            "sweep merge: {}/{} cells missing or invalid (indices {}{})",
+            missing.len(),
+            spec.cells.len(),
+            shown.join(","),
+            if missing.len() > 8 { ",…" } else { "" }
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("rmm_merge_test_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn spec2() -> SweepSpec {
+        let mut s = SweepSpec::new("mock", TrainConfig::default());
+        s.push("v0", "cola", 1.0, "gauss", 1, 0);
+        s.push("v1", "sst2", 0.5, "dft", 2, 0);
+        s
+    }
+
+    #[test]
+    fn fragment_roundtrip_and_validation() {
+        let dir = tmp("roundtrip");
+        let cdir = resume::cells_dir(&dir);
+        std::fs::create_dir_all(&cdir).unwrap();
+        let spec = spec2();
+        let result = Json::obj(vec![("score", Json::num(12.5))]);
+        write_fragment(&cdir, &spec, &spec.cells[0], &result).unwrap();
+        assert_eq!(read_fragment(&cdir, &spec, &spec.cells[0]), Some(result));
+        // a different cell must not read cell 0's fragment
+        assert!(read_fragment(&cdir, &spec, &spec.cells[1]).is_none());
+        // a stale fragment (same index, different grid) reads as absent
+        let mut stale = spec.cells[0].clone();
+        stale.variant = "other_variant".into();
+        assert!(read_fragment(&cdir, &spec, &stale).is_none());
+        // a fragment from different *training settings* reads as absent
+        let mut retrained = spec.clone();
+        retrained.train.steps += 1;
+        assert!(read_fragment(&cdir, &retrained, &spec.cells[0]).is_none());
+        // garbage on disk reads as absent, not as an error
+        std::fs::write(fragment_path(&cdir, &spec.cells[0]), "{trunc").unwrap();
+        assert!(read_fragment(&cdir, &spec, &spec.cells[0]).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn merge_reports_missing_cells() {
+        let dir = tmp("missing");
+        let cdir = resume::cells_dir(&dir);
+        std::fs::create_dir_all(&cdir).unwrap();
+        let spec = spec2();
+        write_fragment(&cdir, &spec, &spec.cells[1], &Json::num(1.0)).unwrap();
+        let err = merge(&dir, &spec).unwrap_err();
+        assert!(format!("{err}").contains("1/2 cells"), "{err}");
+        write_fragment(&cdir, &spec, &spec.cells[0], &Json::num(0.0)).unwrap();
+        let all = merge(&dir, &spec).unwrap();
+        assert_eq!(all, vec![Json::num(0.0), Json::num(1.0)]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

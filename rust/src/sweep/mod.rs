@@ -1,0 +1,250 @@
+//! Sharded sweep orchestrator: declarative experiment grids executed
+//! across worker processes (or in-process shards), merged into one
+//! canonical report, resumable after a kill.
+//!
+//! This module is the canonical reference for the **shard / merge /
+//! resume contract** (mirroring `tensor/pool/mod.rs` for the pool
+//! knobs).  The paper's headline evidence is sweep-shaped — Table 2
+//! (score vs ρ), Table 3 (memory per task/batch/ρ), Table 4 (sketch
+//! families) are grids of *independent* fine-tuning runs — so the grid,
+//! not the single run, is the unit this layer schedules.
+//!
+//! # The contract
+//!
+//! * **Grid** ([`grid`]) — a [`SweepSpec`] lists the cells in canonical
+//!   order; a cell's `index` is its identity.  The spec serializes to
+//!   `sweep.json` inside the sweep directory and is the only input a
+//!   worker needs besides its shard assignment.
+//! * **Shard** ([`shard`]) — cells are owned round-robin:
+//!   shard `i/N` runs exactly the cells with `index % N == i`.  The
+//!   assignment is a pure function of the grid, so worker cell sets are
+//!   disjoint and exhaustive by construction, with no work list to
+//!   communicate and no coordination while running.
+//! * **Merge** ([`merge`]) — each completed cell commits one fragment
+//!   `cells/cell_<index>.json` atomically (tmp + rename), embedding the
+//!   cell it answers for.  The merge walks the spec order and looks
+//!   fragments up by index: the merged result list is a pure function
+//!   of the fragment *set*, independent of shard count, completion
+//!   order, or which process wrote which fragment.  That is why
+//!   `--shards 1` and `--shards 3` produce **byte-identical merged
+//!   reports** whenever the per-cell results are deterministic (the
+//!   mock grid used by `repro sweep-selftest` and `tests/prop_sweep.rs`;
+//!   real runs are deterministic in everything except wall-clock
+//!   timing fields).
+//! * **Resume** ([`resume`]) — completion state *is* the fragment set.
+//!   A worker skips any cell whose valid fragment exists, so rerunning
+//!   a killed sweep with `--resume` executes only the missing cells.
+//!   Fragments are validated against the current spec at read time —
+//!   both the embedded cell *and* the embedded train config must match
+//!   (mismatch ⇒ treated as absent ⇒ cell reruns) — so neither a grid
+//!   edit nor changed training settings (`--steps`, `--lr`, …) between
+//!   runs can smuggle stale rows into a report.
+//!
+//! # Execution modes
+//!
+//! * **Worker processes** — [`spawn_workers`] self-spawns the current
+//!   binary once per shard with the `sweep-worker --dir D --shard i/N`
+//!   contract (see `main.rs`); each worker owns its own `Engine` and
+//!   manifest, giving true multi-process parallelism for engine-bound
+//!   cells.
+//! * **In-process** — [`run_shard`] with [`Shard::SERIAL`] runs every
+//!   cell inline (the `--shards 1` path), and [`run_shards_pooled`]
+//!   fans shards out as `tensor::pool` tasks for cheap (`Sync`) cell
+//!   runners such as the mock grid.
+
+pub mod grid;
+pub mod merge;
+pub mod resume;
+pub mod shard;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+pub use grid::{Cell, SweepSpec};
+pub use shard::Shard;
+
+/// Run every not-yet-completed cell owned by `shard`, committing one
+/// fragment per cell.  Returns how many cells actually ran (completed
+/// cells with valid fragments are skipped — the resume path).
+pub fn run_shard(
+    dir: &Path,
+    spec: &SweepSpec,
+    shard: Shard,
+    runner: &mut dyn FnMut(&Cell) -> Result<Json>,
+) -> Result<usize> {
+    let cdir = resume::cells_dir(dir);
+    std::fs::create_dir_all(&cdir)
+        .with_context(|| format!("creating {cdir:?}"))?;
+    let mut ran = 0usize;
+    for cell in spec.cells.iter().filter(|c| shard.owns(c.index)) {
+        if merge::read_fragment(&cdir, spec, cell).is_some() {
+            continue;
+        }
+        let result = runner(cell).with_context(|| {
+            format!(
+                "sweep cell {} ({} on {}, rho={})",
+                cell.index, cell.variant, cell.task, cell.rho
+            )
+        })?;
+        merge::write_fragment(&cdir, spec, cell, &result)?;
+        ran += 1;
+    }
+    Ok(ran)
+}
+
+/// Run all `shards` shards concurrently as `tensor::pool` tasks inside
+/// this process.  The runner must be `Sync`; shards write disjoint
+/// fragment files, so this upholds the pool's disjoint-output contract.
+pub fn run_shards_pooled(
+    dir: &Path,
+    spec: &SweepSpec,
+    shards: usize,
+    runner: &(dyn Fn(&Cell) -> Result<Json> + Sync),
+) -> Result<()> {
+    let shards = shards.max(1);
+    let errors = std::sync::Mutex::new(Vec::<String>::new());
+    crate::tensor::pool::global().run(shards, shards, |s| {
+        let shard = Shard { index: s, of: shards };
+        let mut f = |c: &Cell| runner(c);
+        if let Err(e) = run_shard(dir, spec, shard, &mut f) {
+            errors.lock().unwrap().push(format!("shard {shard}: {e:#}"));
+        }
+    });
+    let errs = errors.into_inner().unwrap();
+    if !errs.is_empty() {
+        bail!("in-process sweep failed: {}", errs.join("; "));
+    }
+    Ok(())
+}
+
+/// Spawn one `sweep-worker` process per shard from the current binary
+/// and wait for all of them.  The worker contract (implemented by
+/// `main.rs`) is: `<exe> sweep-worker --dir <dir> --shard i/N [passthrough
+/// args]` — the worker loads `sweep.json`, runs its shard, and exits 0
+/// iff every owned cell committed a fragment.
+pub fn spawn_workers(dir: &Path, shards: usize, extra_args: &[String]) -> Result<()> {
+    let exe = std::env::current_exe().context("locating current executable")?;
+    let mut children = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let child = std::process::Command::new(&exe)
+            .arg("sweep-worker")
+            .arg("--dir")
+            .arg(dir)
+            .arg("--shard")
+            .arg(format!("{i}/{shards}"))
+            .args(extra_args)
+            .spawn()
+            .with_context(|| format!("spawning sweep worker {i}/{shards}"))?;
+        children.push((i, child));
+    }
+    let mut failed = Vec::new();
+    for (i, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failed.push(format!("shard {i}/{shards} exited {status}")),
+            Err(e) => failed.push(format!("shard {i}/{shards} wait failed: {e}")),
+        }
+    }
+    if !failed.is_empty() {
+        bail!("sweep workers failed: {}", failed.join("; "));
+    }
+    Ok(())
+}
+
+/// Deterministic mock cell runner: a pure FNV-1a hash of the cell's
+/// identity.  Backs the orchestration tests and `repro sweep-selftest`,
+/// where per-cell determinism makes shard-count byte-identity checkable
+/// without an engine or artifacts.
+pub fn mock_cell(cell: &Cell) -> Json {
+    let key = format!(
+        "{}|{}|{}|{}|{}|{}|{}",
+        cell.index, cell.variant, cell.task, cell.rho, cell.sketch, cell.seed, cell.batch
+    );
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    Json::obj(vec![
+        ("id", Json::str(key)),
+        ("score", Json::num((h % 10_000) as f64 / 100.0)),
+        ("loss", Json::num(((h >> 16) % 1_000) as f64 / 1_000.0)),
+        ("steps", Json::num(((h >> 32) % 500) as f64)),
+    ])
+}
+
+/// The grid `repro sweep-selftest` and CI's smoke sweep run: 24 mock
+/// cells spanning every grid axis.
+pub fn selftest_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new("mock", crate::config::TrainConfig::default());
+    let rhos = [1.0, 0.5, 0.1];
+    let sketches = ["gauss", "dct"];
+    for (r, &rho) in rhos.iter().enumerate() {
+        for t in 0..4usize {
+            for (s, &sketch) in sketches.iter().enumerate() {
+                spec.push(
+                    format!("mock_v{t}_r{r}"),
+                    format!("task{t}"),
+                    rho,
+                    sketch,
+                    s as u64,
+                    0,
+                );
+            }
+        }
+    }
+    spec
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_cell_is_deterministic_and_finite() {
+        let spec = selftest_spec();
+        for cell in &spec.cells {
+            let a = mock_cell(cell);
+            let b = mock_cell(cell);
+            assert_eq!(a, b);
+            let s = a.to_string_pretty();
+            assert!(!s.contains("NaN") && !s.contains("inf"), "{s}");
+        }
+        // distinct cells produce distinct results
+        assert_ne!(mock_cell(&spec.cells[0]), mock_cell(&spec.cells[1]));
+    }
+
+    #[test]
+    fn selftest_grid_covers_all_axes() {
+        let spec = selftest_spec();
+        assert_eq!(spec.cells.len(), 24);
+        assert_eq!(spec.experiment, "mock");
+        assert!(spec.cells.iter().any(|c| c.sketch == "dct"));
+        assert!(spec.cells.iter().any(|c| (c.rho - 0.1).abs() < 1e-12));
+    }
+
+    #[test]
+    fn run_shard_skips_completed_cells() {
+        let dir = std::env::temp_dir()
+            .join(format!("rmm_sweep_mod_test_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = selftest_spec();
+        resume::prepare(&dir, &spec, false).unwrap();
+        let ran = run_shard(&dir, &spec, Shard::SERIAL, &mut |c| Ok(mock_cell(c)))
+            .unwrap();
+        assert_eq!(ran, spec.cells.len());
+        // second pass: everything already committed
+        let mut reran = 0usize;
+        let ran = run_shard(&dir, &spec, Shard::SERIAL, &mut |c| {
+            reran += 1;
+            Ok(mock_cell(c))
+        })
+        .unwrap();
+        assert_eq!(reran, 0, "must not rerun completed cells");
+        assert_eq!(ran, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,116 @@
+//! Sweep directory lifecycle + resume-from-manifests.
+//!
+//! A sweep directory holds exactly two things: `sweep.json` (the
+//! serialized [`SweepSpec`], the contract between orchestrator and
+//! workers) and `cells/` (one fragment per completed cell, see
+//! [`super::merge`]).  Resume is *implicit in the fragment set*: a
+//! worker skips any cell whose valid fragment already exists, so
+//! restarting a killed sweep with `--resume` reruns only the missing
+//! cells and the merged report is byte-identical to an uninterrupted
+//! run.  Without `--resume`, `prepare` clears the fragment directory so
+//! every cell reruns from scratch.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::grid::SweepSpec;
+use super::merge;
+
+/// Per-cell fragment directory inside a sweep directory.
+pub fn cells_dir(dir: &Path) -> PathBuf {
+    dir.join("cells")
+}
+
+/// The serialized spec the workers read.
+pub fn spec_path(dir: &Path) -> PathBuf {
+    dir.join("sweep.json")
+}
+
+/// Create/refresh the sweep directory: clear fragments unless resuming,
+/// then (re)write `sweep.json` atomically.  Fragments kept across a
+/// resume are revalidated against the new spec at read time, so a grid
+/// change between runs silently invalidates only the affected cells.
+pub fn prepare(dir: &Path, spec: &SweepSpec, resume: bool) -> Result<()> {
+    let cdir = cells_dir(dir);
+    if !resume && cdir.exists() {
+        std::fs::remove_dir_all(&cdir)
+            .with_context(|| format!("clearing sweep fragments {cdir:?}"))?;
+    }
+    std::fs::create_dir_all(&cdir)
+        .with_context(|| format!("creating sweep dir {cdir:?}"))?;
+    let tmp = dir.join("sweep.json.tmp");
+    std::fs::write(&tmp, spec.to_json().to_string_pretty())
+        .with_context(|| format!("writing {tmp:?}"))?;
+    std::fs::rename(&tmp, spec_path(dir)).context("committing sweep.json")?;
+    Ok(())
+}
+
+/// Load the spec a `prepare` call committed (the worker-side entry).
+pub fn load_spec(dir: &Path) -> Result<SweepSpec> {
+    let path = spec_path(dir);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading sweep spec {path:?}"))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+    SweepSpec::from_json(&j)
+}
+
+/// Completion bitmap over the spec's cells (true = valid fragment
+/// present).  Diagnostic helper; workers use the per-cell check inline.
+pub fn completed(dir: &Path, spec: &SweepSpec) -> Vec<bool> {
+    let cdir = cells_dir(dir);
+    spec.cells
+        .iter()
+        .map(|c| merge::read_fragment(&cdir, spec, c).is_some())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("rmm_resume_test_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn spec2() -> SweepSpec {
+        let mut s = SweepSpec::new("mock", TrainConfig::default());
+        s.push("v0", "cola", 1.0, "gauss", 1, 0);
+        s.push("v1", "sst2", 0.5, "dft", 2, 0);
+        s
+    }
+
+    #[test]
+    fn prepare_writes_loadable_spec() {
+        let dir = tmp("spec");
+        let spec = spec2();
+        prepare(&dir, &spec, false).unwrap();
+        let back = load_spec(&dir).unwrap();
+        assert_eq!(back.cells, spec.cells);
+        assert_eq!(back.experiment, "mock");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prepare_clears_fragments_unless_resuming() {
+        let dir = tmp("clear");
+        let spec = spec2();
+        prepare(&dir, &spec, false).unwrap();
+        merge::write_fragment(&cells_dir(&dir), &spec, &spec.cells[0], &Json::num(1.0))
+            .unwrap();
+        assert_eq!(completed(&dir, &spec), vec![true, false]);
+        // resume keeps the fragment …
+        prepare(&dir, &spec, true).unwrap();
+        assert_eq!(completed(&dir, &spec), vec![true, false]);
+        // … a fresh run clears it
+        prepare(&dir, &spec, false).unwrap();
+        assert_eq!(completed(&dir, &spec), vec![false, false]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,98 @@
+//! Shard assignment: the `--shard i/N` contract.
+//!
+//! Cells are assigned to shards round-robin on the canonical cell index
+//! (`cell.index % N == i`).  The assignment is a pure function of the
+//! grid, so the orchestrator never has to communicate a work list to a
+//! worker — the spec plus `i/N` fully determines what a worker runs, and
+//! any two workers' cell sets are disjoint by construction.
+
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// This shard's position, `0 <= index < of`.
+    pub index: usize,
+    /// Total shard count, `>= 1`.
+    pub of: usize,
+}
+
+impl Shard {
+    /// The single-shard (serial) assignment: owns every cell.
+    pub const SERIAL: Shard = Shard { index: 0, of: 1 };
+
+    pub fn new(index: usize, of: usize) -> Result<Shard> {
+        if of == 0 {
+            bail!("shard count must be >= 1");
+        }
+        if index >= of {
+            bail!("shard index {index} out of range for {of} shards");
+        }
+        Ok(Shard { index, of })
+    }
+
+    /// Parse the CLI form "i/N".
+    pub fn parse(s: &str) -> Result<Shard> {
+        let (i, n) = s
+            .split_once('/')
+            .with_context(|| format!("shard '{s}' must be of the form i/N"))?;
+        let index: usize = i
+            .trim()
+            .parse()
+            .with_context(|| format!("bad shard index in '{s}'"))?;
+        let of: usize = n
+            .trim()
+            .parse()
+            .with_context(|| format!("bad shard count in '{s}'"))?;
+        Shard::new(index, of)
+    }
+
+    /// Does this shard own the cell at `cell_index`?
+    pub fn owns(&self, cell_index: usize) -> bool {
+        cell_index % self.of == self.index
+    }
+}
+
+impl fmt::Display for Shard {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.of)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips() {
+        let s = Shard::parse("2/5").unwrap();
+        assert_eq!(s, Shard { index: 2, of: 5 });
+        assert_eq!(s.to_string(), "2/5");
+        assert_eq!(Shard::parse("0/1").unwrap(), Shard::SERIAL);
+    }
+
+    #[test]
+    fn parse_rejects_bad_forms() {
+        for bad in ["", "3", "a/b", "2/2", "5/3", "1/0", "-1/2"] {
+            assert!(Shard::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn shards_partition_every_cell_exactly_once() {
+        for of in [1usize, 2, 3, 7] {
+            for cell in 0..100 {
+                let owners = (0..of)
+                    .filter(|&i| Shard { index: i, of }.owns(cell))
+                    .count();
+                assert_eq!(owners, 1, "cell {cell} of {of} shards");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_owns_everything() {
+        assert!((0..50).all(|c| Shard::SERIAL.owns(c)));
+    }
+}

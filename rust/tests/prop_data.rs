@@ -1,6 +1,6 @@
 //! Property tests for the data substrate: generators, batcher, metrics.
 
-use rmmlinear::data::{Batcher, Split, Task, TaskGen, Tokenizer};
+use rmmlinear::data::{Batch, Batcher, MetricAccum, Split, Task, TaskGen, Tokenizer};
 use rmmlinear::util::prop::prop_check;
 
 #[test]
@@ -49,6 +49,86 @@ fn batcher_covers_each_split_exactly_once() {
         assert_eq!(total, n);
         assert_eq!(n_batches, n.div_ceil(bsz));
     });
+}
+
+/// Exhaustive wrap-around edge cases: for each split size `n`, batch
+/// sizes with `n % bsz ∈ {0, 1, bsz-1}` (plus bsz=1 and bsz=n) must
+/// produce the right batch count, the right per-batch `valid`, and
+/// wrapped rows that are literal copies of the epoch's leading examples
+/// — the contract the evaluator's metric weighting stands on.
+#[test]
+fn wraparound_valid_counts_exhaustive() {
+    let tok = Tokenizer::new(256);
+    for task in [Task::Wnli, Task::Rte, Task::Cola] {
+        for split in [Split::Train, Split::Dev] {
+            let gen = TaskGen::new(task, &tok, 16, 11);
+            let n = task.split_size(split);
+            // n % bsz == 0 (divisor + the full-split batch), == 1,
+            // == bsz - 1 (single wrapping batch), and the degenerate 1.
+            let cases = [1usize, 2, n, n - 1, n + 1];
+            for bsz in cases {
+                assert!(
+                    n % 2 == 0 || bsz != 2,
+                    "pick split sizes with an even count for the rem-0 case"
+                );
+                let batches: Vec<Batch> = Batcher::new(&gen, split, bsz, 3).collect();
+                assert_eq!(batches.len(), n.div_ceil(bsz), "task={task:?} bsz={bsz}");
+                let total: usize = batches.iter().map(|b| b.valid).sum();
+                assert_eq!(total, n, "task={task:?} bsz={bsz}");
+                for (i, b) in batches.iter().enumerate() {
+                    let expected = if (i + 1) * bsz <= n { bsz } else { n - i * bsz };
+                    assert_eq!(b.valid, expected, "task={task:?} bsz={bsz} batch={i}");
+                    assert_eq!(b.tokens.len(), bsz * 16);
+                    assert_eq!(b.mask.len(), bsz * 16);
+                    assert_eq!(b.labels_i.len(), bsz);
+                }
+                // wrapped rows of the final batch duplicate the epoch's
+                // leading examples in order
+                let last = batches.last().unwrap();
+                if last.valid < bsz {
+                    let first = &batches[0];
+                    for wrapped in last.valid..bsz {
+                        let src = wrapped - last.valid;
+                        if src >= first.valid.min(bsz) {
+                            break; // wrapped past the first batch (tiny n)
+                        }
+                        assert_eq!(
+                            last.tokens[wrapped * 16..(wrapped + 1) * 16],
+                            first.tokens[src * 16..(src + 1) * 16],
+                            "task={task:?} bsz={bsz} wrapped row {wrapped}"
+                        );
+                        assert_eq!(last.labels_i[wrapped], first.labels_i[src]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Wrapped (padding) rows must never reach a metric: scoring only the
+/// `valid` prefix must give the same result no matter what logits the
+/// wrapped rows hold.
+#[test]
+fn wrapped_rows_never_contribute_to_metrics() {
+    for task in [Task::Qnli, Task::Cola, Task::Mrpc] {
+        // 3 valid rows + 2 wrapped rows with adversarial logits/labels
+        let clean = [0.1f32, 0.9, 0.8, 0.2, 0.0, 1.0];
+        let mut with_garbage = clean.to_vec();
+        with_garbage.extend([100.0, -100.0, -100.0, 100.0]); // wrapped rows
+        let labels = [1i32, 0, 1, 0, 0];
+
+        let mut a = MetricAccum::new();
+        a.add_logits(task, &clean, 2, &labels[..3], &[], 3);
+        let mut b = MetricAccum::new();
+        b.add_logits(task, &with_garbage, 2, &labels, &[], 3);
+        assert_eq!(a.count(), 3);
+        assert_eq!(b.count(), 3);
+        let (sa, sb) = (a.score(task), b.score(task));
+        assert!(
+            (sa - sb).abs() < 1e-12,
+            "{task:?}: wrapped rows leaked into the metric ({sa} vs {sb})"
+        );
+    }
 }
 
 fn valence_sum(ex: &rmmlinear::data::Example) -> f64 {

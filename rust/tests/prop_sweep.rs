@@ -1,0 +1,374 @@
+//! Determinism / property suite for the sweep orchestrator
+//! (`sweep::` — grid, shard, merge, resume) and the async-prefetch
+//! batcher.
+//!
+//! The contract under test (see `sweep/mod.rs` for the canonical prose):
+//! a sharded sweep over deterministic cells merges to a report
+//! **byte-identical** to the serial sweep for any shard count and any
+//! completion order; resume-after-kill reruns exactly the missing cells
+//! and reproduces the same bytes; and the prefetched `Batcher` emits the
+//! exact batch sequence of the synchronous iterator.  All orchestration
+//! tests run over the deterministic mock cell runner, so they exercise
+//! the real shard/merge/resume machinery without artifacts or an engine
+//! — including one test that drives the actual `repro sweep-worker`
+//! subprocess contract via `CARGO_BIN_EXE_repro`.
+
+use std::path::{Path, PathBuf};
+
+use rmmlinear::config::TrainConfig;
+use rmmlinear::data::{Batch, Batcher, PrefetchBatcher, Split, Task, TaskGen, Tokenizer};
+use rmmlinear::sweep::{self, merge, resume, Cell, Shard, SweepSpec};
+use rmmlinear::util::json::Json;
+use rmmlinear::util::prop::prop_check;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("rmm_prop_sweep_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A mock grid exercising every cell axis (task × ρ × sketch × seed).
+fn mock_spec(n_tasks: usize, n_rhos: usize, n_seeds: usize) -> SweepSpec {
+    let mut spec = SweepSpec::new("mock", TrainConfig::default());
+    for r in 0..n_rhos {
+        for t in 0..n_tasks {
+            for s in 0..n_seeds {
+                spec.push(
+                    format!("v{t}_r{r}"),
+                    format!("task{t}"),
+                    1.0 / (r + 1) as f64,
+                    if t % 2 == 0 { "gauss" } else { "dct" },
+                    s as u64,
+                    t * 8,
+                );
+            }
+        }
+    }
+    spec
+}
+
+/// Merged report bytes for whatever fragments `dir` holds.
+fn report(dir: &Path, spec: &SweepSpec) -> String {
+    Json::Arr(merge::merge(dir, spec).expect("sweep incomplete")).to_string_pretty()
+}
+
+/// Run the whole grid serially into `dir` and return the report bytes.
+fn run_serial(dir: &Path, spec: &SweepSpec) -> String {
+    resume::prepare(dir, spec, false).unwrap();
+    sweep::run_shard(dir, spec, Shard::SERIAL, &mut |c| Ok(sweep::mock_cell(c)))
+        .unwrap();
+    report(dir, spec)
+}
+
+#[test]
+fn sharded_sweep_is_byte_identical_to_serial() {
+    let spec = mock_spec(4, 3, 2); // 24 cells
+    let serial_dir = tmp_dir("serial_ref");
+    let serial = run_serial(&serial_dir, &spec);
+
+    for shards in [1usize, 2, 3, 7] {
+        let dir = tmp_dir(&format!("sharded_{shards}"));
+        resume::prepare(&dir, &spec, false).unwrap();
+        // run the shards in *reverse* order to prove completion order
+        // cannot matter
+        for s in (0..shards).rev() {
+            let shard = Shard { index: s, of: shards };
+            sweep::run_shard(&dir, &spec, shard, &mut |c| Ok(sweep::mock_cell(c)))
+                .unwrap();
+        }
+        assert_eq!(
+            report(&dir, &spec),
+            serial,
+            "{shards}-shard report differs from serial"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    std::fs::remove_dir_all(&serial_dir).unwrap();
+}
+
+#[test]
+fn pooled_in_process_shards_match_serial() {
+    let spec = mock_spec(3, 3, 2); // 18 cells
+    let serial_dir = tmp_dir("pooled_ref");
+    let serial = run_serial(&serial_dir, &spec);
+    for shards in [2usize, 5] {
+        let dir = tmp_dir(&format!("pooled_{shards}"));
+        resume::prepare(&dir, &spec, false).unwrap();
+        sweep::run_shards_pooled(&dir, &spec, shards, &|c| Ok(sweep::mock_cell(c)))
+            .unwrap();
+        assert_eq!(report(&dir, &spec), serial);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    std::fs::remove_dir_all(&serial_dir).unwrap();
+}
+
+#[test]
+fn resume_after_kill_reruns_only_missing_cells() {
+    prop_check("resume reproduces the report", 10, |g| {
+        let spec = mock_spec(g.usize_in(2, 4), g.usize_in(1, 3), g.usize_in(1, 2));
+        let dir = tmp_dir(&format!("resume_{}", g.case_seed));
+        let full = run_serial(&dir, &spec);
+
+        // "kill": drop a random half of the cell manifests
+        let cdir = resume::cells_dir(&dir);
+        let mut dropped = 0usize;
+        for cell in &spec.cells {
+            if g.bool() {
+                std::fs::remove_file(merge::fragment_path(&cdir, cell)).unwrap();
+                dropped += 1;
+            }
+        }
+        assert_eq!(
+            resume::completed(&dir, &spec).iter().filter(|&&c| c).count(),
+            spec.cells.len() - dropped
+        );
+
+        // resume: prepare(resume=true) keeps survivors; rerun must touch
+        // exactly the dropped cells
+        resume::prepare(&dir, &spec, true).unwrap();
+        let mut reran = 0usize;
+        sweep::run_shard(&dir, &spec, Shard::SERIAL, &mut |c| {
+            reran += 1;
+            Ok(sweep::mock_cell(c))
+        })
+        .unwrap();
+        assert_eq!(reran, dropped, "resume reran the wrong cell count");
+        assert_eq!(report(&dir, &spec), full, "resumed report differs");
+        std::fs::remove_dir_all(&dir).unwrap();
+    });
+}
+
+#[test]
+fn corrupt_or_stale_fragments_are_rerun_not_merged() {
+    let spec = mock_spec(3, 2, 1); // 6 cells
+    let dir = tmp_dir("corrupt");
+    let full = run_serial(&dir, &spec);
+    let cdir = resume::cells_dir(&dir);
+
+    // truncated JSON (a worker killed mid-write before the rename would
+    // normally prevent this; simulate a torn file anyway)
+    std::fs::write(merge::fragment_path(&cdir, &spec.cells[1]), "{\"cell\":").unwrap();
+    // stale fragment: a manifest answering for a *different* grid cell
+    let mut stale = spec.cells[3].clone();
+    stale.variant = "from_an_older_grid".into();
+    merge::write_fragment(&cdir, &spec, &stale, &Json::num(666.0)).unwrap();
+
+    assert!(merge::merge(&dir, &spec).is_err(), "invalid fragments must not merge");
+
+    resume::prepare(&dir, &spec, true).unwrap();
+    let mut reran = Vec::new();
+    sweep::run_shard(&dir, &spec, Shard::SERIAL, &mut |c| {
+        reran.push(c.index);
+        Ok(sweep::mock_cell(c))
+    })
+    .unwrap();
+    assert_eq!(reran, vec![1, 3], "exactly the invalid cells rerun");
+    assert_eq!(report(&dir, &spec), full);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The real multi-process path: spawn the actual `repro` binary with the
+/// `sweep-worker --dir D --shard i/N` contract and verify the merged
+/// report is byte-identical to the in-process serial run — the
+/// acceptance check behind `bench-table2 --shards 3` vs `--shards 1`
+/// (real cells are deterministic in everything but timing fields; the
+/// mock grid makes the identity exact and checkable).
+#[test]
+fn worker_subprocesses_match_serial_byte_for_byte() {
+    let spec = mock_spec(4, 3, 1); // 12 cells
+    let serial_dir = tmp_dir("subproc_ref");
+    let serial = run_serial(&serial_dir, &spec);
+
+    for shards in [1usize, 3] {
+        let dir = tmp_dir(&format!("subproc_{shards}"));
+        resume::prepare(&dir, &spec, false).unwrap();
+        let mut children = Vec::new();
+        for i in 0..shards {
+            let child = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+                .arg("sweep-worker")
+                .arg("--dir")
+                .arg(&dir)
+                .arg("--shard")
+                .arg(format!("{i}/{shards}"))
+                .spawn()
+                .expect("spawning repro sweep-worker");
+            children.push(child);
+        }
+        for mut child in children {
+            let status = child.wait().unwrap();
+            assert!(status.success(), "worker exited {status}");
+        }
+        assert_eq!(
+            report(&dir, &spec),
+            serial,
+            "{shards} worker processes differ from serial"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    std::fs::remove_dir_all(&serial_dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Prefetch batching: bit-identity with the synchronous iterator
+// ---------------------------------------------------------------------------
+
+fn assert_batches_equal(a: &Batch, b: &Batch, ctx: &str) {
+    assert_eq!(a.tokens, b.tokens, "{ctx}: tokens");
+    assert_eq!(a.mask, b.mask, "{ctx}: mask");
+    assert_eq!(a.labels_i, b.labels_i, "{ctx}: labels_i");
+    assert_eq!(a.labels_f, b.labels_f, "{ctx}: labels_f");
+    assert_eq!(a.valid, b.valid, "{ctx}: valid");
+    assert_eq!(a.batch_size, b.batch_size, "{ctx}: batch_size");
+    assert_eq!(a.seq_len, b.seq_len, "{ctx}: seq_len");
+}
+
+#[test]
+fn prefetched_batcher_yields_exact_sync_sequence() {
+    prop_check("prefetch bit-identity", 25, |g| {
+        let task = Task::ALL[g.usize_in(0, Task::ALL.len() - 1)];
+        let split = if g.bool() { Split::Train } else { Split::Dev };
+        let bsz = g.usize_in(1, 48);
+        let seed = g.usize_in(0, 10_000) as u64;
+        let epoch = g.usize_in(0, 3) as u64;
+        let tok = Tokenizer::new(256);
+        let gen = TaskGen::new(task, &tok, 24, seed);
+        let sync: Vec<Batch> = Batcher::new(&gen, split, bsz, epoch).collect();
+        let pre: Vec<Batch> = PrefetchBatcher::new(&gen, split, bsz, epoch).collect();
+        assert_eq!(sync.len(), pre.len(), "{task:?} bsz={bsz}");
+        for (i, (a, b)) in sync.iter().zip(&pre).enumerate() {
+            assert_batches_equal(a, b, &format!("{task:?} bsz={bsz} batch={i}"));
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// RunResult JSON round-trip: byte-stable, NaN-free (the num_or_null pin)
+// ---------------------------------------------------------------------------
+
+fn skipped_run_result() -> rmmlinear::bench_harness::runner::RunResult {
+    rmmlinear::bench_harness::runner::RunResult {
+        variant: "small_cls2_r100_gauss".into(),
+        task: "cola".into(),
+        rho: 1.0,
+        sketch: "gauss".into(),
+        // every skippable measurement skipped: NaN must serialize as null
+        score: f64::NAN,
+        final_train_loss: f64::NAN,
+        steps: 0,
+        wall_s: 0.125,
+        samples_per_s: 128.0,
+        peak_residual_bytes: 4096,
+        backend: "packed".into(),
+        host_exact_ms: f64::NAN,
+        host_rmm_ms: f64::NAN,
+        pool_threads: 4,
+        pool_tasks: 17,
+        pool_steals: 3,
+        train_losses: vec![],
+        eval_losses: vec![],
+        probe_series: vec![],
+    }
+}
+
+#[test]
+fn runresult_json_roundtrip_is_byte_stable_and_nan_free() {
+    let r = skipped_run_result();
+    let encoded = r.to_json().to_string_pretty();
+    assert!(
+        !encoded.contains("NaN") && !encoded.contains("inf"),
+        "skipped measurements leaked a non-JSON literal:\n{encoded}"
+    );
+    let parsed = Json::parse(&encoded)
+        .expect("RunResult JSON must parse back (sweep fragments depend on it)");
+    assert!(parsed.get("score").is_null());
+    assert!(parsed.get("final_train_loss").is_null());
+    assert!(parsed.get("host_exact_ms").is_null());
+    assert!(parsed.get("host_rmm_ms").is_null());
+    assert_eq!(parsed.get("peak_residual_bytes").as_usize(), Some(4096));
+    // encode → parse → re-encode is byte-stable
+    assert_eq!(parsed.to_string_pretty(), encoded);
+    // and idempotent through a second cycle
+    let again = Json::parse(&parsed.to_string_pretty()).unwrap();
+    assert_eq!(again.to_string_pretty(), encoded);
+}
+
+#[test]
+fn runresult_roundtrips_inside_a_sweep_fragment() {
+    // the exact path a real sweep takes: RunResult → fragment → merge
+    let mut spec = SweepSpec::new("table2", TrainConfig::default());
+    spec.push("small_cls2_r100_gauss", "cola", 1.0, "gauss", 42, 0);
+    let dir = tmp_dir("fragment_rt");
+    resume::prepare(&dir, &spec, false).unwrap();
+    let r = skipped_run_result().to_json();
+    merge::write_fragment(&resume::cells_dir(&dir), &spec, &spec.cells[0], &r).unwrap();
+    let merged = merge::merge(&dir, &spec).unwrap();
+    assert_eq!(merged.len(), 1);
+    assert_eq!(merged[0].to_string_pretty(), r.to_string_pretty());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Shard algebra on real grid shapes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shard_sets_partition_the_grid() {
+    let spec = mock_spec(5, 4, 2); // 40 cells
+    for shards in [1usize, 2, 3, 7] {
+        let mut seen = vec![0usize; spec.cells.len()];
+        for s in 0..shards {
+            let shard = Shard { index: s, of: shards };
+            for c in spec.cells.iter().filter(|c| shard.owns(c.index)) {
+                seen[c.index] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&n| n == 1), "shards={shards}: {seen:?}");
+    }
+}
+
+#[test]
+fn cell_identity_drives_fragment_validation() {
+    // each field of the cell participates in the resume-validation match
+    let base = Cell {
+        index: 0,
+        variant: "v".into(),
+        task: "cola".into(),
+        rho: 0.5,
+        sketch: "gauss".into(),
+        seed: 1,
+        batch: 0,
+    };
+    let dir = tmp_dir("cell_identity");
+    let cdir = resume::cells_dir(&dir);
+    std::fs::create_dir_all(&cdir).unwrap();
+    let spec = SweepSpec::new("mock", TrainConfig::default());
+    merge::write_fragment(&cdir, &spec, &base, &Json::num(1.0)).unwrap();
+    assert!(merge::read_fragment(&cdir, &spec, &base).is_some());
+    // the embedded train config participates in validation too
+    let mut retrained = SweepSpec::new("mock", TrainConfig::default());
+    retrained.train.steps += 1;
+    assert!(
+        merge::read_fragment(&cdir, &retrained, &base).is_none(),
+        "changed train config should invalidate the fragment"
+    );
+    for (i, mutate) in [
+        Box::new(|c: &mut Cell| c.variant = "w".into()) as Box<dyn Fn(&mut Cell)>,
+        Box::new(|c: &mut Cell| c.task = "sst2".into()),
+        Box::new(|c: &mut Cell| c.rho = 0.2),
+        Box::new(|c: &mut Cell| c.sketch = "dct".into()),
+        Box::new(|c: &mut Cell| c.seed = 2),
+        Box::new(|c: &mut Cell| c.batch = 8),
+    ]
+    .iter()
+    .enumerate()
+    {
+        let mut other = base.clone();
+        mutate(&mut other);
+        assert!(
+            merge::read_fragment(&cdir, &spec, &other).is_none(),
+            "mutation {i} should invalidate the fragment"
+        );
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -17,12 +17,21 @@ cargo build --release
 
 # The test suite runs twice, serial and multi-threaded: the compute pool
 # guarantees bit-identical results for every RMM_THREADS value, and the
-# prop_pool/prop_kernels equality assertions fail this gate on any
-# divergence between the two configurations.
+# prop_pool/prop_kernels/prop_sweep equality assertions fail this gate on
+# any divergence between the two configurations (prop_sweep also covers
+# the sharded-sweep and prefetch-batcher bit-identity contracts).
 echo "== cargo test (RMM_THREADS=1) =="
 RMM_THREADS=1 cargo test -q
 
 echo "== cargo test (RMM_THREADS=4) =="
 RMM_THREADS=4 cargo test -q
+
+# Smoke the multi-process sweep path with real worker subprocesses: the
+# mock grid sharded over 2 workers must merge byte-identically to the
+# serial run (the --shards N vs --shards 1 acceptance check, minus the
+# engine).  Run at both thread counts like the tests.
+echo "== sweep smoke (mock grid, --shards 2, worker subprocesses) =="
+RMM_THREADS=1 target/release/repro sweep-selftest --shards 2
+RMM_THREADS=4 target/release/repro sweep-selftest --shards 2
 
 echo "ci: all gates passed"
