@@ -7,7 +7,13 @@
 //! The driver is a thin grid declaration: [`spec`] lays the (ρ × task ×
 //! seed) cells out in canonical order and [`assemble`] folds the merged
 //! cell results back into the paper-style table + JSON report.  Cell
-//! execution/sharding/resume all live in `sweep::` (see its module doc).
+//! execution, scheduling (static `--shard i/N` or dynamic claim/lease
+//! stealing — this grid is the skew poster child: an MNLI cell dwarfs a
+//! WNLI cell, so `--schedule dynamic` erases the straggler shard) and
+//! resume all live in `sweep::` (see its module doc).  [`assemble`] must
+//! stay a pure function of (spec, merged results): canonical cell order
+//! is the *only* order it may rely on, because the dynamic schedule runs
+//! cells in claim order.
 
 use crate::config::TrainConfig;
 use crate::data::Task;

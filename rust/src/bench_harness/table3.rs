@@ -10,7 +10,10 @@
 //! peak + model numbers, computed in `runner::run_cell` where the
 //! manifest lives) is independent; only the saving-vs-baseline column is
 //! cross-cell and is derived in [`assemble`] from the ρ=1.0 cell of the
-//! same (task, batch) group.
+//! same (task, batch) group.  That derivation reads the *merged*,
+//! canonically-ordered results — never on-disk state — so it is
+//! schedule-agnostic: static shards and dynamic claim/lease workers
+//! (`--schedule dynamic`) assemble the same bytes.
 
 use crate::config::TrainConfig;
 use crate::sweep::SweepSpec;

@@ -8,6 +8,9 @@
 //!
 //! Thin grid declaration over `sweep::` — the no-RMM baseline is the
 //! sketch="none" cell at index 0, then (family × ρ) cells in order.
+//! Scheduling (static shards or dynamic claim/lease stealing) lives in
+//! `sweep::`; the baseline cell is identified by its *index*, not by
+//! completion order, so any schedule assembles the same report.
 
 use crate::config::TrainConfig;
 use crate::sweep::SweepSpec;

@@ -10,6 +10,12 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+/// Valid LR-schedule names — the single source of truth shared by
+/// `validate()` and the CLI's `--schedule` disambiguation (the same flag
+/// selects the sweep scheduler when its value is static|dynamic; the
+/// value sets must stay disjoint).
+pub const LR_SCHEDULES: &[&str] = &["linear", "const", "poly"];
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
     pub steps: usize,
@@ -82,21 +88,32 @@ impl PoolConfig {
     }
 }
 
-/// Sweep-orchestrator knobs (see `sweep::mod`).  `shards: None` expresses
-/// no preference (the `--shards` flag / built-in default of 1 decides).
-/// Neither knob can change merged-report *content* for deterministic
-/// cells — sharding and resume only change how cells are scheduled.
+/// Sweep-orchestrator knobs (see `sweep::mod`).  `None` fields express
+/// no preference (the CLI flags / built-in defaults decide).  None of
+/// these knobs can change merged-report *content* for deterministic
+/// cells — sharding, scheduling, lease TTLs and resume only change how
+/// cells are distributed to workers, never what a cell computes.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct SweepConfig {
     /// Worker processes a sweep driver shards its grid across, >= 1.
     pub shards: Option<usize>,
     /// Reuse completed-cell manifests from a previous (killed) sweep.
     pub resume: bool,
+    /// Cell scheduler: "static" (round-robin `--shard i/N`, the default)
+    /// or "dynamic" (claim/lease work stealing, `sweep::scheduler`).
+    pub schedule: Option<String>,
+    /// Dynamic-schedule lease TTL in ms: a claim older than this is
+    /// considered abandoned and reclaimable.  Must exceed the worst-case
+    /// cell wall time (default 600000 = 10 min).
+    pub lease_ttl_ms: Option<u64>,
 }
 
 impl SweepConfig {
     pub fn is_unset(&self) -> bool {
-        self.shards.is_none() && !self.resume
+        self.shards.is_none()
+            && !self.resume
+            && self.schedule.is_none()
+            && self.lease_ttl_ms.is_none()
     }
 }
 
@@ -196,6 +213,12 @@ impl ExperimentConfig {
             if self.sweep.resume {
                 s.push(("resume", Json::Bool(true)));
             }
+            if let Some(sched) = &self.sweep.schedule {
+                s.push(("schedule", Json::str(sched.clone())));
+            }
+            if let Some(ttl) = self.sweep.lease_ttl_ms {
+                s.push(("lease_ttl_ms", Json::num(ttl as f64)));
+            }
             if let Json::Obj(map) = &mut j {
                 map.insert("sweep".to_string(), Json::obj(s));
             }
@@ -247,6 +270,14 @@ impl ExperimentConfig {
         if self.sweep.shards == Some(0) {
             bail!("sweep.shards must be >= 1");
         }
+        if let Some(s) = &self.sweep.schedule {
+            if crate::sweep::Schedule::parse(s).is_none() {
+                bail!("unknown sweep.schedule '{s}' (expected static|dynamic)");
+            }
+        }
+        if self.sweep.lease_ttl_ms == Some(0) {
+            bail!("sweep.lease_ttl_ms must be >= 1");
+        }
         let t = &self.train;
         if t.steps == 0 {
             bail!("train.steps must be > 0");
@@ -260,7 +291,7 @@ impl ExperimentConfig {
         if !matches!(t.optimizer.as_str(), "adamw" | "adam" | "sgd" | "momentum") {
             bail!("unknown optimizer '{}'", t.optimizer);
         }
-        if !matches!(t.schedule.as_str(), "linear" | "const" | "poly") {
+        if !LR_SCHEDULES.contains(&t.schedule.as_str()) {
             bail!("unknown schedule '{}'", t.schedule);
         }
         Ok(())
@@ -295,6 +326,8 @@ fn parse_sweep(j: &Json) -> Result<SweepConfig> {
             "resume" => {
                 s.resume = v.as_bool().context("'resume' must be a bool")?
             }
+            "schedule" => s.schedule = Some(req_str(v, k)?),
+            "lease_ttl_ms" => s.lease_ttl_ms = Some(num(v, k)? as u64),
             other => bail!("unknown sweep key '{other}'"),
         }
     }
@@ -403,6 +436,9 @@ mod tests {
             r#"{"sweep": {"shards": 0}}"#,
             r#"{"sweep": {"bogus": 1}}"#,
             r#"{"sweep": {"resume": 3}}"#,
+            r#"{"sweep": {"schedule": "round-robin"}}"#,
+            r#"{"sweep": {"schedule": "linear"}}"#,
+            r#"{"sweep": {"lease_ttl_ms": 0}}"#,
             r#"{"train": {"prefetch": "yes"}}"#,
         ] {
             let j = Json::parse(src).unwrap();
@@ -432,12 +468,21 @@ mod tests {
 
     #[test]
     fn sweep_section_parses_and_roundtrips() {
-        let j = Json::parse(r#"{"sweep": {"shards": 3, "resume": true}}"#).unwrap();
+        let j = Json::parse(
+            r#"{"sweep": {"shards": 3, "resume": true,
+                          "schedule": "dynamic", "lease_ttl_ms": 5000}}"#,
+        )
+        .unwrap();
         let cfg = ExperimentConfig::from_json(&j).unwrap();
         assert_eq!(cfg.sweep.shards, Some(3));
         assert!(cfg.sweep.resume);
+        assert_eq!(cfg.sweep.schedule.as_deref(), Some("dynamic"));
+        assert_eq!(cfg.sweep.lease_ttl_ms, Some(5000));
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
+        // "static" is also a valid explicit choice
+        let j = Json::parse(r#"{"sweep": {"schedule": "static"}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_ok());
         // absent section -> no preference
         let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert!(cfg.sweep.is_unset());

@@ -17,12 +17,12 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use rmmlinear::bench_harness as bench;
-use rmmlinear::config::{SweepConfig, TrainConfig};
+use rmmlinear::config::{SweepConfig, TrainConfig, LR_SCHEDULES};
 use rmmlinear::coordinator::{Checkpoint, MetricsLog, Trainer};
 use rmmlinear::data::{Task, Tokenizer};
 use rmmlinear::memory::{MemoryModel, ModelGeometry};
 use rmmlinear::runtime::{Engine, Manifest};
-use rmmlinear::sweep::{self, Shard, SweepSpec};
+use rmmlinear::sweep::{self, DynamicConfig, Schedule, Shard, SweepSpec};
 use rmmlinear::util::cli::Args;
 use rmmlinear::util::json::Json;
 
@@ -42,7 +42,13 @@ fn train_config(args: &Args) -> TrainConfig {
     t.weight_decay = args.get_f64("weight-decay", t.weight_decay);
     t.clip_norm = args.get_f64("clip-norm", t.clip_norm);
     t.optimizer = args.get_or("optimizer", &t.optimizer).to_string();
-    t.schedule = args.get_or("schedule", &t.schedule).to_string();
+    if let Some(s) = args.get("schedule") {
+        // sweep-scheduler values (static|dynamic) are not LR schedules;
+        // they are consumed by `sweep_schedule` instead
+        if LR_SCHEDULES.contains(&s) {
+            t.schedule = s.to_string();
+        }
+    }
     t.log_every = args.get_usize("log-every", t.log_every);
     t.seed = args.get_u64("seed", t.seed);
     t.prefetch = args.has_flag("prefetch");
@@ -81,15 +87,68 @@ fn parse_seeds(args: &Args, default: u64) -> Vec<u64> {
         .unwrap_or_else(|| vec![default])
 }
 
+/// Resolve the sweep scheduler + lease TTL from the `--sweep-schedule` /
+/// `--schedule` / `--lease-ttl-ms` flags and the config's `sweep`
+/// section.  `--schedule` is shared with the LR schedule (disjoint value
+/// sets keep it unambiguous); `--sweep-schedule` exists so a single
+/// invocation can say both, e.g. `--schedule poly --sweep-schedule
+/// dynamic`, and it always wins over `--schedule`.
+fn sweep_schedule(
+    args: &Args,
+    defaults: &SweepConfig,
+) -> Result<(Schedule, u64)> {
+    let flag = match (args.get("sweep-schedule"), args.get("schedule")) {
+        (Some(s), _) => Some(Schedule::parse(s).with_context(|| {
+            format!("unknown --sweep-schedule '{s}' (static|dynamic)")
+        })?),
+        (None, Some(s)) if LR_SCHEDULES.contains(&s) => None,
+        (None, Some(s)) => Some(Schedule::parse(s).with_context(|| {
+            format!("unknown --schedule '{s}' (sweep: static|dynamic; LR: linear|const|poly)")
+        })?),
+        (None, None) => None,
+    };
+    let schedule = match flag {
+        Some(s) => s,
+        None => match defaults.schedule.as_deref() {
+            Some(s) => Schedule::parse(s)
+                .with_context(|| format!("bad config sweep.schedule '{s}' (static|dynamic)"))?,
+            None => Schedule::Static,
+        },
+    };
+    let ttl = lease_ttl_arg(args)?
+        .unwrap_or_else(|| defaults.lease_ttl_ms.unwrap_or(sweep::DEFAULT_LEASE_TTL_MS));
+    Ok((schedule, ttl))
+}
+
+/// Strict `--lease-ttl-ms` parse: a present flag must be a positive
+/// integer (mirroring the config-file validation — a 0/garbage TTL would
+/// make every in-flight claim instantly stealable, not "off").
+fn lease_ttl_arg(args: &Args) -> Result<Option<u64>> {
+    match args.get("lease-ttl-ms") {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<u64>()
+            .ok()
+            .filter(|&n| n >= 1)
+            .map(Some)
+            .with_context(|| {
+                format!("--lease-ttl-ms must be a positive integer (ms), got '{v}'")
+            }),
+    }
+}
+
 /// Run a sweep spec to completion and return the merged, cell-ordered
 /// results: `--shards 1` executes inline with one engine; `--shards N`
 /// self-spawns N `sweep-worker` processes (each with its own engine) and
-/// merges their fragments.  Both paths produce the same fragment set, so
-/// the merged report is identical for deterministic cells.
+/// merges their fragments.  `--schedule static` (default) assigns cells
+/// round-robin; `--schedule dynamic` lets workers pull cells through the
+/// claim/lease store.  Every path produces the same fragment set, so the
+/// merged report is identical for deterministic cells.
 fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
     let defaults = sweep_defaults(args)?;
     let shards = args.get_usize("shards", defaults.shards.unwrap_or(1)).max(1);
     let resume = args.has_flag("resume") || defaults.resume;
+    let (schedule, ttl) = sweep_schedule(args, &defaults)?;
     let dir = reports_dir(args).join(format!("sweep_{name}"));
     sweep::resume::prepare(&dir, spec, resume)?;
     if shards <= 1 {
@@ -98,7 +157,19 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
         let mut runner = |cell: &sweep::Cell| {
             bench::runner::run_cell(&mut engine, &manifest, spec, cell)
         };
-        sweep::run_shard(&dir, spec, Shard::SERIAL, &mut runner)?;
+        match schedule {
+            Schedule::Static => {
+                sweep::run_shard(&dir, spec, Shard::SERIAL, &mut runner)?;
+            }
+            Schedule::Dynamic => {
+                // one in-process dynamic worker — same claim path as the
+                // multi-worker case, so a second orchestrator pointed at
+                // the same dir (e.g. another machine on a shared store)
+                // cooperates instead of duplicating cells
+                let cfg = DynamicConfig::new("orchestrator", ttl);
+                sweep::run_dynamic(&dir, spec, &cfg, &mut runner)?;
+            }
+        }
     } else {
         // pass the environment-shaping options through to the workers
         let mut extra = Vec::new();
@@ -107,6 +178,12 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
                 extra.push(format!("--{key}"));
                 extra.push(v.to_string());
             }
+        }
+        if schedule == Schedule::Dynamic {
+            extra.push("--schedule".to_string());
+            extra.push("dynamic".to_string());
+            extra.push("--lease-ttl-ms".to_string());
+            extra.push(ttl.to_string());
         }
         sweep::spawn_workers(&dir, shards, &extra)?;
     }
@@ -197,10 +274,12 @@ COMMANDS
                     [--shards N] [--resume]
   bench-table4      sketch-family comparison on CoLA (Table 4)
                     [--shards N] [--resume]
-  sweep-worker      run one shard of a prepared sweep (self-spawned by the
+  sweep-worker      run one worker of a prepared sweep (self-spawned by the
                     table drivers) --dir DIR --shard i/N
-  sweep-selftest    shard/merge/resume smoke over the mock grid: serial vs
+                    [--schedule static|dynamic --lease-ttl-ms N]
+  sweep-selftest    sweep-machinery smoke over the mock grid: serial vs
                     --shards N worker processes must merge byte-identically
+                    [--schedule static|dynamic]
   bench-fig3        memory vs batch size [--all-tasks] (Fig 3/8)
   bench-fig4        variance-probe series (Fig 4/7)
   bench-fig5        loss curves vs rho [--task mnli] (Fig 5/9)
@@ -221,9 +300,21 @@ COMMON OPTIONS
   --pool-grain N    rows per pool task for row-partitioned kernels
                     (overrides --config; env: RMM_POOL_GRAIN; load
                     balance only, never affects results)
-  --shards N        shard a sweep's grid across N self-spawned worker
+  --shards N        distribute a sweep's grid across N self-spawned worker
                     processes (default 1 = inline; config: sweep.shards;
                     merged reports are cell-order independent)
+  --schedule MODE   sweep cell scheduler: static (round-robin --shard i/N,
+                    default) | dynamic (atomic claim/lease work stealing
+                    over the fragment dir — no stragglers under skewed
+                    cell costs; config: sweep.schedule).  LR-schedule
+                    values (linear|const|poly) still select the training
+                    schedule; the value sets are disjoint.  To set both
+                    at once, use --sweep-schedule static|dynamic (always
+                    wins) alongside --schedule for the LR curve
+  --lease-ttl-ms N  dynamic schedule only: claim age after which a cell
+                    is considered abandoned and reclaimable; must exceed
+                    the worst-case cell wall time (default 600000;
+                    config: sweep.lease_ttl_ms)
   --resume          reuse completed-cell manifests from a killed sweep
                     (config: sweep.resume); only missing cells rerun
   --prefetch        assemble the next batch on a background thread while
@@ -416,37 +507,85 @@ fn cmd_table4(args: &Args) -> Result<()> {
     bench::write_report(&reports_dir(args), "table4", &report)
 }
 
-/// One shard of a sweep, in this process — the contract `spawn_workers`
-/// relies on: load `sweep.json` from `--dir`, run the cells owned by
-/// `--shard i/N` that have no committed fragment yet, exit 0 iff all
-/// owned cells committed.  The "mock" experiment needs no artifacts or
-/// engine (used by sweep-selftest and the orchestration tests).
+/// Strict sweep-scheduler parse for the worker/selftest entries (no
+/// LR-schedule fallback: these commands never train from flags).
+fn worker_schedule(args: &Args) -> Result<Schedule> {
+    match args.get("sweep-schedule").or_else(|| args.get("schedule")) {
+        Some(s) => Schedule::parse(s)
+            .with_context(|| format!("unknown --schedule '{s}' (static|dynamic)")),
+        None => Ok(Schedule::Static),
+    }
+}
+
+/// One worker of a sweep, in this process — the contract `spawn_workers`
+/// relies on: load `sweep.json` from `--dir`, run cells (the `--shard
+/// i/N` subset under the static schedule; whatever it can claim under
+/// `--schedule dynamic`), exit 0 iff every cell it ran committed.  The
+/// "mock" experiment needs no artifacts or engine (used by
+/// sweep-selftest and the orchestration tests); `--mock-cell-ms N`
+/// inflates mock cell cost so the crash/steal tests can kill a worker
+/// mid-lease.
 fn cmd_sweep_worker(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get("dir").context("--dir required")?);
-    let shard = Shard::parse(args.get("shard").context("--shard i/N required")?)?;
     let spec = sweep::resume::load_spec(&dir)?;
-    let ran = if spec.experiment == "mock" {
-        sweep::run_shard(&dir, &spec, shard, &mut |c| Ok(sweep::mock_cell(c)))?
-    } else {
-        let manifest = load_manifest(args)?;
-        let mut engine = Engine::cpu()?;
-        let mut runner = |cell: &sweep::Cell| {
-            bench::runner::run_cell(&mut engine, &manifest, &spec, cell)
-        };
-        sweep::run_shard(&dir, &spec, shard, &mut runner)?
+    let schedule = worker_schedule(args)?;
+    let mock_cost = std::time::Duration::from_millis(args.get_u64("mock-cell-ms", 0));
+    let mock = spec.experiment == "mock";
+    let mut mock_runner = |c: &sweep::Cell| -> Result<Json> {
+        if !mock_cost.is_zero() {
+            std::thread::sleep(mock_cost);
+        }
+        Ok(sweep::mock_cell(c))
     };
-    eprintln!("sweep-worker {shard}: ran {ran} cells");
+    match schedule {
+        Schedule::Static => {
+            let shard =
+                Shard::parse(args.get("shard").context("--shard i/N required (static)")?)?;
+            let ran = if mock {
+                sweep::run_shard(&dir, &spec, shard, &mut mock_runner)?
+            } else {
+                let manifest = load_manifest(args)?;
+                let mut engine = Engine::cpu()?;
+                let mut runner = |cell: &sweep::Cell| {
+                    bench::runner::run_cell(&mut engine, &manifest, &spec, cell)
+                };
+                sweep::run_shard(&dir, &spec, shard, &mut runner)?
+            };
+            eprintln!("sweep-worker {shard}: ran {ran} cells");
+        }
+        Schedule::Dynamic => {
+            let ttl = lease_ttl_arg(args)?.unwrap_or(sweep::DEFAULT_LEASE_TTL_MS);
+            let cfg = DynamicConfig::new("worker", ttl);
+            let worker = cfg.worker.clone();
+            let ran = if mock {
+                sweep::run_dynamic(&dir, &spec, &cfg, &mut mock_runner)?
+            } else {
+                let manifest = load_manifest(args)?;
+                let mut engine = Engine::cpu()?;
+                let mut runner = |cell: &sweep::Cell| {
+                    bench::runner::run_cell(&mut engine, &manifest, &spec, cell)
+                };
+                sweep::run_dynamic(&dir, &spec, &cfg, &mut runner)?
+            };
+            eprintln!("sweep-worker {worker} (dynamic): ran {} cells", ran.len());
+        }
+    }
     Ok(())
 }
 
-/// End-to-end smoke of the shard/merge/resume machinery over the mock
-/// grid: a serial run and an `--shards N` run through real worker
-/// processes must merge to byte-identical reports.  CI's sweep gate.
+/// End-to-end smoke of the sweep machinery over the mock grid: a serial
+/// run and an `--shards N` run through real worker processes must merge
+/// to byte-identical reports, under either `--schedule`.  CI's sweep
+/// gate runs both schedules.
 fn cmd_sweep_selftest(args: &Args) -> Result<()> {
     let shards = args.get_usize("shards", 2).max(1);
+    let schedule = worker_schedule(args)?;
     let spec = sweep::selftest_spec();
-    let base = std::env::temp_dir()
-        .join(format!("rmm_sweep_selftest_{}", std::process::id()));
+    let base = std::env::temp_dir().join(format!(
+        "rmm_sweep_selftest_{}_{}",
+        schedule.name(),
+        std::process::id()
+    ));
     let _ = std::fs::remove_dir_all(&base);
 
     let serial_dir = base.join("serial");
@@ -458,17 +597,26 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
 
     let sharded_dir = base.join("sharded");
     sweep::resume::prepare(&sharded_dir, &spec, false)?;
-    sweep::spawn_workers(&sharded_dir, shards, &[])?;
+    let mut extra = Vec::new();
+    if schedule == Schedule::Dynamic {
+        extra.push("--schedule".to_string());
+        extra.push("dynamic".to_string());
+    }
+    sweep::spawn_workers(&sharded_dir, shards, &extra)?;
     let sharded =
         Json::Arr(sweep::merge::merge(&sharded_dir, &spec)?).to_string_pretty();
 
     std::fs::remove_dir_all(&base).ok();
     if serial != sharded {
-        bail!("sweep selftest FAILED: {shards}-shard merged report differs from serial");
+        bail!(
+            "sweep selftest FAILED: {shards}-worker {} merged report differs from serial",
+            schedule.name()
+        );
     }
     println!(
-        "sweep selftest: {} cells across {shards} worker processes, \
+        "sweep selftest[{}]: {} cells across {shards} worker processes, \
          byte-identical merged report",
+        schedule.name(),
         spec.cells.len()
     );
     Ok(())

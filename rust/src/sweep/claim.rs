@@ -1,0 +1,357 @@
+//! Atomic filesystem claim/lease protocol over the sweep fragment
+//! directory — the coordination substrate of the dynamic scheduler
+//! (`sweep::scheduler`).
+//!
+//! # Protocol
+//!
+//! A worker that wants to run cell `i` creates `cells/cell_<i>.claim`
+//! with `O_CREAT | O_EXCL` ([`try_claim`]).  Create-exclusive is the
+//! *only* acquisition path, so the OS guarantees **exactly one winner**
+//! per claim file no matter how many workers (threads or processes, even
+//! across machines sharing the fragment store) race for the same cell.
+//! The claim embeds the worker id and a heartbeat timestamp
+//! (unix-epoch ms) as JSON.
+//!
+//! A claim is a **lease**, not a lock: if its age exceeds the TTL it is
+//! *stale* and any worker may reclaim the cell.  Reclaim renames the
+//! stale file aside (rename is atomic; exactly one thief wins it) and
+//! re-enters the create-exclusive race.  Staleness is judged by the
+//! embedded heartbeat when the file parses, falling back to the file
+//! mtime for a torn write (a worker killed between `open` and
+//! `write_all`) — a torn claim is never mistaken for a live one
+//! forever, and never yields a second winner.
+//!
+//! The steal is **verified after capture**: between a thief's staleness
+//! read and its rename, a faster thief can complete an entire steal and
+//! re-claim, leaving a *fresh* claim at the path.  The renamer therefore
+//! re-judges the file it actually captured; if it robbed a live claim it
+//! restores it via `hard_link` (atomic — loses to any newer claim) and
+//! reports the cell held.  Only a ≥3-party interleaving inside that
+//! microsecond window can still admit a duplicate owner, which is the
+//! benign duplicate-run corner described below.
+//!
+//! Mutual exclusion here is a *scheduling efficiency* property, not a
+//! correctness property: if a stale-but-alive worker and its reclaimer
+//! both finish the same cell, both commit the same deterministic
+//! fragment via the atomic tmp+rename in `sweep::merge`, and the merged
+//! report is unchanged.  Correctness always comes from the fragment set;
+//! claims only keep workers from duplicating work.
+//!
+//! Completed cells need no claim at all — a valid fragment supersedes
+//! any claim file (the scheduler deletes leftover claims when it sees
+//! the fragment, and `resume::prepare` sweeps them on `--resume`).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Claim-file path for a cell inside the sweep's `cells/` directory
+/// (sibling of the `cell_<index>.json` fragment; `merge` looks fragments
+/// up by exact path, so claim files are invisible to it).
+pub fn claim_path(cells_dir: &Path, index: usize) -> PathBuf {
+    cells_dir.join(format!("cell_{index:05}.claim"))
+}
+
+/// Milliseconds since the unix epoch (the heartbeat clock).
+pub fn now_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// A process-unique worker id: `<label>-<pid>-<seq>`.  The pid makes ids
+/// unique across worker processes sharing a fragment store on one host;
+/// the sequence number makes them unique across threads in one process.
+pub fn worker_id(label: &str) -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    format!("{label}-{}-{}", std::process::id(), SEQ.fetch_add(1, Ordering::Relaxed))
+}
+
+/// The parsed content of a claim file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClaimInfo {
+    pub worker: String,
+    pub heartbeat_ms: u64,
+}
+
+fn claim_body(worker: &str, heartbeat_ms: u64) -> String {
+    Json::obj(vec![
+        ("heartbeat_ms", Json::num(heartbeat_ms as f64)),
+        ("worker", Json::str(worker)),
+    ])
+    .to_string_pretty()
+}
+
+/// Read a cell's claim, if present and parseable (diagnostics; the
+/// scheduler itself only needs [`try_claim`]).
+pub fn read_claim(cells_dir: &Path, index: usize) -> Option<ClaimInfo> {
+    let text = std::fs::read_to_string(claim_path(cells_dir, index)).ok()?;
+    let j = Json::parse(&text).ok()?;
+    Some(ClaimInfo {
+        worker: j.get("worker").as_str()?.to_string(),
+        heartbeat_ms: j.get("heartbeat_ms").as_f64()? as u64,
+    })
+}
+
+/// Best-effort removal of a cell's claim file (used when a valid
+/// fragment supersedes it, and by `resume::prepare`).
+pub fn remove_claim(cells_dir: &Path, index: usize) {
+    let _ = std::fs::remove_file(claim_path(cells_dir, index));
+}
+
+/// Age of the claim at `path` in ms: embedded heartbeat when the file
+/// parses, mtime for a torn write, `None` if the file vanished.
+fn age_ms(path: &Path) -> Option<u64> {
+    let now = now_ms();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(j) = Json::parse(&text) {
+            if let Some(hb) = j.get("heartbeat_ms").as_f64() {
+                return Some(now.saturating_sub(hb as u64));
+            }
+        }
+    }
+    let mtime = std::fs::metadata(path).ok()?.modified().ok()?;
+    let mtime_ms = mtime.duration_since(UNIX_EPOCH).ok()?.as_millis() as u64;
+    Some(now.saturating_sub(mtime_ms))
+}
+
+/// Outcome of one claim attempt.
+pub enum ClaimAttempt {
+    /// This worker owns the cell until it releases (or its lease goes
+    /// stale).  Dropping the guard releases the claim, so a worker that
+    /// errors out never wedges the cell for a full TTL.
+    Won(ClaimGuard),
+    /// Another worker holds a fresh lease (or won a reclaim race);
+    /// revisit the cell on a later pass.
+    Held,
+}
+
+/// Try to claim `cells/cell_<index>.claim` for `worker`.  Exactly one
+/// concurrent claimant wins; stale leases (age > `ttl_ms`) are renamed
+/// aside and re-raced.  Contention beyond a few rounds reports [`Held`]
+/// — the scheduler's pass loop retries naturally.
+///
+/// [`Held`]: ClaimAttempt::Held
+pub fn try_claim(
+    cells_dir: &Path,
+    index: usize,
+    worker: &str,
+    ttl_ms: u64,
+) -> Result<ClaimAttempt> {
+    let path = claim_path(cells_dir, index);
+    for round in 0..4u32 {
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut f) => {
+                // A failed/torn body write degrades to mtime-based
+                // staleness, never to a second winner — ignore it.
+                let _ = f.write_all(claim_body(worker, now_ms()).as_bytes());
+                return Ok(ClaimAttempt::Won(ClaimGuard {
+                    path,
+                    worker: worker.to_string(),
+                    released: false,
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                match age_ms(&path) {
+                    // Vanished between open and stat (released or
+                    // stolen): re-enter the create race.
+                    None => continue,
+                    Some(age) if age <= ttl_ms => return Ok(ClaimAttempt::Held),
+                    Some(_) => {
+                        // Stale lease: capture it by atomic rename (one
+                        // thief wins; losers see NotFound and loop) …
+                        let grave = cells_dir
+                            .join(format!("cell_{index:05}.claim.stale.{worker}.{round}"));
+                        if std::fs::rename(&path, &grave).is_err() {
+                            continue; // lost the steal race: re-judge
+                        }
+                        // … then verify the capture: a faster thief may
+                        // have stolen-and-reclaimed between our read and
+                        // our rename, in which case we just robbed a
+                        // LIVE claim (TOCTOU) and must put it back.
+                        let stale = age_ms(&grave).map_or(true, |age| age > ttl_ms);
+                        if stale {
+                            let _ = std::fs::remove_file(&grave);
+                            continue; // legitimate steal: re-race create
+                        }
+                        // hard_link is atomic and fails if a newer claim
+                        // already took the path (that claimant owns it).
+                        let _ = std::fs::hard_link(&grave, &path);
+                        let _ = std::fs::remove_file(&grave);
+                        return Ok(ClaimAttempt::Held);
+                    }
+                }
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("creating claim {path:?}"))
+            }
+        }
+    }
+    Ok(ClaimAttempt::Held)
+}
+
+/// A held claim.  Release after committing the cell's fragment; dropping
+/// without release (error/unwind path) also removes the claim file so
+/// other workers can retry the cell immediately instead of waiting out
+/// the lease.
+pub struct ClaimGuard {
+    path: PathBuf,
+    worker: String,
+    released: bool,
+}
+
+impl ClaimGuard {
+    pub fn worker(&self) -> &str {
+        &self.worker
+    }
+
+    /// Re-stamp the heartbeat (tmp + rename, so readers never see a torn
+    /// claim).  Long-running cell runners can call this to keep a lease
+    /// fresh past the TTL; the scheduler's contract is otherwise that the
+    /// TTL exceeds the worst-case cell wall time.
+    pub fn refresh(&self) -> Result<()> {
+        let tmp = self.path.with_extension(format!("claim.hb.{}", std::process::id()));
+        std::fs::write(&tmp, claim_body(&self.worker, now_ms()))
+            .with_context(|| format!("writing heartbeat {tmp:?}"))?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("committing heartbeat {:?}", self.path))?;
+        Ok(())
+    }
+
+    /// Remove the claim file (after the fragment is committed).
+    pub fn release(mut self) {
+        self.released = true;
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl Drop for ClaimGuard {
+    fn drop(&mut self) {
+        if !self.released {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("rmm_claim_test_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn worker_ids_are_unique() {
+        let a = worker_id("w");
+        let b = worker_id("w");
+        assert_ne!(a, b);
+        assert!(a.contains(&std::process::id().to_string()));
+    }
+
+    #[test]
+    fn create_exclusive_has_one_winner() {
+        let d = tmp("one_winner");
+        let first = try_claim(&d, 3, "alpha", 60_000).unwrap();
+        let ga = match first {
+            ClaimAttempt::Won(g) => g,
+            ClaimAttempt::Held => panic!("first claimant must win"),
+        };
+        assert!(matches!(try_claim(&d, 3, "beta", 60_000).unwrap(), ClaimAttempt::Held));
+        // the claim file records the winner + a recent heartbeat
+        let info = read_claim(&d, 3).unwrap();
+        assert_eq!(info.worker, "alpha");
+        assert!(now_ms().saturating_sub(info.heartbeat_ms) < 60_000);
+        // release frees the cell for the next claimant
+        ga.release();
+        assert!(matches!(try_claim(&d, 3, "beta", 60_000).unwrap(), ClaimAttempt::Won(_)));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn guard_drop_releases_the_claim() {
+        let d = tmp("drop");
+        {
+            let _g = match try_claim(&d, 0, "w", 60_000).unwrap() {
+                ClaimAttempt::Won(g) => g,
+                ClaimAttempt::Held => panic!(),
+            };
+            assert!(claim_path(&d, 0).exists());
+        }
+        assert!(!claim_path(&d, 0).exists(), "drop must remove the claim");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn stale_lease_is_reclaimable_fresh_is_not() {
+        let d = tmp("stale");
+        // a claim whose heartbeat is ancient (a killed worker)
+        std::fs::write(claim_path(&d, 7), claim_body("dead-worker", 1)).unwrap();
+        // fresh-enough TTL judged against the *embedded* heartbeat, so
+        // the brand-new mtime must not shield it
+        match try_claim(&d, 7, "thief", 1_000).unwrap() {
+            ClaimAttempt::Won(g) => {
+                assert_eq!(read_claim(&d, 7).unwrap().worker, "thief");
+                g.release();
+            }
+            ClaimAttempt::Held => panic!("stale lease must be reclaimable"),
+        }
+        // a live claim with a current heartbeat is not stealable
+        std::fs::write(claim_path(&d, 7), claim_body("live-worker", now_ms())).unwrap();
+        assert!(matches!(try_claim(&d, 7, "thief", 60_000).unwrap(), ClaimAttempt::Held));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn torn_claim_ages_by_mtime() {
+        let d = tmp("torn");
+        // an empty (torn) claim file: unparseable, so staleness falls
+        // back to mtime — fresh now, held under a generous TTL
+        std::fs::write(claim_path(&d, 2), "").unwrap();
+        assert!(matches!(try_claim(&d, 2, "w", 60_000).unwrap(), ClaimAttempt::Held));
+        // with a zero TTL the same torn file goes stale as soon as its
+        // mtime-age ticks past 0 ms
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        match try_claim(&d, 2, "w", 0).unwrap() {
+            ClaimAttempt::Won(g) => g.release(),
+            ClaimAttempt::Held => panic!("torn claim must go stale by mtime"),
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn refresh_restamps_the_heartbeat() {
+        let d = tmp("refresh");
+        let g = match try_claim(&d, 1, "w", 60_000).unwrap() {
+            ClaimAttempt::Won(g) => g,
+            ClaimAttempt::Held => panic!(),
+        };
+        let hb0 = read_claim(&d, 1).unwrap().heartbeat_ms;
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        g.refresh().unwrap();
+        let hb1 = read_claim(&d, 1).unwrap().heartbeat_ms;
+        assert!(hb1 > hb0, "refresh must advance the heartbeat ({hb0} -> {hb1})");
+        g.release();
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn remove_claim_is_idempotent() {
+        let d = tmp("remove");
+        remove_claim(&d, 9); // nothing there: fine
+        std::fs::write(claim_path(&d, 9), claim_body("w", now_ms())).unwrap();
+        remove_claim(&d, 9);
+        assert!(!claim_path(&d, 9).exists());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

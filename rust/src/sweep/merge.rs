@@ -10,7 +10,11 @@
 //! `merge` walks the spec's canonical cell order and looks fragments up
 //! by index, so the merged result list — and any report assembled from
 //! it — is a pure function of the fragment *set*, independent of which
-//! shard produced a fragment or in what order cells completed.
+//! worker produced a fragment, under which schedule (static shards or
+//! dynamic claim/lease stealing), or in what order cells completed.
+//! Lookups are by exact fragment path, so the `.claim` lease files and
+//! `.json.tmp` staging files the dynamic scheduler and atomic commits
+//! leave in `cells/` are invisible to the merge.
 
 use std::path::{Path, PathBuf};
 
@@ -29,19 +33,32 @@ pub fn fragment_path(cells_dir: &Path, cell: &Cell) -> PathBuf {
 /// Atomically commit a completed cell's manifest.  The fragment embeds
 /// both the cell it answers for *and* the spec's train config, so resume
 /// validation covers the full grid contract.
+///
+/// The staging file name is writer-unique (pid + per-process sequence):
+/// under the dynamic schedule a stale-but-alive worker and its reclaimer
+/// can commit the same cell concurrently, and a shared tmp path would
+/// let their writes interleave before the rename.  With unique staging,
+/// each rename publishes one writer's complete bytes — last one wins,
+/// which is harmless because deterministic cells commit identical
+/// content.
 pub fn write_fragment(
     cells_dir: &Path,
     spec: &SweepSpec,
     cell: &Cell,
     result: &Json,
 ) -> Result<()> {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
     let body = Json::obj(vec![
         ("cell", cell.to_json()),
         ("train", spec.train.to_json()),
         ("result", result.clone()),
     ]);
     let path = fragment_path(cells_dir, cell);
-    let tmp = path.with_extension("json.tmp");
+    let tmp = path.with_extension(format!(
+        "json.tmp.{}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
     std::fs::write(&tmp, body.to_string_pretty())
         .with_context(|| format!("writing fragment {tmp:?}"))?;
     std::fs::rename(&tmp, &path).with_context(|| format!("committing {path:?}"))?;
@@ -156,6 +173,25 @@ mod tests {
         write_fragment(&cdir, &spec, &spec.cells[0], &Json::num(0.0)).unwrap();
         let all = merge(&dir, &spec).unwrap();
         assert_eq!(all, vec![Json::num(0.0), Json::num(1.0)]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn merge_ignores_claim_and_tmp_files() {
+        let dir = tmp("ignores_claims");
+        let cdir = resume::cells_dir(&dir);
+        std::fs::create_dir_all(&cdir).unwrap();
+        let spec = spec2();
+        for cell in &spec.cells {
+            write_fragment(&cdir, &spec, cell, &Json::num(cell.index as f64)).unwrap();
+        }
+        let clean = merge(&dir, &spec).unwrap();
+        // litter the directory with everything a dynamic sweep can leave
+        // behind: live claims, stale graves, torn tmp commits
+        std::fs::write(super::super::claim::claim_path(&cdir, 0), "{}").unwrap();
+        std::fs::write(cdir.join("cell_00001.claim.stale.w-1-0.0"), "").unwrap();
+        std::fs::write(cdir.join("cell_00001.json.tmp"), "{trunc").unwrap();
+        assert_eq!(merge(&dir, &spec).unwrap(), clean, "stray files must not perturb merge");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

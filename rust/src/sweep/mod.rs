@@ -1,10 +1,11 @@
-//! Sharded sweep orchestrator: declarative experiment grids executed
-//! across worker processes (or in-process shards), merged into one
-//! canonical report, resumable after a kill.
+//! Sweep orchestrator: declarative experiment grids executed across
+//! worker processes (or in-process workers), merged into one canonical
+//! report, resumable after a kill, and scheduled either statically
+//! (round-robin shards) or dynamically (claim/lease work stealing).
 //!
-//! This module is the canonical reference for the **shard / merge /
-//! resume contract** (mirroring `tensor/pool/mod.rs` for the pool
-//! knobs).  The paper's headline evidence is sweep-shaped — Table 2
+//! This module is the canonical reference for the **shard / claim /
+//! merge / resume contract** (mirroring `tensor/pool/mod.rs` for the
+//! pool knobs).  The paper's headline evidence is sweep-shaped — Table 2
 //! (score vs ρ), Table 3 (memory per task/batch/ρ), Table 4 (sketch
 //! families) are grids of *independent* fine-tuning runs — so the grid,
 //! not the single run, is the unit this layer schedules.
@@ -14,23 +15,45 @@
 //! * **Grid** ([`grid`]) — a [`SweepSpec`] lists the cells in canonical
 //!   order; a cell's `index` is its identity.  The spec serializes to
 //!   `sweep.json` inside the sweep directory and is the only input a
-//!   worker needs besides its shard assignment.
-//! * **Shard** ([`shard`]) — cells are owned round-robin:
+//!   worker needs besides its schedule.
+//! * **Static schedule** ([`shard`]) — cells are owned round-robin:
 //!   shard `i/N` runs exactly the cells with `index % N == i`.  The
 //!   assignment is a pure function of the grid, so worker cell sets are
 //!   disjoint and exhaustive by construction, with no work list to
-//!   communicate and no coordination while running.
+//!   communicate and no coordination while running.  This is the
+//!   zero-coordination fallback (`--schedule static`, the default) and
+//!   the contract `tests/prop_sweep.rs` pins.
+//! * **Dynamic schedule** ([`claim`] + [`scheduler`]) — workers pull
+//!   the next incomplete, unclaimed cell instead of filtering by index.
+//!   A **claim** is a create-exclusive file `cells/cell_<i>.claim`
+//!   embedding the worker id and a heartbeat timestamp; the OS makes
+//!   exactly one claimant win per cell.  A claim is a **lease**: when
+//!   its age (embedded heartbeat, or file mtime for a torn write)
+//!   exceeds the TTL (`--lease-ttl-ms`, default 10 min), any worker may
+//!   **reclaim** the cell — the stale file is atomically renamed aside
+//!   and the create-exclusive race re-runs.  A valid fragment
+//!   supersedes any claim: workers check fragments first and delete
+//!   leftover claim files on completed cells.  Workers run until every
+//!   cell has a valid fragment, so a worker killed mid-lease is healed
+//!   by the survivors after the TTL.  Because the claim store *is* the
+//!   fragment directory, pointing several machines at one shared
+//!   fragment store shards a sweep across them with no extra
+//!   coordination.  Claim races can at worst duplicate a cell run
+//!   (stale-but-alive holder + reclaimer); both commit the same
+//!   deterministic fragment, so scheduling never changes the report.
 //! * **Merge** ([`merge`]) — each completed cell commits one fragment
 //!   `cells/cell_<index>.json` atomically (tmp + rename), embedding the
 //!   cell it answers for.  The merge walks the spec order and looks
-//!   fragments up by index: the merged result list is a pure function
-//!   of the fragment *set*, independent of shard count, completion
-//!   order, or which process wrote which fragment.  That is why
-//!   `--shards 1` and `--shards 3` produce **byte-identical merged
-//!   reports** whenever the per-cell results are deterministic (the
-//!   mock grid used by `repro sweep-selftest` and `tests/prop_sweep.rs`;
-//!   real runs are deterministic in everything except wall-clock
-//!   timing fields).
+//!   fragments up by exact path — claim files and tmp files in the same
+//!   directory are invisible to it.  The merged result list is a pure
+//!   function of the fragment *set*, independent of schedule, worker
+//!   count, completion order, or which process wrote which fragment.
+//!   That is why `--shards 1`, `--shards 3`, and `--schedule dynamic`
+//!   with any worker count produce **byte-identical merged reports**
+//!   whenever the per-cell results are deterministic (the mock grid
+//!   used by `repro sweep-selftest`, `tests/prop_sweep.rs`, and
+//!   `tests/prop_sched.rs`; real runs are deterministic in everything
+//!   except wall-clock timing fields).
 //! * **Resume** ([`resume`]) — completion state *is* the fragment set.
 //!   A worker skips any cell whose valid fragment exists, so rerunning
 //!   a killed sweep with `--resume` executes only the missing cells.
@@ -38,32 +61,44 @@
 //!   both the embedded cell *and* the embedded train config must match
 //!   (mismatch ⇒ treated as absent ⇒ cell reruns) — so neither a grid
 //!   edit nor changed training settings (`--steps`, `--lr`, …) between
-//!   runs can smuggle stale rows into a report.
+//!   runs can smuggle stale rows into a report.  Claim files never
+//!   carry completion state: `prepare(resume=true)` clears every
+//!   leftover claim (so a killed run's stale leases cannot stall the
+//!   resumed sweep until the TTL; a still-live worker whose claim is
+//!   swept at worst duplicates one cell, which is benign), and a fresh
+//!   run clears the directory outright.
 //!
 //! # Execution modes
 //!
 //! * **Worker processes** — [`spawn_workers`] self-spawns the current
-//!   binary once per shard with the `sweep-worker --dir D --shard i/N`
-//!   contract (see `main.rs`); each worker owns its own `Engine` and
-//!   manifest, giving true multi-process parallelism for engine-bound
-//!   cells.
+//!   binary once per worker with the `sweep-worker --dir D --shard i/N
+//!   [--schedule dynamic --lease-ttl-ms T]` contract (see `main.rs`);
+//!   each worker owns its own `Engine` and manifest, giving true
+//!   multi-process parallelism for engine-bound cells.  Worker stderr
+//!   streams live through the orchestrator and is mirrored to
+//!   `worker_<i>.stderr.log` in the sweep directory; a failing worker's
+//!   exit status and stderr tail surface in the error.
 //! * **In-process** — [`run_shard`] with [`Shard::SERIAL`] runs every
-//!   cell inline (the `--shards 1` path), and [`run_shards_pooled`]
-//!   fans shards out as `tensor::pool` tasks for cheap (`Sync`) cell
-//!   runners such as the mock grid.
+//!   cell inline (the `--shards 1` path), [`run_dynamic`] drives one
+//!   dynamic worker on the current thread, and [`run_shards_pooled`]
+//!   fans static shards out as `tensor::pool` tasks for cheap (`Sync`)
+//!   cell runners such as the mock grid.
 
+pub mod claim;
 pub mod grid;
 pub mod merge;
 pub mod resume;
+pub mod scheduler;
 pub mod shard;
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
 pub use grid::{Cell, SweepSpec};
+pub use scheduler::{run_dynamic, DynamicConfig, Schedule, DEFAULT_LEASE_TTL_MS};
 pub use shard::Shard;
 
 /// Run every not-yet-completed cell owned by `shard`, committing one
@@ -120,36 +155,115 @@ pub fn run_shards_pooled(
     Ok(())
 }
 
-/// Spawn one `sweep-worker` process per shard from the current binary
+/// Spawn one `sweep-worker` process per worker from the current binary
 /// and wait for all of them.  The worker contract (implemented by
 /// `main.rs`) is: `<exe> sweep-worker --dir <dir> --shard i/N [passthrough
-/// args]` — the worker loads `sweep.json`, runs its shard, and exits 0
-/// iff every owned cell committed a fragment.
+/// args]` — the worker loads `sweep.json`, runs its cells (its shard
+/// under the static schedule; whatever it can claim when the extra args
+/// select `--schedule dynamic`), and exits 0 iff every cell it owned or
+/// won committed a fragment.
 pub fn spawn_workers(dir: &Path, shards: usize, extra_args: &[String]) -> Result<()> {
     let exe = std::env::current_exe().context("locating current executable")?;
+    spawn_workers_with_exe(&exe, dir, shards, extra_args)
+}
+
+/// Stderr capture path for worker `i` (sibling of `sweep.json`, outside
+/// `cells/`, so fragments and claims never collide with it).
+pub fn worker_log_path(dir: &Path, worker: usize) -> PathBuf {
+    dir.join(format!("worker_{worker}.stderr.log"))
+}
+
+/// Lines of trailing stderr kept in memory per worker for the failure
+/// diagnostic (the full stream goes to the log file and to our stderr).
+const STDERR_TAIL_LINES: usize = 8;
+
+/// Stream one worker's piped stderr line-by-line to this process's
+/// stderr (live progress) and to its log file (post-mortems), keeping a
+/// rolling [`STDERR_TAIL_LINES`]-line tail in memory for the failure
+/// diagnostic.  An active reader means the pipe can never fill and
+/// block the worker, however chatty it is.
+fn tee_stderr(stderr: std::process::ChildStderr, log: &Path) -> String {
+    use std::collections::VecDeque;
+    use std::io::{BufRead, BufReader, Write};
+    let mut logf = std::fs::File::create(log).ok();
+    let mut tail: VecDeque<String> = VecDeque::with_capacity(STDERR_TAIL_LINES);
+    for line in BufReader::new(stderr).lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        eprintln!("{line}");
+        if let Some(f) = logf.as_mut() {
+            let _ = writeln!(f, "{line}");
+        }
+        if tail.len() == STDERR_TAIL_LINES {
+            tail.pop_front();
+        }
+        tail.push_back(line);
+    }
+    tail.into_iter().collect::<Vec<_>>().join("\n")
+}
+
+/// [`spawn_workers`] with an explicit worker binary — the testable core
+/// (integration tests pass `CARGO_BIN_EXE_repro`; the test binary's own
+/// `current_exe` is not a sweep worker).
+///
+/// Each worker's stderr is piped through a tee thread ([`tee_stderr`]):
+/// streamed live to this process's stderr, mirrored to
+/// [`worker_log_path`] for post-mortems, and tailed in memory so a
+/// failing worker's error reports its **exit status and the last lines
+/// of its stderr**, not a bare "worker failed".
+pub fn spawn_workers_with_exe(
+    exe: &Path,
+    dir: &Path,
+    shards: usize,
+    extra_args: &[String],
+) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("creating sweep dir {dir:?}"))?;
     let mut children = Vec::with_capacity(shards);
     for i in 0..shards {
-        let child = std::process::Command::new(&exe)
+        let mut child = std::process::Command::new(exe)
             .arg("sweep-worker")
             .arg("--dir")
             .arg(dir)
             .arg("--shard")
             .arg(format!("{i}/{shards}"))
             .args(extra_args)
+            .stderr(std::process::Stdio::piped())
             .spawn()
             .with_context(|| format!("spawning sweep worker {i}/{shards}"))?;
-        children.push((i, child));
+        let stderr = child
+            .stderr
+            .take()
+            .with_context(|| format!("taking worker {i} stderr pipe"))?;
+        let log = worker_log_path(dir, i);
+        let tee = std::thread::spawn(move || tee_stderr(stderr, &log));
+        children.push((i, child, tee));
     }
     let mut failed = Vec::new();
-    for (i, mut child) in children {
-        match child.wait() {
-            Ok(status) if status.success() => {}
-            Ok(status) => failed.push(format!("shard {i}/{shards} exited {status}")),
-            Err(e) => failed.push(format!("shard {i}/{shards} wait failed: {e}")),
+    for (i, mut child, tee) in children {
+        let status = child.wait();
+        let tail = tee.join().unwrap_or_default();
+        let status = match status {
+            Ok(s) => s,
+            Err(e) => {
+                failed.push(format!("worker {i}/{shards}: wait failed: {e}"));
+                continue;
+            }
+        };
+        if status.success() {
+            continue;
+        }
+        if tail.is_empty() {
+            failed.push(format!("worker {i}/{shards} exited with {status} (no stderr output)"));
+        } else {
+            failed.push(format!(
+                "worker {i}/{shards} exited with {status}; stderr tail:\n{tail}"
+            ));
         }
     }
     if !failed.is_empty() {
-        bail!("sweep workers failed: {}", failed.join("; "));
+        bail!("sweep workers failed:\n{}", failed.join("\n"));
     }
     Ok(())
 }

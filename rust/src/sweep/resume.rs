@@ -1,14 +1,22 @@
 //! Sweep directory lifecycle + resume-from-manifests.
 //!
-//! A sweep directory holds exactly two things: `sweep.json` (the
-//! serialized [`SweepSpec`], the contract between orchestrator and
-//! workers) and `cells/` (one fragment per completed cell, see
-//! [`super::merge`]).  Resume is *implicit in the fragment set*: a
-//! worker skips any cell whose valid fragment already exists, so
-//! restarting a killed sweep with `--resume` reruns only the missing
-//! cells and the merged report is byte-identical to an uninterrupted
-//! run.  Without `--resume`, `prepare` clears the fragment directory so
-//! every cell reruns from scratch.
+//! A sweep directory holds `sweep.json` (the serialized [`SweepSpec`],
+//! the contract between orchestrator and workers), `cells/` (one
+//! fragment per completed cell, see [`super::merge`], plus transient
+//! `.claim` lease files under the dynamic schedule, see
+//! [`super::claim`]), and per-worker stderr logs.  Resume is *implicit
+//! in the fragment set*: a worker skips any cell whose valid fragment
+//! already exists, so restarting a killed sweep with `--resume` reruns
+//! only the missing cells and the merged report is byte-identical to an
+//! uninterrupted run.  Claim files carry **no** completion state, so
+//! `prepare(resume=true)` clears every leftover claim outright: the
+//! killed run's stale leases would otherwise stall the resumed sweep in
+//! the poll loop for up to the lease TTL, and sweeping a claim that
+//! some still-live worker (another machine on a shared store) holds at
+//! worst duplicates that one cell — benign, because duplicated
+//! deterministic cells commit identical fragments.  Without `--resume`,
+//! `prepare` clears the fragment directory — fragments and claims both
+//! — so every cell reruns from scratch.
 
 use std::path::{Path, PathBuf};
 
@@ -29,10 +37,11 @@ pub fn spec_path(dir: &Path) -> PathBuf {
     dir.join("sweep.json")
 }
 
-/// Create/refresh the sweep directory: clear fragments unless resuming,
-/// then (re)write `sweep.json` atomically.  Fragments kept across a
-/// resume are revalidated against the new spec at read time, so a grid
-/// change between runs silently invalidates only the affected cells.
+/// Create/refresh the sweep directory: clear fragments (and claims)
+/// unless resuming, then (re)write `sweep.json` atomically.  Fragments
+/// kept across a resume are revalidated against the new spec at read
+/// time, so a grid change between runs silently invalidates only the
+/// affected cells; claims superseded by a valid fragment are deleted.
 pub fn prepare(dir: &Path, spec: &SweepSpec, resume: bool) -> Result<()> {
     let cdir = cells_dir(dir);
     if !resume && cdir.exists() {
@@ -41,6 +50,24 @@ pub fn prepare(dir: &Path, spec: &SweepSpec, resume: bool) -> Result<()> {
     }
     std::fs::create_dir_all(&cdir)
         .with_context(|| format!("creating sweep dir {cdir:?}"))?;
+    if resume {
+        // Only fragments (`cell_<i>.json`) carry state.  Sweep the dead
+        // run's other leavings: claim files (stale leases would stall
+        // the resumed sweep until the TTL — see module doc for why this
+        // is always safe), steal graves (`.claim.stale.*` from a thief
+        // killed mid-reclaim), and orphaned staging files
+        // (`.json.tmp.*` from a worker killed between write and
+        // rename), which would otherwise accumulate across resumes.
+        if let Ok(entries) = std::fs::read_dir(&cdir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if name.contains(".claim") || name.contains(".json.tmp") {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+    }
     let tmp = dir.join("sweep.json.tmp");
     std::fs::write(&tmp, spec.to_json().to_string_pretty())
         .with_context(|| format!("writing {tmp:?}"))?;
@@ -111,6 +138,38 @@ mod tests {
         // … a fresh run clears it
         prepare(&dir, &spec, false).unwrap();
         assert_eq!(completed(&dir, &spec), vec![false, false]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_clears_claims_and_tmp_litter_but_keeps_fragments() {
+        use super::super::claim;
+        let dir = tmp("claims");
+        let spec = spec2();
+        prepare(&dir, &spec, false).unwrap();
+        let cdir = cells_dir(&dir);
+        merge::write_fragment(&cdir, &spec, &spec.cells[0], &Json::num(1.0)).unwrap();
+        // a killed run's full debris: claims on a completed and an
+        // incomplete cell, a steal grave, an orphaned staging file
+        std::fs::write(claim::claim_path(&cdir, 0), "").unwrap();
+        std::fs::write(claim::claim_path(&cdir, 1), "").unwrap();
+        let grave = cdir.join("cell_00001.claim.stale.w-9-0.0");
+        let orphan = cdir.join("cell_00001.json.tmp.9999.3");
+        std::fs::write(&grave, "").unwrap();
+        std::fs::write(&orphan, "{trunc").unwrap();
+        prepare(&dir, &spec, true).unwrap();
+        assert!(
+            !claim::claim_path(&cdir, 0).exists()
+                && !claim::claim_path(&cdir, 1).exists()
+                && !grave.exists()
+                && !orphan.exists(),
+            "resume must clear claims, graves and tmp litter"
+        );
+        assert_eq!(
+            completed(&dir, &spec),
+            vec![true, false],
+            "resume must keep the fragment set untouched"
+        );
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

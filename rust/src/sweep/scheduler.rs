@@ -1,0 +1,265 @@
+//! Dynamic work-stealing cell scheduler: workers pull the next
+//! unclaimed, un-completed cell through the claim/lease protocol
+//! (`sweep::claim`) instead of filtering the grid by `index % N`.
+//!
+//! # Why dynamic
+//!
+//! The static `--shard i/N` assignment is a pure function of the grid —
+//! zero coordination, but it strands stragglers when cell costs are
+//! skewed: an MNLI cell costs orders of magnitude more than a WNLI cell,
+//! so one shard can still be grinding while the others sit idle.  Under
+//! the dynamic schedule, every worker scans the grid in canonical order
+//! and claims the first incomplete, unclaimed cell; fast workers simply
+//! claim more cells, so no worker idles while unclaimed cells remain.
+//!
+//! # The contract (see `sweep/mod.rs` for the full claim/lease prose)
+//!
+//! * Work distribution is **only** about which worker runs a cell —
+//!   never about what the cell computes or where its fragment lands.
+//!   The merged report stays a pure function of the fragment set, so a
+//!   dynamic sweep is byte-identical to the serial run for any worker
+//!   count, claim interleaving, or crash/reclaim history
+//!   (`tests/prop_sched.rs` pins worker counts {1, 2, 3, 7}).
+//! * A valid fragment supersedes any claim: workers check the fragment
+//!   before claiming and delete leftover claim files they find on
+//!   completed cells.
+//! * Workers run until **every** cell has a valid fragment, polling
+//!   while other workers hold live leases.  A worker that dies
+//!   mid-lease leaves a claim that goes stale after `lease_ttl_ms`;
+//!   a surviving worker reclaims and finishes the cell.  The TTL must
+//!   exceed the worst-case cell wall time (default 10 minutes) — a
+//!   too-short TTL only costs duplicated work, never a wrong report,
+//!   because duplicated deterministic cells commit identical fragments.
+//! * A cell runner error aborts *this* worker (releasing its claim via
+//!   the guard so others can retry immediately); a deterministic
+//!   failure therefore fails every worker rather than hanging the
+//!   sweep.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+use super::claim::{self, ClaimAttempt};
+use super::grid::{Cell, SweepSpec};
+use super::{merge, resume};
+
+/// Default lease TTL: long enough that no real fine-tuning cell outlives
+/// its lease (claims are only reclaimed from *dead* workers), short
+/// enough that a crashed sweep heals in minutes.
+pub const DEFAULT_LEASE_TTL_MS: u64 = 600_000;
+
+/// Idle back-off between grid passes when every incomplete cell is
+/// leased to someone else: ttl/4 (a stale lease is noticed within ~25%
+/// of its TTL), clamped so short test TTLs stay responsive and long
+/// production TTLs don't hammer the claim store — each idle pass costs
+/// one claim read per incomplete cell, which on the shared network
+/// fragment store of a cross-machine sweep is traffic worth bounding.
+fn poll_ms(lease_ttl_ms: u64) -> u64 {
+    (lease_ttl_ms / 4).clamp(10, 500)
+}
+
+/// Which cell scheduler a sweep uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Round-robin ownership (`--shard i/N`, `sweep::shard`): zero
+    /// coordination, the fallback when no shared claim store is wanted.
+    Static,
+    /// Claim/lease work stealing over the fragment directory.
+    Dynamic,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "static" => Some(Schedule::Static),
+            "dynamic" => Some(Schedule::Dynamic),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Static => "static",
+            Schedule::Dynamic => "dynamic",
+        }
+    }
+}
+
+/// Per-worker settings for a dynamic run.
+#[derive(Debug, Clone)]
+pub struct DynamicConfig {
+    /// Unique worker id embedded in claim files (diagnostics + steal
+    /// attribution).
+    pub worker: String,
+    /// Lease age beyond which another worker may reclaim a cell.
+    pub lease_ttl_ms: u64,
+}
+
+impl DynamicConfig {
+    pub fn new(label: &str, lease_ttl_ms: u64) -> DynamicConfig {
+        DynamicConfig { worker: claim::worker_id(label), lease_ttl_ms: lease_ttl_ms.max(1) }
+    }
+}
+
+/// Run cells under the dynamic schedule until the whole grid is
+/// complete, committing one fragment per cell won.  Returns the indices
+/// of the cells *this* worker ran (in completion order) — the sum over
+/// all workers covers the grid exactly once unless a lease was
+/// reclaimed from a live worker (see module doc).
+pub fn run_dynamic(
+    dir: &Path,
+    spec: &SweepSpec,
+    cfg: &DynamicConfig,
+    runner: &mut dyn FnMut(&Cell) -> Result<Json>,
+) -> Result<Vec<usize>> {
+    let cdir = resume::cells_dir(dir);
+    std::fs::create_dir_all(&cdir).with_context(|| format!("creating {cdir:?}"))?;
+    // A cell observed complete stays complete for the rest of this run
+    // (the spec is fixed and fragments are only ever replaced by
+    // identical re-commits), so memoize completions instead of re-reading
+    // and re-validating every fragment on every poll pass — without this
+    // a worker waiting on one straggler would re-parse the whole
+    // completed grid every POLL_MS.  Cell index == grid position by the
+    // spec contract (`grid::SweepSpec::from_json` enforces it).
+    let mut done = vec![false; spec.cells.len()];
+    let mut ran = Vec::new();
+    loop {
+        let mut all_done = true;
+        let mut claimed_any = false;
+        for (i, cell) in spec.cells.iter().enumerate() {
+            if done[i] {
+                continue;
+            }
+            if merge::read_fragment(&cdir, spec, cell).is_some() {
+                // First observation of this cell's completion: a valid
+                // fragment supersedes any claim — clean up leftovers
+                // from killed workers so the directory converges to
+                // fragments only.
+                claim::remove_claim(&cdir, cell.index);
+                done[i] = true;
+                continue;
+            }
+            all_done = false;
+            match claim::try_claim(&cdir, cell.index, &cfg.worker, cfg.lease_ttl_ms)? {
+                ClaimAttempt::Held => {}
+                ClaimAttempt::Won(guard) => {
+                    // Re-check under the claim: a reclaimed worker may
+                    // have committed between our fragment check and the
+                    // claim win.
+                    if merge::read_fragment(&cdir, spec, cell).is_some() {
+                        guard.release();
+                        done[i] = true;
+                        continue;
+                    }
+                    // On error the guard drops here, releasing the
+                    // claim so other workers can retry immediately.
+                    let result = runner(cell).with_context(|| {
+                        format!(
+                            "sweep cell {} ({} on {}, rho={})",
+                            cell.index, cell.variant, cell.task, cell.rho
+                        )
+                    })?;
+                    merge::write_fragment(&cdir, spec, cell, &result)?;
+                    guard.release();
+                    done[i] = true;
+                    ran.push(cell.index);
+                    claimed_any = true;
+                }
+            }
+        }
+        if all_done {
+            return Ok(ran);
+        }
+        if !claimed_any {
+            // every incomplete cell is leased elsewhere: wait for either
+            // a fragment to land or a lease to go stale
+            std::thread::sleep(std::time::Duration::from_millis(poll_ms(
+                cfg.lease_ttl_ms,
+            )));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::{self, Shard};
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("rmm_scheduler_test_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn report(dir: &Path, spec: &SweepSpec) -> String {
+        Json::Arr(merge::merge(dir, spec).unwrap()).to_string_pretty()
+    }
+
+    #[test]
+    fn schedule_parses() {
+        assert_eq!(Schedule::parse("static"), Some(Schedule::Static));
+        assert_eq!(Schedule::parse("dynamic"), Some(Schedule::Dynamic));
+        assert_eq!(Schedule::parse("linear"), None);
+        assert_eq!(Schedule::Dynamic.name(), "dynamic");
+    }
+
+    #[test]
+    fn single_dynamic_worker_matches_static_serial() {
+        let spec = sweep::selftest_spec();
+        let sdir = tmp("serial");
+        resume::prepare(&sdir, &spec, false).unwrap();
+        sweep::run_shard(&sdir, &spec, Shard::SERIAL, &mut |c| Ok(sweep::mock_cell(c)))
+            .unwrap();
+        let serial = report(&sdir, &spec);
+
+        let ddir = tmp("dynamic");
+        resume::prepare(&ddir, &spec, false).unwrap();
+        let cfg = DynamicConfig::new("t", 60_000);
+        let ran = run_dynamic(&ddir, &spec, &cfg, &mut |c| Ok(sweep::mock_cell(c)))
+            .unwrap();
+        assert_eq!(ran.len(), spec.cells.len());
+        assert_eq!(report(&ddir, &spec), serial, "dynamic must merge like serial");
+
+        // resume semantics: a second dynamic pass finds everything done
+        let ran = run_dynamic(&ddir, &spec, &cfg, &mut |c| Ok(sweep::mock_cell(c)))
+            .unwrap();
+        assert!(ran.is_empty(), "completed cells must not rerun");
+
+        std::fs::remove_dir_all(&sdir).unwrap();
+        std::fs::remove_dir_all(&ddir).unwrap();
+    }
+
+    #[test]
+    fn valid_fragment_supersedes_claim() {
+        let spec = sweep::selftest_spec();
+        let dir = tmp("supersede");
+        resume::prepare(&dir, &spec, false).unwrap();
+        let cdir = resume::cells_dir(&dir);
+        // cell 0 already completed …
+        merge::write_fragment(&cdir, &spec, &spec.cells[0], &sweep::mock_cell(&spec.cells[0]))
+            .unwrap();
+        // … but a killed worker left a *fresh-looking* claim on it
+        match claim::try_claim(&cdir, 0, "dead-but-fresh", 60_000).unwrap() {
+            ClaimAttempt::Won(g) => std::mem::forget(g), // leak: simulate a kill
+            ClaimAttempt::Held => panic!("claim dir should start empty"),
+        }
+        let cfg = DynamicConfig::new("t", 60_000);
+        let mut ran_cells = Vec::new();
+        run_dynamic(&dir, &spec, &cfg, &mut |c| {
+            ran_cells.push(c.index);
+            Ok(sweep::mock_cell(c))
+        })
+        .unwrap();
+        assert!(!ran_cells.contains(&0), "completed cell 0 must not rerun");
+        assert_eq!(ran_cells.len(), spec.cells.len() - 1);
+        assert!(
+            !claim::claim_path(&cdir, 0).exists(),
+            "leftover claim on a completed cell must be cleaned up"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

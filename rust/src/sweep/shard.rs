@@ -1,10 +1,16 @@
-//! Shard assignment: the `--shard i/N` contract.
+//! Static shard assignment: the `--shard i/N` contract.
 //!
 //! Cells are assigned to shards round-robin on the canonical cell index
 //! (`cell.index % N == i`).  The assignment is a pure function of the
 //! grid, so the orchestrator never has to communicate a work list to a
 //! worker — the spec plus `i/N` fully determines what a worker runs, and
 //! any two workers' cell sets are disjoint by construction.
+//!
+//! This is the `--schedule static` fallback (and default): zero
+//! coordination, but skewed cell costs can leave stragglers.  The
+//! dynamic claim/lease scheduler (`super::scheduler`) trades a shared
+//! claim store for balanced pulls; both produce the same fragment set
+//! and therefore byte-identical merged reports.
 
 use std::fmt;
 

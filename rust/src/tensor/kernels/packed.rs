@@ -22,6 +22,21 @@
 //!    C block outright: it loops over the k-blocks ascending, packs its
 //!    own A panel per block, and sweeps the microtiles.
 //!
+//! # Worker-local A-panel scratch
+//!
+//! The A panel a compute task packs is scratch: `pack_a` fully
+//! overwrites the prefix the task reads (zero-padding included), so its
+//! prior contents are dead.  Instead of a fresh `vec!` per task — which
+//! charged a malloc/free round-trip to every task of every optimizer-
+//! path small GEMM — each pool thread keeps one grow-only arena
+//! ([`with_a_scratch`]) reused across tasks, runs and shapes.  Reuse
+//! cannot affect results: the task reads only the `pack_a`-overwritten
+//! prefix, so the value stream into the microkernel is identical whether
+//! the buffer is fresh or recycled (`prop_pool.rs` pins this across
+//! thread counts, grains and dirty-arena interleavings).  A re-entrant
+//! task (a kernel dispatched from inside another task's scratch scope)
+//! falls back to a one-off allocation rather than alias the arena.
+//!
 //! Per C element the k-accumulation order is ascending (KC blocks in
 //! order, k ascending inside the kernel) and is entirely contained in the
 //! element's owning task — independent of blocking, task grain, steal
@@ -48,6 +63,28 @@ const NC: usize = 1024;
 /// Minimum FLOP count before fanning out to the pool (below this the
 /// dispatch cost dominates).
 const PAR_FLOP_THRESHOLD: f64 = 4.0e6;
+
+thread_local! {
+    /// Per-thread grow-only arena for packed A panels (see module doc).
+    static A_SCRATCH: std::cell::RefCell<Vec<f32>> =
+        std::cell::RefCell::new(Vec::new());
+}
+
+/// Hand `f` a `len`-float scratch slice from this thread's arena.  The
+/// slice contents are unspecified — callers must fully overwrite what
+/// they read (gemm_block does, via `pack_a`).  Falls back to a fresh
+/// allocation if the arena is already borrowed (re-entrant dispatch).
+fn with_a_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    A_SCRATCH.with(|cell| match cell.try_borrow_mut() {
+        Ok(mut buf) => {
+            if buf.len() < len {
+                buf.resize(len, 0.0);
+            }
+            f(&mut buf[..len])
+        }
+        Err(_) => f(&mut vec![0.0f32; len]),
+    })
+}
 
 /// Read-only strided view of a logical `rows × cols` f32 matrix.
 #[derive(Clone, Copy)]
@@ -156,7 +193,9 @@ pub fn gemm(a: MatRef<'_>, b: MatRef<'_>, out: &mut Tensor) {
 /// against the slab's pre-packed B image (`bslab`, k-blocks stacked at
 /// `pcols·pc`).  The block is owned exclusively by this task: k-blocks
 /// accumulate in ascending order through a stack tile, so every element's
-/// f32 accumulation sequence is fixed.
+/// f32 accumulation sequence is fixed.  The A panel lives in the
+/// worker-local scratch arena — `pack_a` overwrites every element the
+/// microkernel reads, so arena reuse is invisible to the result.
 #[allow(clippy::too_many_arguments)]
 fn gemm_block(
     a: MatRef<'_>,
@@ -174,56 +213,57 @@ fn gemm_block(
         return;
     }
     let a_panel_rows = (mrows + MR - 1) / MR * MR; // mrows <= MC by grain clamp
-    let mut abuf = vec![0.0f32; a_panel_rows * KC.min(k)];
-    let mut tile = [[0.0f32; NR]; MR];
+    with_a_scratch(a_panel_rows * KC.min(k), |abuf| {
+        let mut tile = [[0.0f32; NR]; MR];
 
-    let mut pci = 0;
-    while pci * KC < k {
-        let pc = pci * KC;
-        let kc = KC.min(k - pc);
-        pack_a(&mut abuf, a, i0, mrows, pc, kc);
-        let slab = &bslab[pcols * pc..pcols * pc + pcols * kc];
+        let mut pci = 0;
+        while pci * KC < k {
+            let pc = pci * KC;
+            let kc = KC.min(k - pc);
+            pack_a(abuf, a, i0, mrows, pc, kc);
+            let slab = &bslab[pcols * pc..pcols * pc + pcols * kc];
 
-        let mut jp = 0;
-        while jp < nc {
-            let nr = NR.min(nc - jp);
-            let bp = &slab[(jp / NR) * NR * kc..(jp / NR) * NR * kc + NR * kc];
-            let mut ip = 0;
-            while ip < mrows {
-                let mr = MR.min(mrows - ip);
-                let ap = &abuf[(ip / MR) * MR * kc..(ip / MR) * MR * kc + MR * kc];
-                // load C tile (padded lanes start at zero; the packers
-                // zero-pad A/B so they stay inert)
-                for (r, trow) in tile.iter_mut().enumerate() {
-                    if r < mr {
-                        let c0 = (i0 + ip + r) * n + jc + jp;
-                        // SAFETY: this task owns C rows [i0, i0+mrows)
-                        // × cols [jc, jc+nc); c0..c0+nr is inside it.
-                        let src = unsafe {
-                            std::slice::from_raw_parts(c.ptr().add(c0) as *const f32, nr)
-                        };
-                        trow[..nr].copy_from_slice(src);
-                        for v in trow[nr..].iter_mut() {
-                            *v = 0.0;
+            let mut jp = 0;
+            while jp < nc {
+                let nr = NR.min(nc - jp);
+                let bp = &slab[(jp / NR) * NR * kc..(jp / NR) * NR * kc + NR * kc];
+                let mut ip = 0;
+                while ip < mrows {
+                    let mr = MR.min(mrows - ip);
+                    let ap = &abuf[(ip / MR) * MR * kc..(ip / MR) * MR * kc + MR * kc];
+                    // load C tile (padded lanes start at zero; the packers
+                    // zero-pad A/B so they stay inert)
+                    for (r, trow) in tile.iter_mut().enumerate() {
+                        if r < mr {
+                            let c0 = (i0 + ip + r) * n + jc + jp;
+                            // SAFETY: this task owns C rows [i0, i0+mrows)
+                            // × cols [jc, jc+nc); c0..c0+nr is inside it.
+                            let src = unsafe {
+                                std::slice::from_raw_parts(c.ptr().add(c0) as *const f32, nr)
+                            };
+                            trow[..nr].copy_from_slice(src);
+                            for v in trow[nr..].iter_mut() {
+                                *v = 0.0;
+                            }
+                        } else {
+                            *trow = [0.0; NR];
                         }
-                    } else {
-                        *trow = [0.0; NR];
                     }
+                    kernel(kc, ap, bp, &mut tile);
+                    for (r, trow) in tile.iter().enumerate().take(mr) {
+                        let c0 = (i0 + ip + r) * n + jc + jp;
+                        // SAFETY: same exclusive region as the load above.
+                        let dst =
+                            unsafe { std::slice::from_raw_parts_mut(c.ptr().add(c0), nr) };
+                        dst.copy_from_slice(&trow[..nr]);
+                    }
+                    ip += MR;
                 }
-                kernel(kc, ap, bp, &mut tile);
-                for (r, trow) in tile.iter().enumerate().take(mr) {
-                    let c0 = (i0 + ip + r) * n + jc + jp;
-                    // SAFETY: same exclusive region as the load above.
-                    let dst =
-                        unsafe { std::slice::from_raw_parts_mut(c.ptr().add(c0), nr) };
-                    dst.copy_from_slice(&trow[..nr]);
-                }
-                ip += MR;
+                jp += NR;
             }
-            jp += NR;
+            pci += 1;
         }
-        pci += 1;
-    }
+    })
 }
 
 #[cfg(test)]

@@ -171,6 +171,49 @@ fn batched_sors_bit_identical_across_rmm_threads_and_equals_cols() {
 }
 
 #[test]
+fn scratch_arena_reuse_is_bit_identical() {
+    let _g = lock_env();
+    // The worker-local A-panel arena is reused across tasks, runs and
+    // shapes; a dirty arena (stale floats from a bigger earlier GEMM)
+    // must be invisible.  Interleave shapes so every later call sees an
+    // arena dirtied by a *different* (m, k) geometry, and sweep thread
+    // counts and grains so the arena is exercised on workers and on the
+    // caller (nt=1 inline path) alike.
+    let big = (randt(200, 500, 41), randt(500, 160, 42)); // dirties ~MC·KC
+    let small = (randt(9, 17, 43), randt(17, 33, 44)); // sub-threshold, inline
+    let mid = (randt(130, 300, 45), randt(300, 140, 46));
+    let reference = with_threads(1, || {
+        (
+            PACKED.matmul(&big.0, &big.1),
+            PACKED.matmul(&small.0, &small.1),
+            PACKED.matmul(&mid.0, &mid.1),
+        )
+    });
+    for &nt in THREAD_COUNTS {
+        for grain in ["1", "8", "64"] {
+            std::env::set_var("RMM_POOL_GRAIN", grain);
+            let got = with_threads(nt, || {
+                // big → small → mid → small: each call after the first
+                // runs on an arena sized/dirtied by its predecessor
+                let b = PACKED.matmul(&big.0, &big.1);
+                let s1 = PACKED.matmul(&small.0, &small.1);
+                let m = PACKED.matmul(&mid.0, &mid.1);
+                let s2 = PACKED.matmul(&small.0, &small.1);
+                assert_eq!(
+                    s1.data, s2.data,
+                    "same GEMM diverged on a dirtier arena (nt={nt} grain={grain})"
+                );
+                (b, s1, m)
+            });
+            assert_eq!(got.0.data, reference.0.data, "big nt={nt} grain={grain}");
+            assert_eq!(got.1.data, reference.1.data, "small nt={nt} grain={grain}");
+            assert_eq!(got.2.data, reference.2.data, "mid nt={nt} grain={grain}");
+        }
+    }
+    std::env::remove_var("RMM_POOL_GRAIN");
+}
+
+#[test]
 fn task_grain_never_changes_results() {
     let _g = lock_env();
     std::env::set_var("RMM_THREADS", "3");

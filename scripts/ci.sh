@@ -34,4 +34,12 @@ echo "== sweep smoke (mock grid, --shards 2, worker subprocesses) =="
 RMM_THREADS=1 target/release/repro sweep-selftest --shards 2
 RMM_THREADS=4 target/release/repro sweep-selftest --shards 2
 
+# Same smoke under the dynamic claim/lease scheduler: workers pull cells
+# through the shared claim store instead of --shard i/N round-robin, and
+# the merged report must still match the serial bytes (prop_sched.rs is
+# the fine-grained gate; this exercises the released binary end to end).
+echo "== sweep smoke (mock grid, --shards 2, --schedule dynamic) =="
+RMM_THREADS=1 target/release/repro sweep-selftest --shards 2 --schedule dynamic
+RMM_THREADS=4 target/release/repro sweep-selftest --shards 2 --schedule dynamic
+
 echo "ci: all gates passed"
