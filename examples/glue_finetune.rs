@@ -19,6 +19,7 @@ use rmmlinear::config::TrainConfig;
 use rmmlinear::coordinator::{Checkpoint, MetricsLog, Trainer};
 use rmmlinear::data::{Batcher, Split, Task, TaskGen, Tokenizer};
 use rmmlinear::runtime::{Engine, Manifest};
+use rmmlinear::session::Session;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -65,8 +66,12 @@ fn main() -> Result<()> {
         names: pre.param_names.clone(),
         params: pre.params.clone(),
     };
+    drop(pre); // release the manifest borrow before the session takes it
 
     // ---- phase 2: fine-tune downstream, baseline vs RMM ----
+    // Both fine-tunes run through one warm session: the second reuses the
+    // first's tokenizer and, at equal variants, compiled executables.
+    let mut session = Session::new(engine, manifest, true);
     let out = Path::new("runs/glue_finetune");
     std::fs::create_dir_all(out)?;
     let mut results = Vec::new();
@@ -82,8 +87,7 @@ fn main() -> Result<()> {
             ..Default::default()
         };
         let res = run_finetune(
-            &mut engine,
-            &manifest,
+            &mut session,
             &vname,
             task,
             RunOpts {
@@ -92,6 +96,7 @@ fn main() -> Result<()> {
                 eval_loss_every: (steps / 10).max(1),
                 warm_start: Some((&body.names, &body.params)),
                 skip_eval: false,
+                tick: None,
             },
         )?;
         println!(

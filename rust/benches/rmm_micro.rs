@@ -207,7 +207,7 @@ fn main() {
     let step_b = randt(48, 48, 32);
     let sync_epoch_ns = b
         .bench("batcher/sync/sst2_dev_epoch", || {
-            for batch in AnyBatcher::new(&gen, Split::Dev, pbsz, 0, false) {
+            for batch in AnyBatcher::new(&gen, Split::Dev, pbsz, 0, false, 1) {
                 black_box(&batch);
                 black_box(PACKED.matmul(&step_a, &step_b));
             }
@@ -215,7 +215,15 @@ fn main() {
         .mean_ns;
     let prefetch_epoch_ns = b
         .bench("batcher/prefetch/sst2_dev_epoch", || {
-            for batch in AnyBatcher::new(&gen, Split::Dev, pbsz, 0, true) {
+            for batch in AnyBatcher::new(&gen, Split::Dev, pbsz, 0, true, 1) {
+                black_box(&batch);
+                black_box(PACKED.matmul(&step_a, &step_b));
+            }
+        })
+        .mean_ns;
+    let prefetch2_epoch_ns = b
+        .bench("batcher/prefetch_d2/sst2_dev_epoch", || {
+            for batch in AnyBatcher::new(&gen, Split::Dev, pbsz, 0, true, 2) {
                 black_box(&batch);
                 black_box(PACKED.matmul(&step_a, &step_b));
             }
@@ -223,12 +231,79 @@ fn main() {
         .mean_ns;
     let sync_ns_per_batch = sync_epoch_ns / n_batches;
     let prefetch_ns_per_batch = prefetch_epoch_ns / n_batches;
+    let prefetch2_ns_per_batch = prefetch2_epoch_ns / n_batches;
     println!(
-        "prefetch step latency: sync {:.1} µs/batch, prefetch {:.1} µs/batch ({:.2}x)",
+        "prefetch step latency: sync {:.1} µs/batch, prefetch d1 {:.1} µs/batch \
+         ({:.2}x), d2 {:.1} µs/batch ({:.2}x)",
         sync_ns_per_batch / 1e3,
         prefetch_ns_per_batch / 1e3,
-        sync_ns_per_batch / prefetch_ns_per_batch
+        sync_ns_per_batch / prefetch_ns_per_batch,
+        prefetch2_ns_per_batch / 1e3,
+        sync_ns_per_batch / prefetch2_ns_per_batch
     );
+
+    // ---- warm-session executable reuse: cache stats per cell schedule ----
+    // Replays a Table-2-shaped cell list (6 variants × 4 tasks × 2 seeds;
+    // every cell touches its variant's fwd/bwd/eval artifacts) through
+    // the engine's real `ExeCache` structure at a capacity that holds 3
+    // warm variants.  The canonical grid order interleaves variants (the
+    // cold-start worst case); the affinity schedule groups same-variant
+    // cells the way the warm-session scheduler claims them.
+    let exe_cache_sim = {
+        use rmmlinear::runtime::ExeCache;
+        let (variants, tasks, seeds, entries) = (6usize, 4usize, 2usize, 3usize);
+        let capacity = 3 * entries; // 3 warm variants
+        let mut canonical = Vec::new();
+        for t in 0..tasks {
+            for v in 0..variants {
+                for _s in 0..seeds {
+                    canonical.push(v);
+                }
+            }
+        }
+        let mut affinity = canonical.clone();
+        affinity.sort_unstable(); // group same-variant cells, order preserved
+        let replay = |order: &[usize]| {
+            let mut cache: ExeCache<usize> = ExeCache::new(capacity);
+            let (mut hits, mut misses, mut evictions) = (0u64, 0u64, 0u64);
+            for &v in order {
+                for entry in ["fwd", "bwd", "eval"] {
+                    let key = format!("v{v}/{entry}");
+                    if cache.get(&key).is_some() {
+                        hits += 1;
+                    } else {
+                        misses += 1;
+                        evictions += cache.insert(key, v);
+                    }
+                }
+            }
+            (hits, misses, evictions)
+        };
+        let (ch, cm, ce) = replay(&canonical);
+        let (ah, am, ae) = replay(&affinity);
+        println!(
+            "exe cache (cap {capacity} exes, {} cells): canonical {ch}h/{cm}m/{ce}ev, \
+             affinity {ah}h/{am}m/{ae}ev — same-variant reuse {:.0}% vs {:.0}%",
+            canonical.len(),
+            100.0 * ah as f64 / (ah + am) as f64,
+            100.0 * ch as f64 / (ch + cm) as f64,
+        );
+        let stats = |h: u64, m: u64, e: u64| {
+            Json::obj(vec![
+                ("hits", Json::num(h as f64)),
+                ("misses", Json::num(m as f64)),
+                ("evictions", Json::num(e as f64)),
+                ("hit_rate", num_or_null(h as f64 / (h + m) as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("capacity", Json::num(capacity as f64)),
+            ("cells", Json::num(canonical.len() as f64)),
+            ("entries_per_cell", Json::num(3.0)),
+            ("canonical_order", stats(ch, cm, ce)),
+            ("affinity_order", stats(ah, am, ae)),
+        ])
+    };
 
     let speedup_512 = {
         let find = |bname: &str| {
@@ -283,6 +358,10 @@ fn main() {
                     ("sync_ns_per_batch", num_or_null(sync_ns_per_batch)),
                     ("prefetch_ns_per_batch", num_or_null(prefetch_ns_per_batch)),
                     (
+                        "prefetch_depth2_ns_per_batch",
+                        num_or_null(prefetch2_ns_per_batch),
+                    ),
+                    (
                         "delta_ns_per_batch",
                         num_or_null(sync_ns_per_batch - prefetch_ns_per_batch),
                     ),
@@ -292,6 +371,7 @@ fn main() {
                     ),
                 ]),
             ),
+            ("exe_cache", exe_cache_sim),
             (
                 "pool",
                 Json::obj(vec![

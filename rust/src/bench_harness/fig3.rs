@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::data::Task;
 use crate::memory::{MemoryModel, ModelGeometry};
-use crate::runtime::{Engine, Manifest};
+use crate::session::Session;
 use crate::util::json::Json;
 
 use super::runner::{run_finetune, RunOpts};
@@ -33,12 +33,7 @@ fn variant_for(bsz: usize, rho: f64) -> String {
     }
 }
 
-pub fn run(
-    engine: &mut Engine,
-    manifest: &Manifest,
-    tasks: &[Task],
-    steps: usize,
-) -> Result<Json> {
+pub fn run(session: &mut Session, tasks: &[Task], steps: usize) -> Result<Json> {
     let mut series = Vec::new();
     // Batch-size variants are lowered for the 2-class head geometry only.
     let tasks: Vec<Task> = tasks
@@ -52,7 +47,7 @@ pub fn run(
         for &rho in &RHOS {
             for &bsz in &BATCHES {
                 let vname = variant_for(bsz, rho);
-                let variant = manifest.variant(&vname)?;
+                let geometry = session.manifest()?.variant(&vname)?.config.geometry();
                 let train = TrainConfig {
                     steps,
                     warmup_steps: 0,
@@ -60,13 +55,12 @@ pub fn run(
                     ..TrainConfig::default()
                 };
                 let res = run_finetune(
-                    engine,
-                    manifest,
+                    session,
                     &vname,
                     task,
                     RunOpts { train, skip_eval: true, ..Default::default() },
                 )?;
-                let model = MemoryModel::new(variant.config.geometry(), rho);
+                let model = MemoryModel::new(geometry, rho);
                 let rob =
                     MemoryModel::new(ModelGeometry::roberta_base(bsz * 2, 128), rho);
                 println!(

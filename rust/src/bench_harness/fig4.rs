@@ -10,19 +10,14 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::data::Task;
-use crate::runtime::{Engine, Manifest};
+use crate::session::Session;
 use crate::util::json::Json;
 
 use super::runner::{run_finetune, RunOpts};
 
-pub fn run(
-    engine: &mut Engine,
-    manifest: &Manifest,
-    train: TrainConfig,
-) -> Result<Json> {
+pub fn run(session: &mut Session, train: TrainConfig) -> Result<Json> {
     let res = run_finetune(
-        engine,
-        manifest,
+        session,
         "probe_cls2_r50_gauss",
         Task::Cola,
         RunOpts { train, skip_eval: true, ..Default::default() },

@@ -9,26 +9,20 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::data::Task;
-use crate::runtime::{Engine, Manifest};
+use crate::session::Session;
 use crate::util::json::Json;
 
 use super::runner::{head_for, run_finetune, variant_name, RunOpts};
 
 pub const RHOS: [f64; 4] = [1.0, 0.5, 0.2, 0.1];
 
-pub fn run(
-    engine: &mut Engine,
-    manifest: &Manifest,
-    task: Task,
-    train: TrainConfig,
-) -> Result<Json> {
+pub fn run(session: &mut Session, task: Task, train: TrainConfig) -> Result<Json> {
     let mut curves = Vec::new();
     for &rho in &RHOS {
         let vname = variant_name("small", head_for(task), rho, "gauss");
         eprintln!("fig5: rho={rho} -> {vname}");
         let res = run_finetune(
-            engine,
-            manifest,
+            session,
             &vname,
             task,
             RunOpts {

@@ -10,19 +10,14 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::data::Task;
-use crate::runtime::{Engine, Manifest};
+use crate::session::Session;
 use crate::util::json::Json;
 
 use super::runner::{head_for, run_finetune, variant_name, RunOpts};
 
 pub const RHOS: [f64; 5] = [1.0, 0.9, 0.5, 0.2, 0.1];
 
-pub fn run(
-    engine: &mut Engine,
-    manifest: &Manifest,
-    task: Task,
-    steps: usize,
-) -> Result<Json> {
+pub fn run(session: &mut Session, task: Task, steps: usize) -> Result<Json> {
     let mut rows = Vec::new();
     let mut baseline = f64::NAN;
     println!("\nFig 6: relative throughput vs compression ratio ({})", task.name());
@@ -36,8 +31,7 @@ pub fn run(
             ..TrainConfig::default()
         };
         let res = run_finetune(
-            engine,
-            manifest,
+            session,
             &vname,
             task,
             RunOpts { train, skip_eval: true, ..Default::default() },

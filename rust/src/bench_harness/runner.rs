@@ -1,18 +1,27 @@
 //! Shared experiment runner: one fine-tuning run = (variant, task, config)
 //! → final metric, loss curves, throughput, memory stats.  Every table and
 //! figure driver composes this.
+//!
+//! Runs execute through a worker's warm [`Session`] (`crate::session`):
+//! the engine's executable cache, per-variant trainer setups, tokenizers
+//! and dev-batch sets all persist across `run_finetune` calls, so
+//! same-variant sweep cells skip cold start.  Caching is observation-free
+//! — a warm run is byte-identical to a cold one (see the session module
+//! doc for the contract and `tests/prop_session.rs` for the pin).
 
 use anyhow::{bail, Context as _, Result};
 
 use crate::config::TrainConfig;
 use crate::coordinator::{MetricsLog, Trainer};
-use crate::data::{AnyBatcher, Batcher, Split, Task, TaskGen, Tokenizer};
+use crate::data::{AnyBatcher, Batch, Batcher, Split, Task, TaskGen};
 use crate::memory::{MemoryModel, ModelGeometry};
 use crate::rmm::{self, SketchKind};
 use crate::rng::philox::PhiloxStream;
-use crate::runtime::{Engine, Manifest, Variant};
-use crate::sweep::{mock_cell, Cell, SweepSpec};
+use crate::runtime::Variant;
+use crate::session::Session;
+use crate::sweep::{mock_cell, Cell, CellCtx, SweepSpec};
 use crate::tensor::{kernels, pool, Tensor};
+use crate::util::fnv;
 use crate::util::json::Json;
 
 /// Everything measured in one run (a row of a table / a series of a fig).
@@ -40,6 +49,17 @@ pub struct RunResult {
     pub pool_tasks: u64,
     /// Tasks claimed cross-queue (work stealing) over the whole run.
     pub pool_steals: u64,
+    /// Engine executable-cache hits during this run: non-zero whenever a
+    /// warm session let this cell reuse executables compiled by an
+    /// earlier same-variant cell (or by earlier steps of this one).
+    /// Deliberately NOT serialized by [`Self::to_json`]: the value
+    /// depends on the worker's warm history, and fragments must stay a
+    /// pure function of the cell for the byte-identity contract —
+    /// `run_cell` reports it on stderr instead.
+    pub exe_cache_hits: u64,
+    /// Executable compiles this run forced (cache misses); warm-history-
+    /// dependent like `exe_cache_hits`, so stderr-only as well.
+    pub exe_cache_misses: u64,
     pub train_losses: Vec<(usize, f64)>,
     pub eval_losses: Vec<(usize, f64)>,
     pub probe_series: Vec<(usize, [f64; 5])>,
@@ -78,6 +98,9 @@ impl RunResult {
             ("pool_threads", Json::num(self.pool_threads as f64)),
             ("pool_tasks", Json::num(self.pool_tasks as f64)),
             ("pool_steals", Json::num(self.pool_steals as f64)),
+            // exe_cache_{hits,misses} intentionally omitted: they depend
+            // on the worker's warm history, and this JSON becomes a sweep
+            // fragment that must be a pure function of the cell.
         ])
     }
 }
@@ -158,6 +181,11 @@ pub struct RunOpts<'a> {
     pub warm_start: Option<(&'a [String], &'a [Vec<f32>])>,
     /// Skip the final dev-metric evaluation (memory/throughput-only runs).
     pub skip_eval: bool,
+    /// Called from inside the train loop every `log_every` steps — the
+    /// sweep scheduler hooks its claim-lease heartbeat here
+    /// (`CellCtx::tick`), so `--lease-ttl-ms` can drop below cell wall
+    /// time.  Must be cheap and side-effect-free w.r.t. results.
+    pub tick: Option<&'a dyn Fn()>,
 }
 
 impl<'a> Default for RunOpts<'a> {
@@ -168,29 +196,64 @@ impl<'a> Default for RunOpts<'a> {
             eval_loss_every: 0,
             warm_start: None,
             skip_eval: false,
+            tick: None,
         }
     }
 }
 
-/// Fine-tune `variant` on `task` and measure everything.
+/// Fine-tune `variant` on `task` through a warm session and measure
+/// everything.  Warm state (tokenizer, trainer setup, dev batches,
+/// compiled executables) is reused when the session's cache is on;
+/// results are byte-identical either way.
 pub fn run_finetune(
-    engine: &mut Engine,
-    manifest: &Manifest,
+    session: &mut Session,
     variant_name: &str,
     task: Task,
     mut opts: RunOpts<'_>,
 ) -> Result<RunResult> {
-    let variant = manifest.variant(variant_name)?;
     let pool_before = pool::stats();
-    let tok = Tokenizer::new(variant.config.vocab_size);
-    let mut trainer = Trainer::new(manifest, variant, task, opts.train.clone())?;
+    // Warm lookups first: everything below is Arc/handle-based, so no
+    // borrow of the session outlives this block …
+    let (vocab, seq_len, bsz) = {
+        let v = session.manifest()?.variant(variant_name)?;
+        (v.config.vocab_size, v.config.seq_len, v.config.batch_size)
+    };
+    let setup = session.trainer_setup(variant_name)?;
+    let tok = session.tokenizer(vocab);
+    let dev = if opts.skip_eval {
+        None
+    } else {
+        session.cached_dev_batches(task, seq_len, vocab, bsz, opts.train.seed)
+    };
+    let caching = session.caching();
+    // … and this split borrow (engine mutably, manifest shared) carries
+    // the rest of the run: the trainer holds the manifest while every
+    // step takes the engine.
+    let (engine, manifest) = session.engine_manifest()?;
+    if !caching {
+        // Honest cold path: without this, executables compiled by an
+        // earlier run would still be warm purely by engine lifetime,
+        // and `--session-cache off` would not control what its docs say
+        // it controls.  (Within the run the cache still works — every
+        // step needs it.)
+        engine.reset_cache();
+    }
+    let variant = manifest.variant(variant_name)?;
+    let engine_stats_before = engine.stats;
+    let mut trainer =
+        Trainer::from_setup(manifest, variant, &setup, task, opts.train.clone())?;
     if let Some((names, params)) = opts.warm_start {
         let n = trainer.load_matching(names, params);
         eprintln!("warm start: loaded {n}/{} params", trainer.params.len());
     }
 
-    let gen = TaskGen::new(task, &tok, variant.config.seq_len, opts.train.seed);
-    let bsz = variant.config.batch_size;
+    // First heartbeat before step 0: the first step carries the one-time
+    // XLA compile, which must not outlive a log_every-sized lease TTL.
+    if let Some(tick) = opts.tick {
+        tick();
+    }
+
+    let gen = TaskGen::new(task, &tok, seq_len, opts.train.seed);
     let mut train_losses = Vec::new();
     let mut eval_losses = Vec::new();
     let mut probe_series = Vec::new();
@@ -198,14 +261,15 @@ pub fn run_finetune(
     let t0 = std::time::Instant::now();
     let mut epoch = 0u64;
     let prefetch = opts.train.prefetch;
-    let mut batches = AnyBatcher::new(&gen, Split::Train, bsz, epoch, prefetch);
+    let depth = opts.train.prefetch_depth;
+    let mut batches = AnyBatcher::new(&gen, Split::Train, bsz, epoch, prefetch, depth);
     let mut compile_time = 0.0f64;
     for step in 0..opts.train.steps {
         let batch = match batches.next() {
             Some(b) => b,
             None => {
                 epoch += 1;
-                batches = AnyBatcher::new(&gen, Split::Train, bsz, epoch, prefetch);
+                batches = AnyBatcher::new(&gen, Split::Train, bsz, epoch, prefetch, depth);
                 batches.next().expect("empty task split")
             }
         };
@@ -214,6 +278,9 @@ pub fn run_finetune(
         compile_time += engine.stats.compile_s - pre_compile;
 
         if step % opts.train.log_every == 0 || step + 1 == opts.train.steps {
+            if let Some(tick) = opts.tick {
+                tick(); // keep the scheduler's lease heartbeat fresh
+            }
             train_losses.push((step, stats.loss));
             if let Some(log) = opts.log.as_deref_mut() {
                 let mut rec = vec![
@@ -255,12 +322,37 @@ pub fn run_finetune(
     }
     // exclude one-time XLA compilation from throughput accounting
     let wall_s = t0.elapsed().as_secs_f64() - compile_time;
+    // Final dev-metric pass: cached batches when the session holds them,
+    // otherwise the (pre)fetching stream — both are the canonical dev
+    // sequence Trainer::evaluate would build, so the score is identical.
+    // The whole pass runs between train-loop heartbeats, so tick per dev
+    // batch to keep the lease fresh through a long dev split.
     let score = if opts.skip_eval {
         f64::NAN
     } else {
-        trainer.evaluate(engine, &tok)?
+        match &dev {
+            Some(batches) => trainer.eval_score(
+                engine,
+                batches.iter().inspect(|_| {
+                    if let Some(tick) = opts.tick {
+                        tick();
+                    }
+                }),
+            )?,
+            None => trainer.eval_score(
+                engine,
+                AnyBatcher::new(&gen, Split::Dev, bsz, 0, prefetch, depth).inspect(
+                    |_| {
+                        if let Some(tick) = opts.tick {
+                            tick();
+                        }
+                    },
+                ),
+            )?,
+        }
     };
     let (host_exact_ms, host_rmm_ms) = host_grad_baseline(variant);
+    let engine_stats_after = engine.stats;
     let pool_delta = pool::stats().delta_since(pool_before);
     Ok(RunResult {
         variant: variant_name.to_string(),
@@ -274,6 +366,12 @@ pub fn run_finetune(
         pool_threads: kernels::threads::num_threads(),
         pool_tasks: pool_delta.tasks,
         pool_steals: pool_delta.steals,
+        exe_cache_hits: engine_stats_after
+            .cache_hits
+            .saturating_sub(engine_stats_before.cache_hits),
+        exe_cache_misses: engine_stats_after
+            .cache_misses
+            .saturating_sub(engine_stats_before.cache_misses),
         final_train_loss: train_losses.last().map(|&(_, l)| l).unwrap_or(f64::NAN),
         steps: opts.train.steps,
         wall_s,
@@ -290,17 +388,21 @@ pub fn run_finetune(
 /// key.  The cell's result JSON is exactly what lands in its fragment
 /// manifest, so everything a driver's `assemble` needs (including the
 /// Table 3 memory-model numbers, which need manifest access) is computed
-/// here, inside the process that owns the engine.
+/// here, inside the process that owns the session.  The scheduler's
+/// [`CellCtx`] threads through to the trainer loop as a lease-heartbeat
+/// tick.
 pub fn run_cell(
-    engine: &mut Engine,
-    manifest: &Manifest,
+    session: &mut Session,
     spec: &SweepSpec,
     cell: &Cell,
+    ctx: &CellCtx<'_>,
 ) -> Result<Json> {
     let mut train = spec.train.clone();
     train.seed = cell.seed;
+    let tick = || ctx.tick();
     match spec.experiment.as_str() {
         "mock" => Ok(mock_cell(cell)),
+        "mockdata" => run_data_cell(session, spec, cell),
         "table2" | "table4" => {
             let task = Task::parse(&cell.task)
                 .with_context(|| format!("unknown task '{}' in cell", cell.task))?;
@@ -309,13 +411,15 @@ pub fn run_cell(
                 spec.experiment, cell.index, cell.variant, cell.task, cell.rho
             );
             let res = run_finetune(
-                engine,
-                manifest,
+                session,
                 &cell.variant,
                 task,
-                RunOpts { train, ..Default::default() },
+                RunOpts { train, tick: Some(&tick), ..Default::default() },
             )?;
-            eprintln!("  -> score {:.2}", res.score);
+            eprintln!(
+                "  -> score {:.2} (exe cache {}h/{}m)",
+                res.score, res.exe_cache_hits, res.exe_cache_misses
+            );
             Ok(res.to_json())
         }
         "table3" => {
@@ -334,13 +438,12 @@ pub fn run_cell(
                 cell.index, cell.variant, cell.task, cell.rho
             );
             let res = run_finetune(
-                engine,
-                manifest,
+                session,
                 &cell.variant,
                 task,
-                RunOpts { train, skip_eval: true, ..Default::default() },
+                RunOpts { train, skip_eval: true, tick: Some(&tick), ..Default::default() },
             )?;
-            let variant = manifest.variant(&cell.variant)?;
+            let variant = session.manifest()?.variant(&cell.variant)?;
             let model = MemoryModel::new(variant.config.geometry(), cell.rho);
             // Paper-scale extrapolation: RoBERTa-base with the paper's
             // batch geometry (batch×seq scaled up proportionally).
@@ -364,6 +467,91 @@ pub fn run_cell(
         }
         other => bail!("unknown sweep experiment '{other}'"),
     }
+}
+
+/// Geometry of the engine-free `mockdata` cells (the session-layer
+/// selftest grid, `sweep::selftest_data_spec`).
+pub const DATA_CELL_VOCAB: usize = 64;
+pub const DATA_CELL_SEQ: usize = 16;
+
+/// Fold a batch's full content (tokens, mask, labels, shape, validity)
+/// into an FNV-1a digest — any single-bit divergence between the warm
+/// and cold data paths changes the cell result.
+fn fnv_batch(h: u64, b: &Batch) -> u64 {
+    let h = fnv::fold(h, b.tokens.iter().flat_map(|t| t.to_le_bytes()));
+    let h = fnv::fold(h, b.mask.iter().flat_map(|m| m.to_bits().to_le_bytes()));
+    let h = fnv::fold(h, b.labels_i.iter().flat_map(|l| l.to_le_bytes()));
+    let h = fnv::fold(h, b.labels_f.iter().flat_map(|l| l.to_bits().to_le_bytes()));
+    fnv::fold(
+        h,
+        [b.batch_size, b.seq_len, b.valid]
+            .iter()
+            .flat_map(|v| (*v as u64).to_le_bytes()),
+    )
+}
+
+/// A deterministic, engine-free sweep cell over the *real* data path:
+/// one shuffled train epoch through the configured (pre)fetch pipeline
+/// plus the dev pass through the session's dataset cache, digested to a
+/// pure function of the cell.  This is what lets CI pin warm-vs-cold
+/// byte-identity of the session layer without artifacts.
+pub fn run_data_cell(session: &mut Session, spec: &SweepSpec, cell: &Cell) -> Result<Json> {
+    let task = Task::parse(&cell.task)
+        .with_context(|| format!("unknown task '{}' in mockdata cell", cell.task))?;
+    let bsz = if cell.batch > 0 { cell.batch } else { 8 };
+    let tok = session.tokenizer(DATA_CELL_VOCAB);
+    let gen = TaskGen::new(task, &tok, DATA_CELL_SEQ, cell.seed);
+
+    let mut train_digest = fnv::OFFSET_BASIS;
+    let mut n_train = 0usize;
+    for batch in AnyBatcher::new(
+        &gen,
+        Split::Train,
+        bsz,
+        0,
+        spec.train.prefetch,
+        spec.train.prefetch_depth,
+    ) {
+        train_digest = fnv_batch(train_digest, &batch);
+        n_train += 1;
+    }
+
+    let mut dev_digest = fnv::OFFSET_BASIS;
+    let mut n_dev = 0usize;
+    match session.cached_dev_batches(task, DATA_CELL_SEQ, DATA_CELL_VOCAB, bsz, cell.seed)
+    {
+        Some(batches) => {
+            for batch in batches.iter() {
+                dev_digest = fnv_batch(dev_digest, batch);
+                n_dev += 1;
+            }
+        }
+        None => {
+            // cache off: stream the identical canonical sequence
+            for batch in AnyBatcher::new(
+                &gen,
+                Split::Dev,
+                bsz,
+                0,
+                spec.train.prefetch,
+                spec.train.prefetch_depth,
+            ) {
+                dev_digest = fnv_batch(dev_digest, &batch);
+                n_dev += 1;
+            }
+        }
+    }
+
+    Ok(Json::obj(vec![
+        ("task", Json::str(cell.task.clone())),
+        ("seed", Json::num(cell.seed as f64)),
+        ("batch_size", Json::num(bsz as f64)),
+        ("n_train_batches", Json::num(n_train as f64)),
+        ("n_dev_batches", Json::num(n_dev as f64)),
+        // digests as hex strings: u64 does not survive the f64 JSON codec
+        ("train_digest", Json::str(format!("{train_digest:016x}"))),
+        ("dev_digest", Json::str(format!("{dev_digest:016x}"))),
+    ]))
 }
 
 /// Variant name scheme shared with aot.py.

@@ -35,6 +35,11 @@ pub struct TrainConfig {
     /// consumes the current one (`data::PrefetchBatcher`).  Bit-identical
     /// to synchronous batching — a pure latency knob.
     pub prefetch: bool,
+    /// How many finished batches may queue ahead of the consumer when
+    /// prefetching (>= 1; depth 1 = classic double buffering).  Like
+    /// `prefetch` itself, a pure latency knob: the emitted batch
+    /// sequence is bit-identical at every depth.
+    pub prefetch_depth: usize,
 }
 
 impl TrainConfig {
@@ -64,6 +69,7 @@ impl Default for TrainConfig {
             log_every: 20,
             seed: 42,
             prefetch: false,
+            prefetch_depth: 1,
         }
     }
 }
@@ -103,9 +109,20 @@ pub struct SweepConfig {
     /// or "dynamic" (claim/lease work stealing, `sweep::scheduler`).
     pub schedule: Option<String>,
     /// Dynamic-schedule lease TTL in ms: a claim older than this is
-    /// considered abandoned and reclaimable.  Must exceed the worst-case
-    /// cell wall time (default 600000 = 10 min).
+    /// considered abandoned and reclaimable.  With heartbeat ticks from
+    /// the trainer loop it need only exceed the tick interval; without
+    /// them, the worst-case cell wall time (default 600000 = 10 min).
     pub lease_ttl_ms: Option<u64>,
+    /// Reuse warm per-worker session state (engine executable cache,
+    /// per-variant trainer setups, tokenizer/dataset caches) across a
+    /// worker's cells (`--session-cache on|off`, default on).
+    /// Byte-invisible in reports — the warm path is pinned identical to
+    /// cold.
+    pub session_cache: Option<bool>,
+    /// Dynamic schedule only: prefer unclaimed cells matching a worker's
+    /// warm (variant, task) key before canonical order (`sweep.affinity`,
+    /// default on).  A pure claim-order preference.
+    pub affinity: Option<bool>,
 }
 
 impl SweepConfig {
@@ -114,6 +131,8 @@ impl SweepConfig {
             && !self.resume
             && self.schedule.is_none()
             && self.lease_ttl_ms.is_none()
+            && self.session_cache.is_none()
+            && self.affinity.is_none()
     }
 }
 
@@ -219,6 +238,12 @@ impl ExperimentConfig {
             if let Some(ttl) = self.sweep.lease_ttl_ms {
                 s.push(("lease_ttl_ms", Json::num(ttl as f64)));
             }
+            if let Some(sc) = self.sweep.session_cache {
+                s.push(("session_cache", Json::Bool(sc)));
+            }
+            if let Some(a) = self.sweep.affinity {
+                s.push(("affinity", Json::Bool(a)));
+            }
             if let Json::Obj(map) = &mut j {
                 map.insert("sweep".to_string(), Json::obj(s));
             }
@@ -282,6 +307,9 @@ impl ExperimentConfig {
         if t.steps == 0 {
             bail!("train.steps must be > 0");
         }
+        if t.prefetch_depth == 0 {
+            bail!("train.prefetch_depth must be >= 1");
+        }
         if !(0.0..1.0).contains(&(t.warmup_steps as f64 / t.steps.max(1) as f64)) {
             bail!("warmup_steps must be < steps");
         }
@@ -328,6 +356,13 @@ fn parse_sweep(j: &Json) -> Result<SweepConfig> {
             }
             "schedule" => s.schedule = Some(req_str(v, k)?),
             "lease_ttl_ms" => s.lease_ttl_ms = Some(num(v, k)? as u64),
+            "session_cache" => {
+                s.session_cache =
+                    Some(v.as_bool().context("'session_cache' must be a bool")?)
+            }
+            "affinity" => {
+                s.affinity = Some(v.as_bool().context("'affinity' must be a bool")?)
+            }
             other => bail!("unknown sweep key '{other}'"),
         }
     }
@@ -355,6 +390,16 @@ fn parse_train(j: &Json) -> Result<TrainConfig> {
             "prefetch" => {
                 t.prefetch = v.as_bool().context("'prefetch' must be a bool")?
             }
+            "prefetch_depth" => {
+                // Checked here, not just in ExperimentConfig::validate:
+                // SweepSpec::from_json parses a TrainConfig directly, and
+                // a depth-0 sweep.json must fail with this error in the
+                // worker, not a PrefetchBatcher assert panic mid-cell.
+                t.prefetch_depth = num(v, k)? as usize;
+                if t.prefetch_depth == 0 {
+                    bail!("train.prefetch_depth must be >= 1");
+                }
+            }
             other => bail!("unknown train key '{other}'"),
         }
     }
@@ -381,6 +426,7 @@ fn train_to_json(t: &TrainConfig) -> Json {
         ("log_every", Json::num(t.log_every as f64)),
         ("seed", Json::num(t.seed as f64)),
         ("prefetch", Json::Bool(t.prefetch)),
+        ("prefetch_depth", Json::num(t.prefetch_depth as f64)),
     ])
 }
 
@@ -439,7 +485,10 @@ mod tests {
             r#"{"sweep": {"schedule": "round-robin"}}"#,
             r#"{"sweep": {"schedule": "linear"}}"#,
             r#"{"sweep": {"lease_ttl_ms": 0}}"#,
+            r#"{"sweep": {"session_cache": "on"}}"#,
+            r#"{"sweep": {"affinity": 1}}"#,
             r#"{"train": {"prefetch": "yes"}}"#,
+            r#"{"train": {"prefetch_depth": 0}}"#,
         ] {
             let j = Json::parse(src).unwrap();
             assert!(ExperimentConfig::from_json(&j).is_err(), "{src}");
@@ -470,7 +519,8 @@ mod tests {
     fn sweep_section_parses_and_roundtrips() {
         let j = Json::parse(
             r#"{"sweep": {"shards": 3, "resume": true,
-                          "schedule": "dynamic", "lease_ttl_ms": 5000}}"#,
+                          "schedule": "dynamic", "lease_ttl_ms": 5000,
+                          "session_cache": false, "affinity": true}}"#,
         )
         .unwrap();
         let cfg = ExperimentConfig::from_json(&j).unwrap();
@@ -478,6 +528,8 @@ mod tests {
         assert!(cfg.sweep.resume);
         assert_eq!(cfg.sweep.schedule.as_deref(), Some("dynamic"));
         assert_eq!(cfg.sweep.lease_ttl_ms, Some(5000));
+        assert_eq!(cfg.sweep.session_cache, Some(false));
+        assert_eq!(cfg.sweep.affinity, Some(true));
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
         // "static" is also a valid explicit choice
@@ -490,11 +542,18 @@ mod tests {
 
     #[test]
     fn train_prefetch_parses_and_roundtrips() {
-        let j = Json::parse(r#"{"train": {"prefetch": true}}"#).unwrap();
+        let j =
+            Json::parse(r#"{"train": {"prefetch": true, "prefetch_depth": 3}}"#).unwrap();
         let cfg = ExperimentConfig::from_json(&j).unwrap();
         assert!(cfg.train.prefetch);
+        assert_eq!(cfg.train.prefetch_depth, 3);
         let back = TrainConfig::from_json(&cfg.train.to_json()).unwrap();
         assert_eq!(cfg.train, back);
         assert!(!TrainConfig::default().prefetch);
+        assert_eq!(TrainConfig::default().prefetch_depth, 1);
+        // the direct TrainConfig parse (the sweep.json path) must reject
+        // a zero depth too, not defer to ExperimentConfig::validate
+        let j = Json::parse(r#"{"prefetch_depth": 0}"#).unwrap();
+        assert!(TrainConfig::from_json(&j).is_err());
     }
 }

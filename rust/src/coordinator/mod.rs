@@ -11,4 +11,4 @@ pub use checkpoint::Checkpoint;
 pub use metrics_log::MetricsLog;
 pub use optimizer::{Optimizer, OptimizerConfig};
 pub use schedule::Schedule;
-pub use trainer::{ProbeStats, StepStats, Trainer};
+pub use trainer::{ProbeStats, StepStats, Trainer, TrainerSetup};

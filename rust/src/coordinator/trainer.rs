@@ -23,6 +23,44 @@ use crate::runtime::{Engine, Entry, HostValue, Manifest, Role, Variant};
 use super::optimizer::{Optimizer, OptimizerConfig};
 use super::schedule::Schedule;
 
+/// The variant-dependent, seed-independent half of trainer construction:
+/// everything derived from the manifest alone — the pristine initial
+/// parameters read from the variant's init blob, and the param-spec
+/// plumbing (names, sizes) of its `fwd` entry.
+///
+/// The warm-session layer (`crate::session`) builds one `TrainerSetup`
+/// per warm variant and reuses it across that variant's sweep cells;
+/// [`Trainer::new`] builds a throwaway one per run (the cold path).
+/// Reuse is observation-free by construction: a per-cell [`Trainer`]
+/// *clones* the pristine init params, so no optimizer step, schedule
+/// position, or Philox draw of one cell can leak into the next — the
+/// warm path is byte-identical to cold (pinned by `tests/prop_session`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainerSetup {
+    /// Which manifest variant this setup answers for.
+    pub variant_name: String,
+    /// Pristine initial parameters, in `fwd`-entry param order.
+    pub init_params: Vec<Vec<f32>>,
+    pub param_names: Vec<String>,
+    pub param_sizes: Vec<usize>,
+}
+
+impl TrainerSetup {
+    /// Load the warm state for one variant (reads the init-param blob).
+    pub fn load(manifest: &Manifest, variant: &Variant) -> Result<TrainerSetup> {
+        let init_params = manifest.load_init_params(variant)?;
+        let entry = variant.entry("fwd")?;
+        let param_specs: Vec<_> =
+            entry.args.iter().filter(|a| a.role == Role::Param).collect();
+        Ok(TrainerSetup {
+            variant_name: variant.name.clone(),
+            init_params,
+            param_names: param_specs.iter().map(|s| s.name.clone()).collect(),
+            param_sizes: param_specs.iter().map(|s| s.elements()).collect(),
+        })
+    }
+}
+
 /// Variance-probe scalars (Fig. 4/7 series), present for probe variants.
 #[derive(Debug, Clone, Copy)]
 pub struct ProbeStats {
@@ -60,12 +98,36 @@ pub struct Trainer<'m> {
 }
 
 impl<'m> Trainer<'m> {
+    /// Cold-path construction: derive a fresh [`TrainerSetup`] and build
+    /// from it.  Equivalent to the warm path by construction.
     pub fn new(
         manifest: &'m Manifest,
         variant: &'m Variant,
         task: Task,
         cfg: TrainConfig,
     ) -> Result<Trainer<'m>> {
+        let setup = TrainerSetup::load(manifest, variant)?;
+        Trainer::from_setup(manifest, variant, &setup, task, cfg)
+    }
+
+    /// Per-cell construction over warm, variant-level state: clones the
+    /// pristine init params out of `setup` and re-derives everything
+    /// seed/config-dependent (optimizer moments, LR schedule, step
+    /// counter, activation store) from scratch.
+    pub fn from_setup(
+        manifest: &'m Manifest,
+        variant: &'m Variant,
+        setup: &TrainerSetup,
+        task: Task,
+        cfg: TrainConfig,
+    ) -> Result<Trainer<'m>> {
+        if setup.variant_name != variant.name {
+            bail!(
+                "trainer setup for variant '{}' used with variant '{}'",
+                setup.variant_name,
+                variant.name
+            );
+        }
         // Consistency: the task's head must match the variant geometry.
         if task.n_classes() != variant.config.n_classes
             || task.is_regression() != variant.config.regression
@@ -81,13 +143,6 @@ impl<'m> Trainer<'m> {
                 variant.config.regression
             );
         }
-        let params = manifest.load_init_params(variant)?;
-        let entry = variant.entry("fwd")?;
-        let param_specs: Vec<_> =
-            entry.args.iter().filter(|a| a.role == Role::Param).collect();
-        let param_names: Vec<String> =
-            param_specs.iter().map(|s| s.name.clone()).collect();
-        let sizes: Vec<usize> = param_specs.iter().map(|s| s.elements()).collect();
         let opt = Optimizer::new(
             &cfg.optimizer,
             OptimizerConfig {
@@ -97,8 +152,8 @@ impl<'m> Trainer<'m> {
                 eps: cfg.eps,
                 momentum: 0.9,
             },
-            &param_names,
-            &sizes,
+            &setup.param_names,
+            &setup.param_sizes,
         )?;
         let sched =
             Schedule::from_config(&cfg.schedule, cfg.lr, cfg.warmup_steps, cfg.steps);
@@ -107,8 +162,8 @@ impl<'m> Trainer<'m> {
             variant,
             task,
             cfg,
-            params,
-            param_names,
+            params: setup.init_params.clone(),
+            param_names: setup.param_names.clone(),
             opt,
             sched,
             step_idx: 0,
@@ -267,13 +322,30 @@ impl<'m> Trainer<'m> {
     }
 
     /// Dev-set evaluation with the task's GLUE metric (uses the `eval`
-    /// entry — logits only, no residuals).
+    /// entry — logits only, no residuals).  Builds the canonical dev
+    /// stream itself; callers that already hold the dev batches (warm
+    /// session cache) or want them prefetched use [`Self::eval_score`]
+    /// directly — the batch sequence, and therefore the score, is
+    /// identical either way.
     pub fn evaluate(&mut self, engine: &mut Engine, tok: &Tokenizer) -> Result<f64> {
-        let eval = self.variant.entry("eval")?;
         let gen = TaskGen::new(self.task, tok, self.variant.config.seq_len, self.cfg.seed);
+        let batches = Batcher::new(&gen, Split::Dev, self.variant.config.batch_size, 0);
+        self.eval_score(engine, batches)
+    }
+
+    /// Dev-metric pass over an explicit batch stream (owned batches or
+    /// borrows of cached ones).  The stream must be the canonical dev
+    /// sequence for this trainer's `(task, seed)` — see [`Self::evaluate`].
+    pub fn eval_score<I>(&mut self, engine: &mut Engine, batches: I) -> Result<f64>
+    where
+        I: IntoIterator,
+        I::Item: std::borrow::Borrow<Batch>,
+    {
+        let eval = self.variant.entry("eval")?;
         let mut acc = MetricAccum::new();
         let n_classes = self.variant.config.n_classes;
-        for batch in Batcher::new(&gen, Split::Dev, self.variant.config.batch_size, 0) {
+        for batch in batches {
+            let batch = batch.borrow();
             let mut args = Vec::with_capacity(eval.args.len());
             for spec in &eval.args {
                 match spec.role {

@@ -7,12 +7,16 @@
 //! wrapped rows must never reach a metric, which `tests/prop_data.rs`
 //! pins exhaustively around the `n % batch_size` edge cases).
 //!
-//! [`PrefetchBatcher`] is the double-buffered async twin: the next batch
-//! is assembled on a background thread while the trainer consumes the
-//! current one.  Because every batch is a pure function of
-//! `(task, split, batch_size, epoch, seed)`, the prefetched stream is
-//! **bit-identical** to the synchronous iterator — prefetch is a latency
-//! knob, never a results knob (enforced by `tests/prop_sweep.rs`).
+//! [`PrefetchBatcher`] is the async twin: the next batch(es) are
+//! assembled on a background thread while the trainer consumes the
+//! current one.  Its `depth` is the number of finished batches allowed
+//! to wait in the hand-off channel — depth 1 (the default) is classic
+//! double buffering; deeper queues absorb burstier consumers (e.g. a
+//! step that occasionally recompiles).  Because every batch is a pure
+//! function of `(task, split, batch_size, epoch, seed)`, the prefetched
+//! stream is **bit-identical** to the synchronous iterator at *every*
+//! depth — prefetch is a latency knob, never a results knob (enforced by
+//! `tests/prop_sweep.rs`).
 
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::thread::JoinHandle;
@@ -20,7 +24,7 @@ use std::thread::JoinHandle;
 use crate::rng::philox::{PhiloxStream, STREAM_DATA};
 
 use super::tasks::{Example, Split, TaskGen};
-use super::tokenizer::{Tokenizer, PAD};
+use super::tokenizer::PAD;
 
 /// One fixed-shape batch, layout-ready for literal upload.
 #[derive(Debug, Clone)]
@@ -61,7 +65,7 @@ impl Batch {
 
 /// Deterministic epoch iterator over a task split.
 pub struct Batcher<'a> {
-    gen: &'a TaskGen<'a>,
+    gen: &'a TaskGen,
     split: Split,
     order: Vec<usize>,
     cursor: usize,
@@ -69,7 +73,7 @@ pub struct Batcher<'a> {
 }
 
 impl<'a> Batcher<'a> {
-    pub fn new(gen: &'a TaskGen<'a>, split: Split, batch_size: usize, epoch: u64) -> Self {
+    pub fn new(gen: &'a TaskGen, split: Split, batch_size: usize, epoch: u64) -> Self {
         // batch_size == 0 would make `next` never advance the cursor (an
         // infinite iterator of empty batches) — fail loudly instead.
         assert!(batch_size > 0, "batch_size must be > 0");
@@ -114,18 +118,19 @@ impl<'a> Iterator for Batcher<'a> {
     }
 }
 
-/// Double-buffered asynchronous batcher: a background thread regenerates
-/// the exact `Batcher` stream for `(task, split, batch_size, epoch,
-/// seed)` and hands batches over a rendezvous channel of depth 1, so at
-/// most one finished batch waits while the next is being assembled —
-/// classic double buffering.
+/// Asynchronous batcher: a background thread regenerates the exact
+/// `Batcher` stream for `(task, split, batch_size, epoch, seed)` and
+/// hands batches over a bounded channel of capacity `depth`, so at most
+/// `depth` finished batches wait while the next is being assembled
+/// (depth 1 = classic double buffering, the default).
 ///
-/// The producer owns its own `Tokenizer`/`TaskGen` (both pure functions
-/// of their constructor arguments), so no borrow crosses the thread and
-/// the emitted sequence is bit-identical to the synchronous iterator.
-/// The compute pool's `run` API is a blocking fork-join and cannot host
-/// a producer that outlives the call, hence one dedicated thread here;
-/// intra-batch kernels still run on the pool.
+/// The producer owns a clone of the generator (an Arc handle to the
+/// shared tokenizer plus the pure stream parameters), so no borrow
+/// crosses the thread and the emitted sequence is bit-identical to the
+/// synchronous iterator at every depth.  The compute pool's `run` API is
+/// a blocking fork-join and cannot host a producer that outlives the
+/// call, hence one dedicated thread here; intra-batch kernels still run
+/// on the pool.
 pub struct PrefetchBatcher {
     rx: Option<Receiver<Batch>>,
     worker: Option<JoinHandle<()>>,
@@ -134,19 +139,26 @@ pub struct PrefetchBatcher {
 }
 
 impl PrefetchBatcher {
-    pub fn new(gen: &TaskGen<'_>, split: Split, batch_size: usize, epoch: u64) -> Self {
+    pub fn new(gen: &TaskGen, split: Split, batch_size: usize, epoch: u64) -> Self {
+        Self::with_depth(gen, split, batch_size, epoch, 1)
+    }
+
+    /// `depth >= 1` finished batches may queue ahead of the consumer.
+    pub fn with_depth(
+        gen: &TaskGen,
+        split: Split,
+        batch_size: usize,
+        epoch: u64,
+        depth: usize,
+    ) -> Self {
         assert!(batch_size > 0, "batch_size must be > 0");
-        let task = gen.task;
-        let vocab = gen.tok.vocab_size();
-        let seq_len = gen.seq_len;
-        let seed = gen.seed;
-        let n_examples = task.split_size(split);
-        let (tx, rx) = sync_channel::<Batch>(1);
+        assert!(depth > 0, "prefetch depth must be > 0");
+        let gen = gen.clone();
+        let n_examples = gen.task.split_size(split);
+        let (tx, rx) = sync_channel::<Batch>(depth);
         let worker = std::thread::Builder::new()
             .name("rmm-prefetch".to_string())
             .spawn(move || {
-                let tok = Tokenizer::new(vocab);
-                let gen = TaskGen::new(task, &tok, seq_len, seed);
                 for batch in Batcher::new(&gen, split, batch_size, epoch) {
                     if tx.send(batch).is_err() {
                         break; // consumer hung up early (e.g. drop mid-epoch)
@@ -186,7 +198,8 @@ impl Drop for PrefetchBatcher {
 }
 
 /// Either batching strategy behind one iterator type, selected by the
-/// `prefetch` train-config knob (`--prefetch` / `train.prefetch`).
+/// `prefetch` / `prefetch_depth` train-config knobs (`--prefetch`,
+/// `--prefetch-depth` / `train.prefetch`, `train.prefetch_depth`).
 pub enum AnyBatcher<'a> {
     Sync(Batcher<'a>),
     Prefetch(PrefetchBatcher),
@@ -194,14 +207,17 @@ pub enum AnyBatcher<'a> {
 
 impl<'a> AnyBatcher<'a> {
     pub fn new(
-        gen: &'a TaskGen<'a>,
+        gen: &'a TaskGen,
         split: Split,
         batch_size: usize,
         epoch: u64,
         prefetch: bool,
+        depth: usize,
     ) -> Self {
         if prefetch {
-            AnyBatcher::Prefetch(PrefetchBatcher::new(gen, split, batch_size, epoch))
+            AnyBatcher::Prefetch(PrefetchBatcher::with_depth(
+                gen, split, batch_size, epoch, depth,
+            ))
         } else {
             AnyBatcher::Sync(Batcher::new(gen, split, batch_size, epoch))
         }
@@ -324,11 +340,36 @@ mod tests {
     }
 
     #[test]
+    fn prefetch_depths_all_match_sync() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Cola, &tok, 16, 5);
+        let sync: Vec<Batch> = Batcher::new(&g, Split::Train, 24, 1).collect();
+        for depth in [1usize, 2, 3, 7] {
+            let pre: Vec<Batch> =
+                PrefetchBatcher::with_depth(&g, Split::Train, 24, 1, depth).collect();
+            assert_eq!(sync.len(), pre.len(), "depth {depth}");
+            for (a, b) in sync.iter().zip(&pre) {
+                assert_eq!(a.tokens, b.tokens, "depth {depth}");
+                assert_eq!(a.labels_f, b.labels_f, "depth {depth}");
+                assert_eq!(a.valid, b.valid, "depth {depth}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "prefetch depth must be > 0")]
+    fn zero_prefetch_depth_panics() {
+        let (tok,) = setup();
+        let g = TaskGen::new(Task::Wnli, &tok, 16, 1);
+        let _ = PrefetchBatcher::with_depth(&g, Split::Dev, 8, 0, 0);
+    }
+
+    #[test]
     fn any_batcher_dispatches_both_modes() {
         let (tok,) = setup();
         let g = TaskGen::new(Task::Wnli, &tok, 16, 1);
-        let a: Vec<Batch> = AnyBatcher::new(&g, Split::Dev, 16, 0, false).collect();
-        let b: Vec<Batch> = AnyBatcher::new(&g, Split::Dev, 16, 0, true).collect();
+        let a: Vec<Batch> = AnyBatcher::new(&g, Split::Dev, 16, 0, false, 1).collect();
+        let b: Vec<Batch> = AnyBatcher::new(&g, Split::Dev, 16, 0, true, 2).collect();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.tokens, y.tokens);

@@ -156,16 +156,27 @@ impl Task {
 ///   nouns    = [0, n/3)      verbs = [n/3, 2n/3)     modifiers = rest,
 /// with word *valence* = +1 for even lexicon index, −1 for odd (used by the
 /// SST2-like sentiment rule).
-pub struct TaskGen<'a> {
+///
+/// Owns an (Arc-backed) handle to its tokenizer, so the generator is
+/// `Clone + Send` — the prefetch batcher ships a clone to its producer
+/// thread and the warm-session layer caches generators freely, while
+/// every stream stays a pure function of `(task, vocab, seq_len, seed)`.
+#[derive(Debug, Clone)]
+pub struct TaskGen {
     pub task: Task,
-    pub tok: &'a Tokenizer,
+    tok: Tokenizer,
     pub seq_len: usize,
     pub seed: u64,
 }
 
-impl<'a> TaskGen<'a> {
-    pub fn new(task: Task, tok: &'a Tokenizer, seq_len: usize, seed: u64) -> Self {
-        Self { task, tok, seq_len, seed }
+impl TaskGen {
+    pub fn new(task: Task, tok: &Tokenizer, seq_len: usize, seed: u64) -> Self {
+        Self { task, tok: tok.clone(), seq_len, seed }
+    }
+
+    /// The shared tokenizer handle this generator draws its lexicon from.
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tok
     }
 
     fn rng_for(&self, split: Split, index: usize) -> PhiloxStream {

@@ -6,6 +6,7 @@
 //! shipped with checkpoints.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 pub const PAD: u32 = 0;
 pub const CLS: u32 = 1;
@@ -13,11 +14,20 @@ pub const SEP: u32 = 2;
 pub const UNK: u32 = 3;
 pub const FIRST_WORD: u32 = 4;
 
-#[derive(Debug, Clone)]
-pub struct Tokenizer {
+/// The lexicon tables behind a shared, Arc-backed handle: cloning a
+/// `Tokenizer` is a reference-count bump, so the warm-session cache and
+/// the prefetch producer thread can hand the same vocabulary around
+/// without rebuilding the O(vocab) tables per cell or per epoch.
+#[derive(Debug)]
+struct Lexicon {
     vocab_size: usize,
     word_to_id: HashMap<String, u32>,
     id_to_word: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    lex: Arc<Lexicon>,
 }
 
 impl Tokenizer {
@@ -39,24 +49,24 @@ impl Tokenizer {
             .enumerate()
             .map(|(i, w)| (w.clone(), i as u32))
             .collect();
-        Self { vocab_size, word_to_id, id_to_word }
+        Self { lex: Arc::new(Lexicon { vocab_size, word_to_id, id_to_word }) }
     }
 
     pub fn vocab_size(&self) -> usize {
-        self.vocab_size
+        self.lex.vocab_size
     }
 
     pub fn n_words(&self) -> u32 {
-        self.vocab_size as u32 - FIRST_WORD
+        self.lex.vocab_size as u32 - FIRST_WORD
     }
 
     /// Word string for a lexicon index (0-based over content words).
     pub fn word(&self, lexicon_idx: u32) -> &str {
-        &self.id_to_word[(FIRST_WORD + lexicon_idx) as usize]
+        &self.lex.id_to_word[(FIRST_WORD + lexicon_idx) as usize]
     }
 
     pub fn encode_word(&self, word: &str) -> u32 {
-        *self.word_to_id.get(word).unwrap_or(&UNK)
+        *self.lex.word_to_id.get(word).unwrap_or(&UNK)
     }
 
     /// Encode a whitespace-separated sentence, prepending CLS.
@@ -81,7 +91,8 @@ impl Tokenizer {
     pub fn decode(&self, ids: &[u32]) -> String {
         ids.iter()
             .map(|&i| {
-                self.id_to_word
+                self.lex
+                    .id_to_word
                     .get(i as usize)
                     .map(|s| s.as_str())
                     .unwrap_or("<bad>")
@@ -132,5 +143,15 @@ mod tests {
     #[should_panic]
     fn tiny_vocab_rejected() {
         Tokenizer::new(4);
+    }
+
+    #[test]
+    fn clones_share_one_lexicon() {
+        let a = Tokenizer::new(64);
+        let b = a.clone();
+        assert_eq!(b.vocab_size(), a.vocab_size());
+        assert_eq!(b.encode("w000 w001"), a.encode("w000 w001"));
+        // handle-level clone: no second lexicon is ever built
+        assert_eq!(std::sync::Arc::strong_count(&a.lex), 2);
     }
 }

@@ -27,6 +27,7 @@ pub mod memory;
 pub mod rmm;
 pub mod rng;
 pub mod runtime;
+pub mod session;
 pub mod sweep;
 pub mod tensor;
 pub mod util;

@@ -22,7 +22,8 @@ use rmmlinear::coordinator::{Checkpoint, MetricsLog, Trainer};
 use rmmlinear::data::{Task, Tokenizer};
 use rmmlinear::memory::{MemoryModel, ModelGeometry};
 use rmmlinear::runtime::{Engine, Manifest};
-use rmmlinear::sweep::{self, DynamicConfig, Schedule, Shard, SweepSpec};
+use rmmlinear::session::Session;
+use rmmlinear::sweep::{self, CellCtx, DynamicConfig, Schedule, Shard, SweepSpec};
 use rmmlinear::util::cli::Args;
 use rmmlinear::util::json::Json;
 
@@ -34,7 +35,25 @@ fn main() {
     }
 }
 
-fn train_config(args: &Args) -> TrainConfig {
+/// Strict `--prefetch-depth` parse: a present flag must be a positive
+/// integer (mirroring the config-file validation of
+/// `train.prefetch_depth` — silently clamping a 0/garbage depth would
+/// make the CLI and config surfaces disagree on what is invalid).
+fn prefetch_depth_arg(args: &Args) -> Result<Option<usize>> {
+    match args.get("prefetch-depth") {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<usize>()
+            .ok()
+            .filter(|&n| n >= 1)
+            .map(Some)
+            .with_context(|| {
+                format!("--prefetch-depth must be a positive integer, got '{v}'")
+            }),
+    }
+}
+
+fn train_config(args: &Args) -> Result<TrainConfig> {
     let mut t = TrainConfig::default();
     t.steps = args.get_usize("steps", t.steps);
     t.warmup_steps = args.get_usize("warmup", (t.steps / 16).max(1));
@@ -52,7 +71,10 @@ fn train_config(args: &Args) -> TrainConfig {
     t.log_every = args.get_usize("log-every", t.log_every);
     t.seed = args.get_u64("seed", t.seed);
     t.prefetch = args.has_flag("prefetch");
-    t
+    if let Some(d) = prefetch_depth_arg(args)? {
+        t.prefetch_depth = d;
+    }
+    Ok(t)
 }
 
 fn load_manifest(args: &Args) -> Result<Manifest> {
@@ -120,6 +142,42 @@ fn sweep_schedule(
     Ok((schedule, ttl))
 }
 
+/// Resolve an `on|off` flag (e.g. `--session-cache`, `--affinity`)
+/// against its config default; absent everywhere means `default`.
+fn on_off_flag(
+    args: &Args,
+    flag: &str,
+    config_value: Option<bool>,
+    default: bool,
+) -> Result<bool> {
+    match args.get(flag) {
+        Some("on") => Ok(true),
+        Some("off") => Ok(false),
+        Some(other) => bail!("--{flag} must be 'on' or 'off', got '{other}'"),
+        None => Ok(config_value.unwrap_or(default)),
+    }
+}
+
+/// `--session-cache on|off` (config: `sweep.session_cache`, default on):
+/// warm per-worker session reuse across sweep cells.
+fn session_cache_flag(args: &Args, defaults: &SweepConfig) -> Result<bool> {
+    on_off_flag(args, "session-cache", defaults.session_cache, true)
+}
+
+/// `--affinity on|off` (config: `sweep.affinity`, default on): dynamic
+/// scheduler's warm-variant claim preference.
+fn affinity_flag(args: &Args, defaults: &SweepConfig) -> Result<bool> {
+    on_off_flag(args, "affinity", defaults.affinity, true)
+}
+
+/// Build the warm session a run executes through: the engine plus
+/// manifest-backed caches (`--session-cache off` keeps construction but
+/// disables reuse — the explicit cold path).
+fn load_session(args: &Args) -> Result<Session> {
+    let caching = session_cache_flag(args, &sweep_defaults(args)?)?;
+    Ok(Session::new(Engine::cpu()?, load_manifest(args)?, caching))
+}
+
 /// Strict `--lease-ttl-ms` parse: a present flag must be a positive
 /// integer (mirroring the config-file validation — a 0/garbage TTL would
 /// make every in-flight claim instantly stealable, not "off").
@@ -149,13 +207,15 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
     let shards = args.get_usize("shards", defaults.shards.unwrap_or(1)).max(1);
     let resume = args.has_flag("resume") || defaults.resume;
     let (schedule, ttl) = sweep_schedule(args, &defaults)?;
+    let session_cache = session_cache_flag(args, &defaults)?;
+    let affinity = affinity_flag(args, &defaults)?;
     let dir = reports_dir(args).join(format!("sweep_{name}"));
     sweep::resume::prepare(&dir, spec, resume)?;
     if shards <= 1 {
-        let manifest = load_manifest(args)?;
-        let mut engine = Engine::cpu()?;
-        let mut runner = |cell: &sweep::Cell| {
-            bench::runner::run_cell(&mut engine, &manifest, spec, cell)
+        let mut session =
+            Session::new(Engine::cpu()?, load_manifest(args)?, session_cache);
+        let mut runner = |cell: &sweep::Cell, ctx: &CellCtx<'_>| {
+            bench::runner::run_cell(&mut session, spec, cell, ctx)
         };
         match schedule {
             Schedule::Static => {
@@ -166,8 +226,9 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
                 // multi-worker case, so a second orchestrator pointed at
                 // the same dir (e.g. another machine on a shared store)
                 // cooperates instead of duplicating cells
-                let cfg = DynamicConfig::new("orchestrator", ttl);
-                sweep::run_dynamic(&dir, spec, &cfg, &mut runner)?;
+                let cfg = DynamicConfig::new("orchestrator", ttl).with_affinity(affinity);
+                let run = sweep::run_dynamic(&dir, spec, &cfg, &mut runner)?;
+                eprintln!("sweep[{name}]: {}", run.summary());
             }
         }
     } else {
@@ -179,11 +240,15 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
                 extra.push(v.to_string());
             }
         }
+        extra.push("--session-cache".to_string());
+        extra.push(if session_cache { "on" } else { "off" }.to_string());
         if schedule == Schedule::Dynamic {
             extra.push("--schedule".to_string());
             extra.push("dynamic".to_string());
             extra.push("--lease-ttl-ms".to_string());
             extra.push(ttl.to_string());
+            extra.push("--affinity".to_string());
+            extra.push(if affinity { "on" } else { "off" }.to_string());
         }
         sweep::spawn_workers(&dir, shards, &extra)?;
     }
@@ -277,9 +342,12 @@ COMMANDS
   sweep-worker      run one worker of a prepared sweep (self-spawned by the
                     table drivers) --dir DIR --shard i/N
                     [--schedule static|dynamic --lease-ttl-ms N]
-  sweep-selftest    sweep-machinery smoke over the mock grid: serial vs
-                    --shards N worker processes must merge byte-identically
-                    [--schedule static|dynamic]
+                    [--session-cache on|off --affinity on|off]
+  sweep-selftest    sweep-machinery smoke: serial vs --shards N worker
+                    processes must merge byte-identically
+                    [--schedule static|dynamic] [--grid mock|data]
+                    [--session-cache on|off] (--grid data runs the warm
+                    session layer's data path; serial reference is cold)
   bench-fig3        memory vs batch size [--all-tasks] (Fig 3/8)
   bench-fig4        variance-probe series (Fig 4/7)
   bench-fig5        loss curves vs rho [--task mnli] (Fig 5/9)
@@ -312,14 +380,32 @@ COMMON OPTIONS
                     at once, use --sweep-schedule static|dynamic (always
                     wins) alongside --schedule for the LR curve
   --lease-ttl-ms N  dynamic schedule only: claim age after which a cell
-                    is considered abandoned and reclaimable; must exceed
-                    the worst-case cell wall time (default 600000;
-                    config: sweep.lease_ttl_ms)
+                    is considered abandoned and reclaimable; the trainer
+                    refreshes its lease before step 0, every log_every
+                    steps, and per eval batch, so this need only exceed
+                    the longest stretch between ticks (log_every steps,
+                    or one step with its one-time compile), not cell
+                    wall time (default 600000; config:
+                    sweep.lease_ttl_ms)
+  --session-cache M  on|off (default on): reuse warm per-worker session
+                    state — compiled executables, per-variant trainer
+                    setups, tokenizer/dataset caches — across a worker's
+                    sweep cells (config: sweep.session_cache).  Byte-
+                    invisible in reports; off = explicit cold path
+  --affinity M      on|off (default on): dynamic workers prefer unclaimed
+                    cells matching their warm (variant, task) key before
+                    canonical order, maximizing session reuse (config:
+                    sweep.affinity); pure claim-order preference
   --resume          reuse completed-cell manifests from a killed sweep
                     (config: sweep.resume); only missing cells rerun
   --prefetch        assemble the next batch on a background thread while
                     the trainer consumes the current one (bit-identical
                     to synchronous batching; config: train.prefetch)
+  --prefetch-depth N  finished batches allowed to queue ahead of the
+                    consumer when prefetching (default 1 = double
+                    buffering; bit-identical at every depth; config:
+                    train.prefetch_depth); also drives the eval-batch
+                    prefetcher of the final dev-metric pass
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -327,7 +413,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let vname = args.get("variant").context("--variant required")?;
     let task = Task::parse(args.get("task").context("--task required")?)
         .context("unknown task")?;
-    let cfg = train_config(args);
+    let cfg = train_config(args)?;
     let variant = manifest.variant(vname)?;
     let mut engine = Engine::cpu()?;
     let tok = Tokenizer::new(variant.config.vocab_size);
@@ -407,7 +493,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let variant = manifest.variant(vname)?;
     let mut engine = Engine::cpu()?;
     let tok = Tokenizer::new(variant.config.vocab_size);
-    let mut trainer = Trainer::new(&manifest, variant, task, train_config(args))?;
+    let mut trainer = Trainer::new(&manifest, variant, task, train_config(args)?)?;
     if let Some(ck_path) = args.get("checkpoint") {
         let ck = Checkpoint::load(Path::new(ck_path))?;
         let n = trainer.load_matching(&ck.names, &ck.params);
@@ -424,7 +510,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     // paper's pretrained-RoBERTa setting.
     let manifest = load_manifest(args)?;
     let mut engine = Engine::cpu()?;
-    let mut cfg = train_config(args);
+    let mut cfg = train_config(args)?;
     if args.get("steps").is_none() {
         cfg.steps = 600;
     }
@@ -473,7 +559,7 @@ fn cmd_table2(args: &Args) -> Result<()> {
         bail!("no valid tasks in --tasks");
     }
     let rhos = parse_rhos(args, &bench::table2::RHOS);
-    let mut cfg = train_config(args);
+    let mut cfg = train_config(args)?;
     if args.get("steps").is_none() {
         cfg.steps = 300;
     }
@@ -490,6 +576,9 @@ fn cmd_table3(args: &Args) -> Result<()> {
     cfg.steps = args.get_usize("steps", 5);
     cfg.seed = args.get_u64("seed", cfg.seed);
     cfg.prefetch = args.has_flag("prefetch");
+    if let Some(d) = prefetch_depth_arg(args)? {
+        cfg.prefetch_depth = d;
+    }
     let spec = bench::table3::spec(cfg);
     let results = run_sweep(args, &spec, "table3")?;
     let report = bench::table3::assemble(&spec, &results);
@@ -497,7 +586,7 @@ fn cmd_table3(args: &Args) -> Result<()> {
 }
 
 fn cmd_table4(args: &Args) -> Result<()> {
-    let mut cfg = train_config(args);
+    let mut cfg = train_config(args)?;
     if args.get("steps").is_none() {
         cfg.steps = 300;
     }
@@ -521,68 +610,76 @@ fn worker_schedule(args: &Args) -> Result<Schedule> {
 /// relies on: load `sweep.json` from `--dir`, run cells (the `--shard
 /// i/N` subset under the static schedule; whatever it can claim under
 /// `--schedule dynamic`), exit 0 iff every cell it ran committed.  The
-/// "mock" experiment needs no artifacts or engine (used by
-/// sweep-selftest and the orchestration tests); `--mock-cell-ms N`
-/// inflates mock cell cost so the crash/steal tests can kill a worker
-/// mid-lease.
+/// worker owns one warm [`Session`] for its whole life (the point of the
+/// session layer: same-variant cells share compiled executables, trainer
+/// setups and dataset caches; `--session-cache off` disables reuse).
+/// The "mock" experiment needs no artifacts, engine or session (used by
+/// sweep-selftest and the orchestration tests); "mockdata" needs a
+/// data-only session; `--mock-cell-ms N` inflates mock cell cost so the
+/// crash/steal tests can kill a worker mid-lease.
 fn cmd_sweep_worker(args: &Args) -> Result<()> {
     let dir = PathBuf::from(args.get("dir").context("--dir required")?);
     let spec = sweep::resume::load_spec(&dir)?;
     let schedule = worker_schedule(args)?;
+    let defaults = sweep_defaults(args)?;
+    let session_cache = session_cache_flag(args, &defaults)?;
+    let affinity = affinity_flag(args, &defaults)?;
     let mock_cost = std::time::Duration::from_millis(args.get_u64("mock-cell-ms", 0));
-    let mock = spec.experiment == "mock";
-    let mut mock_runner = |c: &sweep::Cell| -> Result<Json> {
-        if !mock_cost.is_zero() {
+    // One session per worker process, warm across every cell it runs.
+    let mut session = match spec.experiment.as_str() {
+        "mock" | "mockdata" => Session::data_only(session_cache),
+        _ => Session::new(Engine::cpu()?, load_manifest(args)?, session_cache),
+    };
+    let mut runner = |cell: &sweep::Cell, ctx: &CellCtx<'_>| -> Result<Json> {
+        if !mock_cost.is_zero() && spec.experiment == "mock" {
             std::thread::sleep(mock_cost);
         }
-        Ok(sweep::mock_cell(c))
+        bench::runner::run_cell(&mut session, &spec, cell, ctx)
     };
     match schedule {
         Schedule::Static => {
             let shard =
                 Shard::parse(args.get("shard").context("--shard i/N required (static)")?)?;
-            let ran = if mock {
-                sweep::run_shard(&dir, &spec, shard, &mut mock_runner)?
-            } else {
-                let manifest = load_manifest(args)?;
-                let mut engine = Engine::cpu()?;
-                let mut runner = |cell: &sweep::Cell| {
-                    bench::runner::run_cell(&mut engine, &manifest, &spec, cell)
-                };
-                sweep::run_shard(&dir, &spec, shard, &mut runner)?
-            };
+            let ran = sweep::run_shard(&dir, &spec, shard, &mut runner)?;
             eprintln!("sweep-worker {shard}: ran {ran} cells");
         }
         Schedule::Dynamic => {
             let ttl = lease_ttl_arg(args)?.unwrap_or(sweep::DEFAULT_LEASE_TTL_MS);
-            let cfg = DynamicConfig::new("worker", ttl);
+            let cfg = DynamicConfig::new("worker", ttl).with_affinity(affinity);
             let worker = cfg.worker.clone();
-            let ran = if mock {
-                sweep::run_dynamic(&dir, &spec, &cfg, &mut mock_runner)?
-            } else {
-                let manifest = load_manifest(args)?;
-                let mut engine = Engine::cpu()?;
-                let mut runner = |cell: &sweep::Cell| {
-                    bench::runner::run_cell(&mut engine, &manifest, &spec, cell)
-                };
-                sweep::run_dynamic(&dir, &spec, &cfg, &mut runner)?
-            };
-            eprintln!("sweep-worker {worker} (dynamic): ran {} cells", ran.len());
+            let run = sweep::run_dynamic(&dir, &spec, &cfg, &mut runner)?;
+            eprintln!("sweep-worker {worker} (dynamic): {}", run.summary());
         }
     }
+    eprintln!(
+        "sweep-worker session cache [{}]: {}",
+        if session_cache { "on" } else { "off" },
+        session.stats.summary()
+    );
     Ok(())
 }
 
-/// End-to-end smoke of the sweep machinery over the mock grid: a serial
-/// run and an `--shards N` run through real worker processes must merge
-/// to byte-identical reports, under either `--schedule`.  CI's sweep
-/// gate runs both schedules.
+/// End-to-end smoke of the sweep machinery: a serial run and an
+/// `--shards N` run through real worker processes must merge to
+/// byte-identical reports, under either `--schedule`.  `--grid mock`
+/// (default) exercises pure orchestration; `--grid data` runs the
+/// `mockdata` session grid — the serial reference is always computed
+/// **cold** (`--session-cache off`) while the workers honor the given
+/// `--session-cache`, so CI running the selftest with `on` and `off`
+/// pins warm ≡ cold ≡ serial byte-identity of the session layer.
 fn cmd_sweep_selftest(args: &Args) -> Result<()> {
     let shards = args.get_usize("shards", 2).max(1);
     let schedule = worker_schedule(args)?;
-    let spec = sweep::selftest_spec();
+    let grid = args.get_or("grid", "mock");
+    let spec = match grid {
+        "mock" => sweep::selftest_spec(),
+        "data" => sweep::selftest_data_spec(),
+        other => bail!("unknown --grid '{other}' (mock|data)"),
+    };
+    let session_cache = session_cache_flag(args, &SweepConfig::default())?;
     let base = std::env::temp_dir().join(format!(
-        "rmm_sweep_selftest_{}_{}",
+        "rmm_sweep_selftest_{}_{}_{}",
+        grid,
         schedule.name(),
         std::process::id()
     ));
@@ -590,14 +687,18 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
 
     let serial_dir = base.join("serial");
     sweep::resume::prepare(&serial_dir, &spec, false)?;
-    sweep::run_shard(&serial_dir, &spec, Shard::SERIAL, &mut |c| {
-        Ok(sweep::mock_cell(c))
+    let mut cold = Session::data_only(false);
+    sweep::run_shard(&serial_dir, &spec, Shard::SERIAL, &mut |c, ctx| {
+        bench::runner::run_cell(&mut cold, &spec, c, ctx)
     })?;
     let serial = Json::Arr(sweep::merge::merge(&serial_dir, &spec)?).to_string_pretty();
 
     let sharded_dir = base.join("sharded");
     sweep::resume::prepare(&sharded_dir, &spec, false)?;
-    let mut extra = Vec::new();
+    let mut extra = vec![
+        "--session-cache".to_string(),
+        if session_cache { "on" } else { "off" }.to_string(),
+    ];
     if schedule == Schedule::Dynamic {
         extra.push("--schedule".to_string());
         extra.push("dynamic".to_string());
@@ -609,63 +710,62 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
     std::fs::remove_dir_all(&base).ok();
     if serial != sharded {
         bail!(
-            "sweep selftest FAILED: {shards}-worker {} merged report differs from serial",
-            schedule.name()
+            "sweep selftest FAILED: {shards}-worker {} merged report ({grid} grid, \
+             session cache {}) differs from cold serial",
+            schedule.name(),
+            if session_cache { "on" } else { "off" },
         );
     }
     println!(
-        "sweep selftest[{}]: {} cells across {shards} worker processes, \
-         byte-identical merged report",
+        "sweep selftest[{grid}/{}]: {} cells across {shards} worker processes \
+         (session cache {}), byte-identical merged report",
         schedule.name(),
-        spec.cells.len()
+        spec.cells.len(),
+        if session_cache { "on" } else { "off" },
     );
     Ok(())
 }
 
 fn cmd_fig3(args: &Args) -> Result<()> {
-    let manifest = load_manifest(args)?;
-    let mut engine = Engine::cpu()?;
+    let mut session = load_session(args)?;
     let tasks = if args.has_flag("all-tasks") {
         Task::ALL.to_vec()
     } else {
         vec![Task::Cola]
     };
     let steps = args.get_usize("steps", 3);
-    let report = bench::fig3::run(&mut engine, &manifest, &tasks, steps)?;
+    let report = bench::fig3::run(&mut session, &tasks, steps)?;
     bench::write_report(&reports_dir(args), "fig3", &report)
 }
 
 fn cmd_fig4(args: &Args) -> Result<()> {
-    let manifest = load_manifest(args)?;
-    let mut engine = Engine::cpu()?;
-    let mut cfg = train_config(args);
+    let mut session = load_session(args)?;
+    let mut cfg = train_config(args)?;
     if args.get("steps").is_none() {
         cfg.steps = 200;
     }
     cfg.log_every = 1;
-    let report = bench::fig4::run(&mut engine, &manifest, cfg)?;
+    let report = bench::fig4::run(&mut session, cfg)?;
     bench::write_report(&reports_dir(args), "fig4", &report)
 }
 
 fn cmd_fig5(args: &Args) -> Result<()> {
-    let manifest = load_manifest(args)?;
-    let mut engine = Engine::cpu()?;
+    let mut session = load_session(args)?;
     let task = Task::parse(args.get_or("task", "mnli")).context("unknown task")?;
-    let mut cfg = train_config(args);
+    let mut cfg = train_config(args)?;
     if args.get("steps").is_none() {
         cfg.steps = 300;
     }
     cfg.log_every = (cfg.steps / 16).max(1);
-    let report = bench::fig5::run(&mut engine, &manifest, task, cfg)?;
+    let report = bench::fig5::run(&mut session, task, cfg)?;
     bench::write_report(&reports_dir(args), "fig5", &report)
 }
 
 fn cmd_fig6(args: &Args) -> Result<()> {
-    let manifest = load_manifest(args)?;
-    let mut engine = Engine::cpu()?;
+    let mut session = load_session(args)?;
     let task = Task::parse(args.get_or("task", "cola")).context("unknown task")?;
     let steps = args.get_usize("steps", 30);
-    let report = bench::fig6::run(&mut engine, &manifest, task, steps)?;
+    let report = bench::fig6::run(&mut session, task, steps)?;
     bench::write_report(&reports_dir(args), "fig6", &report)
 }
 

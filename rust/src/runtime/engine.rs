@@ -12,7 +12,6 @@
 //! succeeds (so CLI plumbing and host-side benches run), but `execute`
 //! fails fast with a pointed message.
 
-#[cfg(feature = "xla")]
 use std::collections::HashMap;
 #[cfg(feature = "xla")]
 use std::path::Path;
@@ -123,7 +122,12 @@ fn bytemuck_u32(v: &[u32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
 
-/// Timing counters for the perf pass (EXPERIMENTS.md §Perf).
+/// Timing + cache counters for the perf pass (EXPERIMENTS.md §Perf).
+/// Cache counters mirror the engine's [`ExeCache`]: a *hit* is an
+/// `execute`/`load` that reused an already-compiled executable — across
+/// warm-session sweep cells of the same variant every step after the
+/// first is a hit — while a *miss* forces a compile and an *eviction*
+/// retires the least-recently-used executable past the cache capacity.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct EngineStats {
     pub compiles: usize,
@@ -132,13 +136,107 @@ pub struct EngineStats {
     pub execute_s: f64,
     pub upload_s: f64,
     pub download_s: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+}
+
+/// Env var bounding the number of cached executables (0 / unset =
+/// unbounded).  A warm session batching many variants through one
+/// engine is the first consumer that can outgrow an unbounded cache.
+pub const EXE_CACHE_CAP_ENV: &str = "RMM_EXE_CACHE_CAP";
+
+/// Strict parse of the cap value: an operator who *set* the variable to
+/// bound memory must not silently get an unbounded cache from a typo.
+fn parse_cache_cap(v: &str) -> Result<usize> {
+    v.trim().parse().map_err(|_| {
+        anyhow::anyhow!(
+            "{EXE_CACHE_CAP_ENV} must be a non-negative integer \
+             (0 = unbounded), got '{v}'"
+        )
+    })
+}
+
+fn cache_cap_from_env() -> Result<usize> {
+    match std::env::var(EXE_CACHE_CAP_ENV) {
+        Err(_) => Ok(0),
+        Ok(v) => parse_cache_cap(&v),
+    }
+}
+
+/// LRU cache for compiled executables, keyed by artifact path.  Generic
+/// over the executable type so the stub engine (and the `rmm_micro`
+/// schedule simulation) exercise the exact structure the PJRT engine
+/// runs — capacity 0 means unbounded (no evictions).
+pub struct ExeCache<T> {
+    map: HashMap<String, (T, u64)>,
+    tick: u64,
+    capacity: usize,
+}
+
+impl<T> ExeCache<T> {
+    pub fn new(capacity: usize) -> ExeCache<T> {
+        ExeCache { map: HashMap::new(), tick: 0, capacity }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Drop every cached executable (the cold-path reset; counters in
+    /// the owner's stats are cumulative and unaffected).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    /// Look an executable up, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &str) -> Option<&T> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(key) {
+            Some((value, last_use)) => {
+                *last_use = tick;
+                Some(value)
+            }
+            None => None,
+        }
+    }
+
+    /// Insert an executable, evicting least-recently-used entries while
+    /// the cache exceeds its capacity.  Returns how many were evicted.
+    pub fn insert(&mut self, key: String, value: T) -> u64 {
+        self.tick += 1;
+        self.map.insert(key, (value, self.tick));
+        let mut evicted = 0u64;
+        if self.capacity > 0 {
+            while self.map.len() > self.capacity {
+                let oldest = self
+                    .map
+                    .iter()
+                    .min_by_key(|(_, (_, last_use))| *last_use)
+                    .map(|(k, _)| k.clone());
+                match oldest {
+                    Some(k) => {
+                        self.map.remove(&k);
+                        evicted += 1;
+                    }
+                    None => break,
+                }
+            }
+        }
+        evicted
+    }
 }
 
 /// PJRT CPU engine with a compile cache keyed by artifact path.
 #[cfg(feature = "xla")]
 pub struct Engine {
     client: xla::PjRtClient,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    cache: ExeCache<xla::PjRtLoadedExecutable>,
     pub stats: EngineStats,
 }
 
@@ -147,22 +245,41 @@ impl Engine {
     pub fn cpu() -> Result<Engine> {
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
-        Ok(Engine { client, cache: HashMap::new(), stats: EngineStats::default() })
+        Ok(Engine {
+            client,
+            cache: ExeCache::new(cache_cap_from_env()?),
+            stats: EngineStats::default(),
+        })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Drop every cached executable — the session layer calls this per
+    /// run under `--session-cache off`, so the "cold path" control arm
+    /// really recompiles instead of riding engine-lifetime reuse.
+    pub fn reset_cache(&mut self) {
+        self.cache.clear();
+    }
+
     /// Compile (or fetch from cache) the executable for an entry.
     pub fn load(&mut self, manifest: &Manifest, entry: &Entry) -> Result<()> {
         let path = manifest.hlo_path(entry);
         let key = path.to_string_lossy().to_string();
-        if self.cache.contains_key(&key) {
+        self.ensure_compiled(&key, &path)?;
+        Ok(())
+    }
+
+    /// Cache lookup + stats accounting; compiles on a miss.
+    fn ensure_compiled(&mut self, key: &str, path: &Path) -> Result<()> {
+        if self.cache.get(key).is_some() {
+            self.stats.cache_hits += 1;
             return Ok(());
         }
-        let exe = self.compile_file(&path)?;
-        self.cache.insert(key, exe);
+        self.stats.cache_misses += 1;
+        let exe = self.compile_file(path)?;
+        self.stats.cache_evictions += self.cache.insert(key.to_string(), exe);
         Ok(())
     }
 
@@ -193,10 +310,7 @@ impl Engine {
         }
         let path = manifest.hlo_path(entry);
         let key = path.to_string_lossy().to_string();
-        if !self.cache.contains_key(&key) {
-            let exe = self.compile_file(&path)?;
-            self.cache.insert(key.clone(), exe);
-        }
+        self.ensure_compiled(&key, &path)?;
 
         let t_up = Instant::now();
         let literals: Vec<xla::Literal> = args
@@ -233,24 +347,49 @@ impl Engine {
     }
 }
 
-/// Stub engine compiled when the `xla` feature is off: same API, but any
-/// attempt to compile or execute an artifact fails with a pointed message.
+/// Stub engine compiled when the `xla` feature is off: same API — down
+/// to the executable cache-stat accounting, so session-layer plumbing
+/// and tests observe real hit/miss/evict numbers — but any attempt to
+/// compile or execute an artifact fails with a pointed message.
 #[cfg(not(feature = "xla"))]
 pub struct Engine {
+    cache: ExeCache<()>,
     pub stats: EngineStats,
 }
 
 #[cfg(not(feature = "xla"))]
 impl Engine {
     pub fn cpu() -> Result<Engine> {
-        Ok(Engine { stats: EngineStats::default() })
+        Ok(Engine {
+            cache: ExeCache::new(cache_cap_from_env()?),
+            stats: EngineStats::default(),
+        })
     }
 
     pub fn platform(&self) -> String {
         "stub (built without the `xla` feature)".to_string()
     }
 
-    pub fn load(&mut self, _manifest: &Manifest, _entry: &Entry) -> Result<()> {
+    /// See the xla engine's `reset_cache`: the cold-path per-run reset.
+    pub fn reset_cache(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Record the cache access the real engine would have made (the
+    /// "compile" is free here), then refuse: the stub can account but
+    /// never execute.
+    fn touch_cache(&mut self, manifest: &Manifest, entry: &Entry) {
+        let key = manifest.hlo_path(entry).to_string_lossy().to_string();
+        if self.cache.get(&key).is_some() {
+            self.stats.cache_hits += 1;
+        } else {
+            self.stats.cache_misses += 1;
+            self.stats.cache_evictions += self.cache.insert(key, ());
+        }
+    }
+
+    pub fn load(&mut self, manifest: &Manifest, entry: &Entry) -> Result<()> {
+        self.touch_cache(manifest, entry);
         bail!(
             "PJRT runtime unavailable: this binary was built without the \
              `xla` cargo feature (see rust/Cargo.toml); host-side kernels, \
@@ -260,10 +399,11 @@ impl Engine {
 
     pub fn execute(
         &mut self,
-        _manifest: &Manifest,
-        _entry: &Entry,
+        manifest: &Manifest,
+        entry: &Entry,
         _args: &[HostValue],
     ) -> Result<Vec<HostValue>> {
+        self.touch_cache(manifest, entry);
         bail!(
             "PJRT runtime unavailable: this binary was built without the \
              `xla` cargo feature (see rust/Cargo.toml); host-side kernels, \
@@ -286,19 +426,61 @@ mod tests {
         assert!(HostValue::I32(vec![1]).as_f32().is_err());
     }
 
+    #[test]
+    fn exe_cache_counts_hits_and_lru_evicts() {
+        let mut c: ExeCache<usize> = ExeCache::new(2);
+        assert!(c.is_empty());
+        assert!(c.get("a").is_none());
+        assert_eq!(c.insert("a".into(), 1), 0);
+        assert_eq!(c.insert("b".into(), 2), 0);
+        assert_eq!(c.get("a"), Some(&1)); // refresh a: b is now LRU
+        assert_eq!(c.insert("c".into(), 3), 1, "capacity 2 must evict one");
+        assert_eq!(c.len(), 2);
+        assert!(c.get("b").is_none(), "LRU entry b must be the one evicted");
+        assert_eq!(c.get("a"), Some(&1));
+        assert_eq!(c.get("c"), Some(&3));
+    }
+
+    #[test]
+    fn exe_cache_capacity_zero_never_evicts() {
+        let mut c: ExeCache<usize> = ExeCache::new(0);
+        for i in 0..64usize {
+            assert_eq!(c.insert(format!("k{i}"), i), 0);
+        }
+        assert_eq!(c.len(), 64);
+        c.clear();
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn cache_cap_parses_strictly() {
+        assert_eq!(parse_cache_cap("0").unwrap(), 0);
+        assert_eq!(parse_cache_cap(" 32 ").unwrap(), 32);
+        for bad in ["1k", "-1", "", "unbounded"] {
+            let err = parse_cache_cap(bad).unwrap_err();
+            assert!(format!("{err}").contains(EXE_CACHE_CAP_ENV), "{bad}: {err}");
+        }
+    }
+
     #[cfg(not(feature = "xla"))]
     #[test]
     fn stub_engine_constructs_but_refuses_to_execute() {
         let mut e = Engine::cpu().unwrap();
         assert!(e.platform().contains("stub"));
-        let err = e
-            .execute(
-                &Manifest { dir: std::path::PathBuf::new(), variants: Default::default() },
-                &Entry { file: "x.hlo".into(), args: vec![], outputs: vec![] },
-                &[],
-            )
-            .unwrap_err();
+        let manifest =
+            Manifest { dir: std::path::PathBuf::new(), variants: Default::default() };
+        let entry = Entry { file: "x.hlo".into(), args: vec![], outputs: vec![] };
+        let err = e.execute(&manifest, &entry, &[]).unwrap_err();
         assert!(format!("{err}").contains("xla"), "{err}");
+        // the stub still accounts cache traffic like the real engine:
+        // first touch misses, the repeat hits
+        assert_eq!((e.stats.cache_hits, e.stats.cache_misses), (0, 1));
+        let _ = e.execute(&manifest, &entry, &[]);
+        assert_eq!((e.stats.cache_hits, e.stats.cache_misses), (1, 1));
+        // the cold-path reset makes the next touch miss again
+        e.reset_cache();
+        let _ = e.execute(&manifest, &entry, &[]);
+        assert_eq!((e.stats.cache_hits, e.stats.cache_misses), (1, 2));
     }
 }
 

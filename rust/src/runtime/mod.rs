@@ -7,5 +7,5 @@
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, EngineStats, HostValue};
-pub use manifest::{ArgSpec, Dtype, Entry, Manifest, Role, Variant};
+pub use engine::{Engine, EngineStats, ExeCache, HostValue};
+pub use manifest::{ArgSpec, Dtype, Entry, Manifest, Role, Variant, VariantConfig};

@@ -1,0 +1,305 @@
+//! Per-worker warm session: the long-lived state one sweep worker (or
+//! bench driver) carries **across** fine-tuning runs, so same-variant
+//! cells stop paying full cold start.
+//!
+//! The paper's evidence is grids of independent runs (variant × task ×
+//! ρ × seed); a worker process used to rebuild the tokenizer, `TaskGen`,
+//! and `Trainer` from the manifest for every cell, and only reused the
+//! engine's compile cache by accident of worker lifetime.  A [`Session`]
+//! makes that reuse deliberate.  It owns:
+//!
+//! * the [`Engine`] — its executable cache ([`crate::runtime::ExeCache`])
+//!   persists across cells, so every same-variant cell after the first
+//!   reuses compiled `fwd`/`bwd`/`eval` executables (hit/miss/evict
+//!   counters surface in `RunResult` and `rmm_micro --json`);
+//! * the [`Manifest`] (optional: data-only experiments such as the
+//!   `mockdata` selftest grid run without artifacts);
+//! * per-variant [`TrainerSetup`]s — the init-param blob read once per
+//!   warm variant, with param names/sizes — shared across that variant's
+//!   cells;
+//! * per-vocab [`Tokenizer`]s (Arc-backed, so a cache hit is a handle
+//!   clone);
+//! * per-`(task, seq_len, vocab, batch_size, seed)` dev-batch sets for
+//!   the final dev-metric pass, bounded by [`DEV_CACHE_CAP`] with
+//!   oldest-first eviction.
+//!
+//! # The warm ≡ cold contract
+//!
+//! Caching must be **observation-free**: every cached object is either a
+//! pure function of its key (tokenizer, dev batches — regenerating them
+//! yields identical bytes) or cloned per cell from pristine state
+//! (`TrainerSetup::init_params`), and all randomness stays in seeded
+//! Philox streams derived from per-cell seeds that never see cache
+//! state.  A warm-session sweep therefore commits fragments
+//! byte-identical to the cold serial path for any cell order, worker
+//! count, and `--session-cache on|off` — pinned by
+//! `tests/prop_session.rs` and the `sweep-selftest --grid data` CI gate.
+//! `--session-cache off` keeps the session API but rebuilds everything
+//! per call (the cold path made explicit, and the control arm of the
+//! byte-identity gate).
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::TrainerSetup;
+use crate::data::{Batch, Batcher, Split, Task, TaskGen, Tokenizer};
+use crate::runtime::{Engine, Manifest};
+
+/// Most dev-batch sets kept warm at once (oldest evicted first).  Dev
+/// splits are small, but a long sweep can touch many (task, seed) pairs
+/// and an unbounded cache would grow with the grid.
+pub const DEV_CACHE_CAP: usize = 16;
+
+/// Cache traffic counters — scheduling/telemetry only, never results.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SessionStats {
+    pub setup_hits: u64,
+    pub setup_misses: u64,
+    pub tokenizer_hits: u64,
+    pub tokenizer_misses: u64,
+    pub dev_hits: u64,
+    pub dev_misses: u64,
+    pub dev_evictions: u64,
+}
+
+impl SessionStats {
+    /// One-line telemetry summary for worker stderr.
+    pub fn summary(&self) -> String {
+        format!(
+            "setup {}h/{}m, tokenizer {}h/{}m, dev {}h/{}m/{}ev",
+            self.setup_hits,
+            self.setup_misses,
+            self.tokenizer_hits,
+            self.tokenizer_misses,
+            self.dev_hits,
+            self.dev_misses,
+            self.dev_evictions
+        )
+    }
+}
+
+type DevKey = (Task, usize, usize, usize, u64);
+
+pub struct Session {
+    /// Present only for engine-backed sessions: the data-only path
+    /// (`mockdata`, mock orchestration smokes) must stay runnable on
+    /// hosts where PJRT client construction fails, and must not pay its
+    /// startup cost for cells that never execute an artifact.
+    engine: Option<Engine>,
+    manifest: Option<Manifest>,
+    caching: bool,
+    setups: HashMap<String, Arc<TrainerSetup>>,
+    tokenizers: HashMap<usize, Tokenizer>,
+    dev_batches: HashMap<DevKey, Arc<Vec<Batch>>>,
+    dev_order: VecDeque<DevKey>,
+    pub stats: SessionStats,
+}
+
+impl Session {
+    /// A worker session over an artifact manifest (the real-cell path).
+    pub fn new(engine: Engine, manifest: Manifest, caching: bool) -> Session {
+        Session::build(Some(engine), Some(manifest), caching)
+    }
+
+    /// A session without engine or artifacts, for data-only experiments
+    /// (`mockdata` cells): tokenizer + dataset caches work, engine cells
+    /// fail fast.
+    pub fn data_only(caching: bool) -> Session {
+        Session::build(None, None, caching)
+    }
+
+    fn build(engine: Option<Engine>, manifest: Option<Manifest>, caching: bool) -> Session {
+        Session {
+            engine,
+            manifest,
+            caching,
+            setups: HashMap::new(),
+            tokenizers: HashMap::new(),
+            dev_batches: HashMap::new(),
+            dev_order: VecDeque::new(),
+            stats: SessionStats::default(),
+        }
+    }
+
+    /// Is warm-state reuse enabled (`--session-cache on`, the default)?
+    pub fn caching(&self) -> bool {
+        self.caching
+    }
+
+    pub fn manifest(&self) -> Result<&Manifest> {
+        self.manifest
+            .as_ref()
+            .context("session has no artifact manifest (data-only session)")
+    }
+
+    /// Split-borrow the engine and manifest together — the shape a
+    /// trainer loop needs (`Trainer` borrows the manifest for its whole
+    /// life while every step mutably borrows the engine).
+    pub fn engine_manifest(&mut self) -> Result<(&mut Engine, &Manifest)> {
+        match (self.engine.as_mut(), self.manifest.as_ref()) {
+            (Some(e), Some(m)) => Ok((e, m)),
+            _ => Err(anyhow::anyhow!(
+                "session has no engine/manifest (data-only session)"
+            )),
+        }
+    }
+
+    /// The tokenizer for a vocabulary size — a handle clone on a warm
+    /// hit, a fresh build otherwise.  Pure in `vocab`, so caching can
+    /// never change a generated stream.
+    pub fn tokenizer(&mut self, vocab: usize) -> Tokenizer {
+        if self.caching {
+            if let Some(t) = self.tokenizers.get(&vocab) {
+                self.stats.tokenizer_hits += 1;
+                return t.clone();
+            }
+        }
+        self.stats.tokenizer_misses += 1;
+        let t = Tokenizer::new(vocab);
+        if self.caching {
+            self.tokenizers.insert(vocab, t.clone());
+        }
+        t
+    }
+
+    /// The warm, variant-level trainer state (init params + param-spec
+    /// plumbing), loaded once per warm variant.  Per-cell trainers clone
+    /// the pristine params out of it (`Trainer::from_setup`), so reuse
+    /// is invisible to results.
+    pub fn trainer_setup(&mut self, variant_name: &str) -> Result<Arc<TrainerSetup>> {
+        if self.caching {
+            if let Some(s) = self.setups.get(variant_name) {
+                self.stats.setup_hits += 1;
+                return Ok(s.clone());
+            }
+        }
+        self.stats.setup_misses += 1;
+        let manifest = self.manifest()?;
+        let variant = manifest.variant(variant_name)?;
+        let setup = Arc::new(TrainerSetup::load(manifest, variant)?);
+        if self.caching {
+            self.setups.insert(variant_name.to_string(), setup.clone());
+        }
+        Ok(setup)
+    }
+
+    /// The canonical dev-batch sequence for `(task, seq_len, vocab,
+    /// batch_size, seed)` — exactly what `Batcher::new(gen, Dev, bsz, 0)`
+    /// yields, materialized once and shared across the same-key cells of
+    /// a sweep (same task + seed at different ρ/sketch).  Returns `None`
+    /// when caching is off: callers then stream the identical sequence
+    /// themselves (e.g. through the eval prefetcher).
+    pub fn cached_dev_batches(
+        &mut self,
+        task: Task,
+        seq_len: usize,
+        vocab: usize,
+        batch_size: usize,
+        seed: u64,
+    ) -> Option<Arc<Vec<Batch>>> {
+        if !self.caching {
+            return None;
+        }
+        let key = (task, seq_len, vocab, batch_size, seed);
+        if let Some(b) = self.dev_batches.get(&key) {
+            self.stats.dev_hits += 1;
+            return Some(b.clone());
+        }
+        self.stats.dev_misses += 1;
+        let tok = self.tokenizer(vocab);
+        let gen = TaskGen::new(task, &tok, seq_len, seed);
+        let batches: Arc<Vec<Batch>> =
+            Arc::new(Batcher::new(&gen, Split::Dev, batch_size, 0).collect());
+        while self.dev_batches.len() >= DEV_CACHE_CAP {
+            match self.dev_order.pop_front() {
+                Some(old) => {
+                    if self.dev_batches.remove(&old).is_some() {
+                        self.stats.dev_evictions += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+        self.dev_order.push_back(key);
+        self.dev_batches.insert(key, batches.clone());
+        Some(batches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn data_session(caching: bool) -> Session {
+        Session::data_only(caching)
+    }
+
+    #[test]
+    fn data_only_session_has_no_manifest() {
+        let mut s = data_session(true);
+        assert!(s.manifest().is_err());
+        assert!(s.engine_manifest().is_err());
+        assert!(s.trainer_setup("any").is_err());
+    }
+
+    #[test]
+    fn tokenizer_cache_hits_and_misses() {
+        let mut s = data_session(true);
+        let a = s.tokenizer(64);
+        let b = s.tokenizer(64);
+        let c = s.tokenizer(128);
+        assert_eq!(a.vocab_size(), b.vocab_size());
+        assert_eq!(c.vocab_size(), 128);
+        assert_eq!(s.stats.tokenizer_hits, 1);
+        assert_eq!(s.stats.tokenizer_misses, 2);
+
+        let mut cold = data_session(false);
+        cold.tokenizer(64);
+        cold.tokenizer(64);
+        assert_eq!(cold.stats.tokenizer_hits, 0);
+        assert_eq!(cold.stats.tokenizer_misses, 2);
+    }
+
+    #[test]
+    fn dev_cache_returns_canonical_batches_and_bounds_growth() {
+        let mut s = data_session(true);
+        let warm = s.cached_dev_batches(Task::Wnli, 16, 64, 8, 3).unwrap();
+        // identical to a fresh cold regeneration
+        let tok = Tokenizer::new(64);
+        let gen = TaskGen::new(Task::Wnli, &tok, 16, 3);
+        let cold: Vec<Batch> = Batcher::new(&gen, Split::Dev, 8, 0).collect();
+        assert_eq!(warm.len(), cold.len());
+        for (a, b) in warm.iter().zip(&cold) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.labels_f, b.labels_f);
+            assert_eq!(a.valid, b.valid);
+        }
+        // a second fetch hits
+        let again = s.cached_dev_batches(Task::Wnli, 16, 64, 8, 3).unwrap();
+        assert_eq!(s.stats.dev_hits, 1);
+        assert!(Arc::ptr_eq(&warm, &again));
+        // the cache stays bounded under many distinct keys
+        for seed in 0..(2 * DEV_CACHE_CAP as u64) {
+            s.cached_dev_batches(Task::Wnli, 16, 64, 8, 100 + seed);
+        }
+        assert!(s.dev_batches.len() <= DEV_CACHE_CAP);
+        assert!(s.stats.dev_evictions > 0);
+    }
+
+    #[test]
+    fn caching_off_returns_no_dev_cache() {
+        let mut s = data_session(false);
+        assert!(s.cached_dev_batches(Task::Wnli, 16, 64, 8, 3).is_none());
+        assert_eq!(s.stats.dev_misses, 0);
+    }
+
+    #[test]
+    fn stats_summary_is_one_line() {
+        let s = SessionStats { setup_hits: 2, ..Default::default() };
+        let line = s.summary();
+        assert!(line.contains("setup 2h/0m"), "{line}");
+        assert!(!line.contains('\n'));
+    }
+}

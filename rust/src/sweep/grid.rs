@@ -40,6 +40,16 @@ pub struct Cell {
 }
 
 impl Cell {
+    /// Warm-session affinity key, most-significant first: cells sharing a
+    /// *variant* share compiled executables and trainer setup; cells also
+    /// sharing a *task* share dataset caches.  The dynamic scheduler
+    /// prefers unclaimed cells matching a worker's warm key before
+    /// falling back to canonical order — a pure scheduling preference
+    /// that can never change what a cell computes.
+    pub fn affinity_key(&self) -> (&str, &str) {
+        (&self.variant, &self.task)
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("index", Json::num(self.index as f64)),

@@ -73,16 +73,50 @@
 //! * **Worker processes** — [`spawn_workers`] self-spawns the current
 //!   binary once per worker with the `sweep-worker --dir D --shard i/N
 //!   [--schedule dynamic --lease-ttl-ms T]` contract (see `main.rs`);
-//!   each worker owns its own `Engine` and manifest, giving true
-//!   multi-process parallelism for engine-bound cells.  Worker stderr
-//!   streams live through the orchestrator and is mirrored to
-//!   `worker_<i>.stderr.log` in the sweep directory; a failing worker's
-//!   exit status and stderr tail surface in the error.
+//!   each worker owns its own warm `Session` (engine + executable cache
+//!   + per-variant trainer setups + dataset caches, `crate::session`),
+//!   giving true multi-process parallelism for engine-bound cells.
+//!   Worker stderr streams live through the orchestrator and is mirrored
+//!   to `worker_<i>.stderr.log` in the sweep directory; a failing
+//!   worker's exit status and stderr tail surface in the error.
 //! * **In-process** — [`run_shard`] with [`Shard::SERIAL`] runs every
 //!   cell inline (the `--shards 1` path), [`run_dynamic`] drives one
 //!   dynamic worker on the current thread, and [`run_shards_pooled`]
 //!   fans static shards out as `tensor::pool` tasks for cheap (`Sync`)
 //!   cell runners such as the mock grid.
+//!
+//! # Cross-machine sharding recipe
+//!
+//! The claim dir **is** the shared store, so sharding a sweep across
+//! machines needs no coordinator — only a shared mount:
+//!
+//! * **Layout** — export one sweep directory (`sweep_<name>/`) on a
+//!   shared filesystem and mount it at the same path on every host; the
+//!   orchestrating host runs `prepare` once (writing `sweep.json`), then
+//!   every host points workers at it: `repro sweep-worker --dir
+//!   /mnt/sweeps/sweep_table2 --schedule dynamic`.  Everything stateful
+//!   lives under `cells/` (fragments + claims); `worker_<i>.stderr.log`
+//!   files are per-orchestrator and never conflict.  The filesystem must
+//!   honor `O_CREAT|O_EXCL` and atomic same-directory `rename` — local
+//!   disks, NFSv4+ and CIFS with hard semantics do; object-store gateways
+//!   generally do **not** and must not back a claim dir.
+//! * **Clock skew** — claim staleness compares a *reader's* clock
+//!   against the *writer's* embedded heartbeat, so the effective lease a
+//!   remote worker observes is `lease_ttl_ms ± skew`.  Keep hosts under
+//!   NTP discipline and size the TTL so `max cell wall time + max
+//!   expected skew < lease_ttl_ms`; with the 10-minute default, tens of
+//!   seconds of skew are harmless.  Skew can only shorten/stretch
+//!   leases, never corrupt a report: a too-early reclaim duplicates one
+//!   deterministic cell (benign, and now counted — see
+//!   `scheduler::DynamicRun::duplicates`), a too-late one just waits.
+//! * **Heartbeats** — long cells should keep their lease fresh instead
+//!   of forcing a TTL above worst-case wall time: the trainer ticks its
+//!   claim's heartbeat before step 0, every `log_every` steps, and per
+//!   dev-eval batch (`RunOpts::tick` plumbed through [`CellCtx`]), so
+//!   `--lease-ttl-ms` may safely drop below the cell wall time as long
+//!   as it comfortably exceeds the longest stretch between ticks —
+//!   `log_every` steps, or a single step carrying the variant's
+//!   one-time compile.
 
 pub mod claim;
 pub mod grid;
@@ -98,8 +132,46 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 
 pub use grid::{Cell, SweepSpec};
-pub use scheduler::{run_dynamic, DynamicConfig, Schedule, DEFAULT_LEASE_TTL_MS};
+pub use scheduler::{
+    run_dynamic, DynamicConfig, DynamicRun, Schedule, DEFAULT_LEASE_TTL_MS,
+};
 pub use shard::Shard;
+
+/// Per-cell execution context a scheduler hands its runner.  Today it
+/// carries the lease heartbeat: a runner executing under a dynamic-
+/// schedule claim can [`tick`](CellCtx::tick) to keep the lease fresh
+/// from inside a long cell (the trainer loop does, every `log_every`
+/// steps), so `--lease-ttl-ms` may drop below cell wall time.  Under the
+/// static schedule (or no scheduler at all) there is no lease and `tick`
+/// is a no-op.
+pub struct CellCtx<'a> {
+    heartbeat: Option<&'a claim::ClaimGuard>,
+}
+
+impl<'a> CellCtx<'a> {
+    /// Context for runs outside any lease (static shards, direct calls).
+    pub fn none() -> CellCtx<'static> {
+        CellCtx { heartbeat: None }
+    }
+
+    /// Context for a cell run under a held claim.
+    pub fn under_lease(guard: &'a claim::ClaimGuard) -> CellCtx<'a> {
+        CellCtx { heartbeat: Some(guard) }
+    }
+
+    pub fn has_heartbeat(&self) -> bool {
+        self.heartbeat.is_some()
+    }
+
+    /// Best-effort heartbeat refresh.  Errors are swallowed: a missed
+    /// re-stamp at worst lets the lease go stale, which duplicates one
+    /// deterministic cell — never a wrong report.
+    pub fn tick(&self) {
+        if let Some(guard) = self.heartbeat {
+            let _ = guard.refresh();
+        }
+    }
+}
 
 /// Run every not-yet-completed cell owned by `shard`, committing one
 /// fragment per cell.  Returns how many cells actually ran (completed
@@ -108,7 +180,7 @@ pub fn run_shard(
     dir: &Path,
     spec: &SweepSpec,
     shard: Shard,
-    runner: &mut dyn FnMut(&Cell) -> Result<Json>,
+    runner: &mut dyn FnMut(&Cell, &CellCtx<'_>) -> Result<Json>,
 ) -> Result<usize> {
     let cdir = resume::cells_dir(dir);
     std::fs::create_dir_all(&cdir)
@@ -118,7 +190,7 @@ pub fn run_shard(
         if merge::read_fragment(&cdir, spec, cell).is_some() {
             continue;
         }
-        let result = runner(cell).with_context(|| {
+        let result = runner(cell, &CellCtx::none()).with_context(|| {
             format!(
                 "sweep cell {} ({} on {}, rho={})",
                 cell.index, cell.variant, cell.task, cell.rho
@@ -143,7 +215,7 @@ pub fn run_shards_pooled(
     let errors = std::sync::Mutex::new(Vec::<String>::new());
     crate::tensor::pool::global().run(shards, shards, |s| {
         let shard = Shard { index: s, of: shards };
-        let mut f = |c: &Cell| runner(c);
+        let mut f = |c: &Cell, _: &CellCtx<'_>| runner(c);
         if let Err(e) = run_shard(dir, spec, shard, &mut f) {
             errors.lock().unwrap().push(format!("shard {shard}: {e:#}"));
         }
@@ -277,11 +349,7 @@ pub fn mock_cell(cell: &Cell) -> Json {
         "{}|{}|{}|{}|{}|{}|{}",
         cell.index, cell.variant, cell.task, cell.rho, cell.sketch, cell.seed, cell.batch
     );
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in key.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
+    let h = crate::util::fnv::hash(key.bytes());
     Json::obj(vec![
         ("id", Json::str(key)),
         ("score", Json::num((h % 10_000) as f64 / 100.0)),
@@ -307,6 +375,28 @@ pub fn selftest_spec() -> SweepSpec {
                     s as u64,
                     0,
                 );
+            }
+        }
+    }
+    spec
+}
+
+/// The session-layer selftest grid (`repro sweep-selftest --grid data`):
+/// `mockdata` cells over real synthetic-GLUE tasks, run through the warm
+/// `Session`'s tokenizer + dataset caches and the prefetch pipeline
+/// (depth 2) but no engine — so CI can pin warm-vs-cold byte-identity of
+/// the session layer with real data generation and no artifacts.  The ρ
+/// axis is data-invariant (as in the real Table 2 grid), so cells at the
+/// same (task, seed) give the dataset caches genuine cross-cell reuse.
+pub fn selftest_data_spec() -> SweepSpec {
+    let mut train = crate::config::TrainConfig::default();
+    train.prefetch = true;
+    train.prefetch_depth = 2;
+    let mut spec = SweepSpec::new("mockdata", train);
+    for &task in &["wnli", "rte", "mrpc", "stsb"] {
+        for &rho in &[1.0f64, 0.5] {
+            for seed in 0..2u64 {
+                spec.push(format!("data_{task}"), task, rho, "none", seed, 8);
             }
         }
     }
@@ -341,18 +431,42 @@ mod tests {
     }
 
     #[test]
+    fn selftest_data_grid_is_valid_and_reuses_tasks() {
+        let spec = selftest_data_spec();
+        assert_eq!(spec.experiment, "mockdata");
+        assert!(spec.train.prefetch && spec.train.prefetch_depth > 1);
+        // every task name must parse (the runner dispatches on it) …
+        for cell in &spec.cells {
+            assert!(
+                crate::data::Task::parse(&cell.task).is_some(),
+                "unparseable task '{}'",
+                cell.task
+            );
+            assert!(cell.batch > 0, "data cells must carry a batch size");
+        }
+        // … and repeat across cells, so the session caches see reuse
+        let distinct: std::collections::BTreeSet<&str> =
+            spec.cells.iter().map(|c| c.task.as_str()).collect();
+        assert!(distinct.len() < spec.cells.len());
+        // the JSON round-trip the workers rely on
+        let back = SweepSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.cells, spec.cells);
+        assert_eq!(back.train, spec.train);
+    }
+
+    #[test]
     fn run_shard_skips_completed_cells() {
         let dir = std::env::temp_dir()
             .join(format!("rmm_sweep_mod_test_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let spec = selftest_spec();
         resume::prepare(&dir, &spec, false).unwrap();
-        let ran = run_shard(&dir, &spec, Shard::SERIAL, &mut |c| Ok(mock_cell(c)))
+        let ran = run_shard(&dir, &spec, Shard::SERIAL, &mut |c, _| Ok(mock_cell(c)))
             .unwrap();
         assert_eq!(ran, spec.cells.len());
         // second pass: everything already committed
         let mut reran = 0usize;
-        let ran = run_shard(&dir, &spec, Shard::SERIAL, &mut |c| {
+        let ran = run_shard(&dir, &spec, Shard::SERIAL, &mut |c, _| {
             reran += 1;
             Ok(mock_cell(c))
         })
@@ -360,5 +474,12 @@ mod tests {
         assert_eq!(reran, 0, "must not rerun completed cells");
         assert_eq!(ran, 0);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn cell_ctx_without_lease_ticks_as_noop() {
+        let ctx = CellCtx::none();
+        assert!(!ctx.has_heartbeat());
+        ctx.tick(); // must not panic or touch the filesystem
     }
 }

@@ -8,9 +8,23 @@
 //! zero coordination, but it strands stragglers when cell costs are
 //! skewed: an MNLI cell costs orders of magnitude more than a WNLI cell,
 //! so one shard can still be grinding while the others sit idle.  Under
-//! the dynamic schedule, every worker scans the grid in canonical order
-//! and claims the first incomplete, unclaimed cell; fast workers simply
-//! claim more cells, so no worker idles while unclaimed cells remain.
+//! the dynamic schedule, every worker scans the grid and claims the
+//! first incomplete, unclaimed cell; fast workers simply claim more
+//! cells, so no worker idles while unclaimed cells remain.
+//!
+//! # Affinity
+//!
+//! With a warm per-worker `Session` (`crate::session`), *which* cell a
+//! worker claims next decides how much warm state it reuses: a
+//! same-variant cell hits the engine's compiled executables and the
+//! cached trainer setup; a same-(variant, task) cell additionally hits
+//! the dataset caches.  When `DynamicConfig::affinity` is on (the
+//! default), a worker therefore prefers unclaimed cells matching its
+//! last-run cell's [`Cell::affinity_key`] — exact (variant, task) match
+//! first, then same variant, then canonical order.  Affinity is a pure
+//! claim-order preference: coverage, crash healing and the merged
+//! report are exactly as without it (`tests/prop_session.rs` pins the
+//! grouping and the skewed-grid single-cover property).
 //!
 //! # The contract (see `sweep/mod.rs` for the full claim/lease prose)
 //!
@@ -18,8 +32,8 @@
 //!   never about what the cell computes or where its fragment lands.
 //!   The merged report stays a pure function of the fragment set, so a
 //!   dynamic sweep is byte-identical to the serial run for any worker
-//!   count, claim interleaving, or crash/reclaim history
-//!   (`tests/prop_sched.rs` pins worker counts {1, 2, 3, 7}).
+//!   count, claim interleaving, affinity preference, or crash/reclaim
+//!   history (`tests/prop_sched.rs` pins worker counts {1, 2, 3, 7}).
 //! * A valid fragment supersedes any claim: workers check the fragment
 //!   before claiming and delete leftover claim files they find on
 //!   completed cells.
@@ -27,9 +41,15 @@
 //!   while other workers hold live leases.  A worker that dies
 //!   mid-lease leaves a claim that goes stale after `lease_ttl_ms`;
 //!   a surviving worker reclaims and finishes the cell.  The TTL must
-//!   exceed the worst-case cell wall time (default 10 minutes) — a
-//!   too-short TTL only costs duplicated work, never a wrong report,
-//!   because duplicated deterministic cells commit identical fragments.
+//!   exceed the worst-case *stretch between heartbeats* (runners under
+//!   a lease get a [`CellCtx`]; the trainer ticks it before step 0,
+//!   every `log_every` steps, and per dev-eval batch, so the stretch is
+//!   `log_every` steps or one compile-carrying step; a runner that
+//!   never ticks needs the TTL above its wall
+//!   time) — a too-short TTL only costs duplicated work, never a wrong
+//!   report, because duplicated deterministic cells commit identical
+//!   fragments.  Duplicates are counted ([`DynamicRun::duplicates`])
+//!   and surface in the sweep summary instead of vanishing.
 //! * A cell runner error aborts *this* worker (releasing its claim via
 //!   the guard so others can retry immediately); a deterministic
 //!   failure therefore fails every worker rather than hanging the
@@ -43,7 +63,7 @@ use crate::util::json::Json;
 
 use super::claim::{self, ClaimAttempt};
 use super::grid::{Cell, SweepSpec};
-use super::{merge, resume};
+use super::{merge, resume, CellCtx};
 
 /// Default lease TTL: long enough that no real fine-tuning cell outlives
 /// its lease (claims are only reclaimed from *dead* workers), short
@@ -95,25 +115,100 @@ pub struct DynamicConfig {
     pub worker: String,
     /// Lease age beyond which another worker may reclaim a cell.
     pub lease_ttl_ms: u64,
+    /// Prefer unclaimed cells matching the worker's warm affinity key
+    /// (variant, then task) before canonical order.  On by default; a
+    /// pure claim-order preference, invisible in merged reports.
+    pub affinity: bool,
 }
 
 impl DynamicConfig {
     pub fn new(label: &str, lease_ttl_ms: u64) -> DynamicConfig {
-        DynamicConfig { worker: claim::worker_id(label), lease_ttl_ms: lease_ttl_ms.max(1) }
+        DynamicConfig {
+            worker: claim::worker_id(label),
+            lease_ttl_ms: lease_ttl_ms.max(1),
+            affinity: true,
+        }
+    }
+
+    /// Builder-style override of the affinity preference.
+    pub fn with_affinity(mut self, affinity: bool) -> DynamicConfig {
+        self.affinity = affinity;
+        self
     }
 }
 
+/// What one dynamic worker did over a [`run_dynamic`] call — returned
+/// so orchestrators can surface the scheduling telemetry (the sweep
+/// summary line) instead of losing it.
+#[derive(Debug, Default, Clone)]
+pub struct DynamicRun {
+    /// Cell indices this worker ran, in completion order.  The union
+    /// over all workers covers the grid exactly once unless a lease was
+    /// reclaimed from a live worker (see module doc).
+    pub ran: Vec<usize>,
+    /// Benign duplicate executions detected: this worker finished a run
+    /// only to find another worker's fragment already committed (a claim
+    /// race or a reclaimed-but-alive holder).  Both fragments are
+    /// byte-identical for deterministic cells, so duplicates waste work,
+    /// never correctness.
+    pub duplicates: u64,
+    /// Cells won while the worker's warm affinity key matched the cell's
+    /// variant — i.e. claims where warm state was actually reusable.
+    pub affinity_claims: u64,
+}
+
+impl DynamicRun {
+    /// One-line scheduling telemetry for worker/orchestrator summaries.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} cells ({} affinity-matched, {} duplicate runs)",
+            self.ran.len(),
+            self.affinity_claims,
+            self.duplicates
+        )
+    }
+}
+
+/// Candidate claim order for one pass: exact (variant, task) matches of
+/// the warm key first, then same-variant cells, then the rest — each
+/// tier in canonical order, so with no warm key (or affinity off) the
+/// order *is* canonical.
+fn affinity_order(
+    candidates: &[usize],
+    spec: &SweepSpec,
+    warm: Option<&(String, String)>,
+) -> Vec<usize> {
+    let Some((wv, wt)) = warm else {
+        return candidates.to_vec();
+    };
+    let mut exact = Vec::new();
+    let mut same_variant = Vec::new();
+    let mut rest = Vec::new();
+    for &i in candidates {
+        let (v, t) = spec.cells[i].affinity_key();
+        if v == wv && t == wt {
+            exact.push(i);
+        } else if v == wv {
+            same_variant.push(i);
+        } else {
+            rest.push(i);
+        }
+    }
+    exact.extend(same_variant);
+    exact.extend(rest);
+    exact
+}
+
 /// Run cells under the dynamic schedule until the whole grid is
-/// complete, committing one fragment per cell won.  Returns the indices
-/// of the cells *this* worker ran (in completion order) — the sum over
-/// all workers covers the grid exactly once unless a lease was
-/// reclaimed from a live worker (see module doc).
+/// complete, committing one fragment per cell won.  The runner receives
+/// a [`CellCtx`] carrying the held lease, so long cells can tick their
+/// heartbeat.  Returns this worker's [`DynamicRun`].
 pub fn run_dynamic(
     dir: &Path,
     spec: &SweepSpec,
     cfg: &DynamicConfig,
-    runner: &mut dyn FnMut(&Cell) -> Result<Json>,
-) -> Result<Vec<usize>> {
+    runner: &mut dyn FnMut(&Cell, &CellCtx<'_>) -> Result<Json>,
+) -> Result<DynamicRun> {
     let cdir = resume::cells_dir(dir);
     std::fs::create_dir_all(&cdir).with_context(|| format!("creating {cdir:?}"))?;
     // A cell observed complete stays complete for the rest of this run
@@ -124,10 +219,13 @@ pub fn run_dynamic(
     // completed grid every POLL_MS.  Cell index == grid position by the
     // spec contract (`grid::SweepSpec::from_json` enforces it).
     let mut done = vec![false; spec.cells.len()];
-    let mut ran = Vec::new();
+    let mut run = DynamicRun::default();
+    // The warm affinity key: the (variant, task) of the last cell this
+    // worker ran, i.e. what its session currently has warm.
+    let mut warm: Option<(String, String)> = None;
     loop {
-        let mut all_done = true;
-        let mut claimed_any = false;
+        // Pass 1: refresh completion knowledge over the incomplete set.
+        let mut candidates = Vec::new();
         for (i, cell) in spec.cells.iter().enumerate() {
             if done[i] {
                 continue;
@@ -141,7 +239,21 @@ pub fn run_dynamic(
                 done[i] = true;
                 continue;
             }
-            all_done = false;
+            candidates.push(i);
+        }
+        if candidates.is_empty() {
+            return Ok(run);
+        }
+        // Pass 2: claim in affinity-preferred order; after each win the
+        // warm key changes, so break back out to re-rank the remainder.
+        let order = if cfg.affinity {
+            affinity_order(&candidates, spec, warm.as_ref())
+        } else {
+            candidates
+        };
+        let mut claimed_any = false;
+        for &i in &order {
+            let cell = &spec.cells[i];
             match claim::try_claim(&cdir, cell.index, &cfg.worker, cfg.lease_ttl_ms)? {
                 ClaimAttempt::Held => {}
                 ClaimAttempt::Won(guard) => {
@@ -155,22 +267,46 @@ pub fn run_dynamic(
                     }
                     // On error the guard drops here, releasing the
                     // claim so other workers can retry immediately.
-                    let result = runner(cell).with_context(|| {
+                    let ctx = CellCtx::under_lease(&guard);
+                    let result = runner(cell, &ctx).with_context(|| {
                         format!(
                             "sweep cell {} ({} on {}, rho={})",
                             cell.index, cell.variant, cell.task, cell.rho
                         )
                     })?;
+                    // A fragment that appeared while we ran means another
+                    // worker duplicated this cell (claim race / live
+                    // reclaim).  Count it; committing our identical bytes
+                    // over it is harmless.
+                    if merge::read_fragment(&cdir, spec, cell).is_some() {
+                        run.duplicates += 1;
+                    }
                     merge::write_fragment(&cdir, spec, cell, &result)?;
                     guard.release();
                     done[i] = true;
-                    ran.push(cell.index);
+                    run.ran.push(cell.index);
                     claimed_any = true;
+                    let same_variant =
+                        warm.as_ref().is_some_and(|(wv, _)| wv == &cell.variant);
+                    let same_key = warm
+                        .as_ref()
+                        .is_some_and(|(wv, wt)| wv == &cell.variant && wt == &cell.task);
+                    if cfg.affinity && same_variant {
+                        run.affinity_claims += 1;
+                    }
+                    warm = Some((cell.variant.clone(), cell.task.clone()));
+                    // The claim order only depends on the warm key, so
+                    // keep draining this pass's ranking while the key is
+                    // unchanged (and always under `affinity: false`,
+                    // where ranking is canonical); re-rank only when the
+                    // key moved — this keeps the original
+                    // many-wins-per-pass behavior instead of an O(cells²)
+                    // rescan per completed cell.
+                    if cfg.affinity && !same_key {
+                        break;
+                    }
                 }
             }
-        }
-        if all_done {
-            return Ok(ran);
         }
         if !claimed_any {
             // every incomplete cell is leased elsewhere: wait for either
@@ -212,22 +348,25 @@ mod tests {
         let spec = sweep::selftest_spec();
         let sdir = tmp("serial");
         resume::prepare(&sdir, &spec, false).unwrap();
-        sweep::run_shard(&sdir, &spec, Shard::SERIAL, &mut |c| Ok(sweep::mock_cell(c)))
-            .unwrap();
+        sweep::run_shard(&sdir, &spec, Shard::SERIAL, &mut |c, _| {
+            Ok(sweep::mock_cell(c))
+        })
+        .unwrap();
         let serial = report(&sdir, &spec);
 
         let ddir = tmp("dynamic");
         resume::prepare(&ddir, &spec, false).unwrap();
         let cfg = DynamicConfig::new("t", 60_000);
-        let ran = run_dynamic(&ddir, &spec, &cfg, &mut |c| Ok(sweep::mock_cell(c)))
+        let run = run_dynamic(&ddir, &spec, &cfg, &mut |c, _| Ok(sweep::mock_cell(c)))
             .unwrap();
-        assert_eq!(ran.len(), spec.cells.len());
+        assert_eq!(run.ran.len(), spec.cells.len());
+        assert_eq!(run.duplicates, 0, "a lone worker can never duplicate");
         assert_eq!(report(&ddir, &spec), serial, "dynamic must merge like serial");
 
         // resume semantics: a second dynamic pass finds everything done
-        let ran = run_dynamic(&ddir, &spec, &cfg, &mut |c| Ok(sweep::mock_cell(c)))
+        let run = run_dynamic(&ddir, &spec, &cfg, &mut |c, _| Ok(sweep::mock_cell(c)))
             .unwrap();
-        assert!(ran.is_empty(), "completed cells must not rerun");
+        assert!(run.ran.is_empty(), "completed cells must not rerun");
 
         std::fs::remove_dir_all(&sdir).unwrap();
         std::fs::remove_dir_all(&ddir).unwrap();
@@ -249,7 +388,7 @@ mod tests {
         }
         let cfg = DynamicConfig::new("t", 60_000);
         let mut ran_cells = Vec::new();
-        run_dynamic(&dir, &spec, &cfg, &mut |c| {
+        run_dynamic(&dir, &spec, &cfg, &mut |c, _| {
             ran_cells.push(c.index);
             Ok(sweep::mock_cell(c))
         })
@@ -260,6 +399,106 @@ mod tests {
             !claim::claim_path(&cdir, 0).exists(),
             "leftover claim on a completed cell must be cleaned up"
         );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn affinity_order_tiers_by_variant_then_task() {
+        let mut spec = SweepSpec::new("mock", crate::config::TrainConfig::default());
+        // interleaved variants and tasks
+        spec.push("A", "t0", 1.0, "gauss", 0, 0); // 0
+        spec.push("B", "t0", 1.0, "gauss", 0, 0); // 1
+        spec.push("A", "t1", 1.0, "gauss", 0, 0); // 2
+        spec.push("B", "t1", 1.0, "gauss", 0, 0); // 3
+        spec.push("A", "t0", 1.0, "gauss", 1, 0); // 4
+        let all: Vec<usize> = (0..spec.cells.len()).collect();
+        // no warm key: canonical
+        assert_eq!(affinity_order(&all, &spec, None), all);
+        // warm (A, t0): exact matches 0,4 first, then A cells, then rest
+        let warm = ("A".to_string(), "t0".to_string());
+        assert_eq!(affinity_order(&all, &spec, Some(&warm)), vec![0, 4, 2, 1, 3]);
+        // warm key absent from the candidates degrades to canonical
+        let warm = ("Z".to_string(), "t9".to_string());
+        assert_eq!(affinity_order(&all, &spec, Some(&warm)), all);
+    }
+
+    #[test]
+    fn lone_affinity_worker_groups_same_variant_cells() {
+        let mut spec = SweepSpec::new("mock", crate::config::TrainConfig::default());
+        for seed in 0..3u64 {
+            for v in ["A", "B"] {
+                spec.push(v, "t", 1.0, "gauss", seed, 0); // A B A B A B
+            }
+        }
+        let dir = tmp("affinity_group");
+        resume::prepare(&dir, &spec, false).unwrap();
+        let cfg = DynamicConfig::new("t", 60_000);
+        let run = run_dynamic(&dir, &spec, &cfg, &mut |c, _| Ok(sweep::mock_cell(c)))
+            .unwrap();
+        // first claim is canonical (cell 0, variant A); affinity then
+        // drains A (2, 4) before touching B (1, 3, 5)
+        assert_eq!(run.ran, vec![0, 2, 4, 1, 3, 5]);
+        assert_eq!(run.affinity_claims, 4, "2 extra A wins + 2 follow-on B wins");
+        std::fs::remove_dir_all(&dir).unwrap();
+
+        // with affinity off the same grid runs in canonical order
+        let dir = tmp("affinity_off");
+        resume::prepare(&dir, &spec, false).unwrap();
+        let cfg = DynamicConfig::new("t", 60_000).with_affinity(false);
+        let run = run_dynamic(&dir, &spec, &cfg, &mut |c, _| Ok(sweep::mock_cell(c)))
+            .unwrap();
+        assert_eq!(run.ran, vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(
+            run.affinity_claims, 0,
+            "affinity-off runs must not report affinity telemetry"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn duplicate_commits_are_counted_not_lost() {
+        let spec = sweep::selftest_spec();
+        let dir = tmp("dup");
+        resume::prepare(&dir, &spec, false).unwrap();
+        let cdir = resume::cells_dir(&dir);
+        let cfg = DynamicConfig::new("t", 60_000);
+        // simulate a racing worker: mid-run, the first cell's fragment
+        // lands under our claim (what a reclaimed-but-alive holder does)
+        let mut first = true;
+        let run = run_dynamic(&dir, &spec, &cfg, &mut |c, _| {
+            if first {
+                first = false;
+                merge::write_fragment(&cdir, &spec, c, &sweep::mock_cell(c)).unwrap();
+            }
+            Ok(sweep::mock_cell(c))
+        })
+        .unwrap();
+        assert_eq!(run.duplicates, 1, "the raced cell must be counted");
+        assert_eq!(run.ran.len(), spec.cells.len());
+        assert!(run.summary().contains("1 duplicate run"), "{}", run.summary());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn runner_ctx_carries_a_tickable_lease() {
+        let spec = sweep::selftest_spec();
+        let dir = tmp("ctx_tick");
+        resume::prepare(&dir, &spec, false).unwrap();
+        let cdir = resume::cells_dir(&dir);
+        let cfg = DynamicConfig::new("t", 60_000);
+        let mut ticked = 0usize;
+        run_dynamic(&dir, &spec, &cfg, &mut |c, ctx| {
+            assert!(ctx.has_heartbeat(), "dynamic cells must run under a lease");
+            let before = claim::read_claim(&cdir, c.index).expect("claim present");
+            std::thread::sleep(std::time::Duration::from_millis(15));
+            ctx.tick();
+            let after = claim::read_claim(&cdir, c.index).expect("claim survives tick");
+            assert!(after.heartbeat_ms > before.heartbeat_ms, "tick must re-stamp");
+            ticked += 1;
+            Ok(sweep::mock_cell(c))
+        })
+        .unwrap();
+        assert_eq!(ticked, spec.cells.len());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,41 @@
+//! FNV-1a 64-bit hashing — the one copy of the fold shared by the
+//! deterministic mock-cell runner (`sweep::mock_cell`) and the
+//! session-layer data digests (`bench_harness::runner::run_data_cell`),
+//! so the offset basis / prime can never drift between them.
+
+pub const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold bytes into a running FNV-1a state (start from [`OFFSET_BASIS`]).
+pub fn fold(mut h: u64, bytes: impl IntoIterator<Item = u8>) -> u64 {
+    for b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// One-shot FNV-1a hash of a byte stream.
+pub fn hash(bytes: impl IntoIterator<Item = u8>) -> u64 {
+    fold(OFFSET_BASIS, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        // Canonical FNV-1a 64 test vectors.
+        assert_eq!(hash("".bytes()), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(hash("a".bytes()), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(hash("foobar".bytes()), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn fold_composes() {
+        let whole = hash("abcdef".bytes());
+        let split = fold(fold(OFFSET_BASIS, "abc".bytes()), "def".bytes());
+        assert_eq!(whole, split);
+    }
+}

@@ -64,7 +64,7 @@ fn report(dir: &Path, spec: &SweepSpec) -> String {
 
 fn run_serial(dir: &Path, spec: &SweepSpec) -> String {
     resume::prepare(dir, spec, false).unwrap();
-    sweep::run_shard(dir, spec, Shard::SERIAL, &mut |c| Ok(sweep::mock_cell(c)))
+    sweep::run_shard(dir, spec, Shard::SERIAL, &mut |c, _| Ok(sweep::mock_cell(c)))
         .unwrap();
     report(dir, spec)
 }
@@ -93,7 +93,7 @@ fn run_dynamic_workers_with_cost(
                 s.spawn(move || {
                     let cfg = DynamicConfig::new(&format!("w{w}"), 60_000);
                     start.wait();
-                    sweep::run_dynamic(dir, spec, &cfg, &mut |c| {
+                    sweep::run_dynamic(dir, spec, &cfg, &mut |c, _| {
                         let ms = cost_ms(c.index);
                         if ms > 0 {
                             std::thread::sleep(std::time::Duration::from_millis(ms));
@@ -101,6 +101,7 @@ fn run_dynamic_workers_with_cost(
                         Ok(sweep::mock_cell(c))
                     })
                     .expect("dynamic worker failed")
+                    .ran
                 })
             })
             .collect();
@@ -222,9 +223,9 @@ fn stale_lease_from_dead_worker_is_reclaimed_and_sweep_finishes() {
         .unwrap();
     }
     let cfg = DynamicConfig::new("survivor", 500);
-    let ran = sweep::run_dynamic(&dir, &spec, &cfg, &mut |c| Ok(sweep::mock_cell(c)))
+    let run = sweep::run_dynamic(&dir, &spec, &cfg, &mut |c, _| Ok(sweep::mock_cell(c)))
         .unwrap();
-    assert_eq!(ran.len(), spec.cells.len(), "survivor must run every cell");
+    assert_eq!(run.ran.len(), spec.cells.len(), "survivor must run every cell");
     assert_eq!(report(&dir, &spec), serial, "healed sweep must match serial bytes");
     for i in [1usize, 4] {
         assert!(!claim::claim_path(&cdir, i).exists(), "stale claim {i} must be gone");
@@ -406,7 +407,7 @@ fn mixed_static_and_dynamic_workers_share_one_fragment_store() {
 
     let dir = tmp_dir("mixed");
     resume::prepare(&dir, &spec, false).unwrap();
-    sweep::run_shard(&dir, &spec, Shard { index: 0, of: 2 }, &mut |c| {
+    sweep::run_shard(&dir, &spec, Shard { index: 0, of: 2 }, &mut |c, _| {
         Ok(sweep::mock_cell(c))
     })
     .unwrap();

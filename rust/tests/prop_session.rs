@@ -1,0 +1,355 @@
+//! Warm-session determinism suite: the per-worker `Session` layer
+//! (`crate::session`) must be **observation-free** — a warm worker
+//! commits byte-identical results to the cold path for every cell,
+//! regardless of cell order, worker count, claim interleaving or
+//! `--session-cache` setting — and the affinity-aware dynamic scheduler
+//! must keep the exact-single-cover property while grouping
+//! same-variant cells.
+//!
+//! The engine-free `mockdata` grid (`sweep::selftest_data_spec`) drives
+//! the real data path: tokenizer + dataset caches, the depth-configured
+//! prefetch pipeline, and FNV digests over every generated batch, so a
+//! single leaked bit anywhere in the warm path fails the byte-identity
+//! assertions.  The trainer half (init-param reuse) is pinned against a
+//! synthetic in-memory manifest.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Barrier};
+
+use rmmlinear::bench_harness::runner::run_cell;
+use rmmlinear::config::TrainConfig;
+use rmmlinear::coordinator::{Trainer, TrainerSetup};
+use rmmlinear::data::Task;
+use rmmlinear::runtime::{
+    ArgSpec, Dtype, Engine, Entry, Manifest, Role, Variant, VariantConfig,
+};
+use rmmlinear::session::Session;
+use rmmlinear::sweep::{self, merge, resume, DynamicConfig, Shard, SweepSpec};
+use rmmlinear::util::json::Json;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("rmm_prop_session_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn report(dir: &Path, spec: &SweepSpec) -> String {
+    Json::Arr(merge::merge(dir, spec).expect("sweep incomplete")).to_string_pretty()
+}
+
+/// Cold reference: a fresh caching-off session runs the grid serially.
+fn run_serial_cold(dir: &Path, spec: &SweepSpec) -> String {
+    resume::prepare(dir, spec, false).unwrap();
+    let mut session = Session::data_only(false);
+    sweep::run_shard(dir, spec, Shard::SERIAL, &mut |c, ctx| {
+        run_cell(&mut session, spec, c, ctx)
+    })
+    .unwrap();
+    report(dir, spec)
+}
+
+// ---------------------------------------------------------------------------
+// Warm vs cold byte-identity over the data grid
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_sessions_match_cold_serial_for_worker_counts_1_2_3_7() {
+    let spec = sweep::selftest_data_spec();
+    let serial_dir = tmp_dir("warm_ref");
+    let serial = run_serial_cold(&serial_dir, &spec);
+
+    for workers in [1usize, 2, 3, 7] {
+        for caching in [true, false] {
+            let dir = tmp_dir(&format!("warm_{workers}_{caching}"));
+            resume::prepare(&dir, &spec, false).unwrap();
+            let start = Barrier::new(workers);
+            let ran: Vec<Vec<usize>> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|w| {
+                        let (start, spec, dir) = (&start, &spec, &dir);
+                        s.spawn(move || {
+                            let mut session =
+                                Session::data_only(caching);
+                            let cfg = DynamicConfig::new(&format!("w{w}"), 60_000);
+                            start.wait();
+                            sweep::run_dynamic(dir, spec, &cfg, &mut |c, ctx| {
+                                run_cell(&mut session, spec, c, ctx)
+                            })
+                            .expect("dynamic session worker failed")
+                            .ran
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            let mut cover: Vec<usize> = ran.iter().flatten().copied().collect();
+            cover.sort_unstable();
+            assert_eq!(
+                cover,
+                (0..spec.cells.len()).collect::<Vec<_>>(),
+                "{workers} workers (caching={caching}) must cover the grid exactly once"
+            );
+            assert_eq!(
+                report(&dir, &spec),
+                serial,
+                "{workers}-worker warm sweep (caching={caching}) differs from cold serial"
+            );
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+    }
+    std::fs::remove_dir_all(&serial_dir).unwrap();
+}
+
+#[test]
+fn cell_results_are_independent_of_grid_order_and_warm_history() {
+    // The same logical cells laid out in two different canonical orders:
+    // a warm session accumulates different cache state along each order,
+    // and every cell's committed result must still be identical.
+    let forward = sweep::selftest_data_spec();
+    let mut reversed = SweepSpec::new("mockdata", forward.train.clone());
+    for cell in forward.cells.iter().rev() {
+        reversed.push(
+            cell.variant.clone(),
+            cell.task.clone(),
+            cell.rho,
+            cell.sketch.clone(),
+            cell.seed,
+            cell.batch,
+        );
+    }
+
+    let mut by_key: Vec<BTreeMap<(String, u64, usize), String>> = Vec::new();
+    for (tag, spec) in [("fwd", &forward), ("rev", &reversed)] {
+        let dir = tmp_dir(&format!("order_{tag}"));
+        resume::prepare(&dir, spec, false).unwrap();
+        let mut session = Session::data_only(true);
+        sweep::run_shard(&dir, spec, Shard::SERIAL, &mut |c, ctx| {
+            run_cell(&mut session, spec, c, ctx)
+        })
+        .unwrap();
+        let results = merge::merge(&dir, spec).unwrap();
+        let map = spec
+            .cells
+            .iter()
+            .zip(&results)
+            .map(|(c, r)| {
+                ((c.task.clone(), c.seed, c.batch), r.to_string_pretty())
+            })
+            .collect();
+        by_key.push(map);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    assert_eq!(
+        by_key[0], by_key[1],
+        "per-cell results must not depend on grid order / warm history"
+    );
+}
+
+#[test]
+fn data_grid_worker_subprocesses_match_cold_serial() {
+    // The released-binary path CI smokes: real `sweep-worker` processes
+    // with warm sessions over the data grid vs the in-process cold run.
+    let spec = sweep::selftest_data_spec();
+    let serial_dir = tmp_dir("subproc_ref");
+    let serial = run_serial_cold(&serial_dir, &spec);
+
+    let dir = tmp_dir("subproc");
+    resume::prepare(&dir, &spec, false).unwrap();
+    let mut children = Vec::new();
+    for _ in 0..2 {
+        let child = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(["sweep-worker", "--dir"])
+            .arg(&dir)
+            .args(["--schedule", "dynamic", "--session-cache", "on"])
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawning repro sweep-worker (mockdata)");
+        children.push(child);
+    }
+    for mut child in children {
+        let status = child.wait().unwrap();
+        assert!(status.success(), "mockdata worker exited {status}");
+    }
+    assert_eq!(report(&dir, &spec), serial, "warm subprocess sweep differs");
+    std::fs::remove_dir_all(&serial_dir).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn warm_session_actually_reuses_caches_across_cells() {
+    // Not just harmless — the caches must really be hit: the data grid
+    // shares one vocab across all cells and repeats (task, seed) pairs
+    // across the rho axis, so both cache layers must see traffic.
+    let spec = sweep::selftest_data_spec();
+    let dir = tmp_dir("reuse");
+    resume::prepare(&dir, &spec, false).unwrap();
+    let mut session = Session::data_only(true);
+    sweep::run_shard(&dir, &spec, Shard::SERIAL, &mut |c, ctx| {
+        run_cell(&mut session, &spec, c, ctx)
+    })
+    .unwrap();
+    assert!(
+        session.stats.tokenizer_hits > 0,
+        "shared-vocab cells must hit the tokenizer cache: {:?}",
+        session.stats
+    );
+    assert!(
+        session.stats.dev_hits > 0,
+        "same-(task, seed) cells across rho must hit the dev cache: {:?}",
+        session.stats
+    );
+
+    // the cold control never hits
+    let dir2 = tmp_dir("reuse_cold");
+    resume::prepare(&dir2, &spec, false).unwrap();
+    let mut cold = Session::data_only(false);
+    sweep::run_shard(&dir2, &spec, Shard::SERIAL, &mut |c, ctx| {
+        run_cell(&mut cold, &spec, c, ctx)
+    })
+    .unwrap();
+    assert_eq!(cold.stats.tokenizer_hits, 0);
+    assert_eq!(cold.stats.dev_hits, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+    std::fs::remove_dir_all(&dir2).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Trainer half: warm setup reuse is byte-identical and leak-free
+// ---------------------------------------------------------------------------
+
+/// A synthetic two-parameter manifest with a real on-disk init blob —
+/// enough to drive `TrainerSetup`/`Trainer` construction without AOT
+/// artifacts or an engine.
+fn synth_manifest(dir: &Path) -> Manifest {
+    let mut bytes = Vec::new();
+    for i in 0..9 {
+        bytes.extend_from_slice(&(i as f32 * 0.5 - 1.0).to_le_bytes());
+    }
+    std::fs::write(dir.join("init.bin"), &bytes).unwrap();
+    let fwd = Entry {
+        file: "fwd.hlo".into(),
+        args: vec![
+            ArgSpec {
+                name: "head.w".into(),
+                shape: vec![2, 3],
+                dtype: Dtype::F32,
+                role: Role::Param,
+            },
+            ArgSpec {
+                name: "head.b".into(),
+                shape: vec![3],
+                dtype: Dtype::F32,
+                role: Role::Param,
+            },
+            ArgSpec {
+                name: "tokens".into(),
+                shape: vec![4, 8],
+                dtype: Dtype::I32,
+                role: Role::Tokens,
+            },
+        ],
+        outputs: vec![],
+    };
+    let config = VariantConfig {
+        vocab_size: 64,
+        seq_len: 8,
+        batch_size: 4,
+        d_model: 8,
+        n_heads: 2,
+        n_layers: 1,
+        d_ff: 16,
+        n_classes: 2,
+        regression: false,
+        rho: 1.0,
+        sketch: "gauss".into(),
+        use_kernels: false,
+        probe_layer: -1,
+    };
+    let variant = Variant {
+        name: "v_test".into(),
+        config,
+        rows: 32,
+        b_proj: 16,
+        init_params: "init.bin".into(),
+        param_count: 9,
+        entries: BTreeMap::from([("fwd".to_string(), fwd)]),
+    };
+    Manifest {
+        dir: dir.to_path_buf(),
+        variants: BTreeMap::from([("v_test".to_string(), variant)]),
+    }
+}
+
+#[test]
+fn warm_trainer_setup_is_byte_identical_to_cold_and_leak_free() {
+    let dir = tmp_dir("trainer_setup");
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = synth_manifest(&dir);
+    let variant = manifest.variant("v_test").unwrap();
+    let cfg = TrainConfig::default();
+
+    // cold path
+    let cold = Trainer::new(&manifest, variant, Task::Cola, cfg.clone()).unwrap();
+    // setup loaded twice from disk is identical (pure in the manifest)
+    assert_eq!(
+        TrainerSetup::load(&manifest, variant).unwrap(),
+        TrainerSetup::load(&manifest, variant).unwrap()
+    );
+
+    // warm path through a session: the setup is cached once …
+    let mut session = Session::new(Engine::cpu().unwrap(), synth_manifest(&dir), true);
+    let setup_a = session.trainer_setup("v_test").unwrap();
+    let setup_b = session.trainer_setup("v_test").unwrap();
+    assert!(Arc::ptr_eq(&setup_a, &setup_b), "warm setup must be shared");
+    assert_eq!(session.stats.setup_hits, 1);
+    assert_eq!(session.stats.setup_misses, 1);
+
+    // … and warm construction equals cold, byte for byte
+    let (_engine, m) = session.engine_manifest().unwrap();
+    let v = m.variant("v_test").unwrap();
+    let mut warm =
+        Trainer::from_setup(m, v, &setup_a, Task::Cola, cfg.clone()).unwrap();
+    assert_eq!(warm.params, cold.params);
+    assert_eq!(warm.param_names, cold.param_names);
+    assert_eq!(warm.step_seed(), cold.step_seed());
+
+    // training one warm cell must not leak into the next: trash the warm
+    // trainer's params, rebuild from the same setup, re-check pristine
+    warm.params[0][0] += 42.0;
+    warm.params[1][2] = f32::NAN;
+    drop(warm);
+    let warm2 = Trainer::from_setup(m, v, &setup_a, Task::Cola, cfg.clone()).unwrap();
+    assert_eq!(warm2.params, cold.params, "cell state leaked through the warm setup");
+
+    // a mismatched setup/variant pair is rejected, not silently accepted
+    let bad = TrainerSetup { variant_name: "other".into(), ..(*setup_a).clone() };
+    assert!(Trainer::from_setup(m, v, &bad, Task::Cola, cfg.clone()).is_err());
+
+    // caching off: every call reloads (no sharing), same bytes
+    let mut cold_session =
+        Session::new(Engine::cpu().unwrap(), synth_manifest(&dir), false);
+    let s1 = cold_session.trainer_setup("v_test").unwrap();
+    let s2 = cold_session.trainer_setup("v_test").unwrap();
+    assert!(!Arc::ptr_eq(&s1, &s2), "caching off must not share setups");
+    assert_eq!(*s1, *s2);
+    assert_eq!(cold_session.stats.setup_misses, 2);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn task_mismatch_is_still_rejected_through_the_warm_path() {
+    let dir = tmp_dir("mismatch");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut session = Session::new(Engine::cpu().unwrap(), synth_manifest(&dir), true);
+    let setup = session.trainer_setup("v_test").unwrap();
+    let (_engine, m) = session.engine_manifest().unwrap();
+    let v = m.variant("v_test").unwrap();
+    // MNLI is 3-class; the variant head is 2-class
+    let err = Trainer::from_setup(m, v, &setup, Task::Mnli, TrainConfig::default())
+        .unwrap_err();
+    assert!(format!("{err}").contains("does not match"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

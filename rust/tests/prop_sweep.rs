@@ -56,7 +56,7 @@ fn report(dir: &Path, spec: &SweepSpec) -> String {
 /// Run the whole grid serially into `dir` and return the report bytes.
 fn run_serial(dir: &Path, spec: &SweepSpec) -> String {
     resume::prepare(dir, spec, false).unwrap();
-    sweep::run_shard(dir, spec, Shard::SERIAL, &mut |c| Ok(sweep::mock_cell(c)))
+    sweep::run_shard(dir, spec, Shard::SERIAL, &mut |c, _| Ok(sweep::mock_cell(c)))
         .unwrap();
     report(dir, spec)
 }
@@ -74,7 +74,7 @@ fn sharded_sweep_is_byte_identical_to_serial() {
         // cannot matter
         for s in (0..shards).rev() {
             let shard = Shard { index: s, of: shards };
-            sweep::run_shard(&dir, &spec, shard, &mut |c| Ok(sweep::mock_cell(c)))
+            sweep::run_shard(&dir, &spec, shard, &mut |c, _| Ok(sweep::mock_cell(c)))
                 .unwrap();
         }
         assert_eq!(
@@ -128,7 +128,7 @@ fn resume_after_kill_reruns_only_missing_cells() {
         // exactly the dropped cells
         resume::prepare(&dir, &spec, true).unwrap();
         let mut reran = 0usize;
-        sweep::run_shard(&dir, &spec, Shard::SERIAL, &mut |c| {
+        sweep::run_shard(&dir, &spec, Shard::SERIAL, &mut |c, _| {
             reran += 1;
             Ok(sweep::mock_cell(c))
         })
@@ -158,7 +158,7 @@ fn corrupt_or_stale_fragments_are_rerun_not_merged() {
 
     resume::prepare(&dir, &spec, true).unwrap();
     let mut reran = Vec::new();
-    sweep::run_shard(&dir, &spec, Shard::SERIAL, &mut |c| {
+    sweep::run_shard(&dir, &spec, Shard::SERIAL, &mut |c, _| {
         reran.push(c.index);
         Ok(sweep::mock_cell(c))
     })
@@ -224,20 +224,26 @@ fn assert_batches_equal(a: &Batch, b: &Batch, ctx: &str) {
 }
 
 #[test]
-fn prefetched_batcher_yields_exact_sync_sequence() {
+fn prefetched_batcher_yields_exact_sync_sequence_at_every_depth() {
     prop_check("prefetch bit-identity", 25, |g| {
         let task = Task::ALL[g.usize_in(0, Task::ALL.len() - 1)];
         let split = if g.bool() { Split::Train } else { Split::Dev };
         let bsz = g.usize_in(1, 48);
         let seed = g.usize_in(0, 10_000) as u64;
         let epoch = g.usize_in(0, 3) as u64;
+        let depth = g.usize_in(1, 5);
         let tok = Tokenizer::new(256);
         let gen = TaskGen::new(task, &tok, 24, seed);
         let sync: Vec<Batch> = Batcher::new(&gen, split, bsz, epoch).collect();
-        let pre: Vec<Batch> = PrefetchBatcher::new(&gen, split, bsz, epoch).collect();
-        assert_eq!(sync.len(), pre.len(), "{task:?} bsz={bsz}");
+        let pre: Vec<Batch> =
+            PrefetchBatcher::with_depth(&gen, split, bsz, epoch, depth).collect();
+        assert_eq!(sync.len(), pre.len(), "{task:?} bsz={bsz} depth={depth}");
         for (i, (a, b)) in sync.iter().zip(&pre).enumerate() {
-            assert_batches_equal(a, b, &format!("{task:?} bsz={bsz} batch={i}"));
+            assert_batches_equal(
+                a,
+                b,
+                &format!("{task:?} bsz={bsz} depth={depth} batch={i}"),
+            );
         }
     });
 }
@@ -265,6 +271,8 @@ fn skipped_run_result() -> rmmlinear::bench_harness::runner::RunResult {
         pool_threads: 4,
         pool_tasks: 17,
         pool_steals: 3,
+        exe_cache_hits: 0,
+        exe_cache_misses: 0,
         train_losses: vec![],
         eval_losses: vec![],
         probe_series: vec![],

@@ -42,4 +42,16 @@ echo "== sweep smoke (mock grid, --shards 2, --schedule dynamic) =="
 RMM_THREADS=1 target/release/repro sweep-selftest --shards 2 --schedule dynamic
 RMM_THREADS=4 target/release/repro sweep-selftest --shards 2 --schedule dynamic
 
+# Warm-session byte-identity gate: the data grid runs the session layer's
+# real tokenizer/dataset caches and prefetch pipeline in worker processes.
+# The selftest's serial reference is always computed COLD, so running the
+# sharded side with --session-cache on AND off at both thread counts pins
+# warm == cold == serial merged bytes end to end (prop_session.rs is the
+# fine-grained gate).
+echo "== sweep smoke (data grid, dynamic, session cache on/off) =="
+for T in 1 4; do
+  RMM_THREADS=$T target/release/repro sweep-selftest --shards 2 --schedule dynamic --grid data --session-cache on
+  RMM_THREADS=$T target/release/repro sweep-selftest --shards 2 --schedule dynamic --grid data --session-cache off
+done
+
 echo "ci: all gates passed"
