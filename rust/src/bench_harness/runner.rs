@@ -397,11 +397,27 @@ pub fn run_cell(
     cell: &Cell,
     ctx: &CellCtx<'_>,
 ) -> Result<Json> {
+    // Chaos "session.evict" fault: drop the warm caches between cells.
+    // Safe by the warm ≡ cold session contract — the chaos selftests
+    // pin that an evicted session still commits identical fragments.
+    if crate::chaos::should_evict() {
+        session.evict_warm_state();
+    }
     let mut train = spec.train.clone();
     train.seed = cell.seed;
     let tick = || ctx.tick();
     match spec.experiment.as_str() {
         "mock" => Ok(mock_cell(cell)),
+        synth if synth.starts_with("synth-") => {
+            // The seeded synthetic workload: burn the cell's planned
+            // (deterministic, tier-skewed) cost as wall time, commit
+            // its pure-function result.
+            let cost = crate::sweep::synth_cost_ms(synth, cell);
+            if cost > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(cost));
+            }
+            Ok(crate::sweep::synth_cell(synth, cell))
+        }
         "mockdata" => run_data_cell(session, spec, cell),
         "table2" | "table4" => {
             let task = Task::parse(&cell.task)

@@ -1,0 +1,270 @@
+//! Deterministic fault injection for the sweep orchestration stack.
+//!
+//! The claim/lease/resume/session contract promises that the merged
+//! sweep report is a pure function of the fragment set under any
+//! crash, race, or cache state.  This module turns that promise into a
+//! fuzzable property: a seed compiles into a reproducible **chaos
+//! schedule** ([`schedule`]) of kills, corruptions, transient IO
+//! errors, clock skew, and delays, delivered through named **fault
+//! points** threaded through `sweep::claim`, `sweep::scheduler`,
+//! `sweep::resume`, `sweep::merge`, and the session layer.
+//!
+//! Fault points are zero-cost when chaos is off: every entry is a
+//! single relaxed atomic load.  When a schedule is [`install`]ed, each
+//! point keeps a process-local hit counter; the scheduled `(point,
+//! hit)` pairs fire in op-count order, so a worker replays the
+//! identical fault sequence at identical local op counts regardless of
+//! how other workers interleave with it.  The fired-fault log
+//! ([`fired`], also mirrored to stderr when verbose) is what tests pin
+//! replay identity against.
+//!
+//! Installation is process-global (one schedule per worker process,
+//! matching the one-schedule-per-slot model).  In-process tests that
+//! install chaos must serialize on a lock — see `tests/prop_chaos.rs`;
+//! library unit tests never install.
+
+mod schedule;
+
+pub use schedule::{
+    compile, parse_schedule, validate_profile, FaultAction, FaultSpec, DEFAULT_PROFILE, POINTS,
+    PROFILES,
+};
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+/// Exit code a chaos [`FaultAction::Kill`] terminates a worker process
+/// with — distinguishable from ordinary failures in supervisor logs
+/// and respawn accounting.
+pub const KILL_EXIT_CODE: i32 = 86;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SKEW_MS: AtomicI64 = AtomicI64::new(0);
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+struct State {
+    entries: Vec<FaultSpec>,
+    counts: BTreeMap<String, u64>,
+    fired: Vec<String>,
+    slot: usize,
+    generation: u32,
+    exit_on_kill: bool,
+    verbose: bool,
+}
+
+/// How chaos is installed into a process.
+#[derive(Debug, Clone)]
+pub struct InstallOpts {
+    pub seed: u64,
+    /// Named profile (`light`|`crash`|`heavy`) or, if it contains `@`,
+    /// an explicit schedule in the grammar (see [`schedule`] docs).
+    pub profile: String,
+    /// Worker slot: the orchestrator's spawn index, also the Philox
+    /// stream tag, so every slot draws an independent schedule.
+    pub slot: usize,
+    /// Respawn generation, 0 = first launch.  Kill faults are filtered
+    /// out at generation > 0 — a kill fires once per worker slot — so
+    /// a respawned worker replaying the same schedule does not kill
+    /// itself at the same hit count forever.
+    pub generation: u32,
+    /// Kill semantics: worker processes `exit(`[`KILL_EXIT_CODE`]`)`,
+    /// skipping every `Drop` exactly like SIGKILL, so held claims are
+    /// left behind for the stale-lease machinery.  In-process installs
+    /// (tests) get a distinguished non-transient `io::Error` instead.
+    pub exit_on_kill: bool,
+    /// Mirror fired faults to stderr (ends up in worker logs, which is
+    /// how subprocess tests assert replay identity).
+    pub verbose: bool,
+}
+
+impl Default for InstallOpts {
+    fn default() -> Self {
+        InstallOpts {
+            seed: 0,
+            profile: DEFAULT_PROFILE.to_string(),
+            slot: 0,
+            generation: 0,
+            exit_on_kill: false,
+            verbose: false,
+        }
+    }
+}
+
+/// Compile and install this process's chaos schedule, replacing any
+/// previous installation (hit counters reset).
+pub fn install(opts: &InstallOpts) -> Result<()> {
+    let mut entries = compile(opts.seed, &opts.profile, opts.slot)?;
+    if opts.generation > 0 {
+        entries.retain(|e| e.action != FaultAction::Kill);
+    }
+    // Clock skew is a persistent property of the worker, not a per-hit
+    // fault: fold every skew entry into one offset at install time.
+    let skew: i64 = entries
+        .iter()
+        .filter_map(|e| match e.action {
+            FaultAction::SkewMs(ms) => Some(ms),
+            _ => None,
+        })
+        .sum();
+    entries.retain(|e| !matches!(e.action, FaultAction::SkewMs(_)));
+    let mut guard = STATE.lock().unwrap_or_else(|p| p.into_inner());
+    *guard = Some(State {
+        entries,
+        counts: BTreeMap::new(),
+        fired: Vec::new(),
+        slot: opts.slot,
+        generation: opts.generation,
+        exit_on_kill: opts.exit_on_kill,
+        verbose: opts.verbose,
+    });
+    SKEW_MS.store(skew, Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Disable chaos and drop all state.  A no-op when chaos is off.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    SKEW_MS.store(0, Ordering::Relaxed);
+    *STATE.lock().unwrap_or_else(|p| p.into_inner()) = None;
+}
+
+/// Is a chaos schedule installed?  The fast path every fault point
+/// checks first.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Acquire)
+}
+
+/// This process's injected clock skew in ms (0 when chaos is off).
+/// `sweep::claim::now_ms` applies it to every heartbeat read/write,
+/// modeling a badly-synced host on a shared claim store.
+pub fn skew_ms() -> i64 {
+    if !enabled() {
+        return 0;
+    }
+    SKEW_MS.load(Ordering::Relaxed)
+}
+
+/// The fired-fault log so far, one formatted line per fault, in firing
+/// order — the replay-identity witness for tests.
+pub fn fired() -> Vec<String> {
+    if !enabled() {
+        return Vec::new();
+    }
+    STATE
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .as_ref()
+        .map(|s| s.fired.clone())
+        .unwrap_or_default()
+}
+
+/// Consume one hit at `point`: every call advances the point's
+/// process-local counter, and the scheduled action (if any) for this
+/// hit index is returned and logged.
+fn hit(point: &str) -> Option<FaultAction> {
+    if !enabled() {
+        return None;
+    }
+    let mut guard = STATE.lock().unwrap_or_else(|p| p.into_inner());
+    let st = guard.as_mut()?;
+    let count = st.counts.entry(point.to_string()).or_insert(0);
+    let idx = *count;
+    *count += 1;
+    let action = st
+        .entries
+        .iter()
+        .find(|e| e.point == point && e.hit == idx)
+        .map(|e| e.action)?;
+    let line = format!(
+        "chaos[w{}.g{}]: {point}@{idx} {}",
+        st.slot,
+        st.generation,
+        action.name()
+    );
+    st.fired.push(line.clone());
+    if st.verbose {
+        eprintln!("{line}");
+    }
+    Some(action)
+}
+
+fn kill_now(point: &str) -> std::io::Error {
+    let exit = STATE
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+        .as_ref()
+        .map(|s| s.exit_on_kill)
+        .unwrap_or(false);
+    if exit {
+        // Fired log line already went to stderr; exit without running
+        // any Drop so held claims stay behind, exactly like SIGKILL.
+        std::process::exit(KILL_EXIT_CODE);
+    }
+    std::io::Error::new(
+        std::io::ErrorKind::Other,
+        format!("chaos kill at {point} (in-process)"),
+    )
+}
+
+fn apply(point: &str, action: FaultAction, staged: Option<&mut Vec<u8>>) -> std::io::Result<()> {
+    match action {
+        FaultAction::Err(kind) => Err(std::io::Error::new(
+            kind,
+            format!("chaos: injected {kind:?} at {point}"),
+        )),
+        FaultAction::Kill => Err(kill_now(point)),
+        FaultAction::DelayMs(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            Ok(())
+        }
+        FaultAction::Truncate => {
+            if let Some(bytes) = staged {
+                let keep = bytes.len() / 2;
+                bytes.truncate(keep);
+            }
+            Ok(())
+        }
+        FaultAction::Garbage => {
+            if let Some(bytes) = staged {
+                *bytes = b"{\"chaos\": garbage, not json\n".to_vec();
+            }
+            Ok(())
+        }
+        // Skew is consumed at install; evict via should_evict().  If
+        // scheduled at a plain fault point they are harmless no-ops.
+        FaultAction::SkewMs(_) | FaultAction::Evict => Ok(()),
+    }
+}
+
+/// The general fault point: a no-op unless this hit is scheduled.
+/// Call sites place this *inside* their retry closure, so an injected
+/// transient error is consumed by one attempt and the retry's next
+/// attempt sees the next hit index (usually clean).
+pub fn fault(point: &str) -> std::io::Result<()> {
+    match hit(point) {
+        None => Ok(()),
+        Some(action) => apply(point, action, None),
+    }
+}
+
+/// Fault point over staged bytes (fragment staging): corruption
+/// actions mutate `staged` in place — the corrupt bytes then really
+/// get written, to be caught by commit verification downstream.
+/// Everything else behaves like [`fault`].
+pub fn corrupt(point: &str, staged: &mut Vec<u8>) -> std::io::Result<()> {
+    match hit(point) {
+        None => Ok(()),
+        Some(action) => apply(point, action, Some(staged)),
+    }
+}
+
+/// Did a scheduled session-eviction fault fire?  The cell runner
+/// checks once per cell and drops the warm session caches — safe by
+/// the warm ≡ cold session contract.
+pub fn should_evict() -> bool {
+    matches!(hit("session.evict"), Some(FaultAction::Evict))
+}

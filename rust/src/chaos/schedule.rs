@@ -1,0 +1,412 @@
+//! Chaos schedules: compiling a `(seed, profile, worker slot)` triple
+//! into a deterministic list of [`FaultSpec`]s.
+//!
+//! The compiled schedule is a **pure function** of its inputs — two
+//! processes (or two runs, today and next month) given the same triple
+//! produce byte-identical entries.  That is the harness's seed
+//! reproducibility guarantee: a failing chaos seed from CI replays the
+//! exact same fault sequence on a laptop.  Named profiles draw their
+//! hit indices and error kinds from a Philox stream keyed by
+//! `seed ^ fnv(profile)` with the worker slot as the stream tag, so
+//! every slot sees an independent but fully determined schedule.
+//!
+//! A profile string containing `@` is treated as an **explicit
+//! schedule** in the grammar below instead of a named profile — the
+//! escape hatch for reproducing a specific scenario by hand:
+//!
+//! ```text
+//! schedule := entry (';' entry)*
+//! entry    := ['w'<slot>':'] <point> '@' <hit> '=' <action>
+//! action   := 'err:'<kind> | 'kill' | 'delay:'<ms> | 'skew:'<±ms>
+//!           | 'truncate' | 'garbage' | 'evict'
+//! kind     := 'interrupted' | 'wouldblock' | 'timedout'
+//!           | 'notfound' | 'permissiondenied' | 'other'
+//! ```
+//!
+//! `point` must be one of [`POINTS`]; `hit` is the 0-based count of
+//! times that point is reached by the worker before the fault fires.
+//! An entry without a `w<slot>:` scope applies to every slot.
+
+use std::io::ErrorKind;
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::philox::PhiloxStream;
+use crate::util::fnv;
+
+/// Every named fault point in the codebase — the single source of
+/// truth shared by the grammar parser and the call sites.  See the
+/// "chaos knobs" section of the `sweep` module doc for where each one
+/// sits.
+pub const POINTS: &[&str] = &[
+    "claim.create",
+    "claim.refresh",
+    "claim.reclaim",
+    "fragment.stage",
+    "fragment.commit",
+    "fragment.read",
+    "sched.cell",
+    "resume.spec",
+    "session.evict",
+    "clock",
+];
+
+/// Named profiles [`compile`] understands.
+pub const PROFILES: &[&str] = &["light", "crash", "heavy"];
+
+/// The profile used when `--chaos-seed` is given without
+/// `--chaos-profile`.  "crash" covers the acceptance triad: a worker
+/// killed mid-lease, a corrupted fragment, and transient claim-store
+/// IO errors.
+pub const DEFAULT_PROFILE: &str = "crash";
+
+/// What a fault point does when its scheduled hit arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Fail the wrapped op with an injected `io::Error` of this kind.
+    /// Transient kinds exercise the bounded-retry path; fatal kinds
+    /// exercise fail-fast.
+    Err(ErrorKind),
+    /// Die mid-lease: worker processes `exit(KILL_EXIT_CODE)` (no Drop
+    /// runs, like SIGKILL); in-process installs surface a
+    /// distinguished non-transient error instead.
+    Kill,
+    /// Sleep this long before the op proceeds (slow mount / GC pause).
+    DelayMs(u64),
+    /// Persistent clock skew for the whole process; only meaningful at
+    /// point `clock` and consumed once at install time.
+    SkewMs(i64),
+    /// Halve the staged bytes before they are written (torn write).
+    Truncate,
+    /// Replace the staged bytes with non-JSON garbage.
+    Garbage,
+    /// Drop the warm session caches before the next cell.
+    Evict,
+}
+
+impl FaultAction {
+    /// Round-trippable name, also used in fired-fault log lines.
+    pub fn name(self) -> String {
+        match self {
+            FaultAction::Err(k) => format!("err:{}", kind_name(k)),
+            FaultAction::Kill => "kill".to_string(),
+            FaultAction::DelayMs(ms) => format!("delay:{ms}"),
+            FaultAction::SkewMs(ms) => format!("skew:{ms}"),
+            FaultAction::Truncate => "truncate".to_string(),
+            FaultAction::Garbage => "garbage".to_string(),
+            FaultAction::Evict => "evict".to_string(),
+        }
+    }
+}
+
+fn kind_name(k: ErrorKind) -> &'static str {
+    match k {
+        ErrorKind::Interrupted => "interrupted",
+        ErrorKind::WouldBlock => "wouldblock",
+        ErrorKind::TimedOut => "timedout",
+        ErrorKind::NotFound => "notfound",
+        ErrorKind::PermissionDenied => "permissiondenied",
+        _ => "other",
+    }
+}
+
+fn parse_kind(s: &str) -> Result<ErrorKind> {
+    Ok(match s {
+        "interrupted" => ErrorKind::Interrupted,
+        "wouldblock" => ErrorKind::WouldBlock,
+        "timedout" => ErrorKind::TimedOut,
+        "notfound" => ErrorKind::NotFound,
+        "permissiondenied" => ErrorKind::PermissionDenied,
+        "other" => ErrorKind::Other,
+        other => bail!(
+            "unknown io error kind '{other}' \
+             (interrupted|wouldblock|timedout|notfound|permissiondenied|other)"
+        ),
+    })
+}
+
+/// One scheduled fault: the `hit`-th time (0-based) `point` is reached
+/// by worker `slot`, `action` fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// `None` = applies to every worker slot.
+    pub slot: Option<usize>,
+    pub point: String,
+    pub hit: u64,
+    pub action: FaultAction,
+}
+
+fn parse_action(s: &str) -> Result<FaultAction> {
+    if let Some(k) = s.strip_prefix("err:") {
+        return Ok(FaultAction::Err(parse_kind(k)?));
+    }
+    if let Some(ms) = s.strip_prefix("delay:") {
+        return Ok(FaultAction::DelayMs(
+            ms.parse().context("delay wants integer ms")?,
+        ));
+    }
+    if let Some(ms) = s.strip_prefix("skew:") {
+        return Ok(FaultAction::SkewMs(
+            ms.parse().context("skew wants signed integer ms")?,
+        ));
+    }
+    match s {
+        "kill" => Ok(FaultAction::Kill),
+        "truncate" => Ok(FaultAction::Truncate),
+        "garbage" => Ok(FaultAction::Garbage),
+        "evict" => Ok(FaultAction::Evict),
+        other => bail!(
+            "unknown chaos action '{other}' \
+             (err:<kind>|kill|delay:<ms>|skew:<±ms>|truncate|garbage|evict)"
+        ),
+    }
+}
+
+/// Parse the explicit schedule grammar (module doc).  Entries are kept
+/// in text order; empty entries (trailing `;`) are ignored.
+pub fn parse_schedule(text: &str) -> Result<Vec<FaultSpec>> {
+    let mut out = Vec::new();
+    for raw in text.split(';') {
+        let entry = raw.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        // A leading `w<digits>:` scopes the entry to one worker slot.
+        // Nothing else in an entry can look like that prefix: points
+        // never start with 'w' followed by digits and a colon.
+        let (slot, rest) = match entry.split_once(':') {
+            Some((head, tail)) => match head
+                .strip_prefix('w')
+                .filter(|d| !d.is_empty() && d.chars().all(|c| c.is_ascii_digit()))
+                .and_then(|d| d.parse::<usize>().ok())
+            {
+                Some(n) => (Some(n), tail),
+                None => (None, entry),
+            },
+            None => (None, entry),
+        };
+        let (point_hit, action) = rest
+            .split_once('=')
+            .with_context(|| format!("chaos entry '{entry}': expected <point>@<hit>=<action>"))?;
+        let (point, hit) = point_hit
+            .split_once('@')
+            .with_context(|| format!("chaos entry '{entry}': expected <point>@<hit>"))?;
+        let point = point.trim();
+        if !POINTS.contains(&point) {
+            bail!(
+                "chaos entry '{entry}': unknown fault point '{point}' (known: {})",
+                POINTS.join(", ")
+            );
+        }
+        let hit: u64 = hit
+            .trim()
+            .parse()
+            .with_context(|| format!("chaos entry '{entry}': hit must be a 0-based integer"))?;
+        let action = parse_action(action.trim()).with_context(|| format!("chaos entry '{entry}'"))?;
+        out.push(FaultSpec {
+            slot,
+            point: point.to_string(),
+            hit,
+            action,
+        });
+    }
+    if out.is_empty() {
+        bail!("empty chaos schedule");
+    }
+    Ok(out)
+}
+
+/// Compile worker `slot`'s fault schedule for `(seed, profile)`.
+/// Explicit schedules (profile contains `@`) are parsed; named
+/// profiles are generated.  Either way the result is filtered down to
+/// entries that apply to `slot`, and is a pure function of the inputs.
+pub fn compile(seed: u64, profile: &str, slot: usize) -> Result<Vec<FaultSpec>> {
+    let entries = if profile.contains('@') {
+        parse_schedule(profile)?
+    } else {
+        named_profile(seed, profile, slot)?
+    };
+    Ok(entries
+        .into_iter()
+        .filter(|e| e.slot.map_or(true, |s| s == slot))
+        .collect())
+}
+
+/// Cheap validation for config/CLI: does this profile string compile?
+pub fn validate_profile(profile: &str) -> Result<()> {
+    compile(0, profile, 0).map(|_| ())
+}
+
+const TRANSIENT: [ErrorKind; 3] = [
+    ErrorKind::Interrupted,
+    ErrorKind::WouldBlock,
+    ErrorKind::TimedOut,
+];
+
+fn named_profile(seed: u64, profile: &str, slot: usize) -> Result<Vec<FaultSpec>> {
+    let mut rng = PhiloxStream::new(seed ^ fnv::hash(profile.bytes()), slot as u32);
+    let here = Some(slot);
+    let mut out = Vec::new();
+    let mut push = |point: &str, hit: u64, action: FaultAction| {
+        out.push(FaultSpec {
+            slot: here,
+            point: point.to_string(),
+            hit,
+            action,
+        });
+    };
+    match profile {
+        // One transient claim-store error plus a small commit delay:
+        // exercises the retry path without killing anything.
+        "light" => {
+            let kind = TRANSIENT[rng.next_below(3) as usize];
+            push("claim.create", rng.next_below(3) as u64, FaultAction::Err(kind));
+            push(
+                "fragment.commit",
+                rng.next_below(2) as u64,
+                FaultAction::DelayMs(1 + rng.next_below(20) as u64),
+            );
+        }
+        // The acceptance triad.  Slot 0 corrupts its first staged
+        // fragment and then dies mid-lease on a later cell; every slot
+        // sees a transient claim-store error; other slots get clock
+        // skew and a slow commit so leases and ordering are stressed
+        // while slot 0 crashes.
+        "crash" => {
+            let kind = TRANSIENT[rng.next_below(3) as usize];
+            push("claim.create", rng.next_below(2) as u64, FaultAction::Err(kind));
+            if slot == 0 {
+                push("fragment.stage", 0, FaultAction::Garbage);
+                push("sched.cell", 1 + rng.next_below(2) as u64, FaultAction::Kill);
+            } else {
+                let magnitude = 500 + rng.next_below(2000) as i64;
+                let sign = if rng.next_below(2) == 0 { 1 } else { -1 };
+                push("clock", 0, FaultAction::SkewMs(sign * magnitude));
+                push(
+                    "fragment.commit",
+                    0,
+                    FaultAction::DelayMs(rng.next_below(30) as u64),
+                );
+            }
+        }
+        // Everything at once: claim-store errors on create and
+        // refresh, torn/garbage staging, slow commits, cache
+        // eviction, clock skew, and kills on the first two slots.
+        "heavy" => {
+            let kind = TRANSIENT[rng.next_below(3) as usize];
+            push("claim.create", rng.next_below(3) as u64, FaultAction::Err(kind));
+            let kind = TRANSIENT[rng.next_below(3) as usize];
+            push("claim.refresh", rng.next_below(2) as u64, FaultAction::Err(kind));
+            let corrupt = if slot % 2 == 0 {
+                FaultAction::Truncate
+            } else {
+                FaultAction::Garbage
+            };
+            push("fragment.stage", rng.next_below(2) as u64, corrupt);
+            push(
+                "fragment.commit",
+                rng.next_below(3) as u64,
+                FaultAction::DelayMs(1 + rng.next_below(40) as u64),
+            );
+            push("session.evict", rng.next_below(2) as u64, FaultAction::Evict);
+            let magnitude = rng.next_below(5000) as i64;
+            let sign = if rng.next_below(2) == 0 { 1 } else { -1 };
+            push("clock", 0, FaultAction::SkewMs(sign * magnitude));
+            if slot <= 1 {
+                push("sched.cell", 1 + rng.next_below(3) as u64, FaultAction::Kill);
+            }
+        }
+        other => bail!(
+            "unknown chaos profile '{other}' (known: {}; or an explicit \
+             '<point>@<hit>=<action>;…' schedule)",
+            PROFILES.join(", ")
+        ),
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_grammar_parses_scopes_hits_and_actions() {
+        let s = parse_schedule(
+            "w2:claim.create@1=err:interrupted; sched.cell@0=kill; \
+             fragment.stage@3=garbage; clock@0=skew:-250; fragment.commit@2=delay:7;",
+        )
+        .unwrap();
+        assert_eq!(s.len(), 5);
+        assert_eq!(s[0].slot, Some(2));
+        assert_eq!(s[0].point, "claim.create");
+        assert_eq!(s[0].hit, 1);
+        assert_eq!(s[0].action, FaultAction::Err(ErrorKind::Interrupted));
+        assert_eq!(s[1].slot, None);
+        assert_eq!(s[1].action, FaultAction::Kill);
+        assert_eq!(s[3].action, FaultAction::SkewMs(-250));
+        assert_eq!(s[4].action, FaultAction::DelayMs(7));
+    }
+
+    #[test]
+    fn bad_schedules_are_rejected_with_context() {
+        for bad in [
+            "",
+            "claim.create@1",            // no action
+            "nosuchpoint@0=kill",        // unknown point
+            "claim.create@x=kill",       // bad hit
+            "claim.create@0=explode",    // unknown action
+            "claim.create@0=err:eieio",  // unknown kind
+            "claim.create@0=skew:fast",  // bad skew
+        ] {
+            assert!(parse_schedule(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_slot_filtered() {
+        for profile in PROFILES {
+            for slot in 0..4usize {
+                let a = compile(11, profile, slot).unwrap();
+                let b = compile(11, profile, slot).unwrap();
+                assert_eq!(a, b, "{profile} slot {slot} not reproducible");
+                assert!(!a.is_empty(), "{profile} slot {slot} compiled empty");
+                assert!(
+                    a.iter().all(|e| e.slot.map_or(true, |s| s == slot)),
+                    "{profile} slot {slot} kept foreign entries"
+                );
+            }
+        }
+        // Explicit schedules filter by scope too.
+        let only_w1 = compile(0, "w1:sched.cell@0=kill", 0).unwrap();
+        assert!(only_w1.is_empty());
+        let only_w1 = compile(0, "w1:sched.cell@0=kill", 1).unwrap();
+        assert_eq!(only_w1.len(), 1);
+    }
+
+    #[test]
+    fn crash_profile_carries_the_acceptance_triad_on_slot_0() {
+        let s = compile(11, "crash", 0).unwrap();
+        assert!(s.iter().any(|e| e.action == FaultAction::Kill));
+        assert!(s.iter().any(|e| e.action == FaultAction::Garbage));
+        assert!(s
+            .iter()
+            .any(|e| matches!(e.action, FaultAction::Err(k) if super::TRANSIENT.contains(&k))));
+    }
+
+    #[test]
+    fn action_names_round_trip_through_the_grammar() {
+        for action in [
+            FaultAction::Err(ErrorKind::TimedOut),
+            FaultAction::Kill,
+            FaultAction::DelayMs(12),
+            FaultAction::SkewMs(-900),
+            FaultAction::Truncate,
+            FaultAction::Garbage,
+            FaultAction::Evict,
+        ] {
+            let text = format!("sched.cell@4={}", action.name());
+            let parsed = parse_schedule(&text).unwrap();
+            assert_eq!(parsed[0].action, action, "{text}");
+        }
+    }
+}

@@ -123,6 +123,18 @@ pub struct SweepConfig {
     /// warm (variant, task) key before canonical order (`sweep.affinity`,
     /// default on).  A pure claim-order preference.
     pub affinity: Option<bool>,
+    /// Seed for worker-process fault injection (`--chaos-seed`); the
+    /// seed is the on-switch — absent means no chaos.  Like every knob
+    /// here it cannot change merged-report content: chaos costs
+    /// retries/respawns, never results (see `chaos::mod`).
+    pub chaos_seed: Option<u64>,
+    /// Chaos profile name ("light"|"crash"|"heavy") or an explicit
+    /// `point@hit=action;...` schedule (`--chaos-profile`); inert
+    /// without `chaos_seed`.
+    pub chaos_profile: Option<String>,
+    /// Total crashed-worker respawns the sweep supervisor allows
+    /// (`--respawn-budget`; default 3 under chaos, else 0 = fail fast).
+    pub respawn_budget: Option<u32>,
 }
 
 impl SweepConfig {
@@ -133,6 +145,9 @@ impl SweepConfig {
             && self.lease_ttl_ms.is_none()
             && self.session_cache.is_none()
             && self.affinity.is_none()
+            && self.chaos_seed.is_none()
+            && self.chaos_profile.is_none()
+            && self.respawn_budget.is_none()
     }
 }
 
@@ -244,6 +259,15 @@ impl ExperimentConfig {
             if let Some(a) = self.sweep.affinity {
                 s.push(("affinity", Json::Bool(a)));
             }
+            if let Some(cs) = self.sweep.chaos_seed {
+                s.push(("chaos_seed", Json::num(cs as f64)));
+            }
+            if let Some(cp) = &self.sweep.chaos_profile {
+                s.push(("chaos_profile", Json::str(cp.clone())));
+            }
+            if let Some(rb) = self.sweep.respawn_budget {
+                s.push(("respawn_budget", Json::num(rb as f64)));
+            }
             if let Json::Obj(map) = &mut j {
                 map.insert("sweep".to_string(), Json::obj(s));
             }
@@ -302,6 +326,18 @@ impl ExperimentConfig {
         }
         if self.sweep.lease_ttl_ms == Some(0) {
             bail!("sweep.lease_ttl_ms must be >= 1");
+        }
+        if let Some(seed) = self.sweep.chaos_seed {
+            // JSON numbers travel as f64; a seed past 2^53 would not
+            // round-trip and two runs "with the same config" could
+            // compile different fault schedules.
+            if seed > (1u64 << 53) {
+                bail!("sweep.chaos_seed must fit in 2^53 (JSON round-trip)");
+            }
+        }
+        if let Some(p) = &self.sweep.chaos_profile {
+            crate::chaos::validate_profile(p)
+                .with_context(|| format!("bad sweep.chaos_profile '{p}'"))?;
         }
         let t = &self.train;
         if t.steps == 0 {
@@ -363,6 +399,9 @@ fn parse_sweep(j: &Json) -> Result<SweepConfig> {
             "affinity" => {
                 s.affinity = Some(v.as_bool().context("'affinity' must be a bool")?)
             }
+            "chaos_seed" => s.chaos_seed = Some(num(v, k)? as u64),
+            "chaos_profile" => s.chaos_profile = Some(req_str(v, k)?),
+            "respawn_budget" => s.respawn_budget = Some(num(v, k)? as u32),
             other => bail!("unknown sweep key '{other}'"),
         }
     }
@@ -520,7 +559,9 @@ mod tests {
         let j = Json::parse(
             r#"{"sweep": {"shards": 3, "resume": true,
                           "schedule": "dynamic", "lease_ttl_ms": 5000,
-                          "session_cache": false, "affinity": true}}"#,
+                          "session_cache": false, "affinity": true,
+                          "chaos_seed": 11, "chaos_profile": "crash",
+                          "respawn_budget": 2}}"#,
         )
         .unwrap();
         let cfg = ExperimentConfig::from_json(&j).unwrap();
@@ -530,14 +571,40 @@ mod tests {
         assert_eq!(cfg.sweep.lease_ttl_ms, Some(5000));
         assert_eq!(cfg.sweep.session_cache, Some(false));
         assert_eq!(cfg.sweep.affinity, Some(true));
+        assert_eq!(cfg.sweep.chaos_seed, Some(11));
+        assert_eq!(cfg.sweep.chaos_profile.as_deref(), Some("crash"));
+        assert_eq!(cfg.sweep.respawn_budget, Some(2));
         let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
         // "static" is also a valid explicit choice
         let j = Json::parse(r#"{"sweep": {"schedule": "static"}}"#).unwrap();
         assert!(ExperimentConfig::from_json(&j).is_ok());
+        // an explicit point@hit=action schedule is a valid profile too
+        let j = Json::parse(
+            r#"{"sweep": {"chaos_profile": "w0:claim.create@0=err:interrupted"}}"#,
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_ok());
         // absent section -> no preference
         let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert!(cfg.sweep.is_unset());
+    }
+
+    #[test]
+    fn chaos_config_rejects_bad_values() {
+        for bad in [
+            r#"{"sweep": {"chaos_profile": 3}}"#,
+            r#"{"sweep": {"chaos_profile": "nope"}}"#,
+            r#"{"sweep": {"chaos_profile": "claim.create@0=explode"}}"#,
+            r#"{"sweep": {"chaos_seed": 1e17}}"#,
+            r#"{"sweep": {"respawn_budget": "many"}}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(
+                ExperimentConfig::from_json(&j).is_err(),
+                "config should be rejected: {bad}"
+            );
+        }
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod bench_harness;
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -195,6 +195,57 @@ fn lease_ttl_arg(args: &Args) -> Result<Option<u64>> {
     }
 }
 
+/// Strict `--chaos-seed` parse: a present flag must be a `u64` (the
+/// seed keys the whole fault schedule, so a silently-dropped garbage
+/// value would turn a "reproduce this failure" invocation into a
+/// fault-free run).
+fn chaos_seed_arg(args: &Args) -> Result<Option<u64>> {
+    match args.get("chaos-seed") {
+        None => Ok(None),
+        Some(v) => v.parse::<u64>().map(Some).ok().with_context(|| {
+            format!("--chaos-seed must be an unsigned integer, got '{v}'")
+        }),
+    }
+}
+
+/// Strict `--respawn-budget` parse with a chaos-aware default: under
+/// chaos a kill is an *expected* event, so crashed workers respawn (3
+/// by default); without chaos the historical fail-fast behavior (0)
+/// is preserved unless the flag or `sweep.respawn_budget` says
+/// otherwise.
+fn respawn_budget_arg(args: &Args, defaults: &SweepConfig, chaos: bool) -> Result<u32> {
+    match args.get("respawn-budget") {
+        Some(v) => v.parse::<u32>().map(Some).ok().with_context(|| {
+            format!("--respawn-budget must be a non-negative integer, got '{v}'")
+        }).map(|o| o.unwrap_or(0)),
+        None => Ok(defaults
+            .respawn_budget
+            .unwrap_or(if chaos { 3 } else { 0 })),
+    }
+}
+
+/// Resolve the chaos seed + profile from flags and the config's `sweep`
+/// section.  The **seed** is the on-switch: a profile without a seed is
+/// inert (there is no schedule to compile), mirroring how the worker
+/// side only installs chaos when `--chaos-seed` is present.
+fn chaos_opts(args: &Args, defaults: &SweepConfig) -> Result<Option<(u64, String)>> {
+    let seed = match chaos_seed_arg(args)?.or(defaults.chaos_seed) {
+        Some(s) => s,
+        None => return Ok(None),
+    };
+    let profile = args
+        .get("chaos-profile")
+        .map(str::to_string)
+        .or_else(|| defaults.chaos_profile.clone())
+        .unwrap_or_else(|| rmmlinear::chaos::DEFAULT_PROFILE.to_string());
+    // Validate orchestrator-side so a typo'd profile fails before any
+    // worker spawns (explicit `point@hit=action` schedules validate
+    // their grammar here too, via the same compile path).
+    rmmlinear::chaos::compile(seed, &profile, 0)
+        .with_context(|| format!("bad --chaos-profile '{profile}'"))?;
+    Ok(Some((seed, profile)))
+}
+
 /// Run a sweep spec to completion and return the merged, cell-ordered
 /// results: `--shards 1` executes inline with one engine; `--shards N`
 /// self-spawns N `sweep-worker` processes (each with its own engine) and
@@ -209,9 +260,21 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
     let (schedule, ttl) = sweep_schedule(args, &defaults)?;
     let session_cache = session_cache_flag(args, &defaults)?;
     let affinity = affinity_flag(args, &defaults)?;
+    let chaos = chaos_opts(args, &defaults)?;
+    let respawn_budget = respawn_budget_arg(args, &defaults, chaos.is_some())?;
     let dir = reports_dir(args).join(format!("sweep_{name}"));
     sweep::resume::prepare(&dir, spec, resume)?;
     if shards <= 1 {
+        if chaos.is_some() {
+            // Chaos targets worker *processes* (kills are real exits and
+            // respawns are real relaunches); the inline path has no
+            // process boundary to fault, so the seed is ignored rather
+            // than killing the orchestrator itself.
+            eprintln!(
+                "sweep[{name}]: --chaos-seed ignored for inline runs; \
+                 use --shards N (N >= 1 worker processes) to inject faults"
+            );
+        }
         let mut session =
             Session::new(Engine::cpu()?, load_manifest(args)?, session_cache);
         let mut runner = |cell: &sweep::Cell, ctx: &CellCtx<'_>| {
@@ -250,7 +313,13 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
             extra.push("--affinity".to_string());
             extra.push(if affinity { "on" } else { "off" }.to_string());
         }
-        sweep::spawn_workers(&dir, shards, &extra)?;
+        if let Some((seed, profile)) = &chaos {
+            extra.push("--chaos-seed".to_string());
+            extra.push(seed.to_string());
+            extra.push("--chaos-profile".to_string());
+            extra.push(profile.clone());
+        }
+        sweep::spawn_workers(&dir, shards, &extra, respawn_budget)?;
     }
     sweep::merge::merge(&dir, spec)
 }
@@ -345,9 +414,14 @@ COMMANDS
                     [--session-cache on|off --affinity on|off]
   sweep-selftest    sweep-machinery smoke: serial vs --shards N worker
                     processes must merge byte-identically
-                    [--schedule static|dynamic] [--grid mock|data]
-                    [--session-cache on|off] (--grid data runs the warm
-                    session layer's data path; serial reference is cold)
+                    [--schedule static|dynamic]
+                    [--grid mock|data|synth-easy|synth-medium|synth-hard]
+                    [--session-cache on|off] [--synth-seed N]
+                    [--chaos-seed N [--chaos-profile P]] (--grid data
+                    runs the warm session layer's data path; synth-*
+                    are seeded workload grids with skewed planned
+                    costs; chaos faults hit only the sharded side —
+                    the serial reference stays cold and fault-free)
   bench-fig3        memory vs batch size [--all-tasks] (Fig 3/8)
   bench-fig4        variance-probe series (Fig 4/7)
   bench-fig5        loss curves vs rho [--task mnli] (Fig 5/9)
@@ -406,6 +480,25 @@ COMMON OPTIONS
                     buffering; bit-identical at every depth; config:
                     train.prefetch_depth); also drives the eval-batch
                     prefetcher of the final dev-metric pass
+  --chaos-seed N    seeded fault injection into the sweep's worker
+                    processes: worker kills, corrupted/torn fragment
+                    commits, transient claim-store IO errors, clock
+                    skew, session evictions (config: sweep.chaos_seed).
+                    Same seed + profile => identical fault schedule.
+                    Merged reports stay byte-identical to a fault-free
+                    run — chaos may only cost retries/respawns, never
+                    results.  Worker processes only; ignored inline
+  --chaos-profile P light | crash (default) | heavy, or an explicit
+                    schedule '[w<slot>:]<point>@<hit>=<action>;...'
+                    (actions: err:<kind> kill delay:<ms> skew:<ms>
+                    truncate garbage evict; config: sweep.chaos_profile)
+  --respawn-budget N  total crashed-worker respawns the sweep
+                    supervisor allows before failing the sweep
+                    (default 3 under chaos, else 0 = fail fast;
+                    config: sweep.respawn_budget)
+  --synth-seed N    seed for the synth-easy|medium|hard selftest grids
+                    (default 1); cells and their planned costs are a
+                    pure function of the seed
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -625,9 +718,31 @@ fn cmd_sweep_worker(args: &Args) -> Result<()> {
     let session_cache = session_cache_flag(args, &defaults)?;
     let affinity = affinity_flag(args, &defaults)?;
     let mock_cost = std::time::Duration::from_millis(args.get_u64("mock-cell-ms", 0));
+    // Install the fault schedule before the first sweep-store op, so
+    // even the initial claim/fragment probe runs under chaos.  The slot
+    // comes from the supervisor (`--worker-slot`), the generation from
+    // `--worker-gen` — a respawned worker re-derives the *same* seeded
+    // schedule minus already-fired kills, which is what makes a chaos
+    // run replayable end to end.
+    if let Some(seed) = chaos_seed_arg(args)? {
+        rmmlinear::chaos::install(&rmmlinear::chaos::InstallOpts {
+            seed,
+            profile: args
+                .get_or("chaos-profile", rmmlinear::chaos::DEFAULT_PROFILE)
+                .to_string(),
+            slot: args.get_usize("worker-slot", 0),
+            generation: args.get_usize("worker-gen", 0) as u32,
+            exit_on_kill: true,
+            verbose: true,
+        })?;
+    }
     // One session per worker process, warm across every cell it runs.
+    // "mock"/"mockdata" and the seeded synthetic grids need no
+    // artifacts or engine — the synth tiers exist precisely so chaos
+    // runs can hammer the orchestration layer without real training.
     let mut session = match spec.experiment.as_str() {
         "mock" | "mockdata" => Session::data_only(session_cache),
+        s if s.starts_with("synth-") => Session::data_only(session_cache),
         _ => Session::new(Engine::cpu()?, load_manifest(args)?, session_cache),
     };
     let mut runner = |cell: &sweep::Cell, ctx: &CellCtx<'_>| -> Result<Json> {
@@ -674,9 +789,17 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
     let spec = match grid {
         "mock" => sweep::selftest_spec(),
         "data" => sweep::selftest_data_spec(),
-        other => bail!("unknown --grid '{other}' (mock|data)"),
+        g if g.starts_with("synth-") => {
+            sweep::synth_spec(args.get_u64("synth-seed", 1), &g["synth-".len()..])?
+        }
+        other => bail!(
+            "unknown --grid '{other}' (mock|data|synth-easy|synth-medium|synth-hard)"
+        ),
     };
     let session_cache = session_cache_flag(args, &SweepConfig::default())?;
+    let chaos = chaos_opts(args, &SweepConfig::default())?;
+    let respawn_budget =
+        respawn_budget_arg(args, &SweepConfig::default(), chaos.is_some())?;
     let base = std::env::temp_dir().join(format!(
         "rmm_sweep_selftest_{}_{}_{}",
         grid,
@@ -703,22 +826,42 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
         extra.push("--schedule".to_string());
         extra.push("dynamic".to_string());
     }
-    sweep::spawn_workers(&sharded_dir, shards, &extra)?;
+    // Chaos (kills, corrupted commits, transient IO, clock skew) hits
+    // ONLY the sharded side — the serial reference stays fault-free, so
+    // the byte-compare below pins the acceptance invariant: a chaos run
+    // must merge to exactly the fault-free report.  Under the dynamic
+    // schedule a killed worker's claim must go stale fast enough for a
+    // respawn to reclaim it, hence the short default lease TTL.
+    if let Some((seed, profile)) = &chaos {
+        extra.push("--chaos-seed".to_string());
+        extra.push(seed.to_string());
+        extra.push("--chaos-profile".to_string());
+        extra.push(profile.clone());
+        if schedule == Schedule::Dynamic {
+            extra.push("--lease-ttl-ms".to_string());
+            extra.push(lease_ttl_arg(args)?.unwrap_or(3_000).to_string());
+        }
+    }
+    sweep::spawn_workers(&sharded_dir, shards, &extra, respawn_budget)?;
     let sharded =
         Json::Arr(sweep::merge::merge(&sharded_dir, &spec)?).to_string_pretty();
 
     std::fs::remove_dir_all(&base).ok();
+    let chaos_tag = match &chaos {
+        Some((seed, profile)) => format!(", chaos {profile}#{seed}"),
+        None => String::new(),
+    };
     if serial != sharded {
         bail!(
             "sweep selftest FAILED: {shards}-worker {} merged report ({grid} grid, \
-             session cache {}) differs from cold serial",
+             session cache {}{chaos_tag}) differs from cold serial",
             schedule.name(),
             if session_cache { "on" } else { "off" },
         );
     }
     println!(
         "sweep selftest[{grid}/{}]: {} cells across {shards} worker processes \
-         (session cache {}), byte-identical merged report",
+         (session cache {}{chaos_tag}), byte-identical merged report",
         schedule.name(),
         spec.cells.len(),
         if session_cache { "on" } else { "off" },

@@ -226,6 +226,20 @@ impl Session {
         self.dev_batches.insert(key, batches.clone());
         Some(batches)
     }
+
+    /// Drop every warm cache (trainer setups, tokenizers, dev batches)
+    /// while keeping the engine, manifest, caching mode, and stats.
+    /// Safe at any cell boundary by the warm ≡ cold contract: every
+    /// evicted object is regenerated byte-identically on next use, so
+    /// eviction can shift hit/miss counters but never a result.  The
+    /// chaos harness's `session.evict` fault calls this between cells
+    /// to prove exactly that.
+    pub fn evict_warm_state(&mut self) {
+        self.setups.clear();
+        self.tokenizers.clear();
+        self.dev_batches.clear();
+        self.dev_order.clear();
+    }
 }
 
 #[cfg(test)]
@@ -293,6 +307,24 @@ mod tests {
         let mut s = data_session(false);
         assert!(s.cached_dev_batches(Task::Wnli, 16, 64, 8, 3).is_none());
         assert_eq!(s.stats.dev_misses, 0);
+    }
+
+    #[test]
+    fn evicted_warm_state_regenerates_identically() {
+        let mut s = data_session(true);
+        let before = s.cached_dev_batches(Task::Wnli, 16, 64, 8, 3).unwrap();
+        s.evict_warm_state();
+        assert!(s.dev_batches.is_empty() && s.tokenizers.is_empty());
+        // the refetch is a miss (the Arc is new) with identical bytes
+        let after = s.cached_dev_batches(Task::Wnli, 16, 64, 8, 3).unwrap();
+        assert!(!Arc::ptr_eq(&before, &after));
+        assert_eq!(before.len(), after.len());
+        for (a, b) in before.iter().zip(after.iter()) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.labels_f, b.labels_f);
+            assert_eq!(a.valid, b.valid);
+        }
+        assert_eq!(s.stats.dev_misses, 2);
     }
 
     #[test]

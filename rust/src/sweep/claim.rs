@@ -40,6 +40,22 @@
 //! Completed cells need no claim at all — a valid fragment supersedes
 //! any claim file (the scheduler deletes leftover claims when it sees
 //! the fragment, and `resume::prepare` sweeps them on `--resume`).
+//!
+//! # Flaky mounts and skewed clocks
+//!
+//! Claim-store filesystem ops (create-exclusive open, heartbeat
+//! refresh, reclaim rename) run under bounded jittered-backoff retry
+//! (`sweep::retry`) for *transient* `io::Error`s, so a flaky shared
+//! mount degrades to latency instead of a dead worker; fatal kinds
+//! still fail fast, and `ClaimGuard`'s drop release stays best-effort.
+//! Staleness tolerates clock skew between hosts: an embedded heartbeat
+//! more than one TTL in the *reader's* future cannot belong to a live
+//! worker refreshing on schedule, so it is judged by mtime like a torn
+//! write — a dead worker with a fast clock wedges its cell for one
+//! TTL, not skew + TTL.  Each op is also a named chaos fault point
+//! (`claim.create` / `claim.refresh` / `claim.reclaim`, plus `clock`
+//! skew through [`now_ms`]) — see the sweep module doc's chaos-knobs
+//! section.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -48,6 +64,7 @@ use std::time::{SystemTime, UNIX_EPOCH};
 
 use anyhow::{Context, Result};
 
+use super::retry;
 use crate::util::json::Json;
 
 /// Claim-file path for a cell inside the sweep's `cells/` directory
@@ -57,12 +74,19 @@ pub fn claim_path(cells_dir: &Path, index: usize) -> PathBuf {
     cells_dir.join(format!("cell_{index:05}.claim"))
 }
 
-/// Milliseconds since the unix epoch (the heartbeat clock).
+/// Milliseconds since the unix epoch (the heartbeat clock).  An
+/// installed chaos clock-skew fault shifts this process's view of it —
+/// exactly how a badly-synced host on a shared claim store behaves.
 pub fn now_ms() -> u64 {
-    SystemTime::now()
+    let real = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_millis() as u64)
-        .unwrap_or(0)
+        .unwrap_or(0);
+    match crate::chaos::skew_ms() {
+        0 => real,
+        s if s > 0 => real.saturating_add(s as u64),
+        s => real.saturating_sub(s.unsigned_abs()),
+    }
 }
 
 /// A process-unique worker id: `<label>-<pid>-<seq>`.  The pid makes ids
@@ -107,12 +131,23 @@ pub fn remove_claim(cells_dir: &Path, index: usize) {
 
 /// Age of the claim at `path` in ms: embedded heartbeat when the file
 /// parses, mtime for a torn write, `None` if the file vanished.
-fn age_ms(path: &Path) -> Option<u64> {
+///
+/// A heartbeat more than `ttl_ms` in the reader's *future* is clock
+/// skew, not liveness — a live worker refreshing within one TTL can
+/// never be that far ahead of any honest reader — so it also falls
+/// back to mtime age.  (A heartbeat at most `ttl_ms` ahead reads as
+/// age 0, which is already `<= ttl_ms`: mild NTP drift never gets a
+/// live claim robbed.)
+fn age_ms(path: &Path, ttl_ms: u64) -> Option<u64> {
     let now = now_ms();
     if let Ok(text) = std::fs::read_to_string(path) {
         if let Ok(j) = Json::parse(&text) {
             if let Some(hb) = j.get("heartbeat_ms").as_f64() {
-                return Some(now.saturating_sub(hb as u64));
+                let hb = hb as u64;
+                if hb <= now.saturating_add(ttl_ms) {
+                    return Some(now.saturating_sub(hb));
+                }
+                // fall through: future-skewed heartbeat, judge by mtime
             }
         }
     }
@@ -146,7 +181,14 @@ pub fn try_claim(
 ) -> Result<ClaimAttempt> {
     let path = claim_path(cells_dir, index);
     for round in 0..4u32 {
-        match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+        // Transient create errors (flaky mount) retry in place; the
+        // protocol's AlreadyExists race signal is not transient and
+        // passes straight through to the lease logic below.
+        let opened = retry::io_retry(&format!("claim.create:{index}:{worker}"), || {
+            crate::chaos::fault("claim.create")?;
+            std::fs::OpenOptions::new().write(true).create_new(true).open(&path)
+        });
+        match opened {
             Ok(mut f) => {
                 // A failed/torn body write degrades to mtime-based
                 // staleness, never to a second winner — ignore it.
@@ -158,7 +200,7 @@ pub fn try_claim(
                 }));
             }
             Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                match age_ms(&path) {
+                match age_ms(&path, ttl_ms) {
                     // Vanished between open and stat (released or
                     // stolen): re-enter the create race.
                     None => continue,
@@ -168,14 +210,20 @@ pub fn try_claim(
                         // thief wins; losers see NotFound and loop) …
                         let grave = cells_dir
                             .join(format!("cell_{index:05}.claim.stale.{worker}.{round}"));
-                        if std::fs::rename(&path, &grave).is_err() {
-                            continue; // lost the steal race: re-judge
+                        let captured =
+                            retry::io_retry(&format!("claim.reclaim:{index}:{worker}"), || {
+                                crate::chaos::fault("claim.reclaim")?;
+                                std::fs::rename(&path, &grave)
+                            });
+                        if captured.is_err() {
+                            continue; // lost the steal race (or a flaky
+                                      // mount gave up): re-judge
                         }
                         // … then verify the capture: a faster thief may
                         // have stolen-and-reclaimed between our read and
                         // our rename, in which case we just robbed a
                         // LIVE claim (TOCTOU) and must put it back.
-                        let stale = age_ms(&grave).map_or(true, |age| age > ttl_ms);
+                        let stale = age_ms(&grave, ttl_ms).map_or(true, |age| age > ttl_ms);
                         if stale {
                             let _ = std::fs::remove_file(&grave);
                             continue; // legitimate steal: re-race create
@@ -217,10 +265,16 @@ impl ClaimGuard {
     /// TTL exceeds the worst-case cell wall time.
     pub fn refresh(&self) -> Result<()> {
         let tmp = self.path.with_extension(format!("claim.hb.{}", std::process::id()));
-        std::fs::write(&tmp, claim_body(&self.worker, now_ms()))
-            .with_context(|| format!("writing heartbeat {tmp:?}"))?;
-        std::fs::rename(&tmp, &self.path)
-            .with_context(|| format!("committing heartbeat {:?}", self.path))?;
+        retry::io_retry(&format!("claim.refresh:{}", self.worker), || {
+            crate::chaos::fault("claim.refresh")?;
+            std::fs::write(&tmp, claim_body(&self.worker, now_ms()))
+        })
+        .with_context(|| format!("writing heartbeat {tmp:?}"))?;
+        retry::io_retry(&format!("claim.refresh.commit:{}", self.worker), || {
+            crate::chaos::fault("claim.refresh")?;
+            std::fs::rename(&tmp, &self.path)
+        })
+        .with_context(|| format!("committing heartbeat {:?}", self.path))?;
         Ok(())
     }
 
@@ -342,6 +396,62 @@ mod tests {
         let hb1 = read_claim(&d, 1).unwrap().heartbeat_ms;
         assert!(hb1 > hb0, "refresh must advance the heartbeat ({hb0} -> {hb1})");
         g.release();
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn future_skewed_heartbeat_falls_back_to_mtime() {
+        let d = tmp("future_hb");
+        // A dead worker whose clock ran an hour ahead: trusting the
+        // embedded heartbeat would read "age 0" and shield the claim
+        // for skew + TTL.  Beyond one TTL of future skew we judge by
+        // mtime instead — fresh mtime still holds under a generous TTL…
+        std::fs::write(claim_path(&d, 4), claim_body("fast-clock", now_ms() + 3_600_000))
+            .unwrap();
+        assert!(matches!(try_claim(&d, 4, "w", 5_000).unwrap(), ClaimAttempt::Held));
+        // …but the claim goes stale as soon as the mtime-age passes a
+        // short TTL, instead of an hour from now.
+        std::thread::sleep(std::time::Duration::from_millis(25));
+        match try_claim(&d, 4, "w", 10).unwrap() {
+            ClaimAttempt::Won(g) => g.release(),
+            ClaimAttempt::Held => panic!("future-skewed heartbeat must age by mtime"),
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn mildly_future_heartbeat_within_ttl_stays_live() {
+        let d = tmp("drift_hb");
+        // A *live* worker a couple of seconds ahead (ordinary NTP
+        // drift) must not be robbed: within one TTL the embedded
+        // heartbeat is trusted as-is and reads as age 0.
+        std::fs::write(claim_path(&d, 5), claim_body("drifty", now_ms() + 2_000)).unwrap();
+        assert!(matches!(try_claim(&d, 5, "w", 60_000).unwrap(), ClaimAttempt::Held));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn past_skewed_heartbeat_ages_by_embedded_clock() {
+        let d = tmp("slow_hb");
+        // A worker with a slow clock stamps heartbeats that are
+        // already "old" to every honest reader: reclaimable once the
+        // skew exceeds the TTL…
+        std::fs::write(
+            claim_path(&d, 6),
+            claim_body("slow-clock", now_ms().saturating_sub(5_000)),
+        )
+        .unwrap();
+        match try_claim(&d, 6, "thief", 1_000).unwrap() {
+            ClaimAttempt::Won(g) => g.release(),
+            ClaimAttempt::Held => panic!("past-skewed heartbeat must read as stale"),
+        }
+        // …and held under a TTL that absorbs the skew.
+        std::fs::write(
+            claim_path(&d, 6),
+            claim_body("slow-clock", now_ms().saturating_sub(5_000)),
+        )
+        .unwrap();
+        assert!(matches!(try_claim(&d, 6, "w", 60_000).unwrap(), ClaimAttempt::Held));
         std::fs::remove_dir_all(&d).unwrap();
     }
 

@@ -15,6 +15,21 @@
 //! Lookups are by exact fragment path, so the `.claim` lease files and
 //! `.json.tmp` staging files the dynamic scheduler and atomic commits
 //! leave in `cells/` are invisible to the merge.
+//!
+//! Fragment *validity* is a tolerant, diagnosable contract
+//! ([`fragment_status`]): unknown top-level fields are ignored (forward
+//! compatibility), and every way a fragment can be wrong — unreadable,
+//! garbage bytes, stale grid, different train config — is reported with
+//! its file path and reason, so a chaos-corrupted (or operator-mangled)
+//! sweep is diagnosable from the merge error alone.  Schedulers keep
+//! using the boolean view ([`read_fragment`]): any invalid fragment
+//! simply reads as "not completed" and the cell reruns.
+//!
+//! Commits go through [`commit_fragment`], which verifies the published
+//! bytes by re-reading them and re-stages on mismatch — the defense
+//! against torn/corrupting writes, whether injected by the chaos
+//! harness (`fragment.stage` / `fragment.commit` fault points) or
+//! produced by a lying mount.
 
 use std::path::{Path, PathBuf};
 
@@ -24,6 +39,7 @@ use crate::util::json::Json;
 
 use super::grid::{Cell, SweepSpec};
 use super::resume;
+use super::retry;
 
 /// Fragment path for a cell inside the sweep's `cells/` directory.
 pub fn fragment_path(cells_dir: &Path, cell: &Cell) -> PathBuf {
@@ -41,6 +57,11 @@ pub fn fragment_path(cells_dir: &Path, cell: &Cell) -> PathBuf {
 /// each rename publishes one writer's complete bytes — last one wins,
 /// which is harmless because deterministic cells commit identical
 /// content.
+///
+/// Both the staging write and the publishing rename retry transient IO
+/// errors (`sweep::retry`) and carry chaos fault points; the staged
+/// bytes are rebuilt per attempt so a retried attempt stages clean
+/// bytes even if a chaos corruption mangled the previous one.
 pub fn write_fragment(
     cells_dir: &Path,
     spec: &SweepSpec,
@@ -53,64 +74,163 @@ pub fn write_fragment(
         ("train", spec.train.to_json()),
         ("result", result.clone()),
     ]);
+    let staged = body.to_string_pretty().into_bytes();
     let path = fragment_path(cells_dir, cell);
     let tmp = path.with_extension(format!(
         "json.tmp.{}.{}",
         std::process::id(),
         SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
     ));
-    std::fs::write(&tmp, body.to_string_pretty())
-        .with_context(|| format!("writing fragment {tmp:?}"))?;
-    std::fs::rename(&tmp, &path).with_context(|| format!("committing {path:?}"))?;
+    retry::io_retry(&format!("fragment.stage:{}", cell.index), || {
+        let mut bytes = staged.clone();
+        crate::chaos::corrupt("fragment.stage", &mut bytes)?;
+        std::fs::write(&tmp, &bytes)
+    })
+    .with_context(|| format!("writing fragment {tmp:?}"))?;
+    retry::io_retry(&format!("fragment.commit:{}", cell.index), || {
+        crate::chaos::fault("fragment.commit")?;
+        std::fs::rename(&tmp, &path)
+    })
+    .with_context(|| format!("committing {path:?}"))?;
     Ok(())
 }
 
-/// The cell's result, iff its fragment exists, parses, embeds exactly
-/// this cell (same index, variant, task, ρ, sketch, seed, batch) *and*
-/// was produced under this spec's train config.  Any mismatch —
-/// truncated file, stale grid, different `--steps`/`--lr`, hand-edited
-/// cell — reads as "not completed" so the cell reruns instead of
-/// smuggling a stale row into the merge.
-pub fn read_fragment(cells_dir: &Path, spec: &SweepSpec, cell: &Cell) -> Option<Json> {
-    let text = std::fs::read_to_string(fragment_path(cells_dir, cell)).ok()?;
-    let j = Json::parse(&text).ok()?;
-    let embedded = Cell::from_json(j.get("cell")).ok()?;
+/// How many times [`commit_fragment`] will (re)write before giving up.
+const COMMIT_VERIFY_ATTEMPTS: usize = 3;
+
+/// [`write_fragment`] + read-back verification: commit the fragment,
+/// then confirm the published file actually validates for this cell,
+/// re-staging up to [`COMMIT_VERIFY_ATTEMPTS`] times.  A corrupted
+/// commit (torn write, chaos `truncate`/`garbage` injection) is thereby
+/// healed in place instead of silently leaving an invalid fragment for
+/// the merge to trip over.  Schedulers commit through this.
+pub fn commit_fragment(
+    cells_dir: &Path,
+    spec: &SweepSpec,
+    cell: &Cell,
+    result: &Json,
+) -> Result<()> {
+    let mut last_reason = String::new();
+    for _ in 0..COMMIT_VERIFY_ATTEMPTS {
+        write_fragment(cells_dir, spec, cell, result)?;
+        match fragment_status(cells_dir, spec, cell) {
+            FragmentStatus::Valid(_) => return Ok(()),
+            FragmentStatus::Missing => last_reason = "fragment missing after commit".to_string(),
+            FragmentStatus::Invalid { reason, .. } => last_reason = reason,
+        }
+    }
+    bail!(
+        "committing fragment for cell {}: still invalid after {} attempts ({})",
+        cell.index,
+        COMMIT_VERIFY_ATTEMPTS,
+        last_reason
+    )
+}
+
+/// Verdict on a cell's on-disk fragment.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FragmentStatus {
+    /// Fragment exists and validates; carries the embedded result.
+    Valid(Json),
+    /// No fragment file (the cell simply has not completed).
+    Missing,
+    /// A file exists but cannot be trusted — with the path and a
+    /// human-readable reason for the sweep summary.
+    Invalid { path: PathBuf, reason: String },
+}
+
+/// Judge the cell's fragment.  Valid iff the file parses, embeds
+/// exactly this cell (same index, variant, task, ρ, sketch, seed,
+/// batch), was produced under this spec's train config, and carries a
+/// non-null result.  Unknown top-level fields are tolerated — only the
+/// contract keys are inspected — so newer writers can annotate
+/// fragments without invalidating them for older readers.
+pub fn fragment_status(cells_dir: &Path, spec: &SweepSpec, cell: &Cell) -> FragmentStatus {
+    let path = fragment_path(cells_dir, cell);
+    let invalid = |reason: String| FragmentStatus::Invalid {
+        path: path.clone(),
+        reason,
+    };
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return FragmentStatus::Missing,
+        Err(e) => return invalid(format!("unreadable: {e}")),
+    };
+    let j = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => return invalid(format!("parse error at byte {}: {}", e.offset, e.msg)),
+    };
+    let embedded = match Cell::from_json(j.get("cell")) {
+        Ok(c) => c,
+        Err(e) => return invalid(format!("embedded cell unparseable: {e}")),
+    };
     if &embedded != cell {
-        return None;
+        return invalid(format!(
+            "embedded cell mismatch (found index {} variant '{}' task '{}', \
+             expected index {} variant '{}' task '{}')",
+            embedded.index, embedded.variant, embedded.task, cell.index, cell.variant, cell.task
+        ));
     }
     // TrainConfig JSON round-trips byte-exactly (prop-pinned), so
     // structural equality here is the "same training settings" check.
     if j.get("train") != &spec.train.to_json() {
-        return None;
+        return invalid("train config mismatch (fragment from different settings)".to_string());
     }
     let result = j.get("result");
     if result.is_null() {
-        return None;
+        return invalid("missing result".to_string());
     }
-    Some(result.clone())
+    FragmentStatus::Valid(result.clone())
 }
 
-/// Merge every cell's result in canonical grid order.  Fails listing the
-/// missing/invalid cell indices if the sweep is incomplete.
+/// The cell's result, iff its fragment validates — the boolean view of
+/// [`fragment_status`] the schedulers poll with.  Any mismatch —
+/// truncated file, stale grid, different `--steps`/`--lr`, hand-edited
+/// cell — reads as "not completed" so the cell reruns instead of
+/// smuggling a stale row into the merge.
+pub fn read_fragment(cells_dir: &Path, spec: &SweepSpec, cell: &Cell) -> Option<Json> {
+    // Chaos read fault: a transient read error makes the fragment look
+    // absent, which is always safe — the cell just reruns and commits
+    // identical bytes.
+    if crate::chaos::fault("fragment.read").is_err() {
+        return None;
+    }
+    match fragment_status(cells_dir, spec, cell) {
+        FragmentStatus::Valid(result) => Some(result),
+        _ => None,
+    }
+}
+
+/// Merge every cell's result in canonical grid order.  Fails listing
+/// the missing/invalid cell indices if the sweep is incomplete, with a
+/// per-fragment diagnosis (file path + reason) for every *invalid*
+/// fragment so corrupted runs are debuggable from the summary alone.
 pub fn merge(dir: &Path, spec: &SweepSpec) -> Result<Vec<Json>> {
     let cdir = resume::cells_dir(dir);
     let mut out = Vec::with_capacity(spec.cells.len());
     let mut missing = Vec::new();
+    let mut invalid = Vec::new();
     for cell in &spec.cells {
-        match read_fragment(&cdir, spec, cell) {
-            Some(r) => out.push(r),
-            None => missing.push(cell.index),
+        match fragment_status(&cdir, spec, cell) {
+            FragmentStatus::Valid(r) => out.push(r),
+            FragmentStatus::Missing => missing.push(cell.index),
+            FragmentStatus::Invalid { path, reason } => {
+                missing.push(cell.index);
+                invalid.push(format!("  cell {} ({}): {}", cell.index, path.display(), reason));
+            }
         }
     }
     if !missing.is_empty() {
         let shown: Vec<String> =
             missing.iter().take(8).map(|i| i.to_string()).collect();
         bail!(
-            "sweep merge: {}/{} cells missing or invalid (indices {}{})",
+            "sweep merge: {}/{} cells missing or invalid (indices {}{}){}{}",
             missing.len(),
             spec.cells.len(),
             shown.join(","),
-            if missing.len() > 8 { ",…" } else { "" }
+            if missing.len() > 8 { ",…" } else { "" },
+            if invalid.is_empty() { "" } else { "\ninvalid fragments:\n" },
+            invalid.join("\n")
         );
     }
     Ok(out)
@@ -192,6 +312,64 @@ mod tests {
         std::fs::write(cdir.join("cell_00001.claim.stale.w-1-0.0"), "").unwrap();
         std::fs::write(cdir.join("cell_00001.json.tmp"), "{trunc").unwrap();
         assert_eq!(merge(&dir, &spec).unwrap(), clean, "stray files must not perturb merge");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn merge_diagnoses_invalid_fragments_with_path_and_reason() {
+        let dir = tmp("diagnose");
+        let cdir = resume::cells_dir(&dir);
+        std::fs::create_dir_all(&cdir).unwrap();
+        let spec = spec2();
+        write_fragment(&cdir, &spec, &spec.cells[1], &Json::num(1.0)).unwrap();
+        // garbage bytes where cell 0's fragment should be
+        std::fs::write(fragment_path(&cdir, &spec.cells[0]), "{\"cell\": garbage").unwrap();
+        let err = format!("{}", merge(&dir, &spec).unwrap_err());
+        assert!(err.contains("1/2 cells"), "{err}");
+        assert!(err.contains("cell 0"), "{err}");
+        assert!(err.contains("cell_00000.json"), "{err}");
+        assert!(err.contains("parse error at byte"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fragment_status_tolerates_unknown_fields_and_names_mismatches() {
+        let dir = tmp("tolerant");
+        let cdir = resume::cells_dir(&dir);
+        std::fs::create_dir_all(&cdir).unwrap();
+        let spec = spec2();
+        write_fragment(&cdir, &spec, &spec.cells[0], &Json::num(2.0)).unwrap();
+        // a newer writer annotating fragments must not invalidate them
+        let path = fragment_path(&cdir, &spec.cells[0]);
+        let mut j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        if let Json::Obj(map) = &mut j {
+            map.insert("future_annotation".to_string(), Json::str("ignored"));
+        }
+        std::fs::write(&path, j.to_string_pretty()).unwrap();
+        assert!(matches!(
+            fragment_status(&cdir, &spec, &spec.cells[0]),
+            FragmentStatus::Valid(_)
+        ));
+        // a fragment from different training settings names the reason
+        let mut retrained = spec.clone();
+        retrained.train.steps += 1;
+        match fragment_status(&cdir, &retrained, &spec.cells[0]) {
+            FragmentStatus::Invalid { reason, .. } => {
+                assert!(reason.contains("train config mismatch"), "{reason}")
+            }
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn commit_fragment_verifies_the_published_bytes() {
+        let dir = tmp("commit_verify");
+        let cdir = resume::cells_dir(&dir);
+        std::fs::create_dir_all(&cdir).unwrap();
+        let spec = spec2();
+        commit_fragment(&cdir, &spec, &spec.cells[0], &Json::num(3.0)).unwrap();
+        assert_eq!(read_fragment(&cdir, &spec, &spec.cells[0]), Some(Json::num(3.0)));
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

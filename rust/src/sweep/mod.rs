@@ -117,11 +117,51 @@
 //!   as it comfortably exceeds the longest stretch between ticks —
 //!   `log_every` steps, or a single step carrying the variant's
 //!   one-time compile.
+//!
+//! # Chaos knobs (fault injection)
+//!
+//! The `crate::chaos` subsystem fuzzes this whole stack reproducibly:
+//! `--chaos-seed N [--chaos-profile P]` compiles, per worker slot, a
+//! deterministic **chaos schedule** and installs it in each
+//! `sweep-worker` process.  The orchestrator and the selftest's serial
+//! reference always run fault-free; fault points are zero-cost no-ops
+//! when chaos is off.
+//!
+//! * **Fault points** — `claim.create`, `claim.refresh`,
+//!   `claim.reclaim` (claim-store ops, inside their retry loops),
+//!   `fragment.stage`, `fragment.commit`, `fragment.read` (fragment
+//!   IO), `sched.cell` (start of a claimed cell, lease held — where
+//!   kills fire), `resume.spec` (spec write), `session.evict`
+//!   (warm-cache drop before a cell), and `clock` (persistent
+//!   heartbeat-clock skew via `claim::now_ms`).
+//! * **Schedule grammar** — `[w<slot>:]<point>@<hit>=<action>`,
+//!   `;`-separated; actions are `err:<kind>`, `kill`, `delay:<ms>`,
+//!   `skew:<±ms>`, `truncate`, `garbage`, `evict`.  `--chaos-profile`
+//!   names a built-in profile (`light` | `crash` | `heavy`) or, if it
+//!   contains `@`, is parsed as an explicit schedule.
+//! * **Seed reproducibility** — the compiled schedule is a pure
+//!   function of `(seed, profile, slot)`, and hit counters are
+//!   worker-local, so the same seed replays the identical per-worker
+//!   fault sequence regardless of cross-worker interleaving.  Kill
+//!   faults fire once per slot: a respawned worker (generation > 0)
+//!   filters them out of its schedule.
+//! * **Why reports survive** — every injected fault lands on a path
+//!   the contract already prices: transient IO errors degrade to
+//!   bounded jittered retries ([`retry`]), corrupt/torn commits are
+//!   caught and re-staged by commit verification
+//!   ([`merge::commit_fragment`]), kills leave a stale lease for
+//!   reclaim (plus the orchestrator-side respawn budget of
+//!   [`spawn_workers_supervised`]), skew only stretches or shortens
+//!   leases, and cache eviction is invisible by the warm ≡ cold
+//!   session contract.  `repro sweep-selftest --chaos-seed N` and
+//!   `tests/prop_chaos.rs` pin merged-report byte-identity against the
+//!   fault-free serial run.
 
 pub mod claim;
 pub mod grid;
 pub mod merge;
 pub mod resume;
+pub mod retry;
 pub mod scheduler;
 pub mod shard;
 
@@ -196,7 +236,7 @@ pub fn run_shard(
                 cell.index, cell.variant, cell.task, cell.rho
             )
         })?;
-        merge::write_fragment(&cdir, spec, cell, &result)?;
+        merge::commit_fragment(&cdir, spec, cell, &result)?;
         ran += 1;
     }
     Ok(ran)
@@ -227,22 +267,41 @@ pub fn run_shards_pooled(
     Ok(())
 }
 
-/// Spawn one `sweep-worker` process per worker from the current binary
-/// and wait for all of them.  The worker contract (implemented by
-/// `main.rs`) is: `<exe> sweep-worker --dir <dir> --shard i/N [passthrough
-/// args]` — the worker loads `sweep.json`, runs its cells (its shard
-/// under the static schedule; whatever it can claim when the extra args
-/// select `--schedule dynamic`), and exits 0 iff every cell it owned or
-/// won committed a fragment.
-pub fn spawn_workers(dir: &Path, shards: usize, extra_args: &[String]) -> Result<()> {
+/// Spawn one `sweep-worker` process per worker from the current binary,
+/// supervise them, and wait for all of them.  The worker contract
+/// (implemented by `main.rs`) is: `<exe> sweep-worker --dir <dir>
+/// --shard i/N --worker-slot i --worker-gen g [passthrough args]` — the
+/// worker loads `sweep.json`, runs its cells (its shard under the
+/// static schedule; whatever it can claim when the extra args select
+/// `--schedule dynamic`), and exits 0 iff every cell it owned or won
+/// committed a fragment.  `respawn_budget` is the total number of
+/// crashed-worker respawns allowed across the whole sweep (0 = the
+/// fail-fast behavior).
+pub fn spawn_workers(
+    dir: &Path,
+    shards: usize,
+    extra_args: &[String],
+    respawn_budget: u32,
+) -> Result<()> {
     let exe = std::env::current_exe().context("locating current executable")?;
-    spawn_workers_with_exe(&exe, dir, shards, extra_args)
+    spawn_workers_supervised(&exe, dir, shards, extra_args, respawn_budget)
 }
 
 /// Stderr capture path for worker `i` (sibling of `sweep.json`, outside
 /// `cells/`, so fragments and claims never collide with it).
 pub fn worker_log_path(dir: &Path, worker: usize) -> PathBuf {
     dir.join(format!("worker_{worker}.stderr.log"))
+}
+
+/// Stderr capture path for worker `i`, respawn generation `gen` (0 =
+/// first launch keeps [`worker_log_path`]; each respawn logs to its own
+/// file so a post-mortem can read every life of the slot).
+pub fn worker_log_path_gen(dir: &Path, worker: usize, gen: u32) -> PathBuf {
+    if gen == 0 {
+        worker_log_path(dir, worker)
+    } else {
+        dir.join(format!("worker_{worker}.gen{gen}.stderr.log"))
+    }
 }
 
 /// Lines of trailing stderr kept in memory per worker for the failure
@@ -276,62 +335,151 @@ fn tee_stderr(stderr: std::process::ChildStderr, log: &Path) -> String {
     tail.into_iter().collect::<Vec<_>>().join("\n")
 }
 
-/// [`spawn_workers`] with an explicit worker binary — the testable core
-/// (integration tests pass `CARGO_BIN_EXE_repro`; the test binary's own
+/// [`spawn_workers`] with an explicit worker binary and no respawn
+/// budget — kept for integration tests that pin the fail-fast contract
+/// (they pass `CARGO_BIN_EXE_repro`; the test binary's own
 /// `current_exe` is not a sweep worker).
-///
-/// Each worker's stderr is piped through a tee thread ([`tee_stderr`]):
-/// streamed live to this process's stderr, mirrored to
-/// [`worker_log_path`] for post-mortems, and tailed in memory so a
-/// failing worker's error reports its **exit status and the last lines
-/// of its stderr**, not a bare "worker failed".
 pub fn spawn_workers_with_exe(
     exe: &Path,
     dir: &Path,
     shards: usize,
     extra_args: &[String],
 ) -> Result<()> {
+    spawn_workers_supervised(exe, dir, shards, extra_args, 0)
+}
+
+/// One supervised worker slot.
+enum SlotState {
+    Running {
+        child: std::process::Child,
+        tee: std::thread::JoinHandle<String>,
+        gen: u32,
+    },
+    Finished,
+}
+
+/// Launch one worker process for `slot` at respawn generation `gen`,
+/// wiring its stderr through a [`tee_stderr`] thread.
+fn launch_worker(
+    exe: &Path,
+    dir: &Path,
+    slot: usize,
+    shards: usize,
+    extra_args: &[String],
+    gen: u32,
+) -> Result<(std::process::Child, std::thread::JoinHandle<String>)> {
+    let mut child = std::process::Command::new(exe)
+        .arg("sweep-worker")
+        .arg("--dir")
+        .arg(dir)
+        .arg("--shard")
+        .arg(format!("{slot}/{shards}"))
+        .arg("--worker-slot")
+        .arg(slot.to_string())
+        .arg("--worker-gen")
+        .arg(gen.to_string())
+        .args(extra_args)
+        .stderr(std::process::Stdio::piped())
+        .spawn()
+        .with_context(|| format!("spawning sweep worker {slot}/{shards} (gen {gen})"))?;
+    let stderr = child
+        .stderr
+        .take()
+        .with_context(|| format!("taking worker {slot} stderr pipe"))?;
+    let log = worker_log_path_gen(dir, slot, gen);
+    let tee = std::thread::spawn(move || tee_stderr(stderr, &log));
+    Ok((child, tee))
+}
+
+/// The supervising core behind [`spawn_workers`]: spawn every slot,
+/// poll for exits, and respawn a crashed slot (next generation, same
+/// shard assignment and passthrough args, plus a bumped `--worker-gen`)
+/// while the shared `respawn_budget` lasts.
+///
+/// Each worker's stderr is piped through a tee thread ([`tee_stderr`]):
+/// streamed live to this process's stderr, mirrored to
+/// [`worker_log_path_gen`] for post-mortems, and tailed in memory so a
+/// failing worker's error reports its **exit status and the last lines
+/// of its stderr**, not a bare "worker failed".
+///
+/// Respawning is always safe: completion state lives in the fragment
+/// set, so a respawned worker skips finished cells and at worst reruns
+/// the one cell its predecessor died inside (after that cell's lease
+/// goes stale).  A crash that outlives the budget fails the sweep with
+/// the same exit-status + stderr-tail diagnostic as the fail-fast path
+/// — a *deterministic* cell failure therefore still surfaces instead of
+/// burning respawns forever.
+pub fn spawn_workers_supervised(
+    exe: &Path,
+    dir: &Path,
+    shards: usize,
+    extra_args: &[String],
+    respawn_budget: u32,
+) -> Result<()> {
     std::fs::create_dir_all(dir).with_context(|| format!("creating sweep dir {dir:?}"))?;
-    let mut children = Vec::with_capacity(shards);
+    let mut slots = Vec::with_capacity(shards);
     for i in 0..shards {
-        let mut child = std::process::Command::new(exe)
-            .arg("sweep-worker")
-            .arg("--dir")
-            .arg(dir)
-            .arg("--shard")
-            .arg(format!("{i}/{shards}"))
-            .args(extra_args)
-            .stderr(std::process::Stdio::piped())
-            .spawn()
-            .with_context(|| format!("spawning sweep worker {i}/{shards}"))?;
-        let stderr = child
-            .stderr
-            .take()
-            .with_context(|| format!("taking worker {i} stderr pipe"))?;
-        let log = worker_log_path(dir, i);
-        let tee = std::thread::spawn(move || tee_stderr(stderr, &log));
-        children.push((i, child, tee));
+        let (child, tee) = launch_worker(exe, dir, i, shards, extra_args, 0)?;
+        slots.push(SlotState::Running { child, tee, gen: 0 });
     }
-    let mut failed = Vec::new();
-    for (i, mut child, tee) in children {
-        let status = child.wait();
-        let tail = tee.join().unwrap_or_default();
-        let status = match status {
-            Ok(s) => s,
-            Err(e) => {
-                failed.push(format!("worker {i}/{shards}: wait failed: {e}"));
-                continue;
+    let mut budget = respawn_budget;
+    let mut failed: Vec<String> = Vec::new();
+    loop {
+        let mut progressed = false;
+        for i in 0..shards {
+            let exited = match &mut slots[i] {
+                SlotState::Running { child, .. } => match child.try_wait() {
+                    Ok(None) => continue, // still running
+                    Ok(Some(status)) => Ok(status),
+                    Err(e) => Err(e),
+                },
+                SlotState::Finished => continue,
+            };
+            progressed = true;
+            let old = std::mem::replace(&mut slots[i], SlotState::Finished);
+            let (tee, gen) = match old {
+                SlotState::Running { tee, gen, .. } => (tee, gen),
+                SlotState::Finished => unreachable!("only Running slots reach here"),
+            };
+            let tail = tee.join().unwrap_or_default();
+            match exited {
+                Err(e) => failed.push(format!("worker {i}/{shards}: wait failed: {e}")),
+                Ok(status) if status.success() => {}
+                Ok(status) => {
+                    if budget > 0 {
+                        budget -= 1;
+                        let next = gen + 1;
+                        eprintln!(
+                            "sweep supervisor: worker {i}/{shards} (gen {gen}) exited with \
+                             {status}; respawning as gen {next} ({budget} respawns left)"
+                        );
+                        match launch_worker(exe, dir, i, shards, extra_args, next) {
+                            Ok((child, tee)) => {
+                                slots[i] = SlotState::Running { child, tee, gen: next };
+                            }
+                            Err(e) => failed
+                                .push(format!("worker {i}/{shards}: respawn failed: {e:#}")),
+                        }
+                    } else if tail.is_empty() {
+                        failed.push(format!(
+                            "worker {i}/{shards} exited with {status} (no stderr output)"
+                        ));
+                    } else {
+                        failed.push(format!(
+                            "worker {i}/{shards} exited with {status}; stderr tail:\n{tail}"
+                        ));
+                    }
+                }
             }
-        };
-        if status.success() {
-            continue;
         }
-        if tail.is_empty() {
-            failed.push(format!("worker {i}/{shards} exited with {status} (no stderr output)"));
-        } else {
-            failed.push(format!(
-                "worker {i}/{shards} exited with {status}; stderr tail:\n{tail}"
-            ));
+        let running = slots
+            .iter()
+            .any(|s| matches!(s, SlotState::Running { .. }));
+        if !running {
+            break;
+        }
+        if !progressed {
+            std::thread::sleep(std::time::Duration::from_millis(20));
         }
     }
     if !failed.is_empty() {
@@ -401,6 +549,97 @@ pub fn selftest_data_spec() -> SweepSpec {
         }
     }
     spec
+}
+
+/// Difficulty tiers of the seeded synthetic workload generator.
+pub const SYNTH_TIERS: &[&str] = &["easy", "medium", "hard"];
+
+/// Philox stream tag for synth-grid composition draws (tags 0–3 are
+/// reserved by the RMM sketch/data streams; see `rng::philox`).
+const SYNTH_STREAM: u32 = 7;
+
+/// Seeded, difficulty-graded synthetic workload grid (experiment key
+/// `synth-<tier>`) — the chaos harness's stress surface, grown out of
+/// the PR 5 `mockdata` grid.  The grid's composition — cell count,
+/// variant/task mix, ρ, and batch (data-shape) axes — is a pure
+/// function of `(seed, tier)` via Philox draws, and every cell carries
+/// a deterministic *planned cost* ([`synth_cost_ms`]) with
+/// tier-controlled skew, so dynamic scheduling, affinity, and stealing
+/// face meaningfully uneven work while the merged report stays a pure
+/// function of the grid.
+///
+/// * `easy` — small grid, near-uniform cell costs.
+/// * `medium` — mid-size grid, moderate cost skew.
+/// * `hard` — large grid with a heavy-tailed cost distribution: a few
+///   whale cells dominate, the worst case for static sharding and the
+///   best case for work stealing.
+pub fn synth_spec(seed: u64, tier: &str) -> Result<SweepSpec> {
+    use crate::rng::philox::PhiloxStream;
+    let (variants, tasks, rhos, n_cells): (u32, u32, &[f64], usize) = match tier {
+        "easy" => (2, 2, &[1.0, 0.5], 8),
+        "medium" => (3, 3, &[1.0, 0.5, 0.1], 18),
+        "hard" => (4, 4, &[1.0, 0.5, 0.2, 0.1], 36),
+        other => bail!("unknown synth tier '{other}' (easy|medium|hard)"),
+    };
+    let mut rng = PhiloxStream::new(seed, SYNTH_STREAM);
+    let mut spec = SweepSpec::new(
+        format!("synth-{tier}"),
+        crate::config::TrainConfig::default(),
+    );
+    for _ in 0..n_cells {
+        let v = rng.next_below(variants);
+        let t = rng.next_below(tasks);
+        let rho = rhos[rng.next_below(rhos.len() as u32) as usize];
+        // Data-shape axis: batch 4 / 8 / 16.
+        let batch = 4usize << rng.next_below(3);
+        let cell_seed = rng.next_below(1 << 16) as u64;
+        spec.push(
+            format!("synth_v{v}"),
+            format!("synth_t{t}"),
+            rho,
+            "gauss",
+            cell_seed,
+            batch,
+        );
+    }
+    Ok(spec)
+}
+
+/// Planned cost of a synth cell in ms — deterministic in the cell's
+/// identity, with tier-controlled skew: `hard` grids are heavy-tailed
+/// (whale cells several times the base cost) precisely to stress
+/// straggler handling under chaos.  The cost only shapes wall time
+/// (the runner sleeps it); it never feeds measured time into the
+/// fragment, so reports stay schedule-invariant.
+pub fn synth_cost_ms(experiment: &str, cell: &Cell) -> u64 {
+    let (base, whale): (u64, u64) = match experiment {
+        "synth-easy" => (3, 1),   // near-uniform
+        "synth-medium" => (8, 4), // moderate skew
+        _ => (12, 8),             // synth-hard: heavy tail
+    };
+    let h = crate::util::fnv::hash(
+        format!("cost|{experiment}|{}|{}", cell.index, cell.seed).bytes(),
+    );
+    let cost = h % base;
+    if h % 7 == 0 {
+        cost * whale
+    } else {
+        cost
+    }
+}
+
+/// Deterministic synth cell result: the [`mock_cell`] FNV payload plus
+/// the cell's *planned* cost — a pure function of identity, never
+/// measured wall time, which would break byte-identity.
+pub fn synth_cell(experiment: &str, cell: &Cell) -> Json {
+    let mut j = mock_cell(cell);
+    if let Json::Obj(map) = &mut j {
+        map.insert(
+            "planned_cost_ms".to_string(),
+            Json::num(synth_cost_ms(experiment, cell) as f64),
+        );
+    }
+    j
 }
 
 #[cfg(test)]
@@ -481,5 +720,51 @@ mod tests {
         let ctx = CellCtx::none();
         assert!(!ctx.has_heartbeat());
         ctx.tick(); // must not panic or touch the filesystem
+    }
+
+    #[test]
+    fn synth_grids_are_seeded_tiered_and_round_trip() {
+        let mut sizes = Vec::new();
+        for &tier in SYNTH_TIERS {
+            let a = synth_spec(11, tier).unwrap();
+            let b = synth_spec(11, tier).unwrap();
+            assert_eq!(a.cells, b.cells, "synth-{tier} not reproducible");
+            assert_eq!(a.experiment, format!("synth-{tier}"));
+            sizes.push(a.cells.len());
+            // a different seed reshuffles the grid composition
+            let c = synth_spec(12, tier).unwrap();
+            assert_ne!(a.cells, c.cells, "synth-{tier} ignores the seed");
+            // the JSON round-trip the workers rely on
+            let back = SweepSpec::from_json(&a.to_json()).unwrap();
+            assert_eq!(back.cells, a.cells);
+        }
+        assert!(sizes[0] < sizes[1] && sizes[1] < sizes[2], "{sizes:?}");
+        assert!(synth_spec(0, "impossible").is_err());
+    }
+
+    #[test]
+    fn synth_costs_are_deterministic_skewed_and_kept_out_of_results() {
+        let spec = synth_spec(11, "hard").unwrap();
+        let costs: Vec<u64> = spec
+            .cells
+            .iter()
+            .map(|c| synth_cost_ms(&spec.experiment, c))
+            .collect();
+        assert_eq!(
+            costs,
+            spec.cells
+                .iter()
+                .map(|c| synth_cost_ms(&spec.experiment, c))
+                .collect::<Vec<u64>>()
+        );
+        // the hard tier's tail must actually be skewed, but bounded
+        let max = *costs.iter().max().unwrap();
+        let min = *costs.iter().min().unwrap();
+        assert!(max > min, "hard tier costs degenerate: {costs:?}");
+        assert!(max < 200, "whale cost {max} too large for CI");
+        // the result embeds the *planned* cost, not a measured one
+        let r = synth_cell(&spec.experiment, &spec.cells[0]);
+        assert_eq!(r.get("planned_cost_ms"), &Json::num(costs[0] as f64));
+        assert_eq!(r, synth_cell(&spec.experiment, &spec.cells[0]));
     }
 }

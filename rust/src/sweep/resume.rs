@@ -26,6 +26,7 @@ use crate::util::json::Json;
 
 use super::grid::SweepSpec;
 use super::merge;
+use super::retry;
 
 /// Per-cell fragment directory inside a sweep directory.
 pub fn cells_dir(dir: &Path) -> PathBuf {
@@ -69,8 +70,14 @@ pub fn prepare(dir: &Path, spec: &SweepSpec, resume: bool) -> Result<()> {
         }
     }
     let tmp = dir.join("sweep.json.tmp");
-    std::fs::write(&tmp, spec.to_json().to_string_pretty())
-        .with_context(|| format!("writing {tmp:?}"))?;
+    let text = spec.to_json().to_string_pretty();
+    // Chaos fault point "resume.spec"; transient write errors retry
+    // like every other sweep-store op.
+    retry::io_retry("resume.spec", || {
+        crate::chaos::fault("resume.spec")?;
+        std::fs::write(&tmp, text.as_bytes())
+    })
+    .with_context(|| format!("writing {tmp:?}"))?;
     std::fs::rename(&tmp, spec_path(dir)).context("committing sweep.json")?;
     Ok(())
 }

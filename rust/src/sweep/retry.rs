@@ -1,0 +1,120 @@
+//! Bounded retry with deterministic jittered backoff for transient
+//! claim-store IO.
+//!
+//! The claim/lease protocol runs over a possibly-shared (network)
+//! mount, where flakiness surfaces as transient `io::Error`s (EINTR,
+//! EAGAIN, timeouts) on the create-exclusive open, heartbeat re-stamp,
+//! reclaim rename, or fragment staging write.  Before this module, any
+//! such error outside `AlreadyExists` in `try_claim` aborted the
+//! worker; wrapped in [`io_retry`], a flaky mount degrades to latency
+//! instead of a dead worker.  Genuinely fatal kinds (permission
+//! denied, disk full, …) still fail on first sight.
+//!
+//! The backoff jitter is *deterministic* — an FNV hash of
+//! `(label, attempt)` — so retries never introduce nondeterminism into
+//! anything observable, while distinct labels (worker ids, cell
+//! indices) desynchronize workers hammering the same claim store.
+//! This is also what makes the chaos harness's injected transient
+//! errors (`crate::chaos`) replayable: the fault is placed *inside*
+//! the retried closure, one attempt consumes it, and the next attempt
+//! proceeds at a schedule-independent delay.
+
+use std::io;
+use std::time::Duration;
+
+use crate::util::fnv;
+
+/// Total attempts per op: 1 initial + up to `MAX_ATTEMPTS - 1`
+/// retries.  Worst-case added latency is ~`2^MAX_ATTEMPTS` ms — well
+/// under any lease TTL, so retrying never costs a claim.
+pub const MAX_ATTEMPTS: u32 = 4;
+
+/// Error kinds worth re-issuing the op for.  `AlreadyExists` is
+/// deliberately absent: for the create-exclusive claim open it is the
+/// protocol's "lost the race" signal, not an error.
+pub fn is_transient(kind: io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// Backoff before retry number `attempt` (0-based): base `2^attempt`
+/// ms plus an FNV-derived jitter in `[0, base)` keyed by the label.
+pub fn backoff(label: &str, attempt: u32) -> Duration {
+    let base = 1u64 << attempt.min(5);
+    let jitter = fnv::hash(label.bytes().chain(attempt.to_le_bytes())) % base;
+    Duration::from_millis(base + jitter)
+}
+
+/// Run `op`, retrying transient IO errors up to [`MAX_ATTEMPTS`] total
+/// attempts with [`backoff`] sleeps in between.  `label` keys the
+/// jitter — embed something per-call-site-unique (worker id, index).
+pub fn io_retry<T>(label: &str, mut op: impl FnMut() -> io::Result<T>) -> io::Result<T> {
+    let mut attempt = 0u32;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if is_transient(e.kind()) && attempt + 1 < MAX_ATTEMPTS => {
+                std::thread::sleep(backoff(label, attempt));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flaky(failures: usize, kind: io::ErrorKind) -> impl FnMut() -> io::Result<u32> {
+        let mut left = failures;
+        move || {
+            if left > 0 {
+                left -= 1;
+                Err(io::Error::new(kind, "flaky"))
+            } else {
+                Ok(7)
+            }
+        }
+    }
+
+    #[test]
+    fn transient_errors_heal_within_the_budget() {
+        let got = io_retry("t", flaky(MAX_ATTEMPTS as usize - 1, io::ErrorKind::Interrupted));
+        assert_eq!(got.unwrap(), 7);
+    }
+
+    #[test]
+    fn exhausting_the_budget_propagates_the_last_error() {
+        let got = io_retry("t", flaky(MAX_ATTEMPTS as usize, io::ErrorKind::TimedOut));
+        assert_eq!(got.unwrap_err().kind(), io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn non_transient_errors_fail_on_first_sight() {
+        let mut calls = 0u32;
+        let got: io::Result<()> = io_retry("t", || {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::PermissionDenied, "fatal"))
+        });
+        assert_eq!(got.unwrap_err().kind(), io::ErrorKind::PermissionDenied);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_bounded_and_label_keyed() {
+        for attempt in 0..MAX_ATTEMPTS {
+            let base = 1u64 << attempt.min(5);
+            let d = backoff("worker-1:3", attempt);
+            assert_eq!(d, backoff("worker-1:3", attempt));
+            assert!(d.as_millis() as u64 >= base);
+            assert!((d.as_millis() as u64) < 2 * base);
+        }
+        // The jitter is keyed by (label, attempt) through FNV: a
+        // changed label reseeds the whole sequence deterministically.
+        let a: Vec<_> = (0..4).map(|i| backoff("w-a", i)).collect();
+        assert_eq!(a, (0..4).map(|i| backoff("w-a", i)).collect::<Vec<_>>());
+    }
+}

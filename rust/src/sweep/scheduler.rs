@@ -265,6 +265,20 @@ pub fn run_dynamic(
                         done[i] = true;
                         continue;
                     }
+                    // Named chaos fault point "sched.cell", reached
+                    // with the lease held — the canonical
+                    // worker-dies-mid-lease injection.  In a worker
+                    // process a scheduled kill is a process::exit (no
+                    // Drop runs, the claim file stays behind exactly
+                    // like SIGKILL); in-process it surfaces as an error
+                    // after *leaking* the guard, so the lease is
+                    // likewise left for the stale-reclaim machinery.
+                    if let Err(e) = crate::chaos::fault("sched.cell") {
+                        std::mem::forget(guard);
+                        return Err(e).with_context(|| {
+                            format!("chaos fault before sweep cell {}", cell.index)
+                        });
+                    }
                     // On error the guard drops here, releasing the
                     // claim so other workers can retry immediately.
                     let ctx = CellCtx::under_lease(&guard);
@@ -281,7 +295,7 @@ pub fn run_dynamic(
                     if merge::read_fragment(&cdir, spec, cell).is_some() {
                         run.duplicates += 1;
                     }
-                    merge::write_fragment(&cdir, spec, cell, &result)?;
+                    merge::commit_fragment(&cdir, spec, cell, &result)?;
                     guard.release();
                     done[i] = true;
                     run.ran.push(cell.index);

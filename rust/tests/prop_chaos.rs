@@ -1,0 +1,404 @@
+//! Seeded chaos suite for the claim/lease/resume/session stack
+//! (`chaos::*` + `sweep::*`).
+//!
+//! The contract under test (see `sweep/mod.rs` "Chaos knobs" and
+//! `chaos/mod.rs` for the canonical prose):
+//!
+//! * **Results are chaos-invariant** — worker kills, corrupted/torn
+//!   fragment commits, transient claim-store IO errors and clock skew
+//!   may cost retries, reclaims and respawns, but the merged report is
+//!   byte-identical to a fault-free serial run.  Pinned here for
+//!   worker counts {1, 2, 3, 7} through real `repro sweep-worker`
+//!   subprocesses under the supervising orchestrator.
+//! * **Replay identity** — the fault schedule is a pure function of
+//!   (seed, profile, slot, generation): the same seed fires the same
+//!   faults, in the same order, at the same hit counts.
+//! * **Kill semantics** — a killed worker leaves its claim behind
+//!   (no `Drop` runs), the lease goes stale, and a successor reclaims
+//!   and finishes the cell.
+//! * **Respawn budget** — the supervisor relaunches crashed workers
+//!   while the budget lasts; a crash past the budget surfaces the
+//!   exit status (the chaos kill code is 86) instead of hanging.
+//!
+//! Chaos installation is process-global, so every test serializes on
+//! [`CHAOS_LOCK`] and clears the schedule on both sides of its work —
+//! in-process serial references must run fault-free.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use rmmlinear::chaos::{self, FaultAction, InstallOpts};
+use rmmlinear::config::TrainConfig;
+use rmmlinear::sweep::{
+    self,
+    claim::{self, ClaimAttempt},
+    merge, resume, DynamicConfig, Shard, SweepSpec,
+};
+use rmmlinear::util::json::Json;
+
+/// One lock around every chaos install in this binary: the schedule,
+/// hit counters and clock skew are process-global statics.
+static CHAOS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    let g = CHAOS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    chaos::clear();
+    g
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("rmm_prop_chaos_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Small mock grid for the in-process tests.
+fn mock_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new("mock", TrainConfig::default());
+    for t in 0..3usize {
+        for r in 0..2usize {
+            spec.push(
+                format!("v{t}_r{r}"),
+                format!("task{t}"),
+                1.0 / (r + 1) as f64,
+                if t % 2 == 0 { "gauss" } else { "dct" },
+                t as u64,
+                t * 8,
+            );
+        }
+    }
+    spec
+}
+
+fn report(dir: &Path, spec: &SweepSpec) -> String {
+    Json::Arr(merge::merge(dir, spec).expect("sweep incomplete")).to_string_pretty()
+}
+
+/// Fault-free serial reference (asserts chaos is off so a leaked
+/// install can never silently fault the reference itself).
+fn run_serial<F>(dir: &Path, spec: &SweepSpec, runner: &mut F) -> String
+where
+    F: FnMut(&sweep::Cell) -> Json,
+{
+    assert!(!chaos::enabled(), "serial reference must run fault-free");
+    resume::prepare(dir, spec, false).unwrap();
+    sweep::run_shard(dir, spec, Shard::SERIAL, &mut |c, _| Ok(runner(c))).unwrap();
+    report(dir, spec)
+}
+
+fn install(profile: &str, generation: u32) {
+    chaos::install(&InstallOpts {
+        seed: 11,
+        profile: profile.to_string(),
+        slot: 0,
+        generation,
+        exit_on_kill: false,
+        verbose: false,
+    })
+    .unwrap();
+}
+
+#[test]
+fn compiled_schedules_are_deterministic_slot_scoped_and_generation_filtered() {
+    let _g = lock();
+    for profile in chaos::PROFILES {
+        chaos::validate_profile(profile).unwrap();
+        let a = chaos::compile(9, profile, 2).unwrap();
+        let b = chaos::compile(9, profile, 2).unwrap();
+        assert_eq!(a, b, "compile must be deterministic for '{profile}'");
+        assert!(
+            a.iter().all(|e| e.slot == Some(2)),
+            "named-profile entries must be scoped to the compiling slot"
+        );
+    }
+    // crash profile, slot 0: the kill is scheduled within the first
+    // three sched.cell hits at generation 0 …
+    assert!(chaos::compile(11, "crash", 0)
+        .unwrap()
+        .iter()
+        .any(|e| e.action == FaultAction::Kill));
+    install("crash", 0);
+    let kills = (0..5)
+        .filter(|_| chaos::fault("sched.cell").is_err())
+        .count();
+    assert_eq!(kills, 1, "exactly one in-process kill must fire");
+    // … and is filtered out for a respawned (generation > 0) worker.
+    install("crash", 1);
+    for _ in 0..5 {
+        chaos::fault("sched.cell").expect("generation 1 must not re-kill");
+    }
+    chaos::clear();
+}
+
+#[test]
+fn transient_claim_errors_degrade_to_retries_and_replay_identically() {
+    let _g = lock();
+    let spec = mock_spec();
+    let serial = run_serial(&tmp_dir("retry_ref"), &spec, &mut |c| sweep::mock_cell(c));
+
+    let mut fired_runs = Vec::new();
+    for round in 0..2 {
+        let dir = tmp_dir(&format!("retry_{round}"));
+        resume::prepare(&dir, &spec, false).unwrap();
+        install("claim.create@0=err:interrupted;claim.refresh@0=err:timedout", 0);
+        let cfg = DynamicConfig::new("w0", 60_000);
+        sweep::run_dynamic(&dir, &spec, &cfg, &mut |c, _| Ok(sweep::mock_cell(c)))
+            .expect("transient chaos errors must heal through the retry layer");
+        let fired = chaos::fired();
+        chaos::clear();
+        assert!(
+            fired.iter().any(|l| l.contains("claim.create@0")),
+            "the scheduled claim fault must actually fire: {fired:?}"
+        );
+        assert_eq!(report(&dir, &spec), serial, "chaos run must match serial bytes");
+        fired_runs.push(fired);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    assert_eq!(
+        fired_runs[0], fired_runs[1],
+        "same seed + schedule must replay the identical fault sequence"
+    );
+}
+
+#[test]
+fn corrupted_fragment_commits_heal_before_publish() {
+    let _g = lock();
+    let spec = mock_spec();
+    let serial = run_serial(&tmp_dir("corrupt_ref"), &spec, &mut |c| sweep::mock_cell(c));
+
+    let dir = tmp_dir("corrupt");
+    resume::prepare(&dir, &spec, false).unwrap();
+    // first staged write garbage, fourth torn in half: commit
+    // verification must catch both and restage clean bytes
+    install("fragment.stage@0=garbage;fragment.stage@3=truncate", 0);
+    let cfg = DynamicConfig::new("w0", 60_000);
+    sweep::run_dynamic(&dir, &spec, &cfg, &mut |c, _| Ok(sweep::mock_cell(c)))
+        .expect("corrupted commits must heal via verified re-commit");
+    let fired = chaos::fired();
+    chaos::clear();
+    assert!(
+        fired.iter().any(|l| l.contains("garbage"))
+            && fired.iter().any(|l| l.contains("truncate")),
+        "both corruptions must fire: {fired:?}"
+    );
+    assert_eq!(report(&dir, &spec), serial, "healed run must match serial bytes");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn in_process_kill_leaves_the_claim_for_stale_lease_reclaim() {
+    let _g = lock();
+    let spec = mock_spec();
+    let serial = run_serial(&tmp_dir("kill_ref"), &spec, &mut |c| sweep::mock_cell(c));
+
+    let dir = tmp_dir("kill");
+    resume::prepare(&dir, &spec, false).unwrap();
+    install("sched.cell@0=kill", 0);
+    let cfg = DynamicConfig::new("victim", 60_000);
+    let err = sweep::run_dynamic(&dir, &spec, &cfg, &mut |c, _| Ok(sweep::mock_cell(c)))
+        .expect_err("an in-process kill must surface as an error");
+    chaos::clear();
+    assert!(format!("{err:#}").contains("chaos"), "unexpected error: {err:#}");
+    // the guard was deliberately leaked: the first claimed cell's
+    // lease survives the "crash" exactly like a SIGKILLed process
+    let cdir = resume::cells_dir(&dir);
+    assert!(
+        claim::claim_path(&cdir, 0).exists(),
+        "kill must leave the claim behind for the stale-lease machinery"
+    );
+    // a successor with a short TTL reclaims and finishes the grid
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    let cfg = DynamicConfig::new("successor", 50);
+    sweep::run_dynamic(&dir, &spec, &cfg, &mut |c, _| Ok(sweep::mock_cell(c)))
+        .expect("successor must reclaim the stale lease and finish");
+    assert_eq!(report(&dir, &spec), serial, "healed run must match serial bytes");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The acceptance pin: a fixed-seed chaos run — worker kill mid-lease,
+/// corrupted fragment commit, transient claim-store IO, clock skew —
+/// through real supervised worker processes merges byte-identically to
+/// the fault-free serial reference, for 1, 2, 3 and 7 workers, on the
+/// seeded synthetic workload grid.
+#[test]
+fn chaos_matrix_matches_fault_free_serial() {
+    let _g = lock();
+    let spec = sweep::synth_spec(7, "easy").unwrap();
+    let mut synth = |c: &sweep::Cell| sweep::synth_cell(&spec.experiment, c);
+    let serial = run_serial(&tmp_dir("matrix_ref"), &spec, &mut synth);
+
+    let exe = PathBuf::from(env!("CARGO_BIN_EXE_repro"));
+    for workers in [1usize, 2, 3, 7] {
+        let dir = tmp_dir(&format!("matrix_{workers}"));
+        resume::prepare(&dir, &spec, false).unwrap();
+        let extra: Vec<String> = [
+            "--schedule",
+            "dynamic",
+            "--lease-ttl-ms",
+            "1200",
+            "--chaos-seed",
+            "11",
+            "--chaos-profile",
+            "crash",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        sweep::spawn_workers_supervised(&exe, &dir, workers, &extra, 3)
+            .expect("supervised chaos sweep must complete within the respawn budget");
+        assert_eq!(
+            report(&dir, &spec),
+            serial,
+            "{workers}-worker chaos run must merge byte-identically to serial"
+        );
+        if workers == 1 {
+            // slot 0 of the crash profile dies and respawns: the gen-0
+            // log carries fired faults, and the gen-1 log exists
+            let gen0 =
+                std::fs::read_to_string(sweep::worker_log_path(&dir, 0)).unwrap();
+            assert!(gen0.contains("chaos["), "gen-0 log missing fired faults:\n{gen0}");
+            assert!(
+                sweep::worker_log_path_gen(&dir, 0, 1).exists(),
+                "kill + respawn must leave a gen-1 worker log"
+            );
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn same_seed_replays_the_identical_fault_sequence_across_runs() {
+    let _g = lock();
+    let spec = sweep::synth_spec(7, "easy").unwrap();
+    let exe = PathBuf::from(env!("CARGO_BIN_EXE_repro"));
+
+    let chaos_lines = |dir: &Path, gen: u32| -> Vec<String> {
+        let path = sweep::worker_log_path_gen(dir, 0, gen);
+        std::fs::read_to_string(path)
+            .unwrap_or_default()
+            .lines()
+            .filter(|l| l.contains("chaos["))
+            .map(str::to_string)
+            .collect()
+    };
+
+    let mut runs = Vec::new();
+    for round in 0..2 {
+        let dir = tmp_dir(&format!("replay_{round}"));
+        resume::prepare(&dir, &spec, false).unwrap();
+        let extra: Vec<String> = [
+            "--schedule",
+            "dynamic",
+            "--lease-ttl-ms",
+            "800",
+            "--chaos-seed",
+            "11",
+            "--chaos-profile",
+            "crash",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        sweep::spawn_workers_supervised(&exe, &dir, 1, &extra, 3).unwrap();
+        let gen0 = chaos_lines(&dir, 0);
+        let mut all = gen0.clone();
+        all.extend(chaos_lines(&dir, 1));
+        all.sort();
+        assert!(!gen0.is_empty(), "gen-0 must fire at least one fault");
+        runs.push((gen0, all));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    assert_eq!(
+        runs[0].0, runs[1].0,
+        "gen-0 fault sequences must be identical across same-seed runs"
+    );
+    assert_eq!(
+        runs[0].1, runs[1].1,
+        "the full fired-fault set must be identical across same-seed runs"
+    );
+}
+
+#[test]
+fn supervisor_respawns_within_budget_and_surfaces_exhaustion() {
+    let _g = lock();
+    let spec = mock_spec();
+    let exe = PathBuf::from(env!("CARGO_BIN_EXE_repro"));
+    let extra: Vec<String> = [
+        "--schedule",
+        "dynamic",
+        "--lease-ttl-ms",
+        "500",
+        "--chaos-seed",
+        "11",
+        "--chaos-profile",
+        "w0:sched.cell@0=kill",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+
+    // budget 0 = historical fail-fast: the chaos kill (exit code 86)
+    // must surface with its exit status
+    let dir = tmp_dir("budget0");
+    resume::prepare(&dir, &spec, false).unwrap();
+    let err = sweep::spawn_workers_supervised(&exe, &dir, 1, &extra, 0)
+        .expect_err("a kill with no respawn budget must fail the sweep");
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("exited with") && msg.contains("86"),
+        "diagnostic must carry the chaos kill exit status: {msg}"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // with budget, the respawned generation (kills filtered) finishes
+    let serial = run_serial(&tmp_dir("budget_ref"), &spec, &mut |c| sweep::mock_cell(c));
+    let dir = tmp_dir("budget2");
+    resume::prepare(&dir, &spec, false).unwrap();
+    sweep::spawn_workers_supervised(&exe, &dir, 1, &extra, 2)
+        .expect("one respawn must absorb the scheduled kill");
+    assert_eq!(report(&dir, &spec), serial, "respawned run must match serial bytes");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn clock_skew_shifts_heartbeats_but_leases_stay_coherent() {
+    let _g = lock();
+    let before = claim::now_ms();
+    install("clock@0=skew:5000", 0);
+    let skewed = claim::now_ms();
+    assert!(
+        skewed.saturating_sub(before) >= 5_000,
+        "installed skew must shift now_ms (before {before}, after {skewed})"
+    );
+
+    // claim written by the skewed worker: its heartbeat is ~5 s in an
+    // honest reader's future
+    let dir = tmp_dir("skew");
+    let cdir = resume::cells_dir(&dir);
+    std::fs::create_dir_all(&cdir).unwrap();
+    match claim::try_claim(&cdir, 0, "skewed-writer", 60_000).unwrap() {
+        ClaimAttempt::Won(guard) => std::mem::forget(guard), // keep the claim alive
+        ClaimAttempt::Held => panic!("first claim on an empty dir must win"),
+    }
+    chaos::clear(); // back to the honest clock
+
+    // within one TTL of the future the heartbeat is trusted (age 0) …
+    assert!(
+        matches!(claim::try_claim(&cdir, 0, "reader-a", 60_000).unwrap(), ClaimAttempt::Held),
+        "mildly-future heartbeat must read as live"
+    );
+    // … past it the embedded clock is disbelieved and the fresh mtime
+    // keeps the lease alive —
+    assert!(
+        matches!(claim::try_claim(&cdir, 0, "reader-b", 1_000).unwrap(), ClaimAttempt::Held),
+        "future-skewed heartbeat must fall back to (fresh) mtime, not get robbed"
+    );
+    // — until the mtime itself goes stale and the cell is reclaimed.
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    assert!(
+        matches!(claim::try_claim(&cdir, 0, "reader-c", 10).unwrap(), ClaimAttempt::Won(_)),
+        "stale-by-mtime skewed claim must be reclaimable"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}

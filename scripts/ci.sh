@@ -54,4 +54,18 @@ for T in 1 4; do
   RMM_THREADS=$T target/release/repro sweep-selftest --shards 2 --schedule dynamic --grid data --session-cache off
 done
 
+# Chaos byte-identity gate: a fixed-seed fault schedule (worker kill
+# mid-lease on slot 0, corrupted fragment commit, transient claim-store
+# IO errors, clock skew on other slots — the "crash" profile) hits the
+# sharded side only; the selftest's serial reference stays fault-free,
+# so the byte-compare pins the chaos acceptance invariant end to end:
+# faults may cost retries, reclaims and respawns, never results.  The
+# synth grid is the seeded synthetic workload (skewed planned costs),
+# run at both thread counts (prop_chaos.rs is the fine-grained gate).
+echo "== sweep smoke (synth grid, dynamic, chaos: kill + corrupt + transient IO) =="
+for T in 1 4; do
+  RMM_THREADS=$T target/release/repro sweep-selftest --shards 2 --schedule dynamic \
+    --grid synth-easy --chaos-seed 11 --chaos-profile crash
+done
+
 echo "ci: all gates passed"
