@@ -9,8 +9,9 @@
 //!
 //! `--json` additionally writes `reports/BENCH_kernels.json` (GFLOP/s per
 //! kernel × shape × backend, the 512³ speedup, the compute pool's task
-//! grain / steal counters, and the batched-vs-column SORS comparison) so
-//! later PRs have a perf trajectory to diff against.
+//! grain / steal counters, the batched-vs-column SORS comparison, and the
+//! closed-form variance-at-ρ entry per estimator configuration) so later
+//! PRs have a perf trajectory to diff against.
 
 use rmmlinear::bench_harness::runner::num_or_null;
 use rmmlinear::data::{AnyBatcher, Batcher, Split, Task, TaskGen, Tokenizer};
@@ -169,6 +170,46 @@ fn main() {
             ));
         }
     }
+
+    // ---- closed-form variance at ρ per family (Lemma 2.2 closed forms) ----
+    // One row per (estimator configuration, ρ) on the bench tensors above,
+    // mirroring the equal-budget table's accuracy axis: the seven
+    // configurations are the six `SketchKind`s plus the approximate-VJP
+    // variant (grad-weight variance identical to its underlying family,
+    // grad-input exact).
+    let variance_rows: Vec<Json> = {
+        let mut vrows = Vec::new();
+        for rho in [0.5f64, 0.2, 0.1, 0.05] {
+            let b_proj = ((rho * rows as f64) as usize).max(1);
+            for kind in SketchKind::ALL {
+                vrows.push(Json::obj(vec![
+                    ("estimator", Json::str(kind.name())),
+                    ("rho", Json::num(rho)),
+                    ("b_proj", Json::num(b_proj as f64)),
+                    ("d2", num_or_null(rmm::variance::d2_family(kind, &x, &y, b_proj))),
+                ]));
+            }
+            vrows.push(Json::obj(vec![
+                ("estimator", Json::str("avjp-gauss")),
+                ("rho", Json::num(rho)),
+                ("b_proj", Json::num(b_proj as f64)),
+                (
+                    "d2",
+                    num_or_null(rmm::variance::d2_approx_vjp(
+                        SketchKind::Gauss,
+                        &x,
+                        &y,
+                        b_proj,
+                    )),
+                ),
+            ]));
+        }
+        vrows
+    };
+    println!(
+        "variance-at-rho entries: {} (families x rho, incl. avjp-gauss)",
+        variance_rows.len()
+    );
 
     // ---- batched vs column-by-column SORS (the fft.rs rewrite) ----
     let mut sors_batched_speedup_1024 = f64::NAN;
@@ -389,6 +430,7 @@ fn main() {
                     ("total_steals", Json::num(totals.steals as f64)),
                 ]),
             ),
+            ("variance", Json::Arr(variance_rows)),
             ("rows", Json::Arr(krows.iter().map(|r| r.to_json()).collect())),
         ]);
         let path = "reports/BENCH_kernels.json";

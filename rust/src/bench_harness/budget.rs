@@ -1,0 +1,156 @@
+//! Equal-budget estimator comparison: accuracy proxy (closed-form
+//! grad-weight variance, Lemma 2.2) vs memory for **all seven estimator
+//! configurations** — the five original families (Gauss / Rademacher /
+//! DCT / DFT / RowSample) plus WTA-CRS and an approximate-VJP variant —
+//! at one shared per-step memory budget, next to the closed-loop
+//! controller ("auto" / "avjp-auto") choosing (family, ρ) online under
+//! the same budget.
+//!
+//! Engine-free by construction: the `budget` cells run on Philox-seeded
+//! probe tensors (see `runner::run_budget_cell`), so this table is
+//! runnable anywhere the crate builds — CI included — and every row is a
+//! pure function of its cell.  Lower mean D² at equal bytes is the
+//! paper's accuracy order: Lemma 2.2 bounds the estimator's excess loss
+//! by its gradient variance, so at a fixed memory budget the
+//! minimum-variance configuration is the accuracy winner.
+//!
+//! Thin grid declaration over `sweep::`, like `table4`: controller rows
+//! first, then the seven fixed configurations in canonical order.
+
+use crate::config::TrainConfig;
+use crate::sweep::SweepSpec;
+use crate::util::json::Json;
+
+/// The seven estimator configurations the table compares at equal
+/// budget: five original families, WTA-CRS, and one approximate-VJP
+/// per-path variant.
+pub const ESTIMATORS: [&str; 7] =
+    ["gauss", "rademacher", "dct", "dft", "rowsample", "wtacrs", "avjp-gauss"];
+
+/// Controller axes: the closed loop picks (family, ρ) per layer-step
+/// under the budget; `avjp-auto` does the same with the grad-input path
+/// kept exact.
+pub const CONTROLLER_AXES: [&str; 2] = ["auto", "avjp-auto"];
+
+/// The equal-budget grid: controller rows first, then the seven fixed
+/// estimator configurations, each at the shared `mem_budget` for every
+/// seed.
+pub fn spec(train: TrainConfig, mem_budget: f64, seeds: &[u64]) -> SweepSpec {
+    let mut spec = SweepSpec::new("budget", train);
+    for &axis in &CONTROLLER_AXES {
+        let variant = if axis == "auto" { "ctl_auto" } else { "ctl_avjp" };
+        for &seed in seeds {
+            spec.push(variant, "probe", mem_budget, axis, seed, 16);
+        }
+    }
+    for &est in &ESTIMATORS {
+        for &seed in seeds {
+            spec.push(format!("est_{est}"), "probe", mem_budget, est, seed, 16);
+        }
+    }
+    spec
+}
+
+/// Fold merged `budget` cell results into the console table and the
+/// report rows.  Controller rows additionally carry their recorded
+/// choice digest, pinning the (family, ρ) sequence into the report.
+pub fn assemble(spec: &SweepSpec, results: &[Json]) -> Json {
+    println!(
+        "\nEqual-budget estimator comparison (mean closed-form D\u{b2} vs \
+         residual bytes; lower D\u{b2} at equal bytes wins)"
+    );
+    println!(
+        "{:>12} {:>8} {:>6} {:>12} {:>14} {:>18}",
+        "estimator", "budget", "seed", "peak bytes", "mean D2", "choice digest"
+    );
+    let mut rows = Vec::new();
+    for (cell, res) in spec.cells.iter().zip(results) {
+        let d2 = res.get("mean_d2").as_f64();
+        let bytes = res.get("peak_bytes").as_f64().unwrap_or(f64::NAN);
+        let digest = res.get("choice_digest").as_str().unwrap_or("?");
+        println!(
+            "{:>12} {:>8} {:>6} {:>12.0} {:>14} {:>18}",
+            cell.sketch,
+            cell.rho,
+            cell.seed,
+            bytes,
+            match d2 {
+                Some(v) => format!("{v:.4}"),
+                None => "-".to_string(),
+            },
+            digest
+        );
+        rows.push(Json::obj(vec![
+            ("estimator_axis", Json::str(cell.sketch.clone())),
+            ("mem_budget", Json::num(cell.rho)),
+            ("seed", Json::num(cell.seed as f64)),
+            ("rows", res.get("rows").clone()),
+            ("peak_bytes", res.get("peak_bytes").clone()),
+            ("mean_d2", res.get("mean_d2").clone()),
+            ("choice_digest", res.get("choice_digest").clone()),
+        ]));
+    }
+    Json::obj(vec![
+        ("experiment", Json::str("budget")),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::runner::run_budget_cell;
+
+    #[test]
+    fn grid_covers_controller_rows_and_all_seven_estimators() {
+        let s = spec(TrainConfig::default(), 0.5, &[1, 2]);
+        assert_eq!(
+            s.cells.len(),
+            (CONTROLLER_AXES.len() + ESTIMATORS.len()) * 2
+        );
+        assert_eq!(s.cells[0].sketch, "auto");
+        for est in ESTIMATORS {
+            assert!(
+                s.cells.iter().any(|c| c.sketch == est),
+                "estimator '{est}' missing from the grid"
+            );
+        }
+        for cell in &s.cells {
+            assert!((cell.rho - 0.5).abs() < 1e-12, "unequal budget on {cell:?}");
+        }
+    }
+
+    #[test]
+    fn controller_never_loses_to_a_fixed_family_at_equal_budget() {
+        // The closed loop scans every (family, ρ) the fixed rows price,
+        // so at the same budget its mean D² must be ≤ each fixed row's
+        // (it can also trade down ρ, which fixed rows cannot).
+        let s = spec(TrainConfig::default(), 0.5, &[3]);
+        let results: Vec<Json> =
+            s.cells.iter().map(|c| run_budget_cell(c).unwrap()).collect();
+        let auto_d2 = results[0].get("mean_d2").as_f64().unwrap();
+        for (cell, res) in s.cells.iter().zip(&results).skip(CONTROLLER_AXES.len()) {
+            let fixed_d2 = res.get("mean_d2").as_f64().unwrap();
+            assert!(
+                auto_d2 <= fixed_d2 + 1e-9,
+                "controller {auto_d2} worse than fixed {} {fixed_d2}",
+                cell.sketch
+            );
+        }
+    }
+
+    #[test]
+    fn assemble_carries_digests_and_budget_per_row() {
+        let s = spec(TrainConfig::default(), 0.2, &[1]);
+        let results: Vec<Json> =
+            s.cells.iter().map(|c| run_budget_cell(c).unwrap()).collect();
+        let rep = assemble(&s, &results);
+        let rows = rep.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), s.cells.len());
+        for row in rows {
+            assert_eq!(row.get("mem_budget").as_f64(), Some(0.2));
+            let digest = row.get("choice_digest").as_str().unwrap();
+            assert_eq!(digest.len(), 16, "digest must be 16 hex chars: {digest}");
+        }
+    }
+}

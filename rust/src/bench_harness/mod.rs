@@ -3,6 +3,7 @@
 //! Each driver prints the paper-style rows and returns a JSON report the
 //! CLI writes under `reports/` for EXPERIMENTS.md regeneration.
 
+pub mod budget;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;

@@ -151,6 +151,24 @@ impl SweepConfig {
     }
 }
 
+/// RMM estimator knobs (see `rmm::controller`).  `None` fields express no
+/// preference: the CLI flags / grid axes then decide per run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RmmConfig {
+    /// Per-step memory budget for the closed-loop controller: the allowed
+    /// fraction of the exact (ρ=1) residual, in (0, 1]
+    /// (`--mem-budget`).  When set, the controller picks the
+    /// minimum-variance (family, ρ) per layer under this budget instead
+    /// of a static grid axis.
+    pub mem_budget: Option<f64>,
+}
+
+impl RmmConfig {
+    pub fn is_unset(&self) -> bool {
+        self.mem_budget.is_none()
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     /// Artifact variant name (a key of manifest.json), e.g.
@@ -168,6 +186,8 @@ pub struct ExperimentConfig {
     pub pool: PoolConfig,
     /// Sweep-orchestrator defaults (shard count, resume).
     pub sweep: SweepConfig,
+    /// RMM estimator / variance-controller knobs.
+    pub rmm: RmmConfig,
     pub train: TrainConfig,
 }
 
@@ -181,6 +201,7 @@ impl Default for ExperimentConfig {
             backend: None,
             pool: PoolConfig::default(),
             sweep: SweepConfig::default(),
+            rmm: RmmConfig::default(),
             train: TrainConfig::default(),
         }
     }
@@ -199,6 +220,7 @@ impl ExperimentConfig {
                 "backend" => cfg.backend = Some(req_str(v, k)?),
                 "pool" => cfg.pool = parse_pool(v)?,
                 "sweep" => cfg.sweep = parse_sweep(v)?,
+                "rmm" => cfg.rmm = parse_rmm(v)?,
                 "train" => cfg.train = parse_train(v)?,
                 other => bail!("unknown config key '{other}'"),
             }
@@ -272,6 +294,15 @@ impl ExperimentConfig {
                 map.insert("sweep".to_string(), Json::obj(s));
             }
         }
+        if !self.rmm.is_unset() {
+            let mut r = Vec::new();
+            if let Some(mb) = self.rmm.mem_budget {
+                r.push(("mem_budget", Json::num(mb)));
+            }
+            if let Json::Obj(map) = &mut j {
+                map.insert("rmm".to_string(), Json::obj(r));
+            }
+        }
         j
     }
 
@@ -338,6 +369,11 @@ impl ExperimentConfig {
         if let Some(p) = &self.sweep.chaos_profile {
             crate::chaos::validate_profile(p)
                 .with_context(|| format!("bad sweep.chaos_profile '{p}'"))?;
+        }
+        if let Some(mb) = self.rmm.mem_budget {
+            if !mb.is_finite() || mb <= 0.0 || mb > 1.0 {
+                bail!("rmm.mem_budget must be in (0, 1], got {mb}");
+            }
         }
         let t = &self.train;
         if t.steps == 0 {
@@ -406,6 +442,18 @@ fn parse_sweep(j: &Json) -> Result<SweepConfig> {
         }
     }
     Ok(s)
+}
+
+fn parse_rmm(j: &Json) -> Result<RmmConfig> {
+    let mut r = RmmConfig::default();
+    let obj = j.as_obj().context("'rmm' must be an object")?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "mem_budget" => r.mem_budget = Some(num(v, k)?),
+            other => bail!("unknown rmm key '{other}'"),
+        }
+    }
+    Ok(r)
 }
 
 fn parse_train(j: &Json) -> Result<TrainConfig> {
@@ -528,6 +576,11 @@ mod tests {
             r#"{"sweep": {"affinity": 1}}"#,
             r#"{"train": {"prefetch": "yes"}}"#,
             r#"{"train": {"prefetch_depth": 0}}"#,
+            r#"{"rmm": {"bogus": 1}}"#,
+            r#"{"rmm": {"mem_budget": 0}}"#,
+            r#"{"rmm": {"mem_budget": -0.5}}"#,
+            r#"{"rmm": {"mem_budget": 1.5}}"#,
+            r#"{"rmm": {"mem_budget": "tight"}}"#,
         ] {
             let j = Json::parse(src).unwrap();
             assert!(ExperimentConfig::from_json(&j).is_err(), "{src}");
@@ -605,6 +658,22 @@ mod tests {
                 "config should be rejected: {bad}"
             );
         }
+    }
+
+    #[test]
+    fn rmm_section_parses_and_roundtrips() {
+        let j = Json::parse(r#"{"rmm": {"mem_budget": 0.25}}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.rmm.mem_budget, Some(0.25));
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // the whole residual is a valid (trivial) budget
+        let j = Json::parse(r#"{"rmm": {"mem_budget": 1.0}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_ok());
+        // absent section -> no preference, and to_json omits it
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(cfg.rmm.is_unset());
+        assert!(cfg.to_json().get("rmm").is_none());
     }
 
     #[test]

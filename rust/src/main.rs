@@ -5,7 +5,7 @@
 //! repro eval  --variant small_cls2_r50_gauss --task cola --checkpoint runs/ck.bin
 //! repro pretrain --steps 600 --out runs/pretrained.bin
 //! repro bench-table2 [--tasks cola,sst2] [--steps 300] [--shards 3] [--resume]
-//! repro bench-table3 | bench-table4 | bench-fig3 | bench-fig4 | bench-fig5 | bench-fig6
+//! repro bench-table3 | bench-table4 | bench-budget | bench-fig3 | bench-fig4 | bench-fig5 | bench-fig6
 //! repro sweep-worker --dir reports/sweep_table2 --shard 0/3
 //! repro sweep-selftest [--shards 2]
 //! repro inspect-artifacts
@@ -178,6 +178,29 @@ fn load_session(args: &Args) -> Result<Session> {
     Ok(Session::new(Engine::cpu()?, load_manifest(args)?, caching))
 }
 
+/// Strict `--mem-budget` resolve (CLI > config `rmm.mem_budget` > 0.5):
+/// the closed-loop controller's allowed residual fraction of the exact
+/// ρ=1 layer store, in (0, 1] — the same validation the config file
+/// enforces, so the two surfaces agree on what is invalid.
+fn mem_budget_arg(args: &Args) -> Result<f64> {
+    if let Some(v) = args.get("mem-budget") {
+        return v
+            .parse::<f64>()
+            .ok()
+            .filter(|b| b.is_finite() && *b > 0.0 && *b <= 1.0)
+            .with_context(|| {
+                format!("--mem-budget must be a number in (0, 1], got '{v}'")
+            });
+    }
+    if let Some(path) = args.get("config") {
+        let cfg = rmmlinear::config::ExperimentConfig::load(Path::new(path))?;
+        if let Some(b) = cfg.rmm.mem_budget {
+            return Ok(b);
+        }
+    }
+    Ok(0.5)
+}
+
 /// Strict `--lease-ttl-ms` parse: a present flag must be a positive
 /// integer (mirroring the config-file validation — a 0/garbage TTL would
 /// make every in-flight claim instantly stealable, not "off").
@@ -275,8 +298,13 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
                  use --shards N (N >= 1 worker processes) to inject faults"
             );
         }
-        let mut session =
-            Session::new(Engine::cpu()?, load_manifest(args)?, session_cache);
+        // Engine-free experiments (the budget grid runs on Philox probe
+        // tensors) must not demand artifacts just to run inline.
+        let mut session = match spec.experiment.as_str() {
+            "mock" | "mockdata" | "budget" => Session::data_only(session_cache),
+            s if s.starts_with("synth-") => Session::data_only(session_cache),
+            _ => Session::new(Engine::cpu()?, load_manifest(args)?, session_cache),
+        };
         let mut runner = |cell: &sweep::Cell, ctx: &CellCtx<'_>| {
             bench::runner::run_cell(&mut session, spec, cell, ctx)
         };
@@ -373,6 +401,7 @@ fn run(argv: &[String]) -> Result<()> {
         "bench-table2" => cmd_table2(&args),
         "bench-table3" => cmd_table3(&args),
         "bench-table4" => cmd_table4(&args),
+        "bench-budget" => cmd_budget(&args),
         "bench-fig3" => cmd_fig3(&args),
         "bench-fig4" => cmd_fig4(&args),
         "bench-fig5" => cmd_fig5(&args),
@@ -408,6 +437,12 @@ COMMANDS
                     [--shards N] [--resume]
   bench-table4      sketch-family comparison on CoLA (Table 4)
                     [--shards N] [--resume]
+  bench-budget      equal-budget estimator comparison: all seven estimator
+                    configurations (five families + wtacrs + avjp-gauss)
+                    and the closed-loop controller at one per-step memory
+                    budget; engine-free (Philox probe tensors), every
+                    (family, rho) choice recorded in the fragment
+                    [--mem-budget F] [--seeds 1,2] [--shards N] [--resume]
   sweep-worker      run one worker of a prepared sweep (self-spawned by the
                     table drivers) --dir DIR --shard i/N
                     [--schedule static|dynamic --lease-ttl-ms N]
@@ -415,13 +450,17 @@ COMMANDS
   sweep-selftest    sweep-machinery smoke: serial vs --shards N worker
                     processes must merge byte-identically
                     [--schedule static|dynamic]
-                    [--grid mock|data|synth-easy|synth-medium|synth-hard]
+                    [--grid mock|data|budget|synth-easy|synth-medium|
+                     synth-hard]
                     [--session-cache on|off] [--synth-seed N]
                     [--chaos-seed N [--chaos-profile P]] (--grid data
-                    runs the warm session layer's data path; synth-*
-                    are seeded workload grids with skewed planned
-                    costs; chaos faults hit only the sharded side —
-                    the serial reference stays cold and fault-free)
+                    runs the warm session layer's data path; --grid
+                    budget runs the closed-loop variance controller's
+                    engine-free cells, pinning its recorded (family,
+                    rho) choice sequences; synth-* are seeded workload
+                    grids with skewed planned costs; chaos faults hit
+                    only the sharded side — the serial reference stays
+                    cold and fault-free)
   bench-fig3        memory vs batch size [--all-tasks] (Fig 3/8)
   bench-fig4        variance-probe series (Fig 4/7)
   bench-fig5        loss curves vs rho [--task mnli] (Fig 5/9)
@@ -499,6 +538,11 @@ COMMON OPTIONS
   --synth-seed N    seed for the synth-easy|medium|hard selftest grids
                     (default 1); cells and their planned costs are a
                     pure function of the seed
+  --mem-budget F    bench-budget: allowed residual fraction of the exact
+                    rho=1 layer store, in (0, 1] (default 0.5; config:
+                    rmm.mem_budget — the CLI flag wins); the closed-loop
+                    controller picks the minimum-variance (family, rho)
+                    whose projection fits the budget
 ";
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -689,6 +733,16 @@ fn cmd_table4(args: &Args) -> Result<()> {
     bench::write_report(&reports_dir(args), "table4", &report)
 }
 
+fn cmd_budget(args: &Args) -> Result<()> {
+    let cfg = train_config(args)?;
+    let budget = mem_budget_arg(args)?;
+    let seeds = parse_seeds(args, cfg.seed);
+    let spec = bench::budget::spec(cfg, budget, &seeds);
+    let results = run_sweep(args, &spec, "budget")?;
+    let report = bench::budget::assemble(&spec, &results);
+    bench::write_report(&reports_dir(args), "budget", &report)
+}
+
 /// Strict sweep-scheduler parse for the worker/selftest entries (no
 /// LR-schedule fallback: these commands never train from flags).
 fn worker_schedule(args: &Args) -> Result<Schedule> {
@@ -741,7 +795,7 @@ fn cmd_sweep_worker(args: &Args) -> Result<()> {
     // artifacts or engine — the synth tiers exist precisely so chaos
     // runs can hammer the orchestration layer without real training.
     let mut session = match spec.experiment.as_str() {
-        "mock" | "mockdata" => Session::data_only(session_cache),
+        "mock" | "mockdata" | "budget" => Session::data_only(session_cache),
         s if s.starts_with("synth-") => Session::data_only(session_cache),
         _ => Session::new(Engine::cpu()?, load_manifest(args)?, session_cache),
     };
@@ -789,11 +843,12 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
     let spec = match grid {
         "mock" => sweep::selftest_spec(),
         "data" => sweep::selftest_data_spec(),
+        "budget" => sweep::selftest_budget_spec(),
         g if g.starts_with("synth-") => {
             sweep::synth_spec(args.get_u64("synth-seed", 1), &g["synth-".len()..])?
         }
         other => bail!(
-            "unknown --grid '{other}' (mock|data|synth-easy|synth-medium|synth-hard)"
+            "unknown --grid '{other}' (mock|data|budget|synth-easy|synth-medium|synth-hard)"
         ),
     };
     let session_cache = session_cache_flag(args, &SweepConfig::default())?;

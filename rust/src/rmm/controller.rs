@@ -1,0 +1,237 @@
+//! Closed-loop per-layer estimator selection (the ROADMAP's "closed-loop
+//! variance control" item).
+//!
+//! Instead of fixing (family, ρ) on a static grid axis, the controller
+//! prices every candidate configuration *online* with the Lemma-2.2
+//! closed forms in [`super::variance`] — exact forms for Gauss and the
+//! sampling families, the paper's generic form for the SRHT-like
+//! transforms — and selects the minimum-variance configuration whose
+//! projected residual fits a per-step memory budget (`--mem-budget`,
+//! config `rmm.mem_budget`: the allowed fraction of the exact ρ=1
+//! residual).
+//!
+//! Determinism contract: `choose` is a pure function of (probe tensors,
+//! budget, candidate sets).  The probe tensors in the sweep's `budget`
+//! grid are Philox-generated from the cell seed, so a run's whole choice
+//! sequence is a pure function of the cell and can be recorded in the
+//! fragment JSON without breaking the byte-identity invariants — the
+//! tie-break is "first candidate wins" in the fixed
+//! families-outer/ρ-inner scan order, never a float ULP race.
+
+use super::sketch::SketchKind;
+use super::variance;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Default candidate compression ratios, scanned in this order
+/// (descending memory, matching the sweep grids' ρ axis plus one finer
+/// step).
+pub const RHO_CANDIDATES: [f64; 5] = [1.0, 0.5, 0.2, 0.1, 0.05];
+
+/// Bytes per stored f32.
+const F32: usize = 4;
+
+/// `b_proj` for a compression ratio — must stay identical to
+/// `memory::accounting::MemoryModel::b_proj` so the controller prices the
+/// same projection the tape would actually store.
+pub fn b_proj_for(rho: f64, rows: usize) -> usize {
+    if rho >= 1.0 {
+        rows
+    } else {
+        ((rho * rows as f64).round() as usize).clamp(1, rows)
+    }
+}
+
+/// One per-layer decision: the winning configuration and its price tags.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Choice {
+    pub family: SketchKind,
+    /// Grad-input path kept exact (approximate-VJP mode, arXiv 2602.14701)
+    /// — carried from the controller's configured per-path mode.
+    pub approx_vjp: bool,
+    pub rho: f64,
+    pub b_proj: usize,
+    /// Closed-form grad-weight variance of the winning configuration.
+    pub d2: f64,
+    /// Residual bytes this choice stores for the layer (b_proj · N · 4).
+    pub bytes: usize,
+}
+
+impl Choice {
+    /// The sweep's sketch-string form of this choice ("gauss",
+    /// "avjp-wtacrs", …).
+    pub fn estimator_name(&self) -> String {
+        if self.approx_vjp {
+            format!("avjp-{}", self.family.name())
+        } else {
+            self.family.name().to_string()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let d2 = if self.d2.is_finite() {
+            Json::num(self.d2)
+        } else {
+            Json::Null // non-finite metrics serialize as null, never NaN
+        };
+        Json::obj(vec![
+            ("estimator", Json::str(self.estimator_name())),
+            ("rho", Json::num(self.rho)),
+            ("b_proj", Json::num(self.b_proj as f64)),
+            ("d2", d2),
+            ("bytes", Json::num(self.bytes as f64)),
+        ])
+    }
+}
+
+/// Per-layer closed-loop controller.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    /// Allowed residual fraction of the exact (ρ=1) layer store, in (0, 1].
+    pub mem_budget: f64,
+    /// Candidate families, scanned in order (outer loop).
+    pub families: Vec<SketchKind>,
+    /// Candidate ratios, scanned in order (inner loop).
+    pub rhos: Vec<f64>,
+    /// When true, every choice runs in approximate-VJP mode (sketch only
+    /// on the grad-weight path, exact grad-input).
+    pub approx_vjp: bool,
+}
+
+impl Controller {
+    /// All six families over [`RHO_CANDIDATES`] under `mem_budget`.
+    pub fn new(mem_budget: f64) -> Controller {
+        Controller {
+            mem_budget,
+            families: SketchKind::ALL.to_vec(),
+            rhos: RHO_CANDIDATES.to_vec(),
+            approx_vjp: false,
+        }
+    }
+
+    /// Price one (family, ρ) candidate on probe tensors X:(B,N), Y:(B,M):
+    /// the closed-form grad-weight variance plus the residual bytes the
+    /// tape would store.  `choose` scans these; the `budget` bench cells
+    /// also price *fixed* estimator configurations through the same path
+    /// so controller rows and fixed rows are directly comparable.
+    pub fn price(&self, family: SketchKind, rho: f64, x: &Tensor, y: &Tensor) -> Choice {
+        let b_proj = b_proj_for(rho, x.rows);
+        Choice {
+            family,
+            approx_vjp: self.approx_vjp,
+            rho,
+            b_proj,
+            d2: variance::d2_family(family, x, y, b_proj),
+            bytes: b_proj * x.cols * F32,
+        }
+    }
+
+    /// Pick the minimum-variance feasible configuration for one layer,
+    /// given probe tensors X:(B,N), Y:(B,M) standing in for the stored
+    /// activation and the incoming gradient.  If the budget admits no
+    /// candidate (budget < 1/B), fall back to the cheapest one so the
+    /// trainer still has a defined estimator — the fallback is equally
+    /// deterministic.
+    pub fn choose(&self, x: &Tensor, y: &Tensor) -> Choice {
+        let rows = x.rows;
+        let budget_rows = self.mem_budget * rows as f64 + 1e-9;
+        let mut best: Option<Choice> = None;
+        let mut fallback: Option<Choice> = None;
+        for &family in &self.families {
+            for &rho in &self.rhos {
+                let cand = self.price(family, rho, x, y);
+                match &fallback {
+                    Some(f) if cand.b_proj >= f.b_proj => {}
+                    _ => fallback = Some(cand.clone()),
+                }
+                if (cand.b_proj as f64) > budget_rows {
+                    continue; // over budget
+                }
+                // strict less: the first candidate in scan order wins ties
+                match &best {
+                    Some(b) if cand.d2 >= b.d2 => {}
+                    _ => best = Some(cand),
+                }
+            }
+        }
+        best.or(fallback)
+            .expect("controller needs non-empty candidate sets")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::philox::PhiloxStream;
+
+    fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut s = PhiloxStream::new(seed, 3);
+        Tensor::from_fn(rows, cols, |_, _| s.next_normal())
+    }
+
+    #[test]
+    fn pick_minimizes_over_all_feasible_candidates() {
+        // With the whole residual allowed every (family, ρ) is feasible,
+        // so the pick must price at or below the entire candidate grid.
+        // (At ρ=1 that's WTA-CRS in practice: half the columns become
+        // deterministic winners, cutting the stochastic pool in half.)
+        let x = randt(32, 5, 1);
+        let y = randt(32, 4, 2);
+        let ctl = Controller::new(1.0);
+        let pick = ctl.choose(&x, &y);
+        for family in SketchKind::ALL {
+            for &rho in &RHO_CANDIDATES {
+                let bp = b_proj_for(rho, 32);
+                assert!(
+                    pick.d2 <= variance::d2_family(family, &x, &y, bp) + 1e-12,
+                    "{family:?} rho={rho} beats the pick"
+                );
+            }
+        }
+        assert!(pick.bytes <= 32 * 5 * 4);
+    }
+
+    #[test]
+    fn budget_constrains_bytes() {
+        let x = randt(40, 6, 3);
+        let y = randt(40, 3, 4);
+        for budget in [1.0, 0.5, 0.2, 0.1] {
+            let pick = Controller::new(budget).choose(&x, &y);
+            assert!(
+                pick.b_proj as f64 <= budget * 40.0 + 1e-9,
+                "budget={budget} b_proj={}",
+                pick.b_proj
+            );
+        }
+    }
+
+    #[test]
+    fn impossible_budget_falls_back_to_cheapest() {
+        let x = randt(8, 4, 5);
+        let y = randt(8, 4, 6);
+        // 0.05·8 = 0.4 rows: nothing feasible, fall back to b_proj = 1
+        let pick = Controller::new(0.05).choose(&x, &y);
+        assert_eq!(pick.b_proj, 1);
+    }
+
+    #[test]
+    fn choice_is_deterministic_and_json_stable() {
+        let x = randt(24, 5, 7);
+        let y = randt(24, 4, 8);
+        let a = Controller::new(0.3).choose(&x, &y);
+        let b = Controller::new(0.3).choose(&x, &y);
+        assert_eq!(a, b);
+        assert_eq!(a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+    }
+
+    #[test]
+    fn approx_vjp_mode_is_carried_into_the_choice() {
+        let x = randt(16, 3, 9);
+        let y = randt(16, 3, 10);
+        let mut ctl = Controller::new(0.5);
+        ctl.approx_vjp = true;
+        let pick = ctl.choose(&x, &y);
+        assert!(pick.approx_vjp);
+        assert!(pick.estimator_name().starts_with("avjp-"));
+    }
+}

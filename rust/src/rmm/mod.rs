@@ -2,14 +2,43 @@
 //! fast transforms.  This is the *CPU-side* mirror of the Pallas/JAX stack —
 //! used for property tests, cross-language golden checks, host baselines in
 //! the benches, and the Adelman-style comparison.
+//!
+//! ## Estimator families
+//!
+//! Six fused `project_streamed` families share one seed-addressed
+//! interface (S is never materialized): the paper's `gauss`,
+//! `rademacher`, `dct`, `dft` and `rowsample`, plus `wtacrs` — WTA-CRS
+//! (winner-take-all column-row sampling, arXiv 2305.15265) in its
+//! data-independent uniform-mass form: half the projection budget buys
+//! deterministic distinct winner rows at scale 1, the rest samples the
+//! loser complement (see [`sketch::wta_plan`]); its exact closed-form
+//! variance is [`variance::d2_wtacrs`].
+//!
+//! On top of the family axis sits a per-path mode
+//! ([`GradPathMode`], arXiv 2602.14701): `avjp-<family>` sketch strings
+//! select the approximate-VJP configuration, which applies the sketch
+//! only on the grad-weight path and keeps the grad-input VJP exact —
+//! [`backward_linear`] implements both modes host-side.
+//!
+//! ## Closed-loop variance control
+//!
+//! [`controller`] replaces the static (family, ρ) grid axis: given a
+//! per-step memory budget (`--mem-budget` / config `rmm.mem_budget`, the
+//! allowed fraction of the exact ρ=1 residual), it evaluates the
+//! Lemma-2.2 closed forms ([`variance::d2_family`]) for every candidate
+//! (family, ρ) online and picks the minimum-variance feasible
+//! configuration per layer.  The choice sequence is a pure function of
+//! (probe tensors, budget), so sweep fragments recording it stay
+//! byte-identical for any worker/thread count.
 
+pub mod controller;
 pub mod fft;
 pub mod sketch;
 pub mod variance;
 
 pub use sketch::SketchKind;
 
-use crate::tensor::{matmul_at, Tensor};
+use crate::tensor::{matmul, matmul_at, Tensor};
 
 /// Exact ∂W = Yᵀ X (paper eq. 3; baseline path).
 pub fn exact_grad_w(y: &Tensor, x: &Tensor) -> Tensor {
@@ -30,6 +59,83 @@ pub fn rmm_grad_w(
 ) -> Tensor {
     let y_proj = sketch::project_streamed(kind, y, x_proj.rows, seed);
     matmul_at(&y_proj, x_proj)
+}
+
+/// Which backward paths the sketch touches (per-path mode,
+/// arXiv 2602.14701).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradPathMode {
+    /// Fully-sketched backward: dY is projected once and reused on both
+    /// paths — ∂W ≈ (SᵀdY)ᵀX_proj and ∂X ≈ S·(SᵀdY)·W (both unbiased,
+    /// one projection pass over dY).
+    Sketched,
+    /// Approximate-VJP: the sketch touches only the grad-weight path;
+    /// grad-input is the exact VJP ∂X = dY·W.
+    ExactGradInput,
+}
+
+/// An estimator configuration on the sweep's sketch-string axis: a
+/// family, optionally wrapped in the approximate-VJP per-path mode via
+/// the `avjp-` prefix (e.g. `avjp-gauss`).  Parsing is case-insensitive
+/// and unknown names are reported with the full valid list.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EstimatorSpec {
+    pub kind: SketchKind,
+    pub mode: GradPathMode,
+}
+
+impl EstimatorSpec {
+    pub fn parse(s: &str) -> anyhow::Result<EstimatorSpec> {
+        let lower = s.trim().to_ascii_lowercase();
+        if let Some(rest) = lower.strip_prefix("avjp-") {
+            Ok(EstimatorSpec {
+                kind: SketchKind::parse_or_err(rest)?,
+                mode: GradPathMode::ExactGradInput,
+            })
+        } else {
+            Ok(EstimatorSpec {
+                kind: SketchKind::parse_or_err(&lower)?,
+                mode: GradPathMode::Sketched,
+            })
+        }
+    }
+
+    pub fn approx_vjp(&self) -> bool {
+        self.mode == GradPathMode::ExactGradInput
+    }
+
+    pub fn name(&self) -> String {
+        if self.approx_vjp() {
+            format!("avjp-{}", self.kind.name())
+        } else {
+            self.kind.name().to_string()
+        }
+    }
+}
+
+/// One linear-layer backward under an estimator configuration.
+///
+/// Convention: Y = X·Wᵀ with W:(M,N), X:(B,N), dY:(B,M); the stored
+/// residual is X_proj = SᵀX (b_proj × N).  Returns (∂W, ∂X):
+/// ∂W ≈ (SᵀdY)ᵀX_proj on both modes; ∂X is the exact dY·W under
+/// [`GradPathMode::ExactGradInput`] and the lifted S·(SᵀdY)·W under
+/// [`GradPathMode::Sketched`].
+pub fn backward_linear(
+    spec: EstimatorSpec,
+    dy: &Tensor,
+    x_proj: &Tensor,
+    w: &Tensor,
+    seed: (u32, u32),
+) -> (Tensor, Tensor) {
+    let dy_proj = sketch::project_streamed(spec.kind, dy, x_proj.rows, seed);
+    let grad_w = matmul_at(&dy_proj, x_proj);
+    let grad_x = match spec.mode {
+        GradPathMode::ExactGradInput => matmul(dy, w),
+        GradPathMode::Sketched => {
+            matmul(&sketch::lift_streamed(spec.kind, &dy_proj, dy.rows, seed), w)
+        }
+    };
+    (grad_w, grad_x)
 }
 
 #[cfg(test)]
@@ -80,6 +186,70 @@ mod tests {
             let got = rmm_grad_w(kind, &y, &project(kind, &x, 6, seed), seed);
             assert!(got.max_abs_diff(&want) < 1e-3, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn estimator_spec_parses_both_axes() {
+        let e = EstimatorSpec::parse("gauss").unwrap();
+        assert_eq!(e.kind, SketchKind::Gauss);
+        assert!(!e.approx_vjp());
+        assert_eq!(e.name(), "gauss");
+        let e = EstimatorSpec::parse("AVJP-WtaCrs").unwrap();
+        assert_eq!(e.kind, SketchKind::WtaCrs);
+        assert!(e.approx_vjp());
+        assert_eq!(e.name(), "avjp-wtacrs");
+        let err = EstimatorSpec::parse("avjp-bogus").unwrap_err().to_string();
+        assert!(err.contains("'bogus'") && err.contains("wtacrs"), "{err}");
+        assert!(EstimatorSpec::parse("none").is_err());
+    }
+
+    #[test]
+    fn avjp_backward_keeps_grad_input_exact() {
+        let x = randt(16, 4, 11);
+        let dy = randt(16, 6, 12);
+        let w = randt(6, 4, 13); // (M, N)
+        let seed = (31, 32);
+        for kind in SketchKind::ALL {
+            let xp = project(kind, &x, 8, seed);
+            let spec =
+                EstimatorSpec { kind, mode: GradPathMode::ExactGradInput };
+            let (gw, gx) = backward_linear(spec, &dy, &xp, &w, seed);
+            // grad-input is bit-for-bit the exact VJP — the sketch never
+            // touches that path
+            assert_eq!(gx.data, matmul(&dy, &w).data, "{kind:?}");
+            // grad-weight is the same sketched estimator both modes share
+            assert_eq!(gw.data, rmm_grad_w(kind, &dy, &xp, seed).data, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn sketched_backward_grad_input_is_unbiased() {
+        let x = randt(12, 3, 21);
+        let dy = randt(12, 5, 22);
+        let w = randt(5, 3, 23);
+        let exact = matmul(&dy, &w);
+        let xp0 = project(SketchKind::Gauss, &x, 6, (1, 2));
+        let trials = 800;
+        let mut acc = Tensor::zeros(12, 3);
+        for t in 0..trials {
+            let seed = (t as u32 * 37 + 5, 13);
+            let xp = project(SketchKind::Gauss, &x, 6, seed);
+            let spec = EstimatorSpec {
+                kind: SketchKind::Gauss,
+                mode: GradPathMode::Sketched,
+            };
+            let (_, gx) = backward_linear(spec, &dy, &xp, &w, seed);
+            assert_eq!((gx.rows, gx.cols), (12, 3));
+            assert_eq!((xp.rows, xp.cols), (xp0.rows, xp0.cols));
+            acc.add_assign(&gx);
+        }
+        acc.scale(1.0 / trials as f32);
+        let scale = exact.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        assert!(
+            acc.max_abs_diff(&exact) < 0.25 * scale.max(1.0),
+            "{}",
+            acc.max_abs_diff(&exact)
+        );
     }
 
     #[test]

@@ -16,14 +16,15 @@
 //! tiling, task grain or thread count.
 
 use crate::rng::philox::{
-    element_normal, element_rademacher, element_uniform_int, STREAM_ROWSEL,
-    STREAM_SIGNS, STREAM_SKETCH,
+    element_normal, element_rademacher, element_uniform_int, PhiloxStream,
+    STREAM_ROWSEL, STREAM_SIGNS, STREAM_SKETCH, STREAM_WTA,
 };
 use crate::tensor::kernels::threads;
 use crate::tensor::pool;
 use crate::tensor::Tensor;
 
-/// Sketch families (paper §2.1, §3.5 + the Adelman-style row sampler).
+/// Sketch families (paper §2.1, §3.5 + the Adelman-style row sampler and
+/// the WTA-CRS winner-take-all column-row sampler, arXiv 2305.15265).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SketchKind {
     Gauss,
@@ -31,18 +32,39 @@ pub enum SketchKind {
     Dct,
     Dft,
     RowSample,
+    WtaCrs,
 }
 
 impl SketchKind {
+    /// Case-insensitive family lookup.  Returns `None` on unknown names;
+    /// config/CLI surfaces must go through [`SketchKind::parse_or_err`]
+    /// so typos are reported instead of silently defaulting.
     pub fn parse(s: &str) -> Option<SketchKind> {
-        Some(match s {
+        Some(match s.to_ascii_lowercase().as_str() {
             "gauss" => SketchKind::Gauss,
             "rademacher" => SketchKind::Rademacher,
             "dct" => SketchKind::Dct,
             "dft" => SketchKind::Dft,
             "rowsample" => SketchKind::RowSample,
+            "wtacrs" => SketchKind::WtaCrs,
             _ => return None,
         })
+    }
+
+    /// Like [`SketchKind::parse`], but unknown names become an error that
+    /// names the offender and lists every valid family.
+    pub fn parse_or_err(s: &str) -> anyhow::Result<SketchKind> {
+        SketchKind::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown sketch kind '{s}' (valid: {})",
+                Self::valid_names().join(", ")
+            )
+        })
+    }
+
+    /// The canonical lowercase names, in `ALL` order.
+    pub fn valid_names() -> Vec<&'static str> {
+        Self::ALL.iter().map(|k| k.name()).collect()
     }
 
     pub fn name(&self) -> &'static str {
@@ -52,15 +74,17 @@ impl SketchKind {
             SketchKind::Dct => "dct",
             SketchKind::Dft => "dft",
             SketchKind::RowSample => "rowsample",
+            SketchKind::WtaCrs => "wtacrs",
         }
     }
 
-    pub const ALL: [SketchKind; 5] = [
+    pub const ALL: [SketchKind; 6] = [
         SketchKind::Gauss,
         SketchKind::Rademacher,
         SketchKind::Dct,
         SketchKind::Dft,
         SketchKind::RowSample,
+        SketchKind::WtaCrs,
     ];
 }
 
@@ -102,6 +126,48 @@ pub fn sign_flips(b: usize, seed: (u32, u32)) -> Vec<f32> {
         .collect()
 }
 
+/// Number of deterministic "winner" columns WTA-CRS spends on a
+/// (b, b_proj) shape: half the projection budget, capped at b.
+pub fn wta_winner_count(b: usize, b_proj: usize) -> usize {
+    (b_proj / 2).min(b)
+}
+
+/// WTA-CRS column plan: for each of the b_proj output columns, the source
+/// row index and the scale of that column's single non-zero (scale 0.0
+/// marks an all-zero column).
+///
+/// The first `c = wta_winner_count(b, b_proj)` columns are deterministic
+/// winners — c *distinct* rows (the prefix of a Philox-shuffled
+/// permutation of 0..b) copied at scale 1 — and the remaining
+/// `m = b_proj − c` columns sample uniformly with replacement from the
+/// b − c loser rows at scale sqrt((b−c)/m), so
+/// E[S Sᵀ] = Σ_winners eᵢeᵢᵀ + m·(1/(b−c))·((b−c)/m)·Σ_losers eⱼeⱼᵀ = I.
+/// When b_proj ≥ 2b the winners already cover every row, the surplus
+/// columns are zero, and S Sᵀ = I exactly (a zero-variance sketch).
+pub fn wta_plan(b: usize, b_proj: usize, seed: (u32, u32)) -> Vec<(usize, f32)> {
+    if b == 0 || b_proj == 0 {
+        return vec![(0, 0.0); b_proj];
+    }
+    let c = wta_winner_count(b, b_proj);
+    let mut perm: Vec<usize> = (0..b).collect();
+    let key = (seed.0 as u64) | ((seed.1 as u64) << 32);
+    PhiloxStream::new(key, STREAM_WTA).shuffle(&mut perm);
+    let mut plan: Vec<(usize, f32)> =
+        perm.iter().take(c).map(|&i| (i, 1.0f32)).collect();
+    let losers = b - c;
+    if losers == 0 {
+        plan.resize(b_proj, (0, 0.0));
+        return plan;
+    }
+    let m = b_proj - c;
+    let scale = (losers as f32 / m as f32).sqrt();
+    for j in c..b_proj {
+        let d = element_uniform_int(0, j as u32, seed, losers as u32, STREAM_WTA);
+        plan.push((perm[c + d as usize], scale));
+    }
+    plan
+}
+
 /// Dense sketch matrix S (b × b_proj) — mirrors `ref.sketch`.
 ///
 /// The structured kinds precompute the selection/sign vectors once and
@@ -140,6 +206,15 @@ pub fn sketch(kind: SketchKind, b: usize, b_proj: usize, seed: (u32, u32)) -> Te
                 let sel = row_selection(b, b_proj, seed);
                 let scale = (b as f32 / b_proj as f32).sqrt();
                 for (j, &i) in sel.iter().enumerate() {
+                    *t.at_mut(i, j) = scale;
+                }
+            }
+            t
+        }
+        SketchKind::WtaCrs => {
+            let mut t = Tensor::zeros(b, b_proj);
+            for (j, &(i, scale)) in wta_plan(b, b_proj, seed).iter().enumerate() {
+                if scale != 0.0 {
                     *t.at_mut(i, j) = scale;
                 }
             }
@@ -221,7 +296,10 @@ where
 /// * dct / dft: selection + sign vectors hoisted once, transform entries
 ///   generated per tile (no dense S, no `matmul_at` fallback);
 /// * rowsample: explicit sparsity-aware gather — b_proj scaled row copies,
-///   no multiply-accumulate at all.
+///   no multiply-accumulate at all;
+/// * wtacrs: same gather structure, but the first half of the budget is
+///   spent on deterministic distinct "winner" rows (scale 1) and only the
+///   remainder samples the loser complement (see [`wta_plan`]).
 pub fn project_streamed(
     kind: SketchKind,
     x: &Tensor,
@@ -270,6 +348,105 @@ pub fn project_streamed(
                 let xrow = x.row(src);
                 for (o, &xv) in out.row_mut(j).iter_mut().zip(xrow) {
                     *o = scale * xv;
+                }
+            }
+            out
+        }
+        SketchKind::WtaCrs => {
+            // One non-zero per S column, like rowsample: the fused path is
+            // a scaled row gather, so S never exists here either.
+            let mut out = Tensor::zeros(b_proj, n);
+            if b == 0 {
+                return out;
+            }
+            for (j, &(src, scale)) in wta_plan(b, b_proj, seed).iter().enumerate() {
+                if scale == 0.0 {
+                    continue; // surplus column beyond full winner coverage
+                }
+                let xrow = x.row(src);
+                for (o, &xv) in out.row_mut(j).iter_mut().zip(xrow) {
+                    *o = scale * xv;
+                }
+            }
+            out
+        }
+    }
+}
+
+/// Lift a projected tensor back through the sketch: out = S Z, (b × n)
+/// from Z (b_proj × n), without materializing S.  This is the grad-input
+/// side of the fully-sketched backward (∂X ≈ S·(SᵀdY)·W reuses the dY
+/// projection); `seed` and `b_proj = z.rows` must match the projection.
+/// Element families reuse the tiled streaming driver with transposed
+/// counters; the gather families scatter their single non-zero per column
+/// in ascending column order, so results are bit-identical for any
+/// thread count.
+pub fn lift_streamed(
+    kind: SketchKind,
+    z: &Tensor,
+    b: usize,
+    seed: (u32, u32),
+) -> Tensor {
+    let (b_proj, n) = (z.rows, z.cols);
+    match kind {
+        SketchKind::Gauss => {
+            let inv = 1.0 / (b_proj as f32).sqrt();
+            let elem = move |i: usize, j: usize| {
+                // S[j, i] — project's counters with (row, col) swapped
+                element_normal(j as u32, i as u32, seed, STREAM_SKETCH) * inv
+            };
+            project_streamed_elem(z, b, &elem)
+        }
+        SketchKind::Rademacher => {
+            let inv = 1.0 / (b_proj as f32).sqrt();
+            let elem = move |i: usize, j: usize| {
+                element_rademacher(j as u32, i as u32, seed, STREAM_SKETCH) * inv
+            };
+            project_streamed_elem(z, b, &elem)
+        }
+        SketchKind::Dct | SketchKind::Dft => {
+            let sel = row_selection(b, b_proj, seed);
+            let signs = sign_flips(b, seed);
+            let scale = (b as f32 / b_proj as f32).sqrt();
+            let use_dct = kind == SketchKind::Dct;
+            let elem = move |i: usize, j: usize| {
+                // S[j, i]: output row j is the S row, input row i the S col
+                let h = if use_dct {
+                    dct_entry(sel[i], j, b)
+                } else {
+                    dft_entry(sel[i], j, b)
+                };
+                (scale * signs[j]) * h
+            };
+            project_streamed_elem(z, b, &elem)
+        }
+        SketchKind::RowSample => {
+            let mut out = Tensor::zeros(b, n);
+            if b == 0 {
+                return out;
+            }
+            let sel = row_selection(b, b_proj, seed);
+            let scale = (b as f32 / b_proj as f32).sqrt();
+            for (j, &dst) in sel.iter().enumerate() {
+                let zrow = z.row(j);
+                for (o, &zv) in out.row_mut(dst).iter_mut().zip(zrow) {
+                    *o += scale * zv;
+                }
+            }
+            out
+        }
+        SketchKind::WtaCrs => {
+            let mut out = Tensor::zeros(b, n);
+            if b == 0 {
+                return out;
+            }
+            for (j, &(dst, scale)) in wta_plan(b, b_proj, seed).iter().enumerate() {
+                if scale == 0.0 {
+                    continue;
+                }
+                let zrow = z.row(j);
+                for (o, &zv) in out.row_mut(dst).iter_mut().zip(zrow) {
+                    *o += scale * zv;
                 }
             }
             out
@@ -351,11 +528,81 @@ mod tests {
     // in one place so the reference loop cannot drift.
 
     #[test]
+    fn lift_matches_dense() {
+        let z = randt(9, 7, 6);
+        for kind in SketchKind::ALL {
+            let s = sketch(kind, 24, 9, (3, 4));
+            let dense = matmul(&s, &z);
+            let lifted = lift_streamed(kind, &z, 24, (3, 4));
+            assert!(dense.max_abs_diff(&lifted) < 1e-4, "{kind:?}");
+        }
+        // degenerate shapes stay silent
+        for kind in SketchKind::ALL {
+            let p = lift_streamed(kind, &Tensor::zeros(4, 0), 8, (1, 2));
+            assert_eq!((p.rows, p.cols), (8, 0));
+            let p = lift_streamed(kind, &Tensor::zeros(4, 3), 0, (1, 2));
+            assert_eq!((p.rows, p.cols), (0, 3));
+        }
+    }
+
+    #[test]
     fn parse_roundtrip() {
         for kind in SketchKind::ALL {
             assert_eq!(SketchKind::parse(kind.name()), Some(kind));
         }
         assert_eq!(SketchKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn parse_is_case_insensitive_and_errors_name_the_valid_set() {
+        assert_eq!(SketchKind::parse("GAUSS"), Some(SketchKind::Gauss));
+        assert_eq!(SketchKind::parse("WtaCrs"), Some(SketchKind::WtaCrs));
+        assert_eq!(SketchKind::parse_or_err("DFT").unwrap(), SketchKind::Dft);
+        let err = SketchKind::parse_or_err("bogus").unwrap_err().to_string();
+        assert!(err.contains("'bogus'"), "{err}");
+        for kind in SketchKind::ALL {
+            assert!(err.contains(kind.name()), "{err}");
+        }
+    }
+
+    #[test]
+    fn wtacrs_structure() {
+        // b=16, bp=8: c=4 distinct winners at scale 1, then m=4 stochastic
+        // columns drawn from the 12 losers at scale sqrt(12/4).
+        let plan = wta_plan(16, 8, (1, 2));
+        assert_eq!(plan.len(), 8);
+        let winners: Vec<usize> = plan[..4].iter().map(|p| p.0).collect();
+        let mut uniq = winners.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 4, "winners must be distinct: {winners:?}");
+        for &(_, s) in &plan[..4] {
+            assert_eq!(s, 1.0);
+        }
+        let scale = (12.0f32 / 4.0).sqrt();
+        for &(src, s) in &plan[4..] {
+            assert!((s - scale).abs() < 1e-6);
+            assert!(src < 16);
+            assert!(!winners.contains(&src), "draws must come from losers");
+        }
+        // dense S matches the plan exactly: one non-zero per column
+        let s = sketch(SketchKind::WtaCrs, 16, 8, (1, 2));
+        for (j, &(src, sc)) in plan.iter().enumerate() {
+            for i in 0..16 {
+                let want = if i == src { sc } else { 0.0 };
+                assert_eq!(s.at(i, j), want, "({i},{j})");
+            }
+        }
+        // b_proj ≥ 2b: winners cover every row, surplus columns are zero
+        // and S Sᵀ = I exactly (zero-variance regime)
+        let s = sketch(SketchKind::WtaCrs, 4, 10, (3, 4));
+        let sst = matmul(&s, &s.transpose());
+        for i in 0..4 {
+            for j in 0..4 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((sst.at(i, j) - want).abs() < 1e-6, "({i},{j})");
+            }
+        }
     }
 
     #[test]

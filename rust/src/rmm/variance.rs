@@ -96,6 +96,101 @@ pub fn theorem_identity_gap(x: &Tensor, y: &Tensor, b_proj: usize) -> (f64, f64)
     (lhs, rhs)
 }
 
+/// Σ_k ‖x_k‖²‖y_k‖² — the row-correlation term shared by the sampling
+/// estimators' exact variances (Lemma 2.1's first term without the B/(B−1)
+/// prefactor).
+fn row_norm_product_sum(x: &Tensor, y: &Tensor) -> f64 {
+    assert_eq!(x.rows, y.rows);
+    let mut r = 0.0f64;
+    for k in 0..x.rows {
+        r += x.row_norm2(k) * y.row_norm2(k);
+    }
+    r
+}
+
+/// Exact apriori variance of the uniform CRS / rowsample estimator:
+/// B_proj iid uniform row draws at scale sqrt(B/B_proj), giving
+/// D² = (B·Σ_k‖x_k‖²‖y_k‖² − ‖XᵀY‖²_F) / B_proj.
+pub fn d2_rowsample(x: &Tensor, y: &Tensor, b_proj: usize) -> f64 {
+    let b = x.rows as f64;
+    let r = row_norm_product_sum(x, y);
+    let fro2 = matmul_at(x, y).fro2();
+    (b * r - fro2) / b_proj as f64
+}
+
+/// Exact apriori variance of the WTA-CRS estimator (arXiv 2305.15265,
+/// uniform-mass data-independent form implemented in
+/// [`super::sketch::wta_plan`]): c = min(B_proj/2, B) deterministic
+/// distinct winner rows plus m = B_proj − c uniform draws (with
+/// replacement) from the B − c losers.  With R = Σ_k‖x_k‖²‖y_k‖²,
+/// F = ‖XᵀY‖²_F and t = B − c, the expectation over the uniformly random
+/// winner subset gives
+///
+/// D² = (1/m)·[ t·(t/B)·R − ( (t/B)·R + t(t−1)/(B(B−1))·(F − R) ) ]
+///
+/// which reduces to the uniform-CRS form at c = 0 and to 0 when the
+/// winners cover every row (B_proj ≥ 2B ⇒ S Sᵀ = I exactly).
+pub fn d2_wtacrs(x: &Tensor, y: &Tensor, b_proj: usize) -> f64 {
+    assert_eq!(x.rows, y.rows);
+    let b = x.rows;
+    let c = super::sketch::wta_winner_count(b, b_proj);
+    if c >= b {
+        return 0.0;
+    }
+    let m = (b_proj - c) as f64;
+    let t = (b - c) as f64;
+    let bf = b as f64;
+    let r = row_norm_product_sum(x, y);
+    let fro2 = matmul_at(x, y).fro2();
+    // pair-inclusion coefficient P(k,l ∈ losers, k ≠ l); zero when there
+    // are no pairs (guards the 0/0 at B = 1 or t = 1)
+    let pair = if b > 1 && t > 1.0 {
+        (t * (t - 1.0)) / (bf * (bf - 1.0))
+    } else {
+        0.0
+    };
+    let e_r_l = (t / bf) * r; // E[Σ_{k∈L}‖x_k‖²‖y_k‖²]
+    let e_f_l = e_r_l + pair * (fro2 - r); // E[‖Σ_{k∈L} x_k y_kᵀ‖²_F]
+    ((t * e_r_l) - e_f_l) / m
+}
+
+/// Per-family closed-form variance at a given B_proj — the price the
+/// closed-loop controller (`rmm::controller`) evaluates online.  Gauss
+/// uses the exact fourth-moment form, the sampling families use their
+/// exact CRS forms, and the SRHT-like transforms fall back to the paper's
+/// generic Lemma-2.2 expression (Monte-Carlo-pinned to a factor-2 band in
+/// `prop_theory`).
+pub fn d2_family(
+    kind: super::sketch::SketchKind,
+    x: &Tensor,
+    y: &Tensor,
+    b_proj: usize,
+) -> f64 {
+    use super::sketch::SketchKind;
+    match kind {
+        SketchKind::Gauss => d2_rmm_exact(x, y, b_proj),
+        SketchKind::RowSample => d2_rowsample(x, y, b_proj),
+        SketchKind::WtaCrs => d2_wtacrs(x, y, b_proj),
+        SketchKind::Rademacher | SketchKind::Dct | SketchKind::Dft => {
+            d2_rmm(x, y, b_proj)
+        }
+    }
+}
+
+/// Grad-weight-path variance of the approximate-VJP estimator
+/// (arXiv 2602.14701): the sketch touches only ∂W, so the ∂W variance is
+/// the underlying family's closed form unchanged — while the grad-input
+/// path is exact (zero variance), which is the configuration's whole
+/// advantage and what the equal-budget table expresses.
+pub fn d2_approx_vjp(
+    kind: super::sketch::SketchKind,
+    x: &Tensor,
+    y: &Tensor,
+    b_proj: usize,
+) -> f64 {
+    d2_family(kind, x, y, b_proj)
+}
+
 /// Monte-Carlo estimate of D²(X,Y) = E‖XᵀSSᵀY − XᵀY‖²_F for a sketch kind —
 /// the empirical check of Lemma 2.2 (exact only for Gauss).
 pub fn d2_montecarlo(
@@ -226,5 +321,78 @@ mod tests {
         let x = Tensor::zeros(1, 3);
         let y = Tensor::zeros(1, 3);
         d2_sgd(&x, &y);
+    }
+
+    #[test]
+    fn rowsample_closed_form_matches_montecarlo() {
+        let x = randt(16, 4, 31);
+        let y = randt(16, 3, 32);
+        for bp in [4usize, 8] {
+            let formula = d2_rowsample(&x, &y, bp);
+            let mc = d2_montecarlo(SketchKind::RowSample, &x, &y, bp, 3000, 17);
+            let rel = (mc - formula).abs() / formula;
+            assert!(rel < 0.15, "bp={bp} mc={mc} formula={formula} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn wtacrs_closed_form_matches_montecarlo() {
+        let x = randt(16, 4, 41);
+        let y = randt(16, 3, 42);
+        for bp in [4usize, 8, 12] {
+            let formula = d2_wtacrs(&x, &y, bp);
+            let mc = d2_montecarlo(SketchKind::WtaCrs, &x, &y, bp, 3000, 19);
+            let rel = (mc - formula).abs() / formula;
+            assert!(rel < 0.15, "bp={bp} mc={mc} formula={formula} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn wtacrs_reduces_to_uniform_crs_and_vanishes_at_full_coverage() {
+        let x = randt(12, 5, 51);
+        let y = randt(12, 6, 52);
+        // b_proj = 1 ⇒ c = 0: identical to the uniform CRS form
+        let a = d2_wtacrs(&x, &y, 1);
+        let b = d2_rowsample(&x, &y, 1);
+        assert!((a - b).abs() < 1e-9 * b.abs().max(1.0), "{a} vs {b}");
+        // b_proj ≥ 2B ⇒ winners cover every row: zero variance, and the
+        // Monte-Carlo agrees up to f32 summation-order noise
+        assert_eq!(d2_wtacrs(&x, &y, 24), 0.0);
+        let mc = d2_montecarlo(SketchKind::WtaCrs, &x, &y, 24, 10, 23);
+        assert!(mc < 1e-4, "mc={mc}");
+    }
+
+    #[test]
+    fn wtacrs_beats_uniform_crs_once_winners_shrink_the_pool() {
+        // Closed-form comparison: D²_wta/D²_uni = B_proj·t(t−1) / (m·B(B−1))
+        // (both are multiples of B·R − F).  The data-independent winner
+        // budget pays off once B_proj is a large fraction of B — at small
+        // B_proj the uniform estimator wins, which is exactly the kind of
+        // shape-dependent tradeoff the controller prices per layer.
+        let x = randt(16, 4, 300);
+        let y = randt(16, 5, 400);
+        for bp in [12usize, 16, 24] {
+            assert!(d2_wtacrs(&x, &y, bp) < d2_rowsample(&x, &y, bp), "bp={bp}");
+        }
+        assert!(d2_wtacrs(&x, &y, 2) >= d2_rowsample(&x, &y, 2));
+    }
+
+    #[test]
+    fn family_dispatch_and_avjp_alias() {
+        let x = randt(10, 3, 61);
+        let y = randt(10, 4, 62);
+        assert_eq!(d2_family(SketchKind::Gauss, &x, &y, 5), d2_rmm_exact(&x, &y, 5));
+        assert_eq!(
+            d2_family(SketchKind::RowSample, &x, &y, 5),
+            d2_rowsample(&x, &y, 5)
+        );
+        assert_eq!(d2_family(SketchKind::WtaCrs, &x, &y, 5), d2_wtacrs(&x, &y, 5));
+        assert_eq!(d2_family(SketchKind::Dct, &x, &y, 5), d2_rmm(&x, &y, 5));
+        for kind in SketchKind::ALL {
+            assert_eq!(
+                d2_approx_vjp(kind, &x, &y, 5),
+                d2_family(kind, &x, &y, 5)
+            );
+        }
     }
 }

@@ -14,6 +14,9 @@ pub const STREAM_SKETCH: u32 = 0;
 pub const STREAM_ROWSEL: u32 = 1;
 pub const STREAM_SIGNS: u32 = 2;
 pub const STREAM_DATA: u32 = 3;
+/// WTA-CRS winner permutation + complement draws (rust-only family; the
+/// synthetic sweep grid uses stream 7 — keep new tags clear of it).
+pub const STREAM_WTA: u32 = 4;
 
 #[inline]
 fn mulhilo(a: u32, b: u32) -> (u32, u32) {

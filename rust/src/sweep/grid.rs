@@ -40,6 +40,29 @@ pub struct Cell {
 }
 
 impl Cell {
+    /// Validate the grid axes that would otherwise only fail deep inside
+    /// `sketch()`/`project_streamed` on a degenerate grid: ρ must be a
+    /// finite ratio in (0, 1] (which pins the derived `b_proj` into
+    /// `[1, B]` for every batch), and the sketch string must be either a
+    /// non-estimator marker ("none" baseline rows, the `budget` grid's
+    /// controller markers "auto"/"avjp-auto") or parse as an estimator
+    /// configuration — unknown names report the offender and the full
+    /// valid family list, case-insensitively.
+    pub fn validate_axes(rho: f64, sketch: &str) -> Result<()> {
+        if !rho.is_finite() || rho <= 0.0 || rho > 1.0 {
+            bail!(
+                "cell.rho must be a finite compression ratio in (0, 1], got {rho} \
+                 (the derived b_proj must stay within [1, B])"
+            );
+        }
+        let lower = sketch.trim().to_ascii_lowercase();
+        if !matches!(lower.as_str(), "none" | "auto" | "avjp-auto") {
+            crate::rmm::EstimatorSpec::parse(&lower)
+                .with_context(|| format!("cell.sketch '{sketch}'"))?;
+        }
+        Ok(())
+    }
+
     /// Warm-session affinity key, most-significant first: cells sharing a
     /// *variant* share compiled executables and trainer setup; cells also
     /// sharing a *task* share dataset caches.  The dynamic scheduler
@@ -67,12 +90,15 @@ impl Cell {
         if seed_f < 0.0 || seed_f.fract() != 0.0 || seed_f > MAX_JSON_SEED as f64 {
             bail!("cell.seed {seed_f} outside the losslessly serializable range");
         }
+        let rho = j.get("rho").as_f64().context("cell.rho")?;
+        let sketch = j.get("sketch").as_str().context("cell.sketch")?.to_string();
+        Cell::validate_axes(rho, &sketch)?;
         Ok(Cell {
             index: j.get("index").as_usize().context("cell.index")?,
             variant: j.get("variant").as_str().context("cell.variant")?.to_string(),
             task: j.get("task").as_str().context("cell.task")?.to_string(),
-            rho: j.get("rho").as_f64().context("cell.rho")?,
-            sketch: j.get("sketch").as_str().context("cell.sketch")?.to_string(),
+            rho,
+            sketch,
             seed: seed_f as u64,
             batch: j.get("batch").as_usize().context("cell.batch")?,
         })
@@ -97,7 +123,9 @@ impl SweepSpec {
 
     /// Append a cell in canonical grid order (its index is its position).
     /// Panics on a seed above [`MAX_JSON_SEED`] — such a cell could never
-    /// validate its own fragment after the spec's JSON round-trip.
+    /// validate its own fragment after the spec's JSON round-trip — and on
+    /// axes [`Cell::validate_axes`] rejects: a grid driver constructing a
+    /// degenerate cell is a bug worth failing loudly at build time.
     pub fn push(
         &mut self,
         variant: impl Into<String>,
@@ -111,6 +139,10 @@ impl SweepSpec {
             seed <= MAX_JSON_SEED,
             "cell seed {seed} cannot round-trip JSON (must be <= 2^53)"
         );
+        let sketch = sketch.into();
+        if let Err(e) = Cell::validate_axes(rho, &sketch) {
+            panic!("invalid sweep cell: {e:#}");
+        }
         let index = self.cells.len();
         self.cells.push(Cell {
             index,
@@ -210,6 +242,62 @@ mod tests {
             }
         }
         assert!(SweepSpec::from_json(&j).is_err());
+    }
+
+    fn with_cell0_field(mut j: Json, field: &str, value: Json) -> Json {
+        if let Json::Obj(map) = &mut j {
+            if let Some(Json::Arr(cells)) = map.get_mut("cells") {
+                if let Json::Obj(cell) = &mut cells[0] {
+                    cell.insert(field.to_string(), value);
+                }
+            }
+        }
+        j
+    }
+
+    #[test]
+    fn from_json_rejects_degenerate_rho() {
+        for bad in [0.0, -1.0, 1.5, f64::NAN, f64::INFINITY] {
+            // NaN/inf can't travel through our JSON, so splice post-parse
+            let j = with_cell0_field(
+                demo_spec().to_json(),
+                "rho",
+                if bad.is_finite() { Json::num(bad) } else { Json::Null },
+            );
+            let err = SweepSpec::from_json(&j).unwrap_err().to_string();
+            if bad.is_finite() {
+                assert!(err.contains("(0, 1]"), "rho={bad}: {err}");
+            }
+        }
+        assert!(Cell::validate_axes(f64::NAN, "gauss").is_err());
+        assert!(Cell::validate_axes(f64::INFINITY, "gauss").is_err());
+        assert!(Cell::validate_axes(1.0, "gauss").is_ok());
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_sketch_with_full_list() {
+        let j = with_cell0_field(demo_spec().to_json(), "sketch", Json::str("bogus"));
+        let err = format!("{:#}", SweepSpec::from_json(&j).unwrap_err());
+        for name in crate::rmm::SketchKind::valid_names() {
+            assert!(err.contains(name), "missing '{name}' in: {err}");
+        }
+        assert!(err.contains("'bogus'"), "{err}");
+    }
+
+    #[test]
+    fn sketch_axis_accepts_markers_estimators_and_mixed_case() {
+        for ok in ["none", "auto", "avjp-auto", "avjp-gauss", "WtaCrs", "DCT"] {
+            assert!(Cell::validate_axes(0.5, ok).is_ok(), "{ok}");
+        }
+        let j = with_cell0_field(demo_spec().to_json(), "sketch", Json::str("avjp-dft"));
+        assert!(SweepSpec::from_json(&j).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid sweep cell")]
+    fn push_rejects_degenerate_axes() {
+        let mut s = SweepSpec::new("mock", TrainConfig::default());
+        s.push("v", "cola", 0.0, "gauss", 1, 0);
     }
 
     #[test]

@@ -10,6 +10,21 @@
 //! families) are grids of *independent* fine-tuning runs — so the grid,
 //! not the single run, is the unit this layer schedules.
 //!
+//! # Grid catalog
+//!
+//! Engine-backed experiment keys: `table2` (score vs ρ), `table3`
+//! (memory per task/batch/ρ), `table4` (sketch families on CoLA).
+//! Engine-free keys runnable anywhere (CI, selftests): `mock`
+//! ([`selftest_spec`], pure FNV cells), `mockdata`
+//! ([`selftest_data_spec`], the warm session layer's real data path),
+//! `synth-easy|medium|hard` ([`synth_spec`], seeded workload grids with
+//! skewed planned costs for the chaos harness), and `budget`
+//! ([`selftest_budget_spec`] for the selftest; `bench_harness::budget`
+//! builds the full accuracy-vs-memory-at-equal-budget table comparing
+//! all seven estimator configurations — five families plus `wtacrs` and
+//! an `avjp-*` per-path variant — against the closed-loop controller
+//! rows, with every (family, ρ) choice recorded in the fragment).
+//!
 //! # The contract
 //!
 //! * **Grid** ([`grid`]) — a [`SweepSpec`] lists the cells in canonical
@@ -551,6 +566,34 @@ pub fn selftest_data_spec() -> SweepSpec {
     spec
 }
 
+/// The closed-loop controller selftest grid (`repro sweep-selftest
+/// --grid budget`): engine-free `budget` cells whose ρ axis carries the
+/// per-step memory budget (`--mem-budget`) and whose sketch axis mixes
+/// the controller markers ("auto" / "avjp-auto" — the controller picks
+/// (family, ρ) per layer-step) with fixed estimator configurations
+/// priced at one shared budget.  Probe tensors are Philox-generated from
+/// the cell seed inside the runner, so each fragment — including its
+/// recorded (family, ρ) choice sequence — is a pure function of the
+/// cell; CI runs this grid at `RMM_THREADS` 1 and 4 to pin byte-identity
+/// of the controller's decisions across thread and worker counts.
+pub fn selftest_budget_spec() -> SweepSpec {
+    let mut spec = SweepSpec::new("budget", crate::config::TrainConfig::default());
+    for &budget in &[1.0f64, 0.5, 0.2, 0.1] {
+        for &axis in &["auto", "avjp-auto"] {
+            for seed in 0..2u64 {
+                let variant = if axis == "auto" { "ctl_auto" } else { "ctl_avjp" };
+                spec.push(variant, "probe", budget, axis, seed, 16);
+            }
+        }
+    }
+    // Fixed estimator configurations at one shared budget, so the grid
+    // also exercises the equal-budget comparison path of the runner.
+    for &est in &["gauss", "wtacrs", "avjp-gauss"] {
+        spec.push(format!("est_{est}"), "probe", 0.5, est, 7, 16);
+    }
+    spec
+}
+
 /// Difficulty tiers of the seeded synthetic workload generator.
 pub const SYNTH_TIERS: &[&str] = &["easy", "medium", "hard"];
 
@@ -691,6 +734,27 @@ mod tests {
         let back = SweepSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back.cells, spec.cells);
         assert_eq!(back.train, spec.train);
+    }
+
+    #[test]
+    fn selftest_budget_grid_is_valid_and_round_trips() {
+        let spec = selftest_budget_spec();
+        assert_eq!(spec.experiment, "budget");
+        // both controller modes, several budgets, plus fixed estimators
+        assert!(spec.cells.iter().any(|c| c.sketch == "auto"));
+        assert!(spec.cells.iter().any(|c| c.sketch == "avjp-auto"));
+        assert!(spec.cells.iter().any(|c| c.sketch == "wtacrs"));
+        assert!(spec.cells.iter().any(|c| c.sketch == "avjp-gauss"));
+        let budgets: std::collections::BTreeSet<u64> =
+            spec.cells.iter().map(|c| c.rho.to_bits()).collect();
+        assert!(budgets.len() >= 4, "budget axis collapsed");
+        for cell in &spec.cells {
+            assert!(cell.batch > 0, "budget cells must carry probe rows");
+        }
+        // the JSON round-trip the workers rely on (also proves every
+        // sketch-axis string passes Cell::validate_axes)
+        let back = SweepSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back.cells, spec.cells);
     }
 
     #[test]

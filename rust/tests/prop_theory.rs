@@ -179,6 +179,57 @@ fn variance_regression_montecarlo_matches_closed_form_for_all_kinds() {
 }
 
 #[test]
+fn wtacrs_variance_montecarlo_matches_closed_form() {
+    // WTA-CRS has an *exact* closed form (deterministic winners contribute
+    // zero variance; the m uniform loser draws carry it all — see
+    // `variance::d2_wtacrs`), so like the Gauss pin it gets a tight band,
+    // not just the family-agnostic factor-2 one.  Checked across several
+    // B_proj on both sides of the WTA-vs-uniform-CRS crossover.
+    let mut g = rmmlinear::util::prop::Gen::new(0xC0FFEE);
+    let x = g.tensor(32..=32, 6..=6);
+    let y = g.tensor(32..=32, 5..=5);
+    for bp in [4usize, 8, 16] {
+        let closed = variance::d2_wtacrs(&x, &y, bp);
+        assert!(closed > 0.0, "bp={bp}: closed={closed}");
+        let mc = variance::d2_montecarlo(SketchKind::WtaCrs, &x, &y, bp, 200, 1301);
+        let rel = (mc - closed).abs() / closed;
+        assert!(rel < 0.25, "bp={bp}: mc={mc} formula={closed} rel={rel}");
+    }
+    // Degenerate full-width case: every column is a deterministic winner,
+    // SSᵀ = I exactly, so both the closed form and the estimator variance
+    // vanish.
+    let mc_full = variance::d2_montecarlo(SketchKind::WtaCrs, &x, &y, 64, 20, 1301);
+    assert!(variance::d2_wtacrs(&x, &y, 64) == 0.0);
+    assert!(mc_full.abs() < 1e-6, "full-width WTA-CRS must be exact: {mc_full}");
+}
+
+#[test]
+fn approx_vjp_grad_w_variance_is_the_underlying_familys() {
+    // The approximate-VJP estimator sketches only the grad-weight path, so
+    // its ∂W variance is the underlying family's closed form *unchanged* —
+    // pinned as an identity for every family, and against Monte Carlo for
+    // the two families with exact forms (the avjp ∂W estimator is literally
+    // the family's estimator, so the same MC run covers it).
+    let mut g = rmmlinear::util::prop::Gen::new(0xC0FFEE);
+    let x = g.tensor(32..=32, 6..=6);
+    let y = g.tensor(32..=32, 5..=5);
+    let bp = 8;
+    for kind in SketchKind::ALL {
+        assert_eq!(
+            variance::d2_approx_vjp(kind, &x, &y, bp).to_bits(),
+            variance::d2_family(kind, &x, &y, bp).to_bits(),
+            "{kind:?}: avjp grad-W variance must equal the family's"
+        );
+    }
+    for kind in [SketchKind::Gauss, SketchKind::WtaCrs] {
+        let closed = variance::d2_approx_vjp(kind, &x, &y, bp);
+        let mc = variance::d2_montecarlo(kind, &x, &y, bp, 200, 1301);
+        let rel = (mc - closed).abs() / closed;
+        assert!(rel < 0.25, "{kind:?}: mc={mc} formula={closed} rel={rel}");
+    }
+}
+
+#[test]
 fn identity_sketch_recovers_exact_gradient() {
     // ρ = 1 with an orthonormal S (full-width DCT, no subsample collision
     // needed — use B_proj = B with rowsample replaced by full transform):

@@ -68,4 +68,15 @@ for T in 1 4; do
     --grid synth-easy --chaos-seed 11 --chaos-profile crash
 done
 
+# Controller-determinism gate: the budget grid runs the closed-loop
+# variance controller (plus fixed-estimator and approximate-VJP axes) on
+# Philox probe tensors — engine-free like mock/data — and the selftest
+# byte-compares the sharded dynamic run against the serial reference.
+# This pins the (family, rho) choice sequence, its digest, and every
+# fragment as a pure function of the cell for any worker/thread count.
+echo "== sweep smoke (budget grid, dynamic, closed-loop controller) =="
+for T in 1 4; do
+  RMM_THREADS=$T target/release/repro sweep-selftest --shards 2 --schedule dynamic --grid budget
+done
+
 echo "ci: all gates passed"
