@@ -48,6 +48,8 @@ pub const POINTS: &[&str] = &[
     "sched.cell",
     "resume.spec",
     "session.evict",
+    "daemon.dequeue",
+    "event.tee",
     "clock",
 ];
 

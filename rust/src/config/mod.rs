@@ -151,6 +151,28 @@ impl SweepConfig {
     }
 }
 
+/// Sweep-daemon knobs (see `crate::daemon`).  `None` fields express no
+/// preference: the `sweep-daemon` CLI flags / built-in defaults then
+/// decide.  Like the sweep knobs, nothing here can change a merged
+/// report — the daemon only changes how sweeps are queued and served.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DaemonConfig {
+    /// In-process worker threads per daemon (`--workers`, default 1).
+    pub workers: Option<usize>,
+    /// Per-lane queue-depth cap before backpressure sheds specs to
+    /// `rejected/` (`--queue-cap`, default `daemon::DEFAULT_QUEUE_CAP`).
+    pub queue_cap: Option<usize>,
+    /// Idle poll interval in ms when the queue is empty and the daemon
+    /// is not draining (`--poll-ms`, default `daemon::DEFAULT_POLL_MS`).
+    pub poll_ms: Option<u64>,
+}
+
+impl DaemonConfig {
+    pub fn is_unset(&self) -> bool {
+        self.workers.is_none() && self.queue_cap.is_none() && self.poll_ms.is_none()
+    }
+}
+
 /// RMM estimator knobs (see `rmm::controller`).  `None` fields express no
 /// preference: the CLI flags / grid axes then decide per run.
 #[derive(Debug, Clone, PartialEq, Default)]
@@ -186,6 +208,8 @@ pub struct ExperimentConfig {
     pub pool: PoolConfig,
     /// Sweep-orchestrator defaults (shard count, resume).
     pub sweep: SweepConfig,
+    /// Sweep-daemon defaults (worker count, queue cap, poll interval).
+    pub daemon: DaemonConfig,
     /// RMM estimator / variance-controller knobs.
     pub rmm: RmmConfig,
     pub train: TrainConfig,
@@ -201,6 +225,7 @@ impl Default for ExperimentConfig {
             backend: None,
             pool: PoolConfig::default(),
             sweep: SweepConfig::default(),
+            daemon: DaemonConfig::default(),
             rmm: RmmConfig::default(),
             train: TrainConfig::default(),
         }
@@ -220,6 +245,7 @@ impl ExperimentConfig {
                 "backend" => cfg.backend = Some(req_str(v, k)?),
                 "pool" => cfg.pool = parse_pool(v)?,
                 "sweep" => cfg.sweep = parse_sweep(v)?,
+                "daemon" => cfg.daemon = parse_daemon(v)?,
                 "rmm" => cfg.rmm = parse_rmm(v)?,
                 "train" => cfg.train = parse_train(v)?,
                 other => bail!("unknown config key '{other}'"),
@@ -292,6 +318,21 @@ impl ExperimentConfig {
             }
             if let Json::Obj(map) = &mut j {
                 map.insert("sweep".to_string(), Json::obj(s));
+            }
+        }
+        if !self.daemon.is_unset() {
+            let mut d = Vec::new();
+            if let Some(w) = self.daemon.workers {
+                d.push(("workers", Json::num(w as f64)));
+            }
+            if let Some(c) = self.daemon.queue_cap {
+                d.push(("queue_cap", Json::num(c as f64)));
+            }
+            if let Some(p) = self.daemon.poll_ms {
+                d.push(("poll_ms", Json::num(p as f64)));
+            }
+            if let Json::Obj(map) = &mut j {
+                map.insert("daemon".to_string(), Json::obj(d));
             }
         }
         if !self.rmm.is_unset() {
@@ -370,6 +411,15 @@ impl ExperimentConfig {
             crate::chaos::validate_profile(p)
                 .with_context(|| format!("bad sweep.chaos_profile '{p}'"))?;
         }
+        if self.daemon.workers == Some(0) {
+            bail!("daemon.workers must be >= 1");
+        }
+        if self.daemon.queue_cap == Some(0) {
+            bail!("daemon.queue_cap must be >= 1");
+        }
+        if self.daemon.poll_ms == Some(0) {
+            bail!("daemon.poll_ms must be >= 1");
+        }
         if let Some(mb) = self.rmm.mem_budget {
             if !mb.is_finite() || mb <= 0.0 || mb > 1.0 {
                 bail!("rmm.mem_budget must be in (0, 1], got {mb}");
@@ -442,6 +492,20 @@ fn parse_sweep(j: &Json) -> Result<SweepConfig> {
         }
     }
     Ok(s)
+}
+
+fn parse_daemon(j: &Json) -> Result<DaemonConfig> {
+    let mut d = DaemonConfig::default();
+    let obj = j.as_obj().context("'daemon' must be an object")?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "workers" => d.workers = Some(num(v, k)? as usize),
+            "queue_cap" => d.queue_cap = Some(num(v, k)? as usize),
+            "poll_ms" => d.poll_ms = Some(num(v, k)? as u64),
+            other => bail!("unknown daemon key '{other}'"),
+        }
+    }
+    Ok(d)
 }
 
 fn parse_rmm(j: &Json) -> Result<RmmConfig> {
@@ -576,6 +640,11 @@ mod tests {
             r#"{"sweep": {"affinity": 1}}"#,
             r#"{"train": {"prefetch": "yes"}}"#,
             r#"{"train": {"prefetch_depth": 0}}"#,
+            r#"{"daemon": {"workers": 0}}"#,
+            r#"{"daemon": {"queue_cap": 0}}"#,
+            r#"{"daemon": {"poll_ms": 0}}"#,
+            r#"{"daemon": {"bogus": 1}}"#,
+            r#"{"daemon": {"workers": "many"}}"#,
             r#"{"rmm": {"bogus": 1}}"#,
             r#"{"rmm": {"mem_budget": 0}}"#,
             r#"{"rmm": {"mem_budget": -0.5}}"#,
@@ -661,6 +730,24 @@ mod tests {
     }
 
     #[test]
+    fn daemon_section_parses_and_roundtrips() {
+        let j = Json::parse(
+            r#"{"daemon": {"workers": 2, "queue_cap": 5, "poll_ms": 100}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.daemon.workers, Some(2));
+        assert_eq!(cfg.daemon.queue_cap, Some(5));
+        assert_eq!(cfg.daemon.poll_ms, Some(100));
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // absent section -> no preference, and to_json omits it
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(cfg.daemon.is_unset());
+        assert!(cfg.to_json().get("daemon").is_null());
+    }
+
+    #[test]
     fn rmm_section_parses_and_roundtrips() {
         let j = Json::parse(r#"{"rmm": {"mem_budget": 0.25}}"#).unwrap();
         let cfg = ExperimentConfig::from_json(&j).unwrap();
@@ -673,7 +760,7 @@ mod tests {
         // absent section -> no preference, and to_json omits it
         let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert!(cfg.rmm.is_unset());
-        assert!(cfg.to_json().get("rmm").is_none());
+        assert!(cfg.to_json().get("rmm").is_null());
     }
 
     #[test]

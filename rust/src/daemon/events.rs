@@ -1,0 +1,489 @@
+//! Typed JSONL progress events: the daemon's observable surface.
+//!
+//! # Wire format
+//!
+//! One compact JSON object per line.  Every line carries a snake_case
+//! `"type"` discriminant and a `t_ms` wall-clock timestamp
+//! (unix-epoch ms); the remaining keys are the event's payload fields
+//! (see the schema table in the `sweep` module doc).  Synthetic ids are
+//! **not** on the wire: both the emitter and the replay parser assign
+//! them from a monotonic counter starting at 1, so a replay-parse of a
+//! teed `events.jsonl` reproduces the emitted [`Event`] stream exactly,
+//! ids included.
+//!
+//! # Replay guarantees ([`parse_lines`])
+//!
+//! * Blank / whitespace-only lines are ignored (covers a trailing
+//!   newline and a torn final line that never got its payload).
+//! * A single trailing `'\r'` is trimmed per line (CRLF logs parse
+//!   identically to LF logs); no other trimming is applied.
+//! * An unknown `"type"`, a malformed JSON line, or a known type with a
+//!   missing required field yields a per-line *diagnostic* — parsing
+//!   continues with the next line, never a hard error.
+//! * Unknown extra fields on a known event type are silently ignored
+//!   (only the schema's keys are read), so the contract is
+//!   forward-compatible with new payload fields.
+//! * Ids are assigned only to successfully parsed events, monotonically
+//!   across the whole input — concatenated logs never reset the
+//!   counter mid-stream.
+//!
+//! # Sink
+//!
+//! The process-global sink mirrors the `chaos` install pattern: an
+//! atomic fast path ([`enabled`]) so the library hooks in
+//! `sweep::{scheduler,merge}` are free when no daemon is running, plus
+//! a mutex-held [`Sink`] that serializes concurrent worker-thread
+//! emissions — the tee file order is therefore the emitted order for
+//! any worker count.  Tee appends run under `sweep::retry::io_retry`
+//! with the `event.tee` chaos fault point inside; a non-transient tee
+//! failure drops the line and moves on, because the event log is a
+//! pure witness, never an input (fragments are the sole state).
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// A typed daemon progress event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// Monotonic synthetic id, assigned from 1 by the emitter and
+    /// re-derived identically by [`parse_lines`]; never on the wire.
+    pub id: u64,
+    pub kind: EventKind,
+    /// Wall-clock unix-epoch milliseconds.  The only nondeterministic
+    /// field: same-seed comparisons strip it (see [`Event::with_t0`]).
+    pub t_ms: u64,
+}
+
+impl Event {
+    /// The event with its timestamp zeroed — the canonical form for
+    /// "identical modulo timing fields" comparisons.
+    pub fn with_t0(&self) -> Event {
+        Event { id: self.id, kind: self.kind.clone(), t_ms: 0 }
+    }
+
+    /// Serialize to one compact JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        let mut fields = vec![("type", Json::str(self.kind.type_name()))];
+        fields.extend(self.kind.fields());
+        fields.push(("t_ms", Json::num(self.t_ms as f64)));
+        Json::obj(fields).to_string()
+    }
+}
+
+/// The event vocabulary.  `sweep` is the daemon-scoped sweep id
+/// (`<lane>__<name>`); `cell` is the cell index within its spec;
+/// `worker` is the claim-protocol worker id.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    DaemonStarted { queue: String, workers: usize },
+    SweepQueued { sweep: String, lane: String },
+    SweepRejected { sweep: String, lane: String, depth: usize, cap: usize },
+    SweepStarted { sweep: String, lane: String, cells: usize },
+    CellClaimed { sweep: String, cell: usize, worker: String },
+    CellDone { sweep: String, cell: usize, worker: String },
+    FragmentCommitted { sweep: String, cell: usize },
+    WorkerRespawned { sweep: String, slot: usize, gen: usize },
+    SweepMerged { sweep: String, cells: usize },
+    DaemonStopped { sweeps: usize },
+}
+
+impl EventKind {
+    /// The snake_case wire discriminant.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            EventKind::DaemonStarted { .. } => "daemon_started",
+            EventKind::SweepQueued { .. } => "sweep_queued",
+            EventKind::SweepRejected { .. } => "sweep_rejected",
+            EventKind::SweepStarted { .. } => "sweep_started",
+            EventKind::CellClaimed { .. } => "cell_claimed",
+            EventKind::CellDone { .. } => "cell_done",
+            EventKind::FragmentCommitted { .. } => "fragment_committed",
+            EventKind::WorkerRespawned { .. } => "worker_respawned",
+            EventKind::SweepMerged { .. } => "sweep_merged",
+            EventKind::DaemonStopped { .. } => "daemon_stopped",
+        }
+    }
+
+    fn fields(&self) -> Vec<(&'static str, Json)> {
+        let n = |v: usize| Json::num(v as f64);
+        match self {
+            EventKind::DaemonStarted { queue, workers } => {
+                vec![("queue", Json::str(queue.clone())), ("workers", n(*workers))]
+            }
+            EventKind::SweepQueued { sweep, lane } => {
+                vec![("sweep", Json::str(sweep.clone())), ("lane", Json::str(lane.clone()))]
+            }
+            EventKind::SweepRejected { sweep, lane, depth, cap } => vec![
+                ("sweep", Json::str(sweep.clone())),
+                ("lane", Json::str(lane.clone())),
+                ("depth", n(*depth)),
+                ("cap", n(*cap)),
+            ],
+            EventKind::SweepStarted { sweep, lane, cells } => vec![
+                ("sweep", Json::str(sweep.clone())),
+                ("lane", Json::str(lane.clone())),
+                ("cells", n(*cells)),
+            ],
+            EventKind::CellClaimed { sweep, cell, worker } => vec![
+                ("sweep", Json::str(sweep.clone())),
+                ("cell", n(*cell)),
+                ("worker", Json::str(worker.clone())),
+            ],
+            EventKind::CellDone { sweep, cell, worker } => vec![
+                ("sweep", Json::str(sweep.clone())),
+                ("cell", n(*cell)),
+                ("worker", Json::str(worker.clone())),
+            ],
+            EventKind::FragmentCommitted { sweep, cell } => {
+                vec![("sweep", Json::str(sweep.clone())), ("cell", n(*cell))]
+            }
+            EventKind::WorkerRespawned { sweep, slot, gen } => vec![
+                ("sweep", Json::str(sweep.clone())),
+                ("slot", n(*slot)),
+                ("gen", n(*gen)),
+            ],
+            EventKind::SweepMerged { sweep, cells } => {
+                vec![("sweep", Json::str(sweep.clone())), ("cells", n(*cells))]
+            }
+            EventKind::DaemonStopped { sweeps } => vec![("sweeps", n(*sweeps))],
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replay parser
+// ---------------------------------------------------------------------------
+
+/// The result of replay-parsing an event log: the reconstructed typed
+/// stream plus one diagnostic per skipped line.
+#[derive(Debug, Default)]
+pub struct ParsedLog {
+    pub events: Vec<Event>,
+    /// `"line <n>: <why>"` for every line that failed to parse into a
+    /// known event (1-based line numbers).
+    pub diagnostics: Vec<String>,
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key).as_str().map(str::to_string).ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key).as_usize().ok_or_else(|| format!("missing field '{key}'"))
+}
+
+fn parse_kind(j: &Json) -> Result<EventKind, String> {
+    let ty = j.get("type").as_str().ok_or("missing field 'type'")?;
+    match ty {
+        "daemon_started" => Ok(EventKind::DaemonStarted {
+            queue: req_str(j, "queue")?,
+            workers: req_usize(j, "workers")?,
+        }),
+        "sweep_queued" => Ok(EventKind::SweepQueued {
+            sweep: req_str(j, "sweep")?,
+            lane: req_str(j, "lane")?,
+        }),
+        "sweep_rejected" => Ok(EventKind::SweepRejected {
+            sweep: req_str(j, "sweep")?,
+            lane: req_str(j, "lane")?,
+            depth: req_usize(j, "depth")?,
+            cap: req_usize(j, "cap")?,
+        }),
+        "sweep_started" => Ok(EventKind::SweepStarted {
+            sweep: req_str(j, "sweep")?,
+            lane: req_str(j, "lane")?,
+            cells: req_usize(j, "cells")?,
+        }),
+        "cell_claimed" => Ok(EventKind::CellClaimed {
+            sweep: req_str(j, "sweep")?,
+            cell: req_usize(j, "cell")?,
+            worker: req_str(j, "worker")?,
+        }),
+        "cell_done" => Ok(EventKind::CellDone {
+            sweep: req_str(j, "sweep")?,
+            cell: req_usize(j, "cell")?,
+            worker: req_str(j, "worker")?,
+        }),
+        "fragment_committed" => Ok(EventKind::FragmentCommitted {
+            sweep: req_str(j, "sweep")?,
+            cell: req_usize(j, "cell")?,
+        }),
+        "worker_respawned" => Ok(EventKind::WorkerRespawned {
+            sweep: req_str(j, "sweep")?,
+            slot: req_usize(j, "slot")?,
+            gen: req_usize(j, "gen")?,
+        }),
+        "sweep_merged" => Ok(EventKind::SweepMerged {
+            sweep: req_str(j, "sweep")?,
+            cells: req_usize(j, "cells")?,
+        }),
+        "daemon_stopped" => Ok(EventKind::DaemonStopped { sweeps: req_usize(j, "sweeps")? }),
+        other => Err(format!("unknown event type '{other}'")),
+    }
+}
+
+/// Replay-parse a raw JSONL event log (see the module doc for the
+/// tolerance contract).  Never fails: unparseable lines become
+/// diagnostics and the stream continues.
+pub fn parse_lines(text: &str) -> ParsedLog {
+    let mut log = ParsedLog::default();
+    let mut next_id: u64 = 1;
+    for (i, raw) in text.split('\n').enumerate() {
+        // CRLF tolerance: trim ONE trailing '\r' and nothing else —
+        // a full trim would hide payload whitespace differences.
+        let line = raw.strip_suffix('\r').unwrap_or(raw);
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+        let j = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                log.diagnostics.push(format!("line {lineno}: {e}"));
+                continue;
+            }
+        };
+        match parse_kind(&j) {
+            Ok(kind) => {
+                // t_ms is tolerated missing (0): timing is advisory.
+                let t_ms = j.get("t_ms").as_f64().unwrap_or(0.0) as u64;
+                log.events.push(Event { id: next_id, kind, t_ms });
+                next_id += 1;
+            }
+            Err(why) => log.diagnostics.push(format!("line {lineno}: {why}")),
+        }
+    }
+    log
+}
+
+// ---------------------------------------------------------------------------
+// Process-global sink
+// ---------------------------------------------------------------------------
+
+struct Sink {
+    next_id: u64,
+    /// Current sweep label, injected into the library-hook events
+    /// (`cell_claimed` etc.) that can't know which sweep they serve.
+    sweep: Option<String>,
+    tee: Option<File>,
+    emitted: Vec<Event>,
+    stdout: bool,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+/// True when a sink is installed — the fast path the library hooks
+/// check before paying for any lock or allocation.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install the process-global sink.  `tee` appends raw lines to the
+/// given file (created if absent — append keeps a crash/resume pair of
+/// daemon runs in one log); `stdout` mirrors lines to stdout.
+pub fn install(tee: Option<&Path>, stdout: bool) -> std::io::Result<()> {
+    let tee = match tee {
+        Some(p) => Some(std::fs::OpenOptions::new().create(true).append(true).open(p)?),
+        None => None,
+    };
+    let mut guard = SINK.lock().unwrap();
+    *guard = Some(Sink { next_id: 1, sweep: None, tee, emitted: Vec::new(), stdout });
+    ENABLED.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Tear the sink down, returning everything it emitted (the in-memory
+/// side of the replay-verify comparison).
+pub fn clear() -> Vec<Event> {
+    ENABLED.store(false, Ordering::SeqCst);
+    SINK.lock().unwrap().take().map(|s| s.emitted).unwrap_or_default()
+}
+
+/// Snapshot the emitted stream without tearing the sink down.
+pub fn snapshot() -> Vec<Event> {
+    SINK.lock().unwrap().as_ref().map(|s| s.emitted.clone()).unwrap_or_default()
+}
+
+/// Set (or clear) the sweep label stamped onto library-hook events.
+pub fn set_sweep(label: Option<&str>) {
+    if let Some(sink) = SINK.lock().unwrap().as_mut() {
+        sink.sweep = label.map(str::to_string);
+    }
+}
+
+fn emit_locked(sink: &mut Sink, kind: EventKind) {
+    let t_ms = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0);
+    let ev = Event { id: sink.next_id, kind, t_ms };
+    sink.next_id += 1;
+    let line = ev.to_line();
+    if sink.stdout {
+        println!("{line}");
+    }
+    if let Some(f) = sink.tee.as_mut() {
+        // Transient tee errors heal under the retry budget; anything
+        // worse drops the line — the log is a witness, not state.
+        let _ = crate::sweep::retry::io_retry("event.tee", || {
+            crate::chaos::fault("event.tee")?;
+            writeln!(f, "{line}")
+        });
+    }
+    sink.emitted.push(ev);
+}
+
+/// Emit an event with an explicit kind (daemon-side call sites that
+/// know their full payload).  No-op when no sink is installed.
+pub fn emit(kind: EventKind) {
+    if !enabled() {
+        return;
+    }
+    let mut guard = SINK.lock().unwrap();
+    if let Some(sink) = guard.as_mut() {
+        emit_locked(sink, kind);
+    }
+}
+
+/// Emit an event whose kind needs the sink's current sweep label
+/// (the library hooks below).  Single lock for label + emission.
+fn emit_scoped(make: impl FnOnce(String) -> EventKind) {
+    if !enabled() {
+        return;
+    }
+    let mut guard = SINK.lock().unwrap();
+    if let Some(sink) = guard.as_mut() {
+        let sweep = sink.sweep.clone().unwrap_or_default();
+        let kind = make(sweep);
+        emit_locked(sink, kind);
+    }
+}
+
+/// Library hook (`sweep::scheduler`): a worker won a cell's lease.
+pub fn cell_claimed(cell: usize, worker: &str) {
+    let worker = worker.to_string();
+    emit_scoped(|sweep| EventKind::CellClaimed { sweep, cell, worker });
+}
+
+/// Library hook (`sweep::scheduler`): a cell's fragment committed and
+/// its lease released.
+pub fn cell_done(cell: usize, worker: &str) {
+    let worker = worker.to_string();
+    emit_scoped(|sweep| EventKind::CellDone { sweep, cell, worker });
+}
+
+/// Library hook (`sweep::merge`): a fragment landed valid on disk.
+pub fn fragment_committed(cell: usize) {
+    emit_scoped(|sweep| EventKind::FragmentCommitted { sweep, cell });
+}
+
+/// Hook for worker supervision (daemon pool and the subprocess
+/// supervisor): a dead worker slot was respawned as `gen`.
+pub fn worker_respawned(slot: usize, gen: usize) {
+    emit_scoped(|sweep| EventKind::WorkerRespawned { sweep, slot, gen });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_kinds() -> Vec<EventKind> {
+        vec![
+            EventKind::DaemonStarted { queue: "/tmp/q".into(), workers: 2 },
+            EventKind::SweepQueued { sweep: "ci__synth".into(), lane: "ci".into() },
+            EventKind::SweepRejected {
+                sweep: "ci__late".into(),
+                lane: "ci".into(),
+                depth: 9,
+                cap: 8,
+            },
+            EventKind::SweepStarted { sweep: "ci__synth".into(), lane: "ci".into(), cells: 8 },
+            EventKind::CellClaimed { sweep: "ci__synth".into(), cell: 3, worker: "w-1-0".into() },
+            EventKind::CellDone { sweep: "ci__synth".into(), cell: 3, worker: "w-1-0".into() },
+            EventKind::FragmentCommitted { sweep: "ci__synth".into(), cell: 3 },
+            EventKind::WorkerRespawned { sweep: "ci__synth".into(), slot: 0, gen: 1 },
+            EventKind::SweepMerged { sweep: "ci__synth".into(), cells: 8 },
+            EventKind::DaemonStopped { sweeps: 1 },
+        ]
+    }
+
+    #[test]
+    fn every_kind_round_trips_through_its_wire_line() {
+        let events: Vec<Event> = sample_kinds()
+            .into_iter()
+            .enumerate()
+            .map(|(i, kind)| Event { id: i as u64 + 1, kind, t_ms: 1000 + i as u64 })
+            .collect();
+        let text: String = events.iter().map(|e| e.to_line() + "\n").collect();
+        let log = parse_lines(&text);
+        assert!(log.diagnostics.is_empty(), "{:?}", log.diagnostics);
+        assert_eq!(log.events, events);
+    }
+
+    #[test]
+    fn crlf_blank_lines_and_a_torn_tail_are_tolerated() {
+        let a = Event {
+            id: 1,
+            kind: EventKind::DaemonStopped { sweeps: 0 },
+            t_ms: 5,
+        };
+        let text = format!("\r\n  \n{}\r\n{{\"type\":\"sweep_m", a.to_line());
+        let log = parse_lines(&text);
+        assert_eq!(log.events, vec![a]);
+        assert_eq!(log.diagnostics.len(), 1, "torn tail must diagnose, not error");
+    }
+
+    #[test]
+    fn unknown_types_and_missing_fields_diagnose_without_consuming_ids() {
+        let good = Event {
+            id: 1,
+            kind: EventKind::SweepQueued { sweep: "a__b".into(), lane: "a".into() },
+            t_ms: 0,
+        };
+        let text = format!(
+            "{{\"type\":\"comet_sighted\",\"t_ms\":1}}\n{}\n{{\"type\":\"cell_done\",\"sweep\":\"x__y\"}}\n",
+            good.to_line()
+        );
+        let log = parse_lines(&text);
+        assert_eq!(log.events, vec![good], "good line must get id 1, skips consume none");
+        assert_eq!(log.diagnostics.len(), 2);
+        assert!(log.diagnostics[0].contains("line 1"), "{}", log.diagnostics[0]);
+        assert!(log.diagnostics[0].contains("unknown event type 'comet_sighted'"));
+        assert!(log.diagnostics[1].contains("line 3"));
+        assert!(log.diagnostics[1].contains("missing field"));
+    }
+
+    #[test]
+    fn unknown_extra_fields_on_known_types_are_ignored() {
+        let text = "{\"type\":\"daemon_stopped\",\"sweeps\":3,\"t_ms\":7,\"galaxy\":\"m31\"}\n";
+        let log = parse_lines(text);
+        assert!(log.diagnostics.is_empty(), "{:?}", log.diagnostics);
+        assert_eq!(
+            log.events,
+            vec![Event { id: 1, kind: EventKind::DaemonStopped { sweeps: 3 }, t_ms: 7 }]
+        );
+    }
+
+    #[test]
+    fn missing_t_ms_parses_as_zero() {
+        let log = parse_lines("{\"type\":\"daemon_stopped\",\"sweeps\":1}\n");
+        assert_eq!(log.events[0].t_ms, 0);
+        assert!(log.diagnostics.is_empty());
+    }
+
+    #[test]
+    fn ids_stay_monotonic_across_a_concatenated_log() {
+        let one = "{\"type\":\"daemon_stopped\",\"sweeps\":1}\n";
+        let text = format!("{one}{one}{one}");
+        let log = parse_lines(&text);
+        let ids: Vec<u64> = log.events.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![1, 2, 3], "concatenation must never reset the counter");
+    }
+}

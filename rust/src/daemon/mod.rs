@@ -1,0 +1,459 @@
+//! Sweep-as-a-service: a persistent orchestrator over the filesystem
+//! queue ([`queue`]) that runs sweeps through the existing dynamic
+//! claim/lease scheduler with worker `Session`s held warm *between*
+//! sweeps, and narrates everything as typed JSONL events ([`events`]).
+//!
+//! # Design
+//!
+//! The daemon owns no state of its own.  Queue transitions are atomic
+//! renames, per-sweep fragments are the sole source of truth, and the
+//! event log is a pure witness: kill the daemon at any instant and the
+//! next `sweep-daemon` invocation recovers `active/` specs first, where
+//! `resume::prepare(.., resume=true)` turns the re-run into a resume
+//! that executes exactly the missing cells.  Merged reports are written
+//! in the selftest byte format, so daemon-vs-CLI byte identity is a
+//! `cmp` away (the CI gate).
+//!
+//! # Fairness and backpressure
+//!
+//! Tenants map to queue *lanes*.  The daemon scans lanes in sorted
+//! order but dequeues round-robin: each pick takes the lexicographically
+//! first spec from the first non-empty lane cyclically *after* the lane
+//! served last, so one chatty tenant cannot starve the others.  Depth
+//! is bounded per lane: at scan time every spec beyond the first
+//! `queue_cap` (sorted order) is moved to `rejected/` with a typed
+//! `sweep_rejected` event carrying the observed depth and the cap —
+//! callers learn they were shed from the event stream alone.
+//!
+//! # Workers
+//!
+//! Worker threads persist for the daemon lifetime, each owning its
+//! `Session` (created inside the thread — sessions never cross a
+//! thread boundary).  A sweep is dispatched by sending one job to every
+//! worker; they race through the shared claim store exactly like
+//! subprocess workers, then trim their session caches with
+//! `retain_across_sweeps` so warm state amortizes across sweeps without
+//! growing unboundedly (warm ≡ cold keeps this observation-free).  A
+//! worker that returns an error is respawned cold (fresh thread +
+//! session, generation + 1) under `respawn_budget`, with a
+//! `worker_respawned` event; past the budget the sweep's spec stays in
+//! `active/` and the daemon exits with the error — restart to resume.
+
+pub mod events;
+pub mod queue;
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+
+use anyhow::{bail, Context, Result};
+
+use crate::session::Session;
+use crate::sweep::{merge, resume, DynamicConfig, DynamicRun, SweepSpec};
+use crate::util::json::Json;
+
+use events::{Event, EventKind};
+use queue::Pending;
+
+/// Daemon configuration (CLI flags layered over the config file's
+/// `daemon` section; see `config::DaemonConfig`).
+#[derive(Debug, Clone)]
+pub struct DaemonOpts {
+    /// Queue directory root.
+    pub queue: PathBuf,
+    /// In-process worker threads racing each sweep's claim store.
+    pub workers: usize,
+    /// Max queued specs per lane; excess is shed to `rejected/`.
+    pub queue_cap: usize,
+    /// Claim lease TTL handed to the dynamic scheduler.
+    pub lease_ttl_ms: u64,
+    /// Affinity-first claiming (see `DynamicConfig::with_affinity`).
+    pub affinity: bool,
+    /// Warm session caches in the workers.
+    pub session_cache: bool,
+    /// Exit once the queue is empty instead of polling forever.
+    pub drain: bool,
+    /// Idle poll interval when not draining.
+    pub poll_ms: u64,
+    /// Cold worker respawns allowed across the daemon lifetime.
+    pub respawn_budget: u32,
+    /// Mirror events to stdout (the tee to `events.jsonl` is always on).
+    pub stdout_events: bool,
+    /// After a drain, replay-parse the tee and require it to round-trip
+    /// the in-memory emitted stream exactly.  Needs a fresh queue (the
+    /// tee is append-only across runs) and a fault-free tee.
+    pub replay_verify: bool,
+}
+
+impl Default for DaemonOpts {
+    fn default() -> DaemonOpts {
+        DaemonOpts {
+            queue: PathBuf::new(),
+            workers: 1,
+            queue_cap: DEFAULT_QUEUE_CAP,
+            lease_ttl_ms: crate::sweep::DEFAULT_LEASE_TTL_MS,
+            affinity: true,
+            session_cache: true,
+            drain: false,
+            poll_ms: DEFAULT_POLL_MS,
+            respawn_budget: 0,
+            stdout_events: false,
+            replay_verify: false,
+        }
+    }
+}
+
+/// Default per-lane queue-depth cap.
+pub const DEFAULT_QUEUE_CAP: usize = 8;
+/// Default idle poll interval (ms).
+pub const DEFAULT_POLL_MS: u64 = 250;
+
+/// What a daemon run did, plus the full emitted event stream (the
+/// in-memory side of replay verification).
+#[derive(Debug)]
+pub struct DaemonSummary {
+    pub merged: usize,
+    pub rejected: usize,
+    pub events: Vec<Event>,
+}
+
+/// A sweep dispatched to the worker pool.  Plain owned data: the only
+/// thing that crosses a thread boundary.
+struct SweepJob {
+    dir: PathBuf,
+    spec: SweepSpec,
+    lease_ttl_ms: u64,
+    affinity: bool,
+}
+
+struct Worker {
+    sender: mpsc::Sender<Arc<SweepJob>>,
+    gen: usize,
+    handle: thread::JoinHandle<()>,
+}
+
+fn spawn_worker(
+    slot: usize,
+    gen: usize,
+    session_cache: bool,
+    results: mpsc::Sender<(usize, Result<DynamicRun>)>,
+) -> Worker {
+    let (tx, rx) = mpsc::channel::<Arc<SweepJob>>();
+    let handle = thread::spawn(move || {
+        // The session lives and dies with this thread; warm state
+        // survives from sweep to sweep, trimmed between jobs.
+        let mut session = Session::data_only(session_cache);
+        for job in rx {
+            let cfg = DynamicConfig::new(&format!("daemon-w{slot}g{gen}"), job.lease_ttl_ms)
+                .with_affinity(job.affinity);
+            let res = crate::sweep::run_dynamic(&job.dir, &job.spec, &cfg, &mut |c, ctx| {
+                crate::bench_harness::runner::run_cell(&mut session, &job.spec, c, ctx)
+            });
+            session.retain_across_sweeps();
+            if results.send((slot, res)).is_err() {
+                break;
+            }
+        }
+    });
+    Worker { sender: tx, gen, handle }
+}
+
+struct WorkerPool {
+    workers: Vec<Worker>,
+    results_tx: mpsc::Sender<(usize, Result<DynamicRun>)>,
+    results_rx: mpsc::Receiver<(usize, Result<DynamicRun>)>,
+    session_cache: bool,
+    respawns_left: u32,
+}
+
+impl WorkerPool {
+    fn spawn(count: usize, session_cache: bool, respawn_budget: u32) -> WorkerPool {
+        let (results_tx, results_rx) = mpsc::channel();
+        let workers = (0..count)
+            .map(|slot| spawn_worker(slot, 0, session_cache, results_tx.clone()))
+            .collect();
+        WorkerPool { workers, results_tx, results_rx, session_cache, respawns_left: respawn_budget }
+    }
+
+    /// Race every worker through one sweep's claim store; block until
+    /// all of them report the grid complete.  A failed worker respawns
+    /// cold (gen+1) and re-enters the race while the budget lasts.
+    fn run_sweep(&mut self, job: Arc<SweepJob>) -> Result<()> {
+        for w in &self.workers {
+            w.sender.send(job.clone()).ok().context("daemon worker channel closed")?;
+        }
+        let mut pending = self.workers.len();
+        while pending > 0 {
+            let (slot, res) =
+                self.results_rx.recv().ok().context("daemon worker result channel closed")?;
+            match res {
+                Ok(_) => pending -= 1,
+                Err(e) => {
+                    if self.respawns_left == 0 {
+                        return Err(e).with_context(|| {
+                            format!("daemon worker {slot} failed with no respawn budget left")
+                        });
+                    }
+                    self.respawns_left -= 1;
+                    let gen = self.workers[slot].gen + 1;
+                    eprintln!(
+                        "sweep-daemon: worker {slot} failed ({e:#}); respawning as gen {gen} \
+                         ({} respawns left)",
+                        self.respawns_left
+                    );
+                    let fresh = spawn_worker(slot, gen, self.session_cache, self.results_tx.clone());
+                    events::worker_respawned(slot, gen);
+                    fresh.sender.send(job.clone()).ok().context("daemon worker channel closed")?;
+                    // Replacing the slot drops the dead worker's sender,
+                    // which ends its job loop and lets the thread exit.
+                    self.workers[slot] = fresh;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn shutdown(self) {
+        drop(self.results_tx);
+        for w in self.workers {
+            let Worker { sender, handle, .. } = w;
+            drop(sender);
+            let _ = handle.join();
+        }
+    }
+}
+
+/// Serialize a merged report in the exact byte format `sweep-selftest
+/// --out` writes: pretty-printed row array plus a trailing newline.
+/// This equality is the daemon-vs-CLI acceptance contract.
+pub fn report_bytes(rows: Vec<Json>) -> String {
+    let mut s = Json::Arr(rows).to_string_pretty();
+    s.push('\n');
+    s
+}
+
+/// Run the daemon: recover `active/`, then serve the queue until
+/// drained (`drain`) or forever (polling).  See the module doc.
+pub fn run(opts: &DaemonOpts) -> Result<DaemonSummary> {
+    queue::ensure_layout(&opts.queue)?;
+    if opts.workers == 0 {
+        bail!("daemon needs at least one worker");
+    }
+    events::install(Some(&queue::events_path(&opts.queue)), opts.stdout_events)
+        .context("opening events.jsonl tee")?;
+    let res = run_inner(opts);
+    let emitted = events::clear();
+    let (merged, rejected) = res?;
+    if opts.replay_verify {
+        replay_verify(opts, &emitted)?;
+    }
+    Ok(DaemonSummary { merged, rejected, events: emitted })
+}
+
+fn run_inner(opts: &DaemonOpts) -> Result<(usize, usize)> {
+    events::emit(EventKind::DaemonStarted {
+        queue: opts.queue.display().to_string(),
+        workers: opts.workers,
+    });
+    let mut pool = WorkerPool::spawn(opts.workers, opts.session_cache, opts.respawn_budget);
+    let mut merged = 0usize;
+    let mut rejected = 0usize;
+    let mut queued_seen: BTreeSet<String> = BTreeSet::new();
+    let mut last_lane: Option<String> = None;
+
+    loop {
+        // Crash recovery first: specs a prior daemon dequeued but never
+        // retired.  Deterministic (sorted) order.
+        let recovered = queue::active_entries(&opts.queue)?;
+        for (id, path) in recovered {
+            process_sweep(opts, &mut pool, &id, &path, &mut merged, &mut rejected)?;
+        }
+
+        // Intake: admit within the per-lane cap, shed the rest.
+        let pending = scan_and_shed(opts, &mut queued_seen, &mut rejected)?;
+        if pending.is_empty() {
+            if opts.drain {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(opts.poll_ms.max(1)));
+            continue;
+        }
+
+        // Fair pick: first non-empty lane cyclically after the last
+        // lane served, lexicographically first spec within it.
+        let pick = pick_round_robin(&pending, last_lane.as_deref());
+        last_lane = Some(pick.lane.clone());
+        let id = pick.sweep_id();
+        let active = queue::dequeue(&opts.queue, &pick)?;
+        process_sweep(opts, &mut pool, &id, &active, &mut merged, &mut rejected)?;
+    }
+
+    events::emit(EventKind::DaemonStopped { sweeps: merged });
+    pool.shutdown();
+    Ok((merged, rejected))
+}
+
+/// Scan `incoming/`, emit `sweep_queued` for newly seen specs, and
+/// enforce the per-lane depth cap (excess specs move to `rejected/`
+/// with a `sweep_rejected` event).  Returns the admitted pendings.
+fn scan_and_shed(
+    opts: &DaemonOpts,
+    queued_seen: &mut BTreeSet<String>,
+    rejected: &mut usize,
+) -> Result<Vec<Pending>> {
+    let mut admitted = Vec::new();
+    let mut by_lane: Vec<(String, Vec<Pending>)> = Vec::new();
+    for p in queue::scan(&opts.queue)? {
+        match by_lane.last_mut() {
+            Some((lane, group)) if *lane == p.lane => group.push(p),
+            _ => by_lane.push((p.lane.clone(), vec![p])),
+        }
+    }
+    for (_, group) in by_lane {
+        let depth = group.len();
+        for (i, p) in group.into_iter().enumerate() {
+            let id = p.sweep_id();
+            if i < opts.queue_cap {
+                if queued_seen.insert(id.clone()) {
+                    events::emit(EventKind::SweepQueued { sweep: id, lane: p.lane.clone() });
+                }
+                admitted.push(p);
+            } else {
+                events::emit(EventKind::SweepRejected {
+                    sweep: id.clone(),
+                    lane: p.lane.clone(),
+                    depth,
+                    cap: opts.queue_cap,
+                });
+                eprintln!(
+                    "sweep-daemon: lane '{}' over depth cap ({depth} > {}), shedding '{id}'",
+                    p.lane, opts.queue_cap
+                );
+                queue::reject(&opts.queue, &id, &p.path)?;
+                *rejected += 1;
+            }
+        }
+    }
+    Ok(admitted)
+}
+
+/// Round-robin lane pick over a sorted pending list: the first spec of
+/// the first non-empty lane strictly after `last` in cyclic lane order.
+fn pick_round_robin(pending: &[Pending], last: Option<&str>) -> Pending {
+    debug_assert!(!pending.is_empty());
+    if let Some(last) = last {
+        if let Some(p) = pending.iter().find(|p| p.lane.as_str() > last) {
+            return p.clone();
+        }
+    }
+    pending[0].clone()
+}
+
+/// Run one dequeued sweep end to end: parse + admission-check the
+/// spec, resume-prepare its fragment dir, race the pool, merge, write
+/// the report, retire the spec.  Unusable specs go to `rejected/` with
+/// a stderr diagnostic; scheduler failures leave the spec in `active/`
+/// and propagate (restart = resume).
+fn process_sweep(
+    opts: &DaemonOpts,
+    pool: &mut WorkerPool,
+    id: &str,
+    active_path: &std::path::Path,
+    merged: &mut usize,
+    rejected: &mut usize,
+) -> Result<()> {
+    let lane = queue::split_id(id).map(|(l, _)| l.to_string()).unwrap_or_default();
+    let spec = match queue::load_spec(active_path) {
+        Ok(spec) if queue::engine_free(&spec) => spec,
+        Ok(spec) => {
+            eprintln!(
+                "sweep-daemon: rejecting '{id}': experiment '{}' needs an engine; \
+                 run it via sweep-selftest/bench instead",
+                spec.experiment
+            );
+            queue::reject(&opts.queue, id, active_path)?;
+            *rejected += 1;
+            return Ok(());
+        }
+        Err(e) => {
+            eprintln!("sweep-daemon: rejecting '{id}': {e:#}");
+            queue::reject(&opts.queue, id, active_path)?;
+            *rejected += 1;
+            return Ok(());
+        }
+    };
+
+    let sdir = queue::sweeps_dir(&opts.queue).join(id);
+    // resume=true: fragments from a crashed prior run are kept, so the
+    // re-run executes exactly the missing cells.
+    resume::prepare(&sdir, &spec, true)?;
+    events::set_sweep(Some(id));
+    events::emit(EventKind::SweepStarted {
+        sweep: id.to_string(),
+        lane,
+        cells: spec.cells.len(),
+    });
+
+    let job = Arc::new(SweepJob {
+        dir: sdir.clone(),
+        spec: spec.clone(),
+        lease_ttl_ms: opts.lease_ttl_ms,
+        affinity: opts.affinity,
+    });
+    let raced = pool.run_sweep(job);
+    if let Err(e) = raced {
+        events::set_sweep(None);
+        return Err(e).with_context(|| format!("running sweep '{id}'"));
+    }
+
+    let rows = merge::merge(&sdir, &spec)?;
+    let cells = rows.len();
+    let report = report_bytes(rows);
+    write_report(opts, id, &report)?;
+    events::emit(EventKind::SweepMerged { sweep: id.to_string(), cells });
+    events::set_sweep(None);
+    queue::finish(&opts.queue, id, active_path)?;
+    *merged += 1;
+    Ok(())
+}
+
+/// Publish `reports/<id>.json` atomically (unique tmp + rename).
+fn write_report(opts: &DaemonOpts, id: &str, report: &str) -> Result<()> {
+    let dir = queue::reports_dir(&opts.queue);
+    let tmp = dir.join(format!("{id}.json.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, report.as_bytes())
+        .with_context(|| format!("staging report {}", tmp.display()))?;
+    let dst = dir.join(format!("{id}.json"));
+    std::fs::rename(&tmp, &dst)
+        .with_context(|| format!("publishing report {}", dst.display()))?;
+    Ok(())
+}
+
+/// Replay-parse the tee and require an exact round-trip of the emitted
+/// stream: same events, same order, same synthetic ids, no diagnostics.
+fn replay_verify(opts: &DaemonOpts, emitted: &[Event]) -> Result<()> {
+    let path = queue::events_path(&opts.queue);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading tee {}", path.display()))?;
+    let parsed = events::parse_lines(&text);
+    if !parsed.diagnostics.is_empty() {
+        bail!(
+            "replay-verify: tee {} has {} unparseable line(s); first: {}",
+            path.display(),
+            parsed.diagnostics.len(),
+            parsed.diagnostics[0]
+        );
+    }
+    if parsed.events != emitted {
+        bail!(
+            "replay-verify: tee {} round-trip mismatch ({} parsed vs {} emitted events)",
+            path.display(),
+            parsed.events.len(),
+            emitted.len()
+        );
+    }
+    eprintln!("sweep-daemon: replay-verify ok ({} events round-tripped)", emitted.len());
+    Ok(())
+}

@@ -1,0 +1,353 @@
+//! Filesystem sweep queue: the daemon's intake surface.
+//!
+//! # Layout (under the `--queue` directory)
+//!
+//! ```text
+//! incoming/<lane>/<name>.json   queued specs, one file per sweep
+//! active/<lane>__<name>.json    the spec currently (or last) running
+//! done/<lane>__<name>.json      specs whose report merged
+//! rejected/<lane>__<name>.json  backpressure victims + unusable specs
+//! sweeps/<lane>__<name>/        per-sweep fragment store (sole state)
+//! reports/<lane>__<name>.json   merged reports (selftest byte format)
+//! events.jsonl                  raw tee of the typed event stream
+//! ```
+//!
+//! # Atomicity
+//!
+//! Enqueue reuses the `sweep::claim` idiom: write the spec to a
+//! process-unique tmp name, then `hard_link` it to the final path —
+//! the link is atomic and fails with `AlreadyExists` if another tenant
+//! queued the same `(lane, name)` first, so there is exactly one
+//! winner and readers never observe a torn spec.  The scan only
+//! accepts `*.json` names, which keeps tmp litter (a writer killed
+//! mid-enqueue) invisible.  Dequeue is a rename into `active/`, run
+//! under the transient-IO retry budget with the `daemon.dequeue` chaos
+//! fault point inside; a daemon killed after dequeue leaves the spec
+//! in `active/`, and startup recovery simply runs `active/` entries
+//! first (fragments make the re-run a resume).
+//!
+//! # Naming
+//!
+//! Lanes are tenant identities: `[A-Za-z0-9-]` (no underscore, so the
+//! `__` separator in the sweep id `<lane>__<name>` is unambiguous).
+//! Names are `[A-Za-z0-9_-]`.  Both non-empty.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sweep::retry;
+use crate::sweep::SweepSpec;
+use crate::util::json::Json;
+
+/// A queued spec discovered by [`scan`], not yet dequeued.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pending {
+    pub lane: String,
+    pub name: String,
+    pub path: PathBuf,
+}
+
+impl Pending {
+    pub fn sweep_id(&self) -> String {
+        sweep_id(&self.lane, &self.name)
+    }
+}
+
+pub fn incoming_dir(queue: &Path) -> PathBuf {
+    queue.join("incoming")
+}
+pub fn active_dir(queue: &Path) -> PathBuf {
+    queue.join("active")
+}
+pub fn done_dir(queue: &Path) -> PathBuf {
+    queue.join("done")
+}
+pub fn rejected_dir(queue: &Path) -> PathBuf {
+    queue.join("rejected")
+}
+pub fn sweeps_dir(queue: &Path) -> PathBuf {
+    queue.join("sweeps")
+}
+pub fn reports_dir(queue: &Path) -> PathBuf {
+    queue.join("reports")
+}
+pub fn events_path(queue: &Path) -> PathBuf {
+    queue.join("events.jsonl")
+}
+
+/// Create the queue directory skeleton (idempotent).
+pub fn ensure_layout(queue: &Path) -> Result<()> {
+    for d in [
+        incoming_dir(queue),
+        active_dir(queue),
+        done_dir(queue),
+        rejected_dir(queue),
+        sweeps_dir(queue),
+        reports_dir(queue),
+    ] {
+        std::fs::create_dir_all(&d)
+            .with_context(|| format!("creating queue dir {}", d.display()))?;
+    }
+    Ok(())
+}
+
+/// Validate a lane id: non-empty, `[A-Za-z0-9-]` only.
+pub fn validate_lane(lane: &str) -> Result<()> {
+    if lane.is_empty() {
+        bail!("lane must be non-empty");
+    }
+    if !lane.chars().all(|c| c.is_ascii_alphanumeric() || c == '-') {
+        bail!("lane '{lane}' has characters outside [A-Za-z0-9-]");
+    }
+    Ok(())
+}
+
+/// Validate a sweep name: non-empty, `[A-Za-z0-9_-]` only.
+pub fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() {
+        bail!("sweep name must be non-empty");
+    }
+    if !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_') {
+        bail!("sweep name '{name}' has characters outside [A-Za-z0-9_-]");
+    }
+    Ok(())
+}
+
+/// The daemon-scoped sweep id.  Lanes exclude `_`, so splitting on the
+/// first `__` always recovers `(lane, name)` exactly.
+pub fn sweep_id(lane: &str, name: &str) -> String {
+    format!("{lane}__{name}")
+}
+
+/// Invert [`sweep_id`].
+pub fn split_id(id: &str) -> Option<(&str, &str)> {
+    let sep = id.find("__")?;
+    let (lane, rest) = id.split_at(sep);
+    Some((lane, &rest[2..]))
+}
+
+/// Atomically enqueue `spec` as `incoming/<lane>/<name>.json`.
+/// Exactly one concurrent enqueue of the same `(lane, name)` wins; the
+/// losers get an error naming the collision.
+pub fn enqueue(queue: &Path, lane: &str, name: &str, spec: &SweepSpec) -> Result<PathBuf> {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    validate_lane(lane)?;
+    validate_name(name)?;
+    let dir = incoming_dir(queue).join(lane);
+    std::fs::create_dir_all(&dir).with_context(|| format!("creating lane dir {}", dir.display()))?;
+    let tmp = dir.join(format!(
+        "{name}.json.tmp.{}.{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let body = spec.to_json().to_string_pretty();
+    std::fs::write(&tmp, body.as_bytes())
+        .with_context(|| format!("staging spec at {}", tmp.display()))?;
+    let path = dir.join(format!("{name}.json"));
+    // hard_link is atomic and fails if the final path exists: the
+    // create-exclusive winner rule, with full content already durable.
+    let linked = std::fs::hard_link(&tmp, &path);
+    let _ = std::fs::remove_file(&tmp);
+    match linked {
+        Ok(()) => Ok(path),
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+            bail!("sweep '{}' is already queued at {}", sweep_id(lane, name), path.display())
+        }
+        Err(e) => Err(e).with_context(|| format!("publishing spec at {}", path.display())),
+    }
+}
+
+fn json_stem(file_name: &str) -> Option<&str> {
+    file_name.strip_suffix(".json")
+}
+
+/// Scan `incoming/` for queued specs: lanes in sorted order, specs
+/// sorted within each lane.  Tmp litter and foreign files are skipped.
+pub fn scan(queue: &Path) -> Result<Vec<Pending>> {
+    let mut out = Vec::new();
+    let root = incoming_dir(queue);
+    let mut lanes: Vec<PathBuf> = match std::fs::read_dir(&root) {
+        Ok(rd) => rd.filter_map(|e| e.ok()).map(|e| e.path()).filter(|p| p.is_dir()).collect(),
+        Err(_) => return Ok(out),
+    };
+    lanes.sort();
+    for lane_dir in lanes {
+        let lane = match lane_dir.file_name().and_then(|n| n.to_str()) {
+            Some(l) if validate_lane(l).is_ok() => l.to_string(),
+            _ => continue,
+        };
+        let mut specs: Vec<(String, PathBuf)> = std::fs::read_dir(&lane_dir)
+            .with_context(|| format!("scanning lane {}", lane_dir.display()))?
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let file = e.file_name().to_str()?.to_string();
+                let name = json_stem(&file)?.to_string();
+                validate_name(&name).ok()?;
+                Some((name, e.path()))
+            })
+            .collect();
+        specs.sort();
+        out.extend(
+            specs
+                .into_iter()
+                .map(|(name, path)| Pending { lane: lane.clone(), name, path }),
+        );
+    }
+    Ok(out)
+}
+
+/// Dequeue a pending spec: rename it into `active/<lane>__<name>.json`.
+/// Runs under the transient-IO retry budget with the `daemon.dequeue`
+/// chaos fault point inside.
+pub fn dequeue(queue: &Path, p: &Pending) -> Result<PathBuf> {
+    let id = p.sweep_id();
+    let dst = active_dir(queue).join(format!("{id}.json"));
+    retry::io_retry(&format!("daemon.dequeue:{id}"), || {
+        crate::chaos::fault("daemon.dequeue")?;
+        std::fs::rename(&p.path, &dst)
+    })
+    .with_context(|| format!("dequeueing {} to {}", p.path.display(), dst.display()))?;
+    Ok(dst)
+}
+
+/// Sweep ids (with their spec paths) left in `active/` — specs a prior
+/// daemon dequeued but never finished.  Sorted, so recovery order is
+/// deterministic.
+pub fn active_entries(queue: &Path) -> Result<Vec<(String, PathBuf)>> {
+    let mut out: Vec<(String, PathBuf)> = match std::fs::read_dir(active_dir(queue)) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let file = e.file_name().to_str()?.to_string();
+                let id = json_stem(&file)?.to_string();
+                split_id(&id)?;
+                Some((id, e.path()))
+            })
+            .collect(),
+        Err(_) => Vec::new(),
+    };
+    out.sort();
+    Ok(out)
+}
+
+/// Move a spec file to `rejected/<id>.json` (backpressure victims and
+/// specs the daemon cannot run).  Best-effort rename with a unique
+/// fallback name if a same-id reject already sits there.
+pub fn reject(queue: &Path, id: &str, path: &Path) -> Result<()> {
+    let dst = rejected_dir(queue).join(format!("{id}.json"));
+    if dst.exists() {
+        let alt = rejected_dir(queue).join(format!("{id}.json.{}", std::process::id()));
+        std::fs::rename(path, &alt)
+            .with_context(|| format!("rejecting {} to {}", path.display(), alt.display()))?;
+        return Ok(());
+    }
+    std::fs::rename(path, &dst)
+        .with_context(|| format!("rejecting {} to {}", path.display(), dst.display()))
+}
+
+/// Retire a finished sweep's spec from `active/` to `done/`.
+pub fn finish(queue: &Path, id: &str, active_path: &Path) -> Result<()> {
+    let dst = done_dir(queue).join(format!("{id}.json"));
+    std::fs::rename(active_path, &dst)
+        .with_context(|| format!("retiring {} to {}", active_path.display(), dst.display()))
+}
+
+/// Load and parse a spec file.
+pub fn load_spec(path: &Path) -> Result<SweepSpec> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading spec {}", path.display()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("spec {}: {e}", path.display()))?;
+    SweepSpec::from_json(&j).with_context(|| format!("spec {}", path.display()))
+}
+
+/// True when the experiment runs without an engine or manifest — the
+/// only specs the daemon accepts (its workers hold `data_only`
+/// sessions; engine-backed experiments still go through the CLI).
+pub fn engine_free(spec: &SweepSpec) -> bool {
+    matches!(spec.experiment.as_str(), "mock" | "mockdata" | "budget")
+        || spec.experiment.starts_with("synth-")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("rmm_queue_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn lane_and_name_charsets_keep_the_id_separator_unambiguous() {
+        assert!(validate_lane("tenant-a").is_ok());
+        assert!(validate_lane("tenant_a").is_err(), "lanes must exclude '_'");
+        assert!(validate_lane("").is_err());
+        assert!(validate_name("synth_easy-1").is_ok());
+        assert!(validate_name("a/b").is_err());
+        assert_eq!(split_id("t-a__syn_th"), Some(("t-a", "syn_th")));
+        assert_eq!(split_id("noseparator"), None);
+    }
+
+    #[test]
+    fn enqueue_is_create_exclusive_and_scan_orders_lanes_then_names() {
+        let q = tmp("enq");
+        ensure_layout(&q).unwrap();
+        let spec = crate::sweep::selftest_spec();
+        enqueue(&q, "b-lane", "one", &spec).unwrap();
+        enqueue(&q, "a-lane", "two", &spec).unwrap();
+        enqueue(&q, "a-lane", "one", &spec).unwrap();
+        let err = enqueue(&q, "a-lane", "one", &spec).unwrap_err();
+        assert!(format!("{err:#}").contains("already queued"), "{err:#}");
+        let ids: Vec<String> = scan(&q).unwrap().iter().map(|p| p.sweep_id()).collect();
+        assert_eq!(ids, ["a-lane__one", "a-lane__two", "b-lane__one"]);
+        // The published spec parses back to the original.
+        let got = load_spec(&scan(&q).unwrap()[0].path).unwrap();
+        assert_eq!(got.cells.len(), spec.cells.len());
+        let _ = std::fs::remove_dir_all(&q);
+    }
+
+    #[test]
+    fn tmp_litter_is_invisible_to_the_scan() {
+        let q = tmp("litter");
+        ensure_layout(&q).unwrap();
+        let lane = incoming_dir(&q).join("ci");
+        std::fs::create_dir_all(&lane).unwrap();
+        std::fs::write(lane.join("x.json.tmp.999.0"), b"{").unwrap();
+        std::fs::write(lane.join("notes.txt"), b"hi").unwrap();
+        assert!(scan(&q).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&q);
+    }
+
+    #[test]
+    fn dequeue_moves_to_active_and_finish_retires_to_done() {
+        let q = tmp("deq");
+        ensure_layout(&q).unwrap();
+        let spec = crate::sweep::selftest_spec();
+        enqueue(&q, "ci", "syn", &spec).unwrap();
+        let p = scan(&q).unwrap().remove(0);
+        let active = dequeue(&q, &p).unwrap();
+        assert!(scan(&q).unwrap().is_empty());
+        let entries = active_entries(&q).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, "ci__syn");
+        finish(&q, "ci__syn", &active).unwrap();
+        assert!(active_entries(&q).unwrap().is_empty());
+        assert!(done_dir(&q).join("ci__syn.json").exists());
+        let _ = std::fs::remove_dir_all(&q);
+    }
+
+    #[test]
+    fn engine_free_covers_exactly_the_daemon_runnable_experiments() {
+        let mk = |e: &str| SweepSpec::new(e, crate::sweep::selftest_spec().train.clone());
+        for e in ["mock", "mockdata", "budget", "synth-easy", "synth-hard"] {
+            assert!(engine_free(&mk(e)), "{e}");
+        }
+        assert!(!engine_free(&mk("glue")));
+    }
+}

@@ -23,6 +23,7 @@ pub mod bench_harness;
 pub mod chaos;
 pub mod config;
 pub mod coordinator;
+pub mod daemon;
 pub mod data;
 pub mod memory;
 pub mod rmm;

@@ -355,7 +355,16 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
 fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(
         argv,
-        &["roberta", "all-tasks", "verbose", "help", "resume", "prefetch"],
+        &[
+            "roberta",
+            "all-tasks",
+            "verbose",
+            "help",
+            "resume",
+            "prefetch",
+            "drain",
+            "replay-verify",
+        ],
     );
     use rmmlinear::tensor::kernels;
     use rmmlinear::tensor::pool;
@@ -408,6 +417,8 @@ fn run(argv: &[String]) -> Result<()> {
         "bench-fig6" => cmd_fig6(&args),
         "sweep-worker" => cmd_sweep_worker(&args),
         "sweep-selftest" => cmd_sweep_selftest(&args),
+        "sweep-enqueue" => cmd_sweep_enqueue(&args),
+        "sweep-daemon" => cmd_sweep_daemon(&args),
         "inspect-artifacts" => cmd_inspect(&args),
         "memory-model" => cmd_memory_model(&args),
         "help" | _ => {
@@ -460,7 +471,31 @@ COMMANDS
                     rho) choice sequences; synth-* are seeded workload
                     grids with skewed planned costs; chaos faults hit
                     only the sharded side — the serial reference stays
-                    cold and fault-free)
+                    cold and fault-free); --out FILE writes the serial
+                    reference report bytes (exactly what a daemon run
+                    writes to reports/<id>.json, for byte comparison)
+  sweep-enqueue     queue a selftest grid spec for a sweep daemon:
+                    creates <queue>/incoming/<lane>/<name>.json
+                    exclusively (re-queueing while queued is an error)
+                    --queue DIR [--grid G] [--lane L] [--name N]
+                    [--synth-seed N]
+  sweep-daemon      serve sweeps from a queue directory: lanes drain
+                    round-robin (fair across tenants) through warm
+                    in-process workers; per-lane depth over --queue-cap
+                    is shed to rejected/; typed JSONL events go to
+                    stdout and <queue>/events.jsonl (append-only tee);
+                    a restart resumes anything left in active/ from its
+                    committed fragments
+                    --queue DIR [--workers N --queue-cap N --poll-ms N]
+                    [--drain] [--replay-verify] [--lease-ttl-ms N]
+                    [--session-cache on|off --affinity on|off]
+                    [--respawn-budget N]
+                    [--chaos-seed N --chaos-profile P --chaos-gen G]
+                    (--drain exits once the queue is empty;
+                    --replay-verify re-parses the tee after a drain and
+                    requires an exact round-trip of the emitted stream;
+                    --chaos-gen G >= 1 on restart filters already-fired
+                    kills, like --worker-gen for workers)
   bench-fig3        memory vs batch size [--all-tasks] (Fig 3/8)
   bench-fig4        variance-probe series (Fig 4/7)
   bench-fig5        loss curves vs rho [--task mnli] (Fig 5/9)
@@ -828,6 +863,23 @@ fn cmd_sweep_worker(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve a `--grid` name into its sweep spec — shared by
+/// `sweep-selftest` (runs it) and `sweep-enqueue` (queues it for the
+/// daemon), so both paths describe exactly the same cells.
+fn grid_spec(args: &Args, grid: &str) -> Result<SweepSpec> {
+    Ok(match grid {
+        "mock" => sweep::selftest_spec(),
+        "data" => sweep::selftest_data_spec(),
+        "budget" => sweep::selftest_budget_spec(),
+        g if g.starts_with("synth-") => {
+            sweep::synth_spec(args.get_u64("synth-seed", 1), &g["synth-".len()..])?
+        }
+        other => bail!(
+            "unknown --grid '{other}' (mock|data|budget|synth-easy|synth-medium|synth-hard)"
+        ),
+    })
+}
+
 /// End-to-end smoke of the sweep machinery: a serial run and an
 /// `--shards N` run through real worker processes must merge to
 /// byte-identical reports, under either `--schedule`.  `--grid mock`
@@ -840,17 +892,7 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
     let shards = args.get_usize("shards", 2).max(1);
     let schedule = worker_schedule(args)?;
     let grid = args.get_or("grid", "mock");
-    let spec = match grid {
-        "mock" => sweep::selftest_spec(),
-        "data" => sweep::selftest_data_spec(),
-        "budget" => sweep::selftest_budget_spec(),
-        g if g.starts_with("synth-") => {
-            sweep::synth_spec(args.get_u64("synth-seed", 1), &g["synth-".len()..])?
-        }
-        other => bail!(
-            "unknown --grid '{other}' (mock|data|budget|synth-easy|synth-medium|synth-hard)"
-        ),
-    };
+    let spec = grid_spec(args, grid)?;
     let session_cache = session_cache_flag(args, &SweepConfig::default())?;
     let chaos = chaos_opts(args, &SweepConfig::default())?;
     let respawn_budget =
@@ -870,6 +912,14 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
         bench::runner::run_cell(&mut cold, &spec, c, ctx)
     })?;
     let serial = Json::Arr(sweep::merge::merge(&serial_dir, &spec)?).to_string_pretty();
+    if let Some(out) = args.get("out") {
+        // Exactly the bytes the daemon writes to `reports/<id>.json`
+        // ([`rmmlinear::daemon::report_bytes`]), so a plain `cmp`
+        // between this file and a daemon report pins the
+        // daemon-vs-CLI byte-identity contract.
+        std::fs::write(Path::new(out), format!("{serial}\n"))
+            .with_context(|| format!("writing serial reference report to {out}"))?;
+    }
 
     let sharded_dir = base.join("sharded");
     sweep::resume::prepare(&sharded_dir, &spec, false)?;
@@ -920,6 +970,107 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
         schedule.name(),
         spec.cells.len(),
         if session_cache { "on" } else { "off" },
+    );
+    Ok(())
+}
+
+/// Daemon defaults from the `--config` file's `daemon` section (CLI
+/// flags take precedence), mirroring [`sweep_defaults`].
+fn daemon_defaults(args: &Args) -> Result<rmmlinear::config::DaemonConfig> {
+    match args.get("config") {
+        Some(p) => Ok(rmmlinear::config::ExperimentConfig::load(Path::new(p))?.daemon),
+        None => Ok(rmmlinear::config::DaemonConfig::default()),
+    }
+}
+
+/// Write a sweep spec into a daemon queue's `incoming/<lane>/` under
+/// create-exclusive semantics: queueing the same (lane, name) twice is
+/// an error until the daemon moves the first copy on.  The spec comes
+/// from the same `--grid` resolver as `sweep-selftest`, so a queued
+/// grid and a directly-run grid are cell-for-cell identical — the basis
+/// of the daemon-vs-CLI byte-identity contract.
+fn cmd_sweep_enqueue(args: &Args) -> Result<()> {
+    let queue = PathBuf::from(args.get("queue").context("--queue DIR required")?);
+    let grid = args.get_or("grid", "mock");
+    let spec = grid_spec(args, grid)?;
+    let lane = args.get_or("lane", "default");
+    // Default name: the grid itself, with synth grids disambiguated by
+    // seed (two seeds of synth-easy are different sweeps).
+    let default_name = match grid {
+        g if g.starts_with("synth-") => {
+            format!("{g}-s{}", args.get_u64("synth-seed", 1))
+        }
+        g => g.to_string(),
+    };
+    let name = args.get_or("name", &default_name);
+    rmmlinear::daemon::queue::ensure_layout(&queue)?;
+    let path = rmmlinear::daemon::queue::enqueue(&queue, lane, name, &spec)?;
+    println!(
+        "enqueued {} ({} cells) at {}",
+        rmmlinear::daemon::queue::sweep_id(lane, name),
+        spec.cells.len(),
+        path.display()
+    );
+    Ok(())
+}
+
+/// Persistent sweep orchestrator: serve specs from a queue directory
+/// through warm in-process worker threads, emitting the typed JSONL
+/// event stream (stdout + teed to `<queue>/events.jsonl`).  See the
+/// "Daemon queue + event contract" section of the [`rmmlinear::sweep`]
+/// module doc for the full contract.  Crash recovery is free: the
+/// fragment store is the only state, so restarting the daemon resumes
+/// any sweep left in `active/` from its committed cells.
+fn cmd_sweep_daemon(args: &Args) -> Result<()> {
+    let queue = PathBuf::from(args.get("queue").context("--queue DIR required")?);
+    let defaults = daemon_defaults(args)?;
+    let chaos_seed = chaos_seed_arg(args)?;
+    if let Some(seed) = chaos_seed {
+        // Same install idiom as sweep-worker, but the daemon IS the
+        // faulted process (its workers are threads, not children):
+        // slot is fixed at 0 and `--chaos-gen` plays the role of
+        // `--worker-gen` — a post-crash restart passes gen >= 1 so
+        // already-fired kills are filtered from the replayed schedule.
+        rmmlinear::chaos::install(&rmmlinear::chaos::InstallOpts {
+            seed,
+            profile: args
+                .get_or("chaos-profile", rmmlinear::chaos::DEFAULT_PROFILE)
+                .to_string(),
+            slot: 0,
+            generation: args.get_usize("chaos-gen", 0) as u32,
+            exit_on_kill: true,
+            verbose: true,
+        })?;
+    }
+    let sw = sweep_defaults(args)?;
+    let opts = rmmlinear::daemon::DaemonOpts {
+        queue,
+        workers: args.get_usize("workers", defaults.workers.unwrap_or(1)).max(1),
+        queue_cap: args
+            .get_usize(
+                "queue-cap",
+                defaults.queue_cap.unwrap_or(rmmlinear::daemon::DEFAULT_QUEUE_CAP),
+            )
+            .max(1),
+        lease_ttl_ms: lease_ttl_arg(args)?
+            .unwrap_or_else(|| sw.lease_ttl_ms.unwrap_or(sweep::DEFAULT_LEASE_TTL_MS)),
+        affinity: affinity_flag(args, &sw)?,
+        session_cache: session_cache_flag(args, &sw)?,
+        drain: args.has_flag("drain"),
+        poll_ms: args.get_u64(
+            "poll-ms",
+            defaults.poll_ms.unwrap_or(rmmlinear::daemon::DEFAULT_POLL_MS),
+        ),
+        respawn_budget: respawn_budget_arg(args, &sw, chaos_seed.is_some())?,
+        stdout_events: true,
+        replay_verify: args.has_flag("replay-verify"),
+    };
+    let summary = rmmlinear::daemon::run(&opts)?;
+    eprintln!(
+        "sweep-daemon: {} sweep(s) merged, {} rejected, {} events emitted",
+        summary.merged,
+        summary.rejected,
+        summary.events.len()
     );
     Ok(())
 }

@@ -52,6 +52,12 @@ use crate::runtime::{Engine, Manifest};
 /// and an unbounded cache would grow with the grid.
 pub const DEV_CACHE_CAP: usize = 16;
 
+/// Dev-batch sets a session keeps when it is retained *across* sweeps
+/// by the daemon ([`Session::retain_across_sweeps`]).  Tighter than
+/// [`DEV_CACHE_CAP`]: between sweeps only the hottest tail is worth
+/// holding, since the next sweep's key set is unknown.
+pub const CROSS_SWEEP_DEV_KEEP: usize = 4;
+
 /// Cache traffic counters — scheduling/telemetry only, never results.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct SessionStats {
@@ -240,6 +246,26 @@ impl Session {
         self.dev_batches.clear();
         self.dev_order.clear();
     }
+
+    /// Cross-sweep retention policy for daemon workers: keep the warm
+    /// setups and tokenizers (small, variant-keyed, exactly what the
+    /// next sweep of the same tenant re-hits) but trim the dev-batch
+    /// cache — the bulky, per-(task, seed) state — down to
+    /// [`CROSS_SWEEP_DEV_KEEP`] newest entries.  Safe at any sweep
+    /// boundary by the warm ≡ cold contract: retention can only shift
+    /// hit/miss counters, never a committed fragment.
+    pub fn retain_across_sweeps(&mut self) {
+        while self.dev_batches.len() > CROSS_SWEEP_DEV_KEEP {
+            match self.dev_order.pop_front() {
+                Some(old) => {
+                    if self.dev_batches.remove(&old).is_some() {
+                        self.stats.dev_evictions += 1;
+                    }
+                }
+                None => break,
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -325,6 +351,35 @@ mod tests {
             assert_eq!(a.valid, b.valid);
         }
         assert_eq!(s.stats.dev_misses, 2);
+    }
+
+    #[test]
+    fn cross_sweep_retention_trims_dev_batches_oldest_first_keeps_the_rest() {
+        let mut s = data_session(true);
+        s.tokenizer(64);
+        for seed in 0..DEV_CACHE_CAP as u64 {
+            s.cached_dev_batches(Task::Wnli, 16, 64, 8, seed).unwrap();
+        }
+        let evictions_before = s.stats.dev_evictions;
+        s.retain_across_sweeps();
+        assert_eq!(s.dev_batches.len(), CROSS_SWEEP_DEV_KEEP);
+        assert_eq!(
+            s.stats.dev_evictions,
+            evictions_before + (DEV_CACHE_CAP - CROSS_SWEEP_DEV_KEEP) as u64
+        );
+        // Newest keys survive (oldest-first trim)...
+        for seed in (DEV_CACHE_CAP - CROSS_SWEEP_DEV_KEEP) as u64..DEV_CACHE_CAP as u64 {
+            assert!(s.dev_batches.contains_key(&(Task::Wnli, 16, 64, 8, seed)), "seed {seed}");
+        }
+        // ...tokenizers stay warm, and the call is idempotent.
+        assert!(!s.tokenizers.is_empty());
+        s.retain_across_sweeps();
+        assert_eq!(s.dev_batches.len(), CROSS_SWEEP_DEV_KEEP);
+        // A retained survivor still hits with identical content.
+        let last = DEV_CACHE_CAP as u64 - 1;
+        let hits_before = s.stats.dev_hits;
+        s.cached_dev_batches(Task::Wnli, 16, 64, 8, last).unwrap();
+        assert_eq!(s.stats.dev_hits, hits_before + 1);
     }
 
     #[test]

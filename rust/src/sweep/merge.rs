@@ -114,7 +114,12 @@ pub fn commit_fragment(
     for _ in 0..COMMIT_VERIFY_ATTEMPTS {
         write_fragment(cells_dir, spec, cell, result)?;
         match fragment_status(cells_dir, spec, cell) {
-            FragmentStatus::Valid(_) => return Ok(()),
+            FragmentStatus::Valid(_) => {
+                // Daemon event hook: the fragment is durable *and*
+                // verified (no-op without an installed event sink).
+                crate::daemon::events::fragment_committed(cell.index);
+                return Ok(());
+            }
             FragmentStatus::Missing => last_reason = "fragment missing after commit".to_string(),
             FragmentStatus::Invalid { reason, .. } => last_reason = reason,
         }
@@ -158,7 +163,14 @@ pub fn fragment_status(cells_dir: &Path, spec: &SweepSpec, cell: &Cell) -> Fragm
     };
     let j = match Json::parse(&text) {
         Ok(j) => j,
-        Err(e) => return invalid(format!("parse error at byte {}: {}", e.offset, e.msg)),
+        Err(e) => {
+            return invalid(format!(
+                "parse error at byte {}: {} (line: {})",
+                e.offset,
+                e.msg,
+                offending_line_snippet(&text, e.offset)
+            ))
+        }
     };
     let embedded = match Cell::from_json(j.get("cell")) {
         Ok(c) => c,
@@ -181,6 +193,31 @@ pub fn fragment_status(cells_dir: &Path, spec: &SweepSpec, cell: &Cell) -> Fragm
         return invalid("missing result".to_string());
     }
     FragmentStatus::Valid(result.clone())
+}
+
+/// The first 80 bytes (backed off to a char boundary, `…` when cut) of
+/// the line containing byte `offset`, Debug-quoted so control bytes
+/// stay printable.  Lets a daemon operator triage a corrupted fragment
+/// from the merge diagnostic / event log alone, without shelling into
+/// the fragment store.
+fn offending_line_snippet(text: &str, offset: usize) -> String {
+    let mut at = offset.min(text.len());
+    while at > 0 && !text.is_char_boundary(at) {
+        at -= 1;
+    }
+    let start = text[..at].rfind('\n').map(|i| i + 1).unwrap_or(0);
+    let end = text[start..].find('\n').map(|i| start + i).unwrap_or(text.len());
+    let line = &text[start..end];
+    const MAX: usize = 80;
+    if line.len() <= MAX {
+        format!("{line:?}")
+    } else {
+        let mut cut = MAX;
+        while !line.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        format!("{:?}…", &line[..cut])
+    }
 }
 
 /// The cell's result, iff its fragment validates — the boolean view of
@@ -329,7 +366,34 @@ mod tests {
         assert!(err.contains("cell 0"), "{err}");
         assert!(err.contains("cell_00000.json"), "{err}");
         assert!(err.contains("parse error at byte"), "{err}");
+        // The diagnostic embeds the offending line itself, quoted.
+        assert!(err.contains("(line: \"{"), "{err}");
+        assert!(err.contains("garbage"), "{err}");
+        // A long garbage line is truncated to its first 80 bytes.
+        let long = format!("{{\"cell\": {}", "z".repeat(300));
+        std::fs::write(fragment_path(&cdir, &spec.cells[0]), &long).unwrap();
+        let err = format!("{}", merge(&dir, &spec).unwrap_err());
+        assert!(err.contains('…'), "snippet must mark truncation: {err}");
+        assert!(!err.contains(&"z".repeat(100)), "snippet must stay bounded: {err}");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn offending_line_snippet_targets_the_line_and_bounds_its_length() {
+        let text = "ok line\nbad line here\nrest";
+        let off = text.find("bad").unwrap() + 4;
+        assert_eq!(offending_line_snippet(text, off), "\"bad line here\"");
+        // Offsets past the end clamp to the final line.
+        assert_eq!(offending_line_snippet("tail", 999), "\"tail\"");
+        // >80-byte lines truncate at a char boundary with an ellipsis.
+        let long = "x".repeat(200);
+        let snip = offending_line_snippet(&long, 150);
+        assert!(snip.ends_with('…'), "{snip}");
+        assert_eq!(snip.len(), 80 + 2 + '…'.len_utf8());
+        // Multi-byte text never panics on a mid-char cut.
+        let uni = "é".repeat(100);
+        let snip = offending_line_snippet(&uni, 81);
+        assert!(snip.len() <= 80 + 2 + '…'.len_utf8());
     }
 
     #[test]

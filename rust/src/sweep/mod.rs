@@ -147,8 +147,10 @@
 //!   `fragment.stage`, `fragment.commit`, `fragment.read` (fragment
 //!   IO), `sched.cell` (start of a claimed cell, lease held — where
 //!   kills fire), `resume.spec` (spec write), `session.evict`
-//!   (warm-cache drop before a cell), and `clock` (persistent
-//!   heartbeat-clock skew via `claim::now_ms`).
+//!   (warm-cache drop before a cell), `daemon.dequeue` (the daemon's
+//!   queue→active rename), `event.tee` (the daemon's `events.jsonl`
+//!   append), and `clock` (persistent heartbeat-clock skew via
+//!   `claim::now_ms`).
 //! * **Schedule grammar** — `[w<slot>:]<point>@<hit>=<action>`,
 //!   `;`-separated; actions are `err:<kind>`, `kill`, `delay:<ms>`,
 //!   `skew:<±ms>`, `truncate`, `garbage`, `evict`.  `--chaos-profile`
@@ -171,6 +173,67 @@
 //!   session contract.  `repro sweep-selftest --chaos-seed N` and
 //!   `tests/prop_chaos.rs` pin merged-report byte-identity against the
 //!   fault-free serial run.
+//!
+//! # Daemon queue + event contract
+//!
+//! `repro sweep-daemon` (`crate::daemon`) turns this layer into a
+//! persistent service; this section is the canonical reference for its
+//! queue layout and JSONL event contract (ROADMAP: "Sweep-as-a-service
+//! daemon").
+//!
+//! * **Queue layout** — one `--queue` directory:
+//!   `incoming/<lane>/<name>.json` (queued specs; a *lane* is a tenant,
+//!   charset `[A-Za-z0-9-]` — no underscore, so the `__` in the sweep
+//!   id `<lane>__<name>` is unambiguous; names are `[A-Za-z0-9_-]`),
+//!   `active/` (the spec being run), `done/`, `rejected/`,
+//!   `sweeps/<id>/` (per-sweep fragment store — the sole state),
+//!   `reports/<id>.json` (merged reports in the exact `sweep-selftest
+//!   --out` byte format), and `events.jsonl` (the raw event tee).
+//!   Enqueue (`repro sweep-enqueue`) stages to a unique tmp name and
+//!   publishes via `hard_link` — the claim layer's create-exclusive
+//!   idiom, so concurrent enqueues of one `(lane, name)` have exactly
+//!   one winner and no torn spec is ever visible.  Dequeue is a rename
+//!   into `active/`; a daemon killed at any instant is recovered by the
+//!   next run, which processes `active/` first and resume-prepares the
+//!   sweep dir (fragments make the re-run a resume).
+//! * **Fairness + backpressure** — lanes are served round-robin (first
+//!   non-empty lane cyclically after the last lane served); within a
+//!   lane, specs run in name order.  Queue depth is bounded per lane
+//!   (`--queue-cap`): excess specs move to `rejected/` with a typed
+//!   `sweep_rejected` event carrying the observed depth and the cap.
+//! * **Event schema** — one compact JSON object per line; `type` is the
+//!   snake_case discriminant, `t_ms` a unix-ms timestamp (the only
+//!   nondeterministic field).  Synthetic ids are assigned monotonically
+//!   from 1 by emitter and replay parser alike — never on the wire.
+//!
+//!   | type                 | payload fields             |
+//!   |----------------------|----------------------------|
+//!   | `daemon_started`     | `queue`, `workers`         |
+//!   | `sweep_queued`       | `sweep`, `lane`            |
+//!   | `sweep_rejected`     | `sweep`, `lane`, `depth`, `cap` |
+//!   | `sweep_started`      | `sweep`, `lane`, `cells`   |
+//!   | `cell_claimed`       | `sweep`, `cell`, `worker`  |
+//!   | `cell_done`          | `sweep`, `cell`, `worker`  |
+//!   | `fragment_committed` | `sweep`, `cell`            |
+//!   | `worker_respawned`   | `sweep`, `slot`, `gen`     |
+//!   | `sweep_merged`       | `sweep`, `cells`           |
+//!   | `daemon_stopped`     | `sweeps`                   |
+//!
+//!   `cell_claimed` / `cell_done` / `fragment_committed` are emitted by
+//!   hooks at this module's existing chaos fault-point seams
+//!   (`sched.cell`, `fragment.commit`) and are zero-cost no-ops unless
+//!   a daemon sink is installed.
+//! * **Replay guarantees** — `daemon::events::parse_lines` tolerates
+//!   CRLF line endings, blank lines, and a torn trailing line; an
+//!   unknown `type`, malformed JSON, or missing required field yields a
+//!   per-line diagnostic (never a hard error) and consumes no id;
+//!   unknown extra fields on known types are ignored.  Replay of a teed
+//!   `events.jsonl` therefore reproduces the emitted typed stream
+//!   exactly — ids, order, payloads — which `sweep-daemon
+//!   --replay-verify` checks after every drain, and
+//!   `tests/prop_events.rs` pins.  The log is a pure **witness**: the
+//!   daemon never reads it back for decisions, so a lost tee line
+//!   (`event.tee` chaos) costs observability, never correctness.
 
 pub mod claim;
 pub mod grid;
@@ -470,6 +533,10 @@ pub fn spawn_workers_supervised(
                         );
                         match launch_worker(exe, dir, i, shards, extra_args, next) {
                             Ok((child, tee)) => {
+                                // Daemon event hook (no-op without an
+                                // installed sink): slot respawn is part
+                                // of the observable sweep narrative.
+                                crate::daemon::events::worker_respawned(i, next as usize);
                                 slots[i] = SlotState::Running { child, tee, gen: next };
                             }
                             Err(e) => failed

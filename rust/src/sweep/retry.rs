@@ -50,12 +50,25 @@ pub fn backoff(label: &str, attempt: u32) -> Duration {
 /// Run `op`, retrying transient IO errors up to [`MAX_ATTEMPTS`] total
 /// attempts with [`backoff`] sleeps in between.  `label` keys the
 /// jitter — embed something per-call-site-unique (worker id, index).
-pub fn io_retry<T>(label: &str, mut op: impl FnMut() -> io::Result<T>) -> io::Result<T> {
+pub fn io_retry<T>(label: &str, op: impl FnMut() -> io::Result<T>) -> io::Result<T> {
+    io_retry_n(label, MAX_ATTEMPTS, op)
+}
+
+/// [`io_retry`] with an explicit total-attempt budget.  `attempts <= 1`
+/// means exactly one attempt: `op` runs once and *any* error — even a
+/// transient kind — propagates unchanged.  On exhaustion the error
+/// returned is the one from the **last** attempt (each retry replaces
+/// the previous error, so the caller sees the freshest failure).
+pub fn io_retry_n<T>(
+    label: &str,
+    attempts: u32,
+    mut op: impl FnMut() -> io::Result<T>,
+) -> io::Result<T> {
     let mut attempt = 0u32;
     loop {
         match op() {
             Ok(v) => return Ok(v),
-            Err(e) if is_transient(e.kind()) && attempt + 1 < MAX_ATTEMPTS => {
+            Err(e) if is_transient(e.kind()) && attempt + 1 < attempts => {
                 std::thread::sleep(backoff(label, attempt));
                 attempt += 1;
             }
@@ -90,6 +103,45 @@ mod tests {
     fn exhausting_the_budget_propagates_the_last_error() {
         let got = io_retry("t", flaky(MAX_ATTEMPTS as usize, io::ErrorKind::TimedOut));
         assert_eq!(got.unwrap_err().kind(), io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn exhaustion_returns_the_last_attempts_error_instance() {
+        // Each attempt fails with a *distinct* error; the caller must
+        // see the final one, not the first (the freshest diagnosis of
+        // a persistently flaky mount).
+        let mut calls = 0u32;
+        let got: io::Result<()> = io_retry("t", || {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::TimedOut, format!("attempt {calls}")))
+        });
+        let e = got.unwrap_err();
+        assert_eq!(calls, MAX_ATTEMPTS);
+        assert_eq!(e.kind(), io::ErrorKind::TimedOut);
+        assert_eq!(e.to_string(), format!("attempt {MAX_ATTEMPTS}"));
+    }
+
+    #[test]
+    fn zero_budget_runs_exactly_once_and_propagates_any_error() {
+        for attempts in [0u32, 1] {
+            let mut calls = 0u32;
+            let got: io::Result<()> = io_retry_n("t", attempts, || {
+                calls += 1;
+                Err(io::Error::new(io::ErrorKind::Interrupted, "transient"))
+            });
+            assert_eq!(calls, 1, "attempts={attempts} must not retry");
+            assert_eq!(got.unwrap_err().kind(), io::ErrorKind::Interrupted);
+        }
+        // And a success on the single allowed attempt still succeeds.
+        assert_eq!(io_retry_n("t", 1, || Ok(3)).unwrap(), 3);
+    }
+
+    #[test]
+    fn explicit_budgets_scale_the_healing_window() {
+        let got = io_retry_n("t", 6, flaky(5, io::ErrorKind::WouldBlock));
+        assert_eq!(got.unwrap(), 7);
+        let got = io_retry_n("t", 5, flaky(5, io::ErrorKind::WouldBlock));
+        assert_eq!(got.unwrap_err().kind(), io::ErrorKind::WouldBlock);
     }
 
     #[test]

@@ -279,6 +279,11 @@ pub fn run_dynamic(
                             format!("chaos fault before sweep cell {}", cell.index)
                         });
                     }
+                    // Daemon event hook, deliberately at the same seam
+                    // as the chaos fault: a claim that would have died
+                    // here never reports itself claimed.  No-op unless
+                    // a daemon event sink is installed.
+                    crate::daemon::events::cell_claimed(cell.index, &cfg.worker);
                     // On error the guard drops here, releasing the
                     // claim so other workers can retry immediately.
                     let ctx = CellCtx::under_lease(&guard);
@@ -299,6 +304,9 @@ pub fn run_dynamic(
                     guard.release();
                     done[i] = true;
                     run.ran.push(cell.index);
+                    // Daemon event hook: the cell's fragment is durable
+                    // and its lease released.
+                    crate::daemon::events::cell_done(cell.index, &cfg.worker);
                     claimed_any = true;
                     let same_variant =
                         warm.as_ref().is_some_and(|(wv, _)| wv == &cell.variant);

@@ -1,0 +1,323 @@
+//! Event-contract suite for the sweep daemon (`daemon::*`).
+//!
+//! The contract under test (see `sweep/mod.rs` "Daemon queue + event
+//! contract" for the canonical prose):
+//!
+//! * **Replay identity** — the JSONL tee at `<queue>/events.jsonl` is a
+//!   faithful witness: `daemon::events::parse_lines` reconstructs the
+//!   typed stream the daemon emitted *exactly*, ids and order included.
+//! * **Tolerant parsing** — CRLF line endings, torn trailing lines and
+//!   unknown event types degrade to per-line diagnostics, never a hard
+//!   error, and never consume an event id.
+//! * **Daemon-vs-CLI byte identity** — a sweep served through the queue
+//!   merges to the same report bytes as a direct serial run, for every
+//!   worker count, because the fragment store (not the event log) is
+//!   the only state.
+//! * **Crash = resume** — a daemon killed mid-sweep leaves the spec in
+//!   `active/` and its fragments on disk; a restarted daemon finishes
+//!   exactly the missing cells and publishes the identical report.
+//!
+//! The event sink and the chaos schedule are process-global, so every
+//! test serializes on [`EVENTS_LOCK`] and clears both on entry.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use rmmlinear::bench_harness as bench;
+use rmmlinear::config::TrainConfig;
+use rmmlinear::daemon::{self, events, queue, DaemonOpts};
+use rmmlinear::daemon::events::EventKind;
+use rmmlinear::session::Session;
+use rmmlinear::sweep::{self, merge, resume, Shard, SweepSpec};
+
+/// One lock around every daemon run and chaos install in this binary:
+/// the event sink, its id counter and the fault schedule are statics.
+static EVENTS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    let g = EVENTS_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    rmmlinear::chaos::clear();
+    let _ = events::clear(); // drain any sink a failed test leaked
+    g
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("rmm_prop_events_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Fault-free serial reference in the daemon's exact report byte format
+/// (the same cold-session path `sweep-selftest` uses).
+fn serial_report(tag: &str, spec: &SweepSpec) -> String {
+    assert!(!rmmlinear::chaos::enabled(), "serial reference must run fault-free");
+    let dir = tmp_dir(tag);
+    resume::prepare(&dir, spec, false).unwrap();
+    let mut cold = Session::data_only(false);
+    sweep::run_shard(&dir, spec, Shard::SERIAL, &mut |c, ctx| {
+        bench::runner::run_cell(&mut cold, spec, c, ctx)
+    })
+    .unwrap();
+    let bytes = daemon::report_bytes(merge::merge(&dir, spec).unwrap());
+    std::fs::remove_dir_all(&dir).unwrap();
+    bytes
+}
+
+fn opts(q: &Path, workers: usize) -> DaemonOpts {
+    DaemonOpts {
+        queue: q.to_path_buf(),
+        workers,
+        lease_ttl_ms: 60_000,
+        drain: true,
+        ..DaemonOpts::default()
+    }
+}
+
+#[test]
+fn teed_log_replay_parses_back_to_the_emitted_stream_exactly() {
+    let _g = lock();
+    let q = tmp_dir("tee");
+    let spec = sweep::selftest_spec();
+    queue::enqueue(&q, "alpha", "mock", &spec).unwrap();
+
+    let mut o = opts(&q, 1);
+    o.replay_verify = true; // the daemon's own round-trip check must also pass
+    let summary = daemon::run(&o).unwrap();
+    assert_eq!(summary.merged, 1);
+    assert_eq!(summary.rejected, 0);
+
+    // External replay: the raw tee reconstructs the emitted stream
+    // exactly — ids, order, payloads and timestamps.
+    let log = std::fs::read_to_string(q.join("events.jsonl")).unwrap();
+    let parsed = events::parse_lines(&log);
+    assert!(parsed.diagnostics.is_empty(), "clean log: {:?}", parsed.diagnostics);
+    assert_eq!(parsed.events, summary.events, "tee must round-trip the stream");
+
+    // Shape: bracketed by daemon_started/stopped, with the full
+    // queued -> started -> per-cell -> merged arc in between.
+    let evs = &summary.events;
+    assert!(matches!(evs.first().unwrap().kind, EventKind::DaemonStarted { .. }));
+    assert!(matches!(evs.last().unwrap().kind, EventKind::DaemonStopped { sweeps: 1 }));
+    assert!((1..=u64::MAX).zip(evs).all(|(want, e)| e.id == want), "ids start at 1 and are gapless");
+    let count = |pred: fn(&EventKind) -> bool| evs.iter().filter(|e| pred(&e.kind)).count();
+    assert_eq!(count(|k| matches!(k, EventKind::SweepQueued { .. })), 1);
+    assert_eq!(count(|k| matches!(k, EventKind::SweepStarted { .. })), 1);
+    assert_eq!(count(|k| matches!(k, EventKind::SweepMerged { .. })), 1);
+    let cells = spec.cells.len();
+    assert_eq!(count(|k| matches!(k, EventKind::CellClaimed { .. })), cells);
+    assert_eq!(count(|k| matches!(k, EventKind::CellDone { .. })), cells);
+    assert_eq!(count(|k| matches!(k, EventKind::FragmentCommitted { .. })), cells);
+    for e in evs {
+        if let EventKind::CellClaimed { sweep, .. } = &e.kind {
+            assert_eq!(sweep, "alpha__mock", "library hooks must carry the sweep label");
+        }
+    }
+
+    // Tolerance on the same real log: CRLF endings, an unknown event
+    // type and a torn trailing line cost diagnostics, not events.
+    let mangled = format!(
+        "{}\r\n{{\"type\": \"sweep_paused\", \"sweep\": \"x\"}}\r\n{{\"type\": \"sweep_m",
+        log.trim_end().replace('\n', "\r\n"),
+    );
+    let tolerant = events::parse_lines(&mangled);
+    assert_eq!(tolerant.events, summary.events, "CRLF + junk must not perturb the stream");
+    assert_eq!(tolerant.diagnostics.len(), 2, "{:?}", tolerant.diagnostics);
+    assert!(tolerant.diagnostics[0].contains("unknown event type"));
+
+    // The daemon-written report carries the exact serial bytes.
+    let report = std::fs::read_to_string(q.join("reports").join("alpha__mock.json")).unwrap();
+    assert_eq!(report, serial_report("tee_ref", &spec));
+    std::fs::remove_dir_all(&q).unwrap();
+}
+
+/// The acceptance pin: a queued sweep merges byte-identically to a
+/// direct serial run for 1, 2, 3 and 7 warm in-process workers.
+#[test]
+fn daemon_reports_match_direct_serial_runs_across_worker_counts() {
+    let _g = lock();
+    let spec = sweep::synth_spec(7, "easy").unwrap();
+    let serial = serial_report("counts_ref", &spec);
+    for workers in [1usize, 2, 3, 7] {
+        let q = tmp_dir(&format!("counts_{workers}"));
+        queue::enqueue(&q, "lane", "synth", &spec).unwrap();
+        let summary = daemon::run(&opts(&q, workers)).unwrap();
+        assert_eq!(summary.merged, 1, "{workers} workers");
+        let report =
+            std::fs::read_to_string(q.join("reports").join("lane__synth.json")).unwrap();
+        assert_eq!(
+            report, serial,
+            "{workers}-worker daemon report must match direct serial bytes"
+        );
+        std::fs::remove_dir_all(&q).unwrap();
+    }
+}
+
+/// With one worker the full event sequence is deterministic: two fresh
+/// runs agree on everything but wall-clock timestamps, and a seeded
+/// transient-fault schedule (healed inside the retry layer) changes
+/// nothing either.
+#[test]
+fn same_seed_daemon_runs_emit_identical_event_streams_modulo_timing() {
+    let _g = lock();
+    let spec = sweep::synth_spec(3, "easy").unwrap();
+    let normalize = |s: &daemon::DaemonSummary| -> Vec<events::Event> {
+        s.events
+            .iter()
+            .map(|e| {
+                let mut e = e.with_t0();
+                // queue paths differ per run; blank them out too
+                if let EventKind::DaemonStarted { queue, .. } = &mut e.kind {
+                    *queue = String::new();
+                }
+                e
+            })
+            .collect()
+    };
+    let mut streams = Vec::new();
+    for (round, chaos) in [(0, false), (1, false), (2, true)] {
+        let q = tmp_dir(&format!("seq_{round}"));
+        queue::enqueue(&q, "lane", "synth", &spec).unwrap();
+        if chaos {
+            // transient dequeue fault: heals under io_retry, so the
+            // *observable* event stream must be untouched
+            rmmlinear::chaos::install(&rmmlinear::chaos::InstallOpts {
+                seed: 11,
+                profile: "daemon.dequeue@0=err:interrupted".to_string(),
+                slot: 0,
+                generation: 0,
+                exit_on_kill: false,
+                verbose: false,
+            })
+            .unwrap();
+        }
+        let summary = daemon::run(&opts(&q, 1)).unwrap();
+        if chaos {
+            let fired = rmmlinear::chaos::fired();
+            rmmlinear::chaos::clear();
+            assert!(
+                fired.iter().any(|l| l.contains("daemon.dequeue@0")),
+                "the scheduled dequeue fault must actually fire: {fired:?}"
+            );
+        }
+        streams.push(normalize(&summary));
+        std::fs::remove_dir_all(&q).unwrap();
+    }
+    assert_eq!(streams[0], streams[1], "same work must emit the same stream");
+    assert_eq!(streams[0], streams[2], "healed transient faults must be invisible");
+}
+
+#[test]
+fn lane_depth_cap_sheds_excess_specs_with_typed_rejected_events() {
+    let _g = lock();
+    let q = tmp_dir("cap");
+    let spec = sweep::selftest_spec();
+    queue::enqueue(&q, "tenant", "a", &spec).unwrap();
+    queue::enqueue(&q, "tenant", "b", &spec).unwrap();
+
+    let mut o = opts(&q, 1);
+    o.queue_cap = 1;
+    let summary = daemon::run(&o).unwrap();
+    assert_eq!(summary.merged, 1, "the in-cap spec must still run");
+    assert_eq!(summary.rejected, 1, "the over-cap spec must be shed");
+    assert!(q.join("reports").join("tenant__a.json").exists());
+    assert!(!q.join("reports").join("tenant__b.json").exists());
+    assert!(q.join("rejected").join("tenant__b.json").exists());
+    let shed: Vec<_> = summary
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::SweepRejected { sweep, lane, depth, cap } => {
+                Some((sweep.clone(), lane.clone(), *depth, *cap))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(shed, vec![("tenant__b".to_string(), "tenant".to_string(), 2, 1)]);
+    std::fs::remove_dir_all(&q).unwrap();
+}
+
+#[test]
+fn engine_requiring_specs_are_rejected_not_run() {
+    let _g = lock();
+    let q = tmp_dir("engine");
+    let mut spec = SweepSpec::new("table2", TrainConfig::default());
+    spec.push("v0".to_string(), "cola".to_string(), 1.0, "gauss", 1, 0);
+    queue::enqueue(&q, "lane", "real", &spec).unwrap();
+
+    let summary = daemon::run(&opts(&q, 1)).unwrap();
+    assert_eq!(summary.merged, 0);
+    assert_eq!(summary.rejected, 1);
+    assert!(q.join("rejected").join("lane__real.json").exists());
+    assert!(
+        !summary.events.iter().any(|e| matches!(e.kind, EventKind::SweepStarted { .. })),
+        "an engine-backed spec must be rejected before any work starts"
+    );
+    std::fs::remove_dir_all(&q).unwrap();
+}
+
+/// Crash = resume, through real processes: a seeded chaos kill takes
+/// the daemon down mid-sweep (exit code 86), the spec stays parked in
+/// `active/`, and a `--chaos-gen 1` restart (already-fired kills
+/// filtered) finishes the missing cells to the identical report bytes.
+#[test]
+fn killed_daemon_resumes_to_the_identical_merged_report() {
+    let _g = lock();
+    let spec = sweep::synth_spec(7, "easy").unwrap();
+    let serial = serial_report("crash_ref", &spec);
+    let q = tmp_dir("crash_q");
+    queue::enqueue(&q, "ci", "crash", &spec).unwrap();
+
+    let exe = PathBuf::from(env!("CARGO_BIN_EXE_repro"));
+    let run = |gen: u32| {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("sweep-daemon")
+            .arg("--queue")
+            .arg(&q)
+            .arg("--drain")
+            .arg("--lease-ttl-ms")
+            .arg("1000")
+            .arg("--chaos-seed")
+            .arg("11")
+            .arg("--chaos-profile")
+            .arg("sched.cell@2=kill");
+        if gen > 0 {
+            cmd.arg("--chaos-gen").arg(gen.to_string());
+        }
+        cmd.output().expect("spawning sweep-daemon")
+    };
+
+    let first = run(0);
+    assert_eq!(
+        first.status.code(),
+        Some(rmmlinear::chaos::KILL_EXIT_CODE),
+        "the scheduled kill must take the daemon down\nstderr: {}",
+        String::from_utf8_lossy(&first.stderr)
+    );
+    assert!(
+        q.join("active").join("ci__crash.json").exists(),
+        "a killed daemon must leave the dequeued spec in active/ for recovery"
+    );
+
+    let second = run(1);
+    assert!(
+        second.status.success(),
+        "the gen-1 restart must finish the sweep\nstderr: {}",
+        String::from_utf8_lossy(&second.stderr)
+    );
+    assert!(q.join("done").join("ci__crash.json").exists());
+    let report = std::fs::read_to_string(q.join("reports").join("ci__crash.json")).unwrap();
+    assert_eq!(report, serial, "crash + resume must publish the fault-free bytes");
+
+    // The append-only tee now holds both runs (possibly with a line
+    // torn by the kill): the parser still reads it, with monotonic ids
+    // across the concatenation and two daemon_started markers.
+    let log = std::fs::read_to_string(q.join("events.jsonl")).unwrap();
+    let parsed = events::parse_lines(&log);
+    assert_eq!(
+        parsed.events.iter().filter(|e| matches!(e.kind, EventKind::DaemonStarted { .. })).count(),
+        2
+    );
+    assert!((1..=u64::MAX).zip(&parsed.events).all(|(want, e)| e.id == want));
+    std::fs::remove_dir_all(&q).unwrap();
+}

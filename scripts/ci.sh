@@ -79,4 +79,42 @@ for T in 1 4; do
   RMM_THREADS=$T target/release/repro sweep-selftest --shards 2 --schedule dynamic --grid budget
 done
 
+# Daemon byte-identity gate: the same synth grid served through the
+# sweep-daemon queue path (enqueue -> drain -> merge -> report) must
+# publish exactly the bytes sweep-selftest --out writes for its serial
+# reference, and --replay-verify requires the events.jsonl tee to
+# round-trip the emitted typed event stream (ids and order included).
+# Run at both thread counts like every other byte-identity gate
+# (prop_events.rs is the fine-grained gate).
+echo "== sweep daemon (synth grid through the queue path, replay-verified) =="
+for T in 1 4; do
+  Q=$(mktemp -d)
+  RMM_THREADS=$T target/release/repro sweep-selftest --grid synth-easy --out "$Q/ref.json"
+  RMM_THREADS=$T target/release/repro sweep-enqueue --queue "$Q/queue" --grid synth-easy --lane ci --name synth
+  RMM_THREADS=$T target/release/repro sweep-daemon --queue "$Q/queue" --workers 2 --drain --replay-verify
+  cmp "$Q/ref.json" "$Q/queue/reports/ci__synth.json"
+  rm -rf "$Q"
+done
+
+# Daemon crash/resume gate: a seeded chaos kill takes the daemon down
+# mid-sweep (exit code 86), leaving the dequeued spec in active/ and its
+# committed fragments on disk; the --chaos-gen 1 restart (already-fired
+# kills filtered from the replayed schedule) finishes exactly the
+# missing cells and must publish the identical fault-free report bytes.
+echo "== sweep daemon (chaos kill + resume) =="
+Q=$(mktemp -d)
+target/release/repro sweep-selftest --grid synth-easy --out "$Q/ref.json"
+target/release/repro sweep-enqueue --queue "$Q/queue" --grid synth-easy --lane ci --name crash
+set +e
+target/release/repro sweep-daemon --queue "$Q/queue" --drain --lease-ttl-ms 1000 \
+  --chaos-seed 11 --chaos-profile "sched.cell@2=kill"
+code=$?
+set -e
+test "$code" -eq 86
+test -f "$Q/queue/active/ci__crash.json"
+target/release/repro sweep-daemon --queue "$Q/queue" --drain --lease-ttl-ms 1000 \
+  --chaos-seed 11 --chaos-profile "sched.cell@2=kill" --chaos-gen 1
+cmp "$Q/ref.json" "$Q/queue/reports/ci__crash.json"
+rm -rf "$Q"
+
 echo "ci: all gates passed"
