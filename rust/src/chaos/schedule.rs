@@ -48,6 +48,8 @@ pub const POINTS: &[&str] = &[
     "sched.cell",
     "resume.spec",
     "session.evict",
+    "registry.heartbeat",
+    "cache.publish",
     "daemon.dequeue",
     "event.tee",
     "clock",

@@ -123,6 +123,12 @@ pub struct SweepConfig {
     /// warm (variant, task) key before canonical order (`sweep.affinity`,
     /// default on).  A pure claim-order preference.
     pub affinity: Option<bool>,
+    /// Shared on-disk artifact cache + fleet worker registry under the
+    /// sweep dir (`--artifact-cache on|off`, default off): new worker
+    /// processes warm-start from init-param and dev-batch blobs
+    /// published by earlier workers.  Byte-invisible in reports — blobs
+    /// round-trip bit-exactly and cache counters go to stderr only.
+    pub artifact_cache: Option<bool>,
     /// Seed for worker-process fault injection (`--chaos-seed`); the
     /// seed is the on-switch — absent means no chaos.  Like every knob
     /// here it cannot change merged-report content: chaos costs
@@ -145,6 +151,7 @@ impl SweepConfig {
             && self.lease_ttl_ms.is_none()
             && self.session_cache.is_none()
             && self.affinity.is_none()
+            && self.artifact_cache.is_none()
             && self.chaos_seed.is_none()
             && self.chaos_profile.is_none()
             && self.respawn_budget.is_none()
@@ -306,6 +313,9 @@ impl ExperimentConfig {
             }
             if let Some(a) = self.sweep.affinity {
                 s.push(("affinity", Json::Bool(a)));
+            }
+            if let Some(ac) = self.sweep.artifact_cache {
+                s.push(("artifact_cache", Json::Bool(ac)));
             }
             if let Some(cs) = self.sweep.chaos_seed {
                 s.push(("chaos_seed", Json::num(cs as f64)));
@@ -485,6 +495,10 @@ fn parse_sweep(j: &Json) -> Result<SweepConfig> {
             "affinity" => {
                 s.affinity = Some(v.as_bool().context("'affinity' must be a bool")?)
             }
+            "artifact_cache" => {
+                s.artifact_cache =
+                    Some(v.as_bool().context("'artifact_cache' must be a bool")?)
+            }
             "chaos_seed" => s.chaos_seed = Some(num(v, k)? as u64),
             "chaos_profile" => s.chaos_profile = Some(req_str(v, k)?),
             "respawn_budget" => s.respawn_budget = Some(num(v, k)? as u32),
@@ -638,6 +652,7 @@ mod tests {
             r#"{"sweep": {"lease_ttl_ms": 0}}"#,
             r#"{"sweep": {"session_cache": "on"}}"#,
             r#"{"sweep": {"affinity": 1}}"#,
+            r#"{"sweep": {"artifact_cache": "on"}}"#,
             r#"{"train": {"prefetch": "yes"}}"#,
             r#"{"train": {"prefetch_depth": 0}}"#,
             r#"{"daemon": {"workers": 0}}"#,
@@ -682,6 +697,7 @@ mod tests {
             r#"{"sweep": {"shards": 3, "resume": true,
                           "schedule": "dynamic", "lease_ttl_ms": 5000,
                           "session_cache": false, "affinity": true,
+                          "artifact_cache": true,
                           "chaos_seed": 11, "chaos_profile": "crash",
                           "respawn_budget": 2}}"#,
         )
@@ -693,6 +709,7 @@ mod tests {
         assert_eq!(cfg.sweep.lease_ttl_ms, Some(5000));
         assert_eq!(cfg.sweep.session_cache, Some(false));
         assert_eq!(cfg.sweep.affinity, Some(true));
+        assert_eq!(cfg.sweep.artifact_cache, Some(true));
         assert_eq!(cfg.sweep.chaos_seed, Some(11));
         assert_eq!(cfg.sweep.chaos_profile.as_deref(), Some("crash"));
         assert_eq!(cfg.sweep.respawn_budget, Some(2));

@@ -51,6 +51,7 @@ use std::thread;
 use anyhow::{bail, Context, Result};
 
 use crate::session::Session;
+use crate::sweep::fleet;
 use crate::sweep::{merge, resume, DynamicConfig, DynamicRun, SweepSpec};
 use crate::util::json::Json;
 
@@ -73,6 +74,10 @@ pub struct DaemonOpts {
     pub affinity: bool,
     /// Warm session caches in the workers.
     pub session_cache: bool,
+    /// Shared on-disk artifact cache under each sweep dir (`cache/`),
+    /// plus fleet registry entries under `workers/`.  Lets a respawned
+    /// (cold) worker warm-start from blobs its predecessors published.
+    pub artifact_cache: bool,
     /// Exit once the queue is empty instead of polling forever.
     pub drain: bool,
     /// Idle poll interval when not draining.
@@ -96,6 +101,7 @@ impl Default for DaemonOpts {
             lease_ttl_ms: crate::sweep::DEFAULT_LEASE_TTL_MS,
             affinity: true,
             session_cache: true,
+            artifact_cache: false,
             drain: false,
             poll_ms: DEFAULT_POLL_MS,
             respawn_budget: 0,
@@ -126,6 +132,7 @@ struct SweepJob {
     spec: SweepSpec,
     lease_ttl_ms: u64,
     affinity: bool,
+    artifact_cache: bool,
 }
 
 struct Worker {
@@ -148,9 +155,27 @@ fn spawn_worker(
         for job in rx {
             let cfg = DynamicConfig::new(&format!("daemon-w{slot}g{gen}"), job.lease_ttl_ms)
                 .with_affinity(job.affinity);
-            let res = crate::sweep::run_dynamic(&job.dir, &job.spec, &cfg, &mut |c, ctx| {
-                crate::bench_harness::runner::run_cell(&mut session, &job.spec, c, ctx)
-            });
+            // Fleet registry + artifact cache are per-sweep-dir state:
+            // register for this job's mount, attach its cache, detach
+            // both before the next job.  Registration is best-effort —
+            // the registry is observability, never correctness.
+            let reg = if job.artifact_cache {
+                match fleet::ArtifactCache::open(&job.dir) {
+                    Ok(cache) => session.set_artifact_cache(Some(cache)),
+                    Err(e) => eprintln!("sweep-daemon: worker {slot}: artifact cache: {e:#}"),
+                }
+                fleet::register(&job.dir, &cfg.worker, job.lease_ttl_ms).ok()
+            } else {
+                None
+            };
+            let res =
+                crate::sweep::run_dynamic_registered(&job.dir, &job.spec, &cfg, reg.as_ref(), &mut |c, ctx| {
+                    crate::bench_harness::runner::run_cell(&mut session, &job.spec, c, ctx)
+                });
+            if let Some(reg) = reg {
+                reg.deregister();
+            }
+            session.set_artifact_cache(None);
             session.retain_across_sweeps();
             if results.send((slot, res)).is_err() {
                 break;
@@ -401,6 +426,7 @@ fn process_sweep(
         spec: spec.clone(),
         lease_ttl_ms: opts.lease_ttl_ms,
         affinity: opts.affinity,
+        artifact_cache: opts.artifact_cache,
     });
     let raced = pool.run_sweep(job);
     if let Err(e) = raced {

@@ -121,11 +121,20 @@ pub fn sweep_id(lane: &str, name: &str) -> String {
     format!("{lane}__{name}")
 }
 
-/// Invert [`sweep_id`].
+/// Invert [`sweep_id`].  Both halves are re-validated against the lane
+/// and name charsets — `split_id` is the trust boundary for ids read
+/// back off disk (`active/`, report names), which later get joined into
+/// paths (`sweeps/<id>/`, `reports/<id>.json`).  Without the charset
+/// check an id like `ci__../evil` would path-traverse out of the queue
+/// directory; with it, any such entry is simply invisible.
 pub fn split_id(id: &str) -> Option<(&str, &str)> {
     let sep = id.find("__")?;
     let (lane, rest) = id.split_at(sep);
-    Some((lane, &rest[2..]))
+    let name = &rest[2..];
+    if validate_lane(lane).is_err() || validate_name(name).is_err() {
+        return None;
+    }
+    Some((lane, name))
 }
 
 /// Atomically enqueue `spec` as `incoming/<lane>/<name>.json`.
@@ -292,6 +301,42 @@ mod tests {
         assert!(validate_name("a/b").is_err());
         assert_eq!(split_id("t-a__syn_th"), Some(("t-a", "syn_th")));
         assert_eq!(split_id("noseparator"), None);
+    }
+
+    #[test]
+    fn split_id_rejects_ids_outside_the_charsets() {
+        // Traversal and separator abuse: these ids would escape the
+        // queue directory if joined into sweeps/<id> or reports/<id>.
+        for bad in [
+            "ci__../evil",
+            "..__evil",
+            "ci__a/b",
+            "ci__.hidden",
+            "a b__name",
+            "ci__",
+            "__name",
+            "ci__na me",
+        ] {
+            assert_eq!(split_id(bad), None, "{bad:?} must not split");
+        }
+        // The validators themselves refuse the same material at enqueue.
+        assert!(validate_name("../evil").is_err());
+        assert!(validate_name(".hidden").is_err());
+        assert!(validate_lane("..").is_err());
+    }
+
+    #[test]
+    fn active_entries_skip_ids_that_fail_the_charset_check() {
+        let q = tmp("trav");
+        ensure_layout(&q).unwrap();
+        // A hostile or corrupted entry in active/ with a traversal name.
+        std::fs::write(active_dir(&q).join("ci__..%2Fevil.json"), b"{}").unwrap();
+        std::fs::create_dir_all(active_dir(&q).join("sub")).unwrap();
+        std::fs::write(active_dir(&q).join("ci__ok.json"), b"{}").unwrap();
+        let entries = active_entries(&q).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, "ci__ok");
+        let _ = std::fs::remove_dir_all(&q);
     }
 
     #[test]

@@ -170,6 +170,13 @@ fn affinity_flag(args: &Args, defaults: &SweepConfig) -> Result<bool> {
     on_off_flag(args, "affinity", defaults.affinity, true)
 }
 
+/// `--artifact-cache on|off` (config: `sweep.artifact_cache`, default
+/// off): shared on-disk warm-start blobs (`cache/`) plus the fleet
+/// worker registry (`workers/`) under the sweep dir.
+fn artifact_cache_flag(args: &Args, defaults: &SweepConfig) -> Result<bool> {
+    on_off_flag(args, "artifact-cache", defaults.artifact_cache, false)
+}
+
 /// Build the warm session a run executes through: the engine plus
 /// manifest-backed caches (`--session-cache off` keeps construction but
 /// disables reuse — the explicit cold path).
@@ -283,6 +290,7 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
     let (schedule, ttl) = sweep_schedule(args, &defaults)?;
     let session_cache = session_cache_flag(args, &defaults)?;
     let affinity = affinity_flag(args, &defaults)?;
+    let artifact_cache = artifact_cache_flag(args, &defaults)?;
     let chaos = chaos_opts(args, &defaults)?;
     let respawn_budget = respawn_budget_arg(args, &defaults, chaos.is_some())?;
     let dir = reports_dir(args).join(format!("sweep_{name}"));
@@ -305,6 +313,9 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
             s if s.starts_with("synth-") => Session::data_only(session_cache),
             _ => Session::new(Engine::cpu()?, load_manifest(args)?, session_cache),
         };
+        if artifact_cache {
+            session.set_artifact_cache(Some(sweep::fleet::ArtifactCache::open(&dir)?));
+        }
         let mut runner = |cell: &sweep::Cell, ctx: &CellCtx<'_>| {
             bench::runner::run_cell(&mut session, spec, cell, ctx)
         };
@@ -318,7 +329,16 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
                 // the same dir (e.g. another machine on a shared store)
                 // cooperates instead of duplicating cells
                 let cfg = DynamicConfig::new("orchestrator", ttl).with_affinity(affinity);
-                let run = sweep::run_dynamic(&dir, spec, &cfg, &mut runner)?;
+                let reg = if artifact_cache {
+                    sweep::fleet::register(&dir, &cfg.worker, ttl).ok()
+                } else {
+                    None
+                };
+                let run =
+                    sweep::run_dynamic_registered(&dir, spec, &cfg, reg.as_ref(), &mut runner)?;
+                if let Some(reg) = reg {
+                    reg.deregister();
+                }
                 eprintln!("sweep[{name}]: {}", run.summary());
             }
         }
@@ -333,6 +353,8 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
         }
         extra.push("--session-cache".to_string());
         extra.push(if session_cache { "on" } else { "off" }.to_string());
+        extra.push("--artifact-cache".to_string());
+        extra.push(if artifact_cache { "on" } else { "off" }.to_string());
         if schedule == Schedule::Dynamic {
             extra.push("--schedule".to_string());
             extra.push("dynamic".to_string());
@@ -458,12 +480,16 @@ COMMANDS
                     table drivers) --dir DIR --shard i/N
                     [--schedule static|dynamic --lease-ttl-ms N]
                     [--session-cache on|off --affinity on|off]
+                    [--artifact-cache on|off] (on: registers in the
+                    fleet registry under --dir and warm-starts from the
+                    shared blob cache)
   sweep-selftest    sweep-machinery smoke: serial vs --shards N worker
                     processes must merge byte-identically
                     [--schedule static|dynamic]
                     [--grid mock|data|budget|synth-easy|synth-medium|
                      synth-hard]
-                    [--session-cache on|off] [--synth-seed N]
+                    [--session-cache on|off] [--artifact-cache on|off]
+                    [--synth-seed N]
                     [--chaos-seed N [--chaos-profile P]] (--grid data
                     runs the warm session layer's data path; --grid
                     budget runs the closed-loop variance controller's
@@ -489,7 +515,7 @@ COMMANDS
                     --queue DIR [--workers N --queue-cap N --poll-ms N]
                     [--drain] [--replay-verify] [--lease-ttl-ms N]
                     [--session-cache on|off --affinity on|off]
-                    [--respawn-budget N]
+                    [--artifact-cache on|off] [--respawn-budget N]
                     [--chaos-seed N --chaos-profile P --chaos-gen G]
                     (--drain exits once the queue is empty;
                     --replay-verify re-parses the tee after a drain and
@@ -544,6 +570,16 @@ COMMON OPTIONS
                     cells matching their warm (variant, task) key before
                     canonical order, maximizing session reuse (config:
                     sweep.affinity); pure claim-order preference
+  --artifact-cache M  on|off (default off): fleet mode — each dynamic
+                    worker registers in workers/ under the sweep dir
+                    (liveness via registry + lease heartbeats; stale
+                    entries reclaimed like stale claims) and warm-starts
+                    from cache/, a shared self-verifying blob store of
+                    init-param and dev-batch artifacts published
+                    create-exclusively by whichever worker computes them
+                    first (config: sweep.artifact_cache).  Byte-
+                    invisible in reports: blobs round-trip bit-exactly
+                    and hit/publish counters go to stderr only
   --resume          reuse completed-cell manifests from a killed sweep
                     (config: sweep.resume); only missing cells rerun
   --prefetch        assemble the next batch on a background thread while
@@ -834,6 +870,10 @@ fn cmd_sweep_worker(args: &Args) -> Result<()> {
         s if s.starts_with("synth-") => Session::data_only(session_cache),
         _ => Session::new(Engine::cpu()?, load_manifest(args)?, session_cache),
     };
+    let artifact_cache = artifact_cache_flag(args, &defaults)?;
+    if artifact_cache {
+        session.set_artifact_cache(Some(sweep::fleet::ArtifactCache::open(&dir)?));
+    }
     let mut runner = |cell: &sweep::Cell, ctx: &CellCtx<'_>| -> Result<Json> {
         if !mock_cost.is_zero() && spec.experiment == "mock" {
             std::thread::sleep(mock_cost);
@@ -851,7 +891,22 @@ fn cmd_sweep_worker(args: &Args) -> Result<()> {
             let ttl = lease_ttl_arg(args)?.unwrap_or(sweep::DEFAULT_LEASE_TTL_MS);
             let cfg = DynamicConfig::new("worker", ttl).with_affinity(affinity);
             let worker = cfg.worker.clone();
-            let run = sweep::run_dynamic(&dir, &spec, &cfg, &mut runner)?;
+            // Fleet registry entry for the life of this process:
+            // registration rides `--artifact-cache` (both are fleet
+            // machinery under the shared mount) and is best-effort —
+            // the registry is observability, never correctness.  A
+            // chaos-killed worker leaks its entry; liveness then ages
+            // out of the registry heartbeat exactly like a stale claim.
+            let reg = if artifact_cache {
+                sweep::fleet::register(&dir, &worker, ttl).ok()
+            } else {
+                None
+            };
+            let run =
+                sweep::run_dynamic_registered(&dir, &spec, &cfg, reg.as_ref(), &mut runner)?;
+            if let Some(reg) = reg {
+                reg.deregister();
+            }
             eprintln!("sweep-worker {worker} (dynamic): {}", run.summary());
         }
     }
@@ -894,6 +949,7 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
     let grid = args.get_or("grid", "mock");
     let spec = grid_spec(args, grid)?;
     let session_cache = session_cache_flag(args, &SweepConfig::default())?;
+    let artifact_cache = artifact_cache_flag(args, &SweepConfig::default())?;
     let chaos = chaos_opts(args, &SweepConfig::default())?;
     let respawn_budget =
         respawn_budget_arg(args, &SweepConfig::default(), chaos.is_some())?;
@@ -926,6 +982,8 @@ fn cmd_sweep_selftest(args: &Args) -> Result<()> {
     let mut extra = vec![
         "--session-cache".to_string(),
         if session_cache { "on" } else { "off" }.to_string(),
+        "--artifact-cache".to_string(),
+        if artifact_cache { "on" } else { "off" }.to_string(),
     ];
     if schedule == Schedule::Dynamic {
         extra.push("--schedule".to_string());
@@ -1056,6 +1114,7 @@ fn cmd_sweep_daemon(args: &Args) -> Result<()> {
             .unwrap_or_else(|| sw.lease_ttl_ms.unwrap_or(sweep::DEFAULT_LEASE_TTL_MS)),
         affinity: affinity_flag(args, &sw)?,
         session_cache: session_cache_flag(args, &sw)?,
+        artifact_cache: artifact_cache_flag(args, &sw)?,
         drain: args.has_flag("drain"),
         poll_ms: args.get_u64(
             "poll-ms",

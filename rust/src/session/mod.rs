@@ -46,6 +46,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::TrainerSetup;
 use crate::data::{Batch, Batcher, Split, Task, TaskGen, Tokenizer};
 use crate::runtime::{Engine, Manifest};
+use crate::sweep::fleet::ArtifactCache;
 
 /// Most dev-batch sets kept warm at once (oldest evicted first).  Dev
 /// splits are small, but a long sweep can touch many (task, seed) pairs
@@ -59,6 +60,10 @@ pub const DEV_CACHE_CAP: usize = 16;
 pub const CROSS_SWEEP_DEV_KEEP: usize = 4;
 
 /// Cache traffic counters — scheduling/telemetry only, never results.
+/// The artifact-cache counters (`art_*`) surface **only** here, i.e. in
+/// worker stderr: like the exe-cache counters they are deliberately
+/// kept out of fragment JSON, so shared-cache warm-start stays
+/// invisible to merged reports.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct SessionStats {
     pub setup_hits: u64,
@@ -68,20 +73,30 @@ pub struct SessionStats {
     pub dev_hits: u64,
     pub dev_misses: u64,
     pub dev_evictions: u64,
+    /// Trainer setups warm-started from the shared on-disk cache.
+    pub art_setup_hits: u64,
+    /// Dev-batch sets warm-started from the shared on-disk cache.
+    pub art_dev_hits: u64,
+    /// Blobs this session published to the shared cache (first writer).
+    pub art_publishes: u64,
 }
 
 impl SessionStats {
     /// One-line telemetry summary for worker stderr.
     pub fn summary(&self) -> String {
         format!(
-            "setup {}h/{}m, tokenizer {}h/{}m, dev {}h/{}m/{}ev",
+            "setup {}h/{}m, tokenizer {}h/{}m, dev {}h/{}m/{}ev, \
+             artifact-cache {}sh/{}dh/{}pub",
             self.setup_hits,
             self.setup_misses,
             self.tokenizer_hits,
             self.tokenizer_misses,
             self.dev_hits,
             self.dev_misses,
-            self.dev_evictions
+            self.dev_evictions,
+            self.art_setup_hits,
+            self.art_dev_hits,
+            self.art_publishes
         )
     }
 }
@@ -100,6 +115,11 @@ pub struct Session {
     tokenizers: HashMap<usize, Tokenizer>,
     dev_batches: HashMap<DevKey, Arc<Vec<Batch>>>,
     dev_order: VecDeque<DevKey>,
+    /// Shared on-disk artifact cache (`--artifact-cache on`): fleet
+    /// warm-start for trainer setups and dev-batch sets.  `None` (the
+    /// default) keeps the per-process in-memory behavior exactly as
+    /// before.
+    artifacts: Option<ArtifactCache>,
     pub stats: SessionStats,
 }
 
@@ -125,8 +145,25 @@ impl Session {
             tokenizers: HashMap::new(),
             dev_batches: HashMap::new(),
             dev_order: VecDeque::new(),
+            artifacts: None,
             stats: SessionStats::default(),
         }
+    }
+
+    /// Attach (or detach) the sweep's shared artifact cache.  Daemon
+    /// workers re-attach per sweep — the cache lives under each sweep
+    /// directory, while the session outlives sweeps.  The cache assumes
+    /// immutable artifact dirs (the `make artifacts` contract): setup
+    /// blobs are keyed by manifest dir + variant, dev blobs by the full
+    /// `DevKey`, and every blob is digest-verified on load, so a torn
+    /// or mismatched entry costs a regeneration, never a wrong result.
+    pub fn set_artifact_cache(&mut self, cache: Option<ArtifactCache>) {
+        self.artifacts = cache;
+    }
+
+    /// Is a shared artifact cache attached?
+    pub fn has_artifact_cache(&self) -> bool {
+        self.artifacts.is_some()
     }
 
     /// Is warm-state reuse enabled (`--session-cache on`, the default)?
@@ -182,9 +219,38 @@ impl Session {
             }
         }
         self.stats.setup_misses += 1;
+        // Shared-cache warm start: a fresh worker process loads the
+        // variant's spilled setup blob instead of re-reading the init
+        // params cold; the blob was encoded bit-exactly from the same
+        // pure manifest load, so reuse is observation-free.
+        let art_key = match (&self.artifacts, self.manifest.as_ref()) {
+            (Some(_), Some(m)) => {
+                Some(ArtifactCache::setup_key(&m.dir, variant_name))
+            }
+            _ => None,
+        };
+        if let (Some(cache), Some(key)) = (self.artifacts.clone(), art_key) {
+            if let Some(setup) = cache.load_setup(key) {
+                if setup.variant_name == variant_name {
+                    self.stats.art_setup_hits += 1;
+                    let setup = Arc::new(setup);
+                    if self.caching {
+                        self.setups.insert(variant_name.to_string(), setup.clone());
+                    }
+                    return Ok(setup);
+                }
+            }
+        }
         let manifest = self.manifest()?;
         let variant = manifest.variant(variant_name)?;
         let setup = Arc::new(TrainerSetup::load(manifest, variant)?);
+        if let (Some(cache), Some(key)) = (self.artifacts.clone(), art_key) {
+            // Publish best-effort: a failed publish costs the next
+            // process its warm start, never this cell its result.
+            if let Ok(true) = cache.store_setup(key, &setup) {
+                self.stats.art_publishes += 1;
+            }
+        }
         if self.caching {
             self.setups.insert(variant_name.to_string(), setup.clone());
         }
@@ -214,10 +280,37 @@ impl Session {
             return Some(b.clone());
         }
         self.stats.dev_misses += 1;
+        let art_key = self
+            .artifacts
+            .as_ref()
+            .map(|_| ArtifactCache::dev_key(task.name(), seq_len, vocab, batch_size, seed));
+        // Shared-cache warm start: the canonical batch sequence is a
+        // pure function of the key, so a blob another worker spilled is
+        // bit-identical to what regeneration would produce.
+        if let (Some(cache), Some(k)) = (self.artifacts.clone(), art_key) {
+            if let Some(b) = cache.load_dev(k) {
+                self.stats.art_dev_hits += 1;
+                let batches = Arc::new(b);
+                self.insert_dev(key, batches.clone());
+                return Some(batches);
+            }
+        }
         let tok = self.tokenizer(vocab);
         let gen = TaskGen::new(task, &tok, seq_len, seed);
         let batches: Arc<Vec<Batch>> =
             Arc::new(Batcher::new(&gen, Split::Dev, batch_size, 0).collect());
+        if let (Some(cache), Some(k)) = (self.artifacts.clone(), art_key) {
+            if let Ok(true) = cache.store_dev(k, &batches) {
+                self.stats.art_publishes += 1;
+            }
+        }
+        self.insert_dev(key, batches.clone());
+        Some(batches)
+    }
+
+    /// Insert a dev-batch set under the bounded-cache policy (oldest
+    /// evicted first past [`DEV_CACHE_CAP`]).
+    fn insert_dev(&mut self, key: DevKey, batches: Arc<Vec<Batch>>) {
         while self.dev_batches.len() >= DEV_CACHE_CAP {
             match self.dev_order.pop_front() {
                 Some(old) => {
@@ -229,8 +322,7 @@ impl Session {
             }
         }
         self.dev_order.push_back(key);
-        self.dev_batches.insert(key, batches.clone());
-        Some(batches)
+        self.dev_batches.insert(key, batches);
     }
 
     /// Drop every warm cache (trainer setups, tokenizers, dev batches)
@@ -387,6 +479,55 @@ mod tests {
         let s = SessionStats { setup_hits: 2, ..Default::default() };
         let line = s.summary();
         assert!(line.contains("setup 2h/0m"), "{line}");
+        assert!(line.contains("artifact-cache 0sh/0dh/0pub"), "{line}");
         assert!(!line.contains('\n'));
+    }
+
+    #[test]
+    fn artifact_cache_warm_starts_a_fresh_session_bit_identically() {
+        let dir = std::env::temp_dir()
+            .join(format!("rmm_session_artcache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // session A regenerates cold and publishes to the shared cache
+        let mut a = data_session(true);
+        a.set_artifact_cache(Some(ArtifactCache::open(&dir).unwrap()));
+        assert!(a.has_artifact_cache());
+        let published = a.cached_dev_batches(Task::Wnli, 16, 64, 8, 3).unwrap();
+        assert_eq!(a.stats.art_dev_hits, 0);
+        assert_eq!(a.stats.art_publishes, 1);
+        // a brand-new session (a fresh worker process's stand-in) with
+        // empty in-memory caches warm-starts from the shared blob …
+        let mut b = data_session(true);
+        b.set_artifact_cache(Some(ArtifactCache::open(&dir).unwrap()));
+        let warm = b.cached_dev_batches(Task::Wnli, 16, 64, 8, 3).unwrap();
+        assert_eq!(b.stats.dev_misses, 1, "in-memory cache was cold");
+        assert_eq!(b.stats.art_dev_hits, 1, "disk cache must hit");
+        assert_eq!(b.stats.art_publishes, 0);
+        assert!(b.stats.summary().contains("artifact-cache 0sh/1dh/0pub"));
+        // … and the loaded batches are bit-identical to regeneration
+        let tok = Tokenizer::new(64);
+        let gen = TaskGen::new(Task::Wnli, &tok, 16, 3);
+        let cold: Vec<Batch> = Batcher::new(&gen, Split::Dev, 8, 0).collect();
+        assert_eq!(warm.len(), cold.len());
+        assert_eq!(published.len(), cold.len());
+        for (w, c) in warm.iter().zip(&cold) {
+            assert_eq!(w.tokens, c.tokens);
+            assert_eq!(
+                w.mask.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                c.mask.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(w.labels_i, c.labels_i);
+            assert_eq!(
+                w.labels_f.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                c.labels_f.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!((w.batch_size, w.seq_len, w.valid), (c.batch_size, c.seq_len, c.valid));
+        }
+        // a second fetch in session B is now an in-memory hit, not disk
+        b.cached_dev_batches(Task::Wnli, 16, 64, 8, 3).unwrap();
+        assert_eq!(b.stats.dev_hits, 1);
+        assert_eq!(b.stats.art_dev_hits, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

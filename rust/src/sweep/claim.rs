@@ -48,14 +48,27 @@
 //! (`sweep::retry`) for *transient* `io::Error`s, so a flaky shared
 //! mount degrades to latency instead of a dead worker; fatal kinds
 //! still fail fast, and `ClaimGuard`'s drop release stays best-effort.
-//! Staleness tolerates clock skew between hosts: an embedded heartbeat
-//! more than one TTL in the *reader's* future cannot belong to a live
-//! worker refreshing on schedule, so it is judged by mtime like a torn
-//! write — a dead worker with a fast clock wedges its cell for one
-//! TTL, not skew + TTL.  Each op is also a named chaos fault point
-//! (`claim.create` / `claim.refresh` / `claim.reclaim`, plus `clock`
-//! skew through [`now_ms`]) — see the sweep module doc's chaos-knobs
-//! section.
+//! Staleness tolerates clock skew between hosts, in **both**
+//! directions, by treating the embedded heartbeat as *evidence of
+//! liveness only* — it can keep a claim alive, never condemn it.  The
+//! effective age is the **minimum** of the heartbeat age (when the
+//! heartbeat is plausible) and the file mtime age: an embedded
+//! heartbeat more than one TTL in the *reader's* future cannot belong
+//! to a live worker refreshing on schedule, so it is discounted and
+//! the claim is judged by mtime like a torn write — a dead worker with
+//! a fast clock wedges its cell for one TTL, not skew + TTL.
+//! Symmetrically, a heartbeat deep in the reader's *past* (a slow
+//! writer clock, or a fast reader clock) does not get a live claim
+//! robbed as long as its refreshes keep the file **mtime** fresh —
+//! mtime comes from the store's own clock, which every reader of a
+//! shared mount agrees on.  The heartbeat value is parsed strictly
+//! (non-negative integer below 2^53, the same bound the config layer
+//! enforces for seeds); anything else — negative, fractional,
+//! non-finite, or overflowing the f64-lossless range — is treated as a
+//! torn write and judged by mtime.  Each op is also a named chaos
+//! fault point (`claim.create` / `claim.refresh` / `claim.reclaim`,
+//! plus `clock` skew through [`now_ms`]) — see the sweep module doc's
+//! chaos-knobs section.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -64,6 +77,7 @@ use std::time::{SystemTime, UNIX_EPOCH};
 
 use anyhow::{Context, Result};
 
+use super::grid::MAX_JSON_SEED;
 use super::retry;
 use crate::util::json::Json;
 
@@ -104,7 +118,10 @@ pub struct ClaimInfo {
     pub heartbeat_ms: u64,
 }
 
-fn claim_body(worker: &str, heartbeat_ms: u64) -> String {
+/// The canonical lease-file body — shared with the fleet registry
+/// (`sweep::fleet`), whose entries are judged by the same staleness
+/// rule.
+pub(crate) fn claim_body(worker: &str, heartbeat_ms: u64) -> String {
     Json::obj(vec![
         ("heartbeat_ms", Json::num(heartbeat_ms as f64)),
         ("worker", Json::str(worker)),
@@ -112,14 +129,29 @@ fn claim_body(worker: &str, heartbeat_ms: u64) -> String {
     .to_string_pretty()
 }
 
+/// Strictly parse a `heartbeat_ms` value: a non-negative integer below
+/// 2^53 (the same f64-lossless bound the config layer enforces for
+/// seeds).  A float cast alone would wrap negatives through `as u64`
+/// and silently lose precision above 2^53, corrupting liveness math —
+/// anything outside the strict range reads as absent, i.e. a torn
+/// write that falls back to mtime staleness.
+fn parse_heartbeat_ms(j: &Json) -> Option<u64> {
+    let v = j.as_f64()?;
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v >= MAX_JSON_SEED as f64 {
+        return None;
+    }
+    Some(v as u64)
+}
+
 /// Read a cell's claim, if present and parseable (diagnostics; the
-/// scheduler itself only needs [`try_claim`]).
+/// scheduler itself only needs [`try_claim`]).  A claim whose
+/// `heartbeat_ms` fails the strict parse is reported as torn (absent).
 pub fn read_claim(cells_dir: &Path, index: usize) -> Option<ClaimInfo> {
     let text = std::fs::read_to_string(claim_path(cells_dir, index)).ok()?;
     let j = Json::parse(&text).ok()?;
     Some(ClaimInfo {
         worker: j.get("worker").as_str()?.to_string(),
-        heartbeat_ms: j.get("heartbeat_ms").as_f64()? as u64,
+        heartbeat_ms: parse_heartbeat_ms(j.get("heartbeat_ms"))?,
     })
 }
 
@@ -129,31 +161,41 @@ pub fn remove_claim(cells_dir: &Path, index: usize) {
     let _ = std::fs::remove_file(claim_path(cells_dir, index));
 }
 
-/// Age of the claim at `path` in ms: embedded heartbeat when the file
-/// parses, mtime for a torn write, `None` if the file vanished.
+/// Age of the claim at `path` in ms, `None` if the file vanished.
+///
+/// The heartbeat is evidence of *liveness only*: the effective age is
+/// the **minimum** of the plausible heartbeat age and the file mtime
+/// age, so a claim stays live if *either* clock says so, and goes
+/// stale only when both agree.
 ///
 /// A heartbeat more than `ttl_ms` in the reader's *future* is clock
 /// skew, not liveness — a live worker refreshing within one TTL can
-/// never be that far ahead of any honest reader — so it also falls
-/// back to mtime age.  (A heartbeat at most `ttl_ms` ahead reads as
-/// age 0, which is already `<= ttl_ms`: mild NTP drift never gets a
-/// live claim robbed.)
-fn age_ms(path: &Path, ttl_ms: u64) -> Option<u64> {
+/// never be that far ahead of any honest reader — so it is discounted
+/// and only the mtime counts.  (A heartbeat at most `ttl_ms` ahead
+/// reads as age 0: mild NTP drift never gets a live claim robbed.)
+/// Symmetrically, a heartbeat deep in the reader's *past* — a slow
+/// writer clock, or a fast reader — cannot condemn a claim whose
+/// refreshes keep the mtime fresh: mtime comes from the store's own
+/// clock, the one clock all readers of a shared mount agree on.
+/// A torn or out-of-range heartbeat (strict parse) leaves mtime as
+/// the only witness.
+pub(crate) fn age_ms(path: &Path, ttl_ms: u64) -> Option<u64> {
     let now = now_ms();
+    let mut hb_age = None;
     if let Ok(text) = std::fs::read_to_string(path) {
         if let Ok(j) = Json::parse(&text) {
-            if let Some(hb) = j.get("heartbeat_ms").as_f64() {
-                let hb = hb as u64;
+            if let Some(hb) = parse_heartbeat_ms(j.get("heartbeat_ms")) {
                 if hb <= now.saturating_add(ttl_ms) {
-                    return Some(now.saturating_sub(hb));
+                    hb_age = Some(now.saturating_sub(hb));
                 }
-                // fall through: future-skewed heartbeat, judge by mtime
+                // else: future-skewed heartbeat, judge by mtime alone
             }
         }
     }
     let mtime = std::fs::metadata(path).ok()?.modified().ok()?;
     let mtime_ms = mtime.duration_since(UNIX_EPOCH).ok()?.as_millis() as u64;
-    Some(now.saturating_sub(mtime_ms))
+    let mtime_age = now.saturating_sub(mtime_ms);
+    Some(hb_age.map_or(mtime_age, |h| h.min(mtime_age)))
 }
 
 /// Outcome of one claim attempt.
@@ -349,11 +391,12 @@ mod tests {
     #[test]
     fn stale_lease_is_reclaimable_fresh_is_not() {
         let d = tmp("stale");
-        // a claim whose heartbeat is ancient (a killed worker)
+        // a killed worker's claim: the heartbeat is ancient AND the
+        // file mtime goes stale (no refresh re-stamps it) — both
+        // witnesses agree, so the lease is reclaimable
         std::fs::write(claim_path(&d, 7), claim_body("dead-worker", 1)).unwrap();
-        // fresh-enough TTL judged against the *embedded* heartbeat, so
-        // the brand-new mtime must not shield it
-        match try_claim(&d, 7, "thief", 1_000).unwrap() {
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        match try_claim(&d, 7, "thief", 25).unwrap() {
             ClaimAttempt::Won(g) => {
                 assert_eq!(read_claim(&d, 7).unwrap().worker, "thief");
                 g.release();
@@ -363,6 +406,33 @@ mod tests {
         // a live claim with a current heartbeat is not stealable
         std::fs::write(claim_path(&d, 7), claim_body("live-worker", now_ms())).unwrap();
         assert!(matches!(try_claim(&d, 7, "thief", 60_000).unwrap(), ClaimAttempt::Held));
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn out_of_range_heartbeats_are_torn_writes_judged_by_mtime() {
+        let d = tmp("strict_hb");
+        // Corrupt heartbeats a lossy float cast would have silently
+        // accepted: negative (wraps through `as u64`), ≥2^53 (loses
+        // precision), fractional.  All must read as torn — absent from
+        // read_claim, mtime-judged for staleness.
+        for (i, hb) in ["-5", "9007199254740993", "12.5"].iter().enumerate() {
+            let body = format!("{{\"heartbeat_ms\": {hb}, \"worker\": \"w\"}}");
+            std::fs::write(claim_path(&d, i), body).unwrap();
+            assert!(read_claim(&d, i).is_none(), "heartbeat {hb} must parse as torn");
+            // fresh mtime shields it under a generous TTL …
+            assert!(matches!(try_claim(&d, i, "t", 60_000).unwrap(), ClaimAttempt::Held));
+        }
+        // … and mtime-staleness reclaims it (a negative heartbeat cast
+        // through f64→u64 would have wrapped to a huge "future" value
+        // and wedged the cell forever)
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        for i in 0..3 {
+            match try_claim(&d, i, "t", 25).unwrap() {
+                ClaimAttempt::Won(g) => g.release(),
+                ClaimAttempt::Held => panic!("torn heartbeat must age by mtime"),
+            }
+        }
         std::fs::remove_dir_all(&d).unwrap();
     }
 
@@ -431,27 +501,30 @@ mod tests {
     }
 
     #[test]
-    fn past_skewed_heartbeat_ages_by_embedded_clock() {
+    fn past_skewed_heartbeat_with_fresh_mtime_stays_live() {
         let d = tmp("slow_hb");
-        // A worker with a slow clock stamps heartbeats that are
-        // already "old" to every honest reader: reclaimable once the
-        // skew exceeds the TTL…
+        // A *live* worker with a slow clock stamps heartbeats that are
+        // already "old" to every honest reader — but its refreshes
+        // keep the file mtime fresh, and mtime comes from the store's
+        // clock, which reader and writer share.  The heartbeat can
+        // only prove liveness, never staleness: the claim must NOT be
+        // robbed just because the embedded clock lags.
         std::fs::write(
             claim_path(&d, 6),
             claim_body("slow-clock", now_ms().saturating_sub(5_000)),
         )
         .unwrap();
-        match try_claim(&d, 6, "thief", 1_000).unwrap() {
+        assert!(
+            matches!(try_claim(&d, 6, "thief", 1_000).unwrap(), ClaimAttempt::Held),
+            "past-skewed heartbeat with a fresh mtime must stay live"
+        );
+        // Once the worker dies and the mtime goes stale too, the claim
+        // is reclaimable — both witnesses now agree.
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        match try_claim(&d, 6, "thief", 25).unwrap() {
             ClaimAttempt::Won(g) => g.release(),
-            ClaimAttempt::Held => panic!("past-skewed heartbeat must read as stale"),
+            ClaimAttempt::Held => panic!("dead slow-clock worker must be reclaimable"),
         }
-        // …and held under a TTL that absorbs the skew.
-        std::fs::write(
-            claim_path(&d, 6),
-            claim_body("slow-clock", now_ms().saturating_sub(5_000)),
-        )
-        .unwrap();
-        assert!(matches!(try_claim(&d, 6, "w", 60_000).unwrap(), ClaimAttempt::Held));
         std::fs::remove_dir_all(&d).unwrap();
     }
 

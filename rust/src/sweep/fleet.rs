@@ -1,0 +1,722 @@
+//! Cross-machine fleet primitives over the shared sweep mount: a
+//! **worker registry** (`workers/` — who is part of this sweep, with
+//! liveness) and a **shared artifact cache** (`cache/` — warm-start
+//! blobs so a brand-new worker process skips cold start).
+//!
+//! Both live as siblings of `cells/` inside the sweep directory and are
+//! **invisible to the merge**: fragments are looked up by exact path in
+//! `cells/`, so nothing here can ever perturb a report.  The canonical
+//! prose contract (mount layout, registry lifecycle, cache key/commit
+//! rules) is the "Fleet registry + artifact cache" section of the
+//! `sweep` module doc.
+//!
+//! # Registry
+//!
+//! A worker joining a sweep creates `workers/<worker_id>.json`
+//! create-exclusively ([`register`]) — the same exactly-one-winner
+//! acquisition the claim store uses — with the claim-file body shape
+//! (`{"heartbeat_ms": N, "worker": id}`).  The returned
+//! [`RegistryGuard`] re-stamps the heartbeat ([`RegistryGuard::
+//! heartbeat`], chaos point `registry.heartbeat`) whenever the in-cell
+//! lease ticks through `CellCtx`, deregisters on clean release, and
+//! best-effort removes the file on drop.  Liveness is judged by the
+//! claim store's symmetric rule (min of plausible-heartbeat age and
+//! mtime age — see `sweep::claim`): [`live_workers`] lists the live
+//! membership, [`reclaim_stale`] sweeps entries whose worker died
+//! without deregistering, mirroring `claim`'s stale reclaim.  Workers
+//! are **elastic**: registration is not an admission gate — a worker
+//! that registers after `run_dynamic` started simply claims whatever
+//! cells remain, and one that deregisters mid-sweep leaves the rest to
+//! the survivors.  The registry is observability + fleet accounting,
+//! never scheduling state.
+//!
+//! # Artifact cache
+//!
+//! [`ArtifactCache`] spills the two expensive warm-session objects to
+//! the mount so *new* worker processes warm-start: per-variant
+//! [`TrainerSetup`] init-param blobs (keyed by FNV of the manifest dir
+//! + variant name) and dev-batch sets (keyed by FNV of task, seq_len,
+//! vocab, batch_size, seed — exactly the session's `DevKey`).  Entries
+//! are self-verifying binary blobs (magic, key echo, payload, FNV
+//! digest); any mismatch reads as absent, so a torn or corrupted cache
+//! entry costs a regeneration, never a wrong result.  Publication uses
+//! the writer-unique tmp + `hard_link` idiom (the queue's enqueue
+//! idiom): every concurrent writer encodes identical bytes for a key
+//! (the cached objects are pure functions of their keys), exactly one
+//! `hard_link` wins the final path, and losers just discard their tmp.
+//! The publish carries the chaos point `cache.publish`.  Cache traffic
+//! surfaces only in `SessionStats` (worker stderr) — never in fragment
+//! JSON — so warm-start is observation-free and warm ≡ cold
+//! byte-identity holds with the cache on, off, pre-seeded, or torn.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::TrainerSetup;
+use crate::data::Batch;
+use crate::util::fnv;
+
+use super::claim;
+use super::retry;
+
+/// The registry directory inside a sweep directory.
+pub fn workers_dir(dir: &Path) -> PathBuf {
+    dir.join("workers")
+}
+
+/// The shared artifact-cache directory inside a sweep directory.
+pub fn cache_dir(dir: &Path) -> PathBuf {
+    dir.join("cache")
+}
+
+/// Registry-entry path for one worker.
+pub fn registry_path(dir: &Path, worker: &str) -> PathBuf {
+    workers_dir(dir).join(format!("{worker}.json"))
+}
+
+/// Join the sweep's fleet: create `workers/<worker>.json`
+/// create-exclusively with a fresh heartbeat.  A leftover entry under
+/// the same id (a rebooted host re-using a pid) is reclaimed when
+/// stale, exactly like a stale claim; a *live* same-id entry is a
+/// caller bug (worker ids are process-unique) and errors out.
+pub fn register(dir: &Path, worker: &str, ttl_ms: u64) -> Result<RegistryGuard> {
+    let wdir = workers_dir(dir);
+    std::fs::create_dir_all(&wdir)
+        .with_context(|| format!("creating registry dir {wdir:?}"))?;
+    let path = registry_path(dir, worker);
+    for _ in 0..2 {
+        let opened = retry::io_retry(&format!("registry.register:{worker}"), || {
+            std::fs::OpenOptions::new().write(true).create_new(true).open(&path)
+        });
+        match opened {
+            Ok(mut f) => {
+                use std::io::Write;
+                let _ = f.write_all(claim::claim_body(worker, claim::now_ms()).as_bytes());
+                return Ok(RegistryGuard {
+                    path,
+                    worker: worker.to_string(),
+                    released: false,
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                let stale = claim::age_ms(&path, ttl_ms).map_or(true, |age| age > ttl_ms);
+                if !stale {
+                    bail!("worker '{worker}' is already registered and live at {path:?}");
+                }
+                let _ = std::fs::remove_file(&path);
+                continue;
+            }
+            Err(e) => return Err(e).with_context(|| format!("registering {path:?}")),
+        }
+    }
+    bail!("registering worker '{worker}': lost the re-register race twice")
+}
+
+/// A registered fleet membership.  Deregister on clean exit; dropping
+/// without deregistering also removes the entry (error/unwind path),
+/// and a worker killed outright leaves a stale entry for
+/// [`reclaim_stale`].
+pub struct RegistryGuard {
+    path: PathBuf,
+    worker: String,
+    released: bool,
+}
+
+impl RegistryGuard {
+    pub fn worker(&self) -> &str {
+        &self.worker
+    }
+
+    /// Re-stamp the registry heartbeat (tmp + rename, like a claim
+    /// refresh, so readers never see a torn entry).  Chaos point
+    /// `registry.heartbeat` on both the stage and the commit.
+    pub fn heartbeat(&self) -> Result<()> {
+        let tmp = self.path.with_extension(format!("json.hb.{}", std::process::id()));
+        retry::io_retry(&format!("registry.heartbeat:{}", self.worker), || {
+            crate::chaos::fault("registry.heartbeat")?;
+            std::fs::write(&tmp, claim::claim_body(&self.worker, claim::now_ms()))
+        })
+        .with_context(|| format!("writing registry heartbeat {tmp:?}"))?;
+        retry::io_retry(&format!("registry.heartbeat.commit:{}", self.worker), || {
+            crate::chaos::fault("registry.heartbeat")?;
+            std::fs::rename(&tmp, &self.path)
+        })
+        .with_context(|| format!("committing registry heartbeat {:?}", self.path))?;
+        Ok(())
+    }
+
+    /// Leave the fleet cleanly (remove the registry entry).
+    pub fn deregister(mut self) {
+        self.released = true;
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+impl Drop for RegistryGuard {
+    fn drop(&mut self) {
+        if !self.released {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// The sorted ids of every *live* registered worker (entries within
+/// the TTL under the claim store's symmetric staleness rule).  Stale
+/// entries are skipped, not removed — that is [`reclaim_stale`]'s job.
+pub fn live_workers(dir: &Path, ttl_ms: u64) -> Vec<String> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(workers_dir(dir)) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(worker) = name.strip_suffix(".json") else {
+            continue; // heartbeat staging litter
+        };
+        if claim::age_ms(&path, ttl_ms).is_some_and(|age| age <= ttl_ms) {
+            out.push(worker.to_string());
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Sweep stale registry entries (workers that died without
+/// deregistering), mirroring the claim store's stale reclaim.  Returns
+/// how many entries were removed.  Best-effort: a concurrent
+/// deregister or re-register loses nothing.
+pub fn reclaim_stale(dir: &Path, ttl_ms: u64) -> usize {
+    let mut removed = 0;
+    let Ok(entries) = std::fs::read_dir(workers_dir(dir)) else {
+        return 0;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if !name.ends_with(".json") {
+            continue;
+        }
+        let stale = claim::age_ms(&path, ttl_ms).map_or(false, |age| age > ttl_ms);
+        if stale && std::fs::remove_file(&path).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+// ---------------------------------------------------------------------------
+// Artifact cache
+// ---------------------------------------------------------------------------
+
+/// Format magic for cache blobs; bump on any layout change so old
+/// entries read as absent instead of mis-decoding.
+const CACHE_MAGIC: &[u8; 8] = b"rmmfle01";
+
+/// A handle on the sweep's shared `cache/` directory.  All methods are
+/// infallible-by-absence: a missing, torn, or mismatched entry loads
+/// as `None` and a failed publish is reported, never fatal — the cache
+/// only ever trades regeneration cost, not correctness.
+#[derive(Debug, Clone)]
+pub struct ArtifactCache {
+    dir: PathBuf,
+}
+
+impl ArtifactCache {
+    /// Open (creating if needed) the cache under a sweep directory.
+    pub fn open(sweep_dir: &Path) -> Result<ArtifactCache> {
+        let dir = cache_dir(sweep_dir);
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating artifact cache {dir:?}"))?;
+        Ok(ArtifactCache { dir })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Cache key for a variant's [`TrainerSetup`]: FNV of the manifest
+    /// directory + variant name, so two sweeps over *different*
+    /// artifact sets can never alias even when variant names collide.
+    pub fn setup_key(manifest_dir: &Path, variant: &str) -> u64 {
+        fnv::hash(
+            format!("setup|{}|{variant}", manifest_dir.display())
+                .bytes(),
+        )
+    }
+
+    /// Cache key for a dev-batch set: FNV of the session `DevKey`
+    /// (task, seq_len, vocab, batch_size, seed) — the tuple the batch
+    /// sequence is a pure function of.
+    pub fn dev_key(task: &str, seq_len: usize, vocab: usize, batch_size: usize, seed: u64) -> u64 {
+        fnv::hash(format!("dev|{task}|{seq_len}|{vocab}|{batch_size}|{seed}").bytes())
+    }
+
+    fn blob_path(&self, kind: &str, key: u64) -> PathBuf {
+        self.dir.join(format!("{kind}_{key:016x}.bin"))
+    }
+
+    /// Load a variant's spilled [`TrainerSetup`], if a valid blob for
+    /// this key exists.
+    pub fn load_setup(&self, key: u64) -> Option<TrainerSetup> {
+        let payload = read_blob(&self.blob_path("setup", key), key)?;
+        decode_setup(&payload)
+    }
+
+    /// Publish a variant's [`TrainerSetup`].  Returns `true` when this
+    /// writer's bytes won the `hard_link` (first publisher), `false`
+    /// when an identical blob was already there.
+    pub fn store_setup(&self, key: u64, setup: &TrainerSetup) -> Result<bool> {
+        self.publish("setup", key, &encode_setup(setup))
+    }
+
+    /// Load a spilled dev-batch set, if a valid blob for this key
+    /// exists.
+    pub fn load_dev(&self, key: u64) -> Option<Vec<Batch>> {
+        let payload = read_blob(&self.blob_path("dev", key), key)?;
+        decode_batches(&payload)
+    }
+
+    /// Publish a dev-batch set (see [`ArtifactCache::store_setup`] for
+    /// the return contract).
+    pub fn store_dev(&self, key: u64, batches: &[Batch]) -> Result<bool> {
+        self.publish("dev", key, &encode_batches(batches))
+    }
+
+    /// Commit `payload` under `<kind>_<key>.bin` via writer-unique tmp
+    /// + `hard_link`: rename would let a later (possibly torn) writer
+    /// replace a good blob, while `hard_link` fails with
+    /// `AlreadyExists` once *any* writer has published — and because
+    /// every writer encodes the same pure-function-of-key bytes, the
+    /// loser's blob is identical to the winner's.  Chaos point
+    /// `cache.publish` on the link; transient IO retries like every
+    /// other mount op.
+    fn publish(&self, kind: &str, key: u64, payload: &[u8]) -> Result<bool> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = self.blob_path(kind, key);
+        if path.exists() {
+            return Ok(false);
+        }
+        let mut blob = Vec::with_capacity(payload.len() + 32);
+        blob.extend_from_slice(CACHE_MAGIC);
+        put_u64(&mut blob, key);
+        put_u64(&mut blob, payload.len() as u64);
+        blob.extend_from_slice(payload);
+        put_u64(&mut blob, fnv::hash(payload.iter().copied()));
+        let tmp = self.dir.join(format!(
+            "{kind}_{key:016x}.tmp.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        retry::io_retry(&format!("cache.stage:{kind}:{key:016x}"), || {
+            std::fs::write(&tmp, &blob)
+        })
+        .with_context(|| format!("staging cache blob {tmp:?}"))?;
+        let linked = retry::io_retry(&format!("cache.publish:{kind}:{key:016x}"), || {
+            crate::chaos::fault("cache.publish")?;
+            std::fs::hard_link(&tmp, &path)
+        });
+        let _ = std::fs::remove_file(&tmp);
+        match linked {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+            Err(e) => Err(e).with_context(|| format!("publishing cache blob {path:?}")),
+        }
+    }
+}
+
+/// Read + verify a cache blob, returning its payload.  Every mismatch
+/// — short file, wrong magic, key echo, length, or digest — reads as
+/// absent.
+fn read_blob(path: &Path, key: u64) -> Option<Vec<u8>> {
+    let bytes = std::fs::read(path).ok()?;
+    let mut rd = Rd { b: &bytes, at: 0 };
+    if rd.take(8)? != CACHE_MAGIC.as_slice() || rd.u64()? != key {
+        return None;
+    }
+    let len = rd.u64()? as usize;
+    let payload = rd.take(len)?.to_vec();
+    let digest = rd.u64()?;
+    if rd.at != bytes.len() || digest != fnv::hash(payload.iter().copied()) {
+        return None;
+    }
+    Some(payload)
+}
+
+// -- deterministic little-endian encoding -----------------------------------
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn put_i32s(out: &mut Vec<u8>, v: &[i32]) {
+    put_u64(out, v.len() as u64);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a blob payload.
+struct Rd<'a> {
+    b: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.at.checked_add(n)?;
+        if end > self.b.len() {
+            return None;
+        }
+        let s = &self.b[self.at..end];
+        self.at = end;
+        Some(s)
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    /// A length prefix that must be satisfiable by the remaining bytes
+    /// (`elem` bytes per element) — rejects hostile/torn lengths before
+    /// any allocation.
+    fn len(&mut self, elem: usize) -> Option<usize> {
+        let n = self.u64()? as usize;
+        if n.checked_mul(elem)? > self.b.len() - self.at {
+            return None;
+        }
+        Some(n)
+    }
+
+    fn str(&mut self) -> Option<String> {
+        let n = self.len(1)?;
+        String::from_utf8(self.take(n)?.to_vec()).ok()
+    }
+
+    fn f32s(&mut self) -> Option<Vec<f32>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(f32::from_bits(u32::from_le_bytes(self.take(4)?.try_into().ok()?)));
+        }
+        Some(v)
+    }
+
+    fn i32s(&mut self) -> Option<Vec<i32>> {
+        let n = self.len(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(i32::from_le_bytes(self.take(4)?.try_into().ok()?));
+        }
+        Some(v)
+    }
+}
+
+fn encode_setup(s: &TrainerSetup) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_str(&mut out, &s.variant_name);
+    put_u64(&mut out, s.init_params.len() as u64);
+    for p in &s.init_params {
+        put_f32s(&mut out, p);
+    }
+    put_u64(&mut out, s.param_names.len() as u64);
+    for n in &s.param_names {
+        put_str(&mut out, n);
+    }
+    put_u64(&mut out, s.param_sizes.len() as u64);
+    for z in &s.param_sizes {
+        put_u64(&mut out, *z as u64);
+    }
+    out
+}
+
+fn decode_setup(b: &[u8]) -> Option<TrainerSetup> {
+    let mut rd = Rd { b, at: 0 };
+    let variant_name = rd.str()?;
+    let n = rd.len(8)?;
+    let mut init_params = Vec::with_capacity(n);
+    for _ in 0..n {
+        init_params.push(rd.f32s()?);
+    }
+    let n = rd.len(8)?;
+    let mut param_names = Vec::with_capacity(n);
+    for _ in 0..n {
+        param_names.push(rd.str()?);
+    }
+    let n = rd.len(8)?;
+    let mut param_sizes = Vec::with_capacity(n);
+    for _ in 0..n {
+        param_sizes.push(rd.u64()? as usize);
+    }
+    if rd.at != b.len() {
+        return None;
+    }
+    Some(TrainerSetup { variant_name, init_params, param_names, param_sizes })
+}
+
+fn encode_batches(batches: &[Batch]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, batches.len() as u64);
+    for b in batches {
+        put_u64(&mut out, b.batch_size as u64);
+        put_u64(&mut out, b.seq_len as u64);
+        put_u64(&mut out, b.valid as u64);
+        put_i32s(&mut out, &b.tokens);
+        put_f32s(&mut out, &b.mask);
+        put_i32s(&mut out, &b.labels_i);
+        put_f32s(&mut out, &b.labels_f);
+    }
+    out
+}
+
+fn decode_batches(b: &[u8]) -> Option<Vec<Batch>> {
+    let mut rd = Rd { b, at: 0 };
+    let n = rd.len(8)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let batch_size = rd.u64()? as usize;
+        let seq_len = rd.u64()? as usize;
+        let valid = rd.u64()? as usize;
+        out.push(Batch {
+            tokens: rd.i32s()?,
+            mask: rd.f32s()?,
+            labels_i: rd.i32s()?,
+            labels_f: rd.f32s()?,
+            batch_size,
+            seq_len,
+            valid,
+        });
+    }
+    if rd.at != b.len() {
+        return None;
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("rmm_fleet_test_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn register_heartbeat_deregister_roundtrip() {
+        let d = tmp("roundtrip");
+        let g = register(&d, "fleet-w0", 60_000).unwrap();
+        assert!(registry_path(&d, "fleet-w0").exists());
+        assert_eq!(live_workers(&d, 60_000), vec!["fleet-w0".to_string()]);
+        // second registration under the same live id is a caller bug
+        assert!(register(&d, "fleet-w0", 60_000).is_err());
+        g.heartbeat().unwrap();
+        g.deregister();
+        assert!(!registry_path(&d, "fleet-w0").exists());
+        assert!(live_workers(&d, 60_000).is_empty());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn drop_removes_the_registry_entry() {
+        let d = tmp("drop");
+        {
+            let _g = register(&d, "fleet-w1", 60_000).unwrap();
+            assert!(registry_path(&d, "fleet-w1").exists());
+        }
+        assert!(!registry_path(&d, "fleet-w1").exists());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn stale_entries_are_invisible_and_reclaimable_fresh_are_not() {
+        let d = tmp("stale");
+        std::fs::create_dir_all(workers_dir(&d)).unwrap();
+        // a dead worker: ancient heartbeat AND stale mtime
+        std::fs::write(registry_path(&d, "dead"), claim::claim_body("dead", 1)).unwrap();
+        let live = register(&d, "alive", 60_000).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        live.heartbeat().unwrap(); // re-stamps mtime + heartbeat
+        assert_eq!(live_workers(&d, 25), vec!["alive".to_string()]);
+        assert_eq!(reclaim_stale(&d, 25), 1);
+        assert!(!registry_path(&d, "dead").exists());
+        assert!(registry_path(&d, "alive").exists());
+        // a same-id re-register over a stale leftover succeeds
+        std::fs::write(registry_path(&d, "reborn"), claim::claim_body("reborn", 1)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        let g = register(&d, "reborn", 25).unwrap();
+        g.deregister();
+        live.deregister();
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn past_skewed_registry_heartbeat_with_fresh_mtime_stays_live() {
+        let d = tmp("skew");
+        std::fs::create_dir_all(workers_dir(&d)).unwrap();
+        // The claim store's symmetric skew rule applies to the registry
+        // too: a slow writer clock stamps "old" heartbeats, but its
+        // refreshes keep the mtime fresh — the worker must read live.
+        std::fs::write(
+            registry_path(&d, "slow"),
+            claim::claim_body("slow", claim::now_ms().saturating_sub(5_000)),
+        )
+        .unwrap();
+        assert_eq!(live_workers(&d, 1_000), vec!["slow".to_string()]);
+        assert_eq!(reclaim_stale(&d, 1_000), 0);
+        // a *future*-skewed heartbeat is discounted and judged by mtime
+        std::fs::write(
+            registry_path(&d, "fast"),
+            claim::claim_body("fast", claim::now_ms() + 3_600_000),
+        )
+        .unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        let live = live_workers(&d, 25);
+        assert!(!live.contains(&"fast".to_string()), "{live:?}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    fn setup_fixture() -> TrainerSetup {
+        TrainerSetup {
+            variant_name: "v0".into(),
+            init_params: vec![vec![1.5, -2.25, 0.0], vec![f32::MIN_POSITIVE]],
+            param_names: vec!["w".into(), "b".into()],
+            param_sizes: vec![3, 1],
+        }
+    }
+
+    fn batch_fixture(seed: i32) -> Batch {
+        Batch {
+            tokens: vec![seed, seed + 1, seed + 2, seed + 3],
+            mask: vec![1.0, 1.0, 0.5, 0.0],
+            labels_i: vec![0, 1],
+            labels_f: vec![0.25, -1.75],
+            batch_size: 2,
+            seq_len: 2,
+            valid: 2,
+        }
+    }
+
+    #[test]
+    fn setup_blob_roundtrips_byte_exactly() {
+        let d = tmp("setup_blob");
+        let cache = ArtifactCache::open(&d).unwrap();
+        let setup = setup_fixture();
+        let key = ArtifactCache::setup_key(Path::new("/art"), "v0");
+        assert!(cache.load_setup(key).is_none());
+        assert!(cache.store_setup(key, &setup).unwrap(), "first publish wins");
+        assert!(!cache.store_setup(key, &setup).unwrap(), "second publish is a no-op");
+        assert_eq!(cache.load_setup(key).unwrap(), setup);
+        // a different key never aliases
+        let other = ArtifactCache::setup_key(Path::new("/art"), "v1");
+        assert!(cache.load_setup(other).is_none());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn dev_blob_roundtrips_byte_exactly() {
+        let d = tmp("dev_blob");
+        let cache = ArtifactCache::open(&d).unwrap();
+        let batches = vec![batch_fixture(10), batch_fixture(90)];
+        let key = ArtifactCache::dev_key("wnli", 16, 64, 8, 3);
+        assert!(cache.load_dev(key).is_none());
+        assert!(cache.store_dev(key, &batches).unwrap());
+        let back = cache.load_dev(key).unwrap();
+        assert_eq!(back.len(), 2);
+        for (a, b) in back.iter().zip(&batches) {
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(
+                a.mask.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.mask.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(a.labels_i, b.labels_i);
+            assert_eq!(
+                a.labels_f.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.labels_f.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!((a.batch_size, a.seq_len, a.valid), (b.batch_size, b.seq_len, b.valid));
+        }
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_blobs_read_as_absent() {
+        let d = tmp("corrupt");
+        let cache = ArtifactCache::open(&d).unwrap();
+        let key = ArtifactCache::dev_key("rte", 16, 64, 8, 0);
+        cache.store_dev(key, &[batch_fixture(1)]).unwrap();
+        let path = cache.root().join(format!("dev_{key:016x}.bin"));
+        let good = std::fs::read(&path).unwrap();
+        // truncation
+        std::fs::remove_file(&path).unwrap();
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(cache.load_dev(key).is_none());
+        // single-bit payload corruption trips the digest
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 1;
+        std::fs::remove_file(&path).unwrap();
+        std::fs::write(&path, &flipped).unwrap();
+        assert!(cache.load_dev(key).is_none());
+        // a blob stored under a different key never loads for this one
+        std::fs::remove_file(&path).unwrap();
+        std::fs::write(&path, &good).unwrap();
+        let wrong = ArtifactCache::dev_key("rte", 16, 64, 8, 1);
+        std::fs::write(cache.root().join(format!("dev_{wrong:016x}.bin")), &good).unwrap();
+        assert!(cache.load_dev(wrong).is_none());
+        // garbage bytes are absent, not an error
+        std::fs::write(&path, b"not a cache blob").unwrap();
+        assert!(cache.load_dev(key).is_none());
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+
+    #[test]
+    fn concurrent_publishers_commit_exactly_one_identical_blob() {
+        let d = tmp("race");
+        let cache = ArtifactCache::open(&d).unwrap();
+        let key = ArtifactCache::dev_key("mrpc", 16, 64, 8, 7);
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(4));
+        let wins: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    let cache = cache.clone();
+                    let barrier = barrier.clone();
+                    s.spawn(move || {
+                        barrier.wait();
+                        cache.store_dev(key, &[batch_fixture(5)]).unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(wins.iter().filter(|w| **w).count() <= 1, "{wins:?}");
+        assert_eq!(cache.load_dev(key).unwrap().len(), 1);
+        // no tmp litter survives the race
+        let litter: Vec<_> = std::fs::read_dir(cache.root())
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(litter.is_empty(), "{litter:?}");
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}

@@ -147,10 +147,11 @@
 //!   `fragment.stage`, `fragment.commit`, `fragment.read` (fragment
 //!   IO), `sched.cell` (start of a claimed cell, lease held — where
 //!   kills fire), `resume.spec` (spec write), `session.evict`
-//!   (warm-cache drop before a cell), `daemon.dequeue` (the daemon's
-//!   queue→active rename), `event.tee` (the daemon's `events.jsonl`
-//!   append), and `clock` (persistent heartbeat-clock skew via
-//!   `claim::now_ms`).
+//!   (warm-cache drop before a cell), `registry.heartbeat` (the fleet
+//!   registry re-stamp), `cache.publish` (the artifact-cache blob
+//!   `hard_link` commit), `daemon.dequeue` (the daemon's queue→active
+//!   rename), `event.tee` (the daemon's `events.jsonl` append), and
+//!   `clock` (persistent heartbeat-clock skew via `claim::now_ms`).
 //! * **Schedule grammar** — `[w<slot>:]<point>@<hit>=<action>`,
 //!   `;`-separated; actions are `err:<kind>`, `kill`, `delay:<ms>`,
 //!   `skew:<±ms>`, `truncate`, `garbage`, `evict`.  `--chaos-profile`
@@ -234,8 +235,60 @@
 //!   `tests/prop_events.rs` pins.  The log is a pure **witness**: the
 //!   daemon never reads it back for decisions, so a lost tee line
 //!   (`event.tee` chaos) costs observability, never correctness.
+//!
+//! # Fleet registry + artifact cache
+//!
+//! `--artifact-cache on` turns a shared sweep directory into a **fleet
+//! mount** ([`fleet`]; ROADMAP: "Cross-machine fleet").  Two sibling
+//! directories join `cells/` — both invisible to [`merge`], which looks
+//! fragments up by exact path:
+//!
+//! ```text
+//! sweep_<name>/
+//!   sweep.json            the spec (the only coordination input)
+//!   cells/                fragments + claims (the sole sweep state)
+//!   workers/<id>.json     fleet registry: one entry per live worker
+//!   cache/<kind>_<key>.bin  shared warm-start artifact blobs
+//! ```
+//!
+//! * **Registry lifecycle** — a worker joining a sweep creates
+//!   `workers/<worker_id>.json` create-exclusively ([`fleet::register`],
+//!   the claim idiom with the same `{"heartbeat_ms", "worker"}` body);
+//!   an existing entry is taken over only when stale by the claim
+//!   layer's symmetric skew rule (min of plausible-heartbeat age and
+//!   mtime age — a heartbeat in the reader's past with a fresh mtime is
+//!   *live*).  The entry is re-stamped once per scheduler grid pass and
+//!   on every [`CellCtx::tick`], so fleet liveness is exactly as fresh
+//!   as lease liveness; [`fleet::live_workers`] lists live ids,
+//!   [`fleet::reclaim_stale`] sweeps dead ones.  Deregistration on
+//!   clean exit (or guard drop) removes the entry.  **Elastic
+//!   join/leave is free**: a worker registering after `run_dynamic`
+//!   started simply claims whatever cells remain, and a killed worker's
+//!   entry ages out like its stale lease.  The registry is pure
+//!   observability — merged reports never depend on it, and a fresh
+//!   (non-resume) `prepare` clears it.
+//! * **Cache key/commit contract** — blobs are keyed by FNV-1a over
+//!   exactly the inputs the artifact is a pure function of: trainer
+//!   init-param setups by `(manifest dir, variant)`, dev-batch sets by
+//!   `(task, seq_len, vocab, batch_size, seed)`.  A writer stages the
+//!   self-verifying blob (magic + key echo + length + payload + FNV
+//!   digest, all f32s as `to_bits` LE) to a process-unique tmp name and
+//!   publishes with `hard_link` — concurrent writers compute identical
+//!   bytes and exactly one wins (`cache.publish` fault point inside the
+//!   retry loop).  Readers treat *any* mismatch — magic, key, length,
+//!   digest, trailing bytes — as absence and recompute, so a torn or
+//!   corrupted blob costs one cold start, never a wrong report.
+//!   Warm ≡ cold byte-identity is preserved by construction: a cache
+//!   hit hands back bit-exactly what the miss path would compute.
+//!   Hit/publish counters live in `SessionStats` and surface on
+//!   **stderr only** (`session.stats.summary()`), never in fragments.
+//! * **Mount-less schedulers** — when workers cannot share a mount at
+//!   all, [`shard::affinity_assignment`] computes a static cell→shard
+//!   map co-locating same-`(variant, task)` cells, so each worker still
+//!   warm-starts across its whole assignment from its private state.
 
 pub mod claim;
+pub mod fleet;
 pub mod grid;
 pub mod merge;
 pub mod resume;
@@ -249,44 +302,62 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 
+pub use fleet::ArtifactCache;
 pub use grid::{Cell, SweepSpec};
 pub use scheduler::{
-    run_dynamic, DynamicConfig, DynamicRun, Schedule, DEFAULT_LEASE_TTL_MS,
+    run_dynamic, run_dynamic_registered, DynamicConfig, DynamicRun, Schedule,
+    DEFAULT_LEASE_TTL_MS,
 };
 pub use shard::Shard;
 
-/// Per-cell execution context a scheduler hands its runner.  Today it
-/// carries the lease heartbeat: a runner executing under a dynamic-
-/// schedule claim can [`tick`](CellCtx::tick) to keep the lease fresh
-/// from inside a long cell (the trainer loop does, every `log_every`
-/// steps), so `--lease-ttl-ms` may drop below cell wall time.  Under the
-/// static schedule (or no scheduler at all) there is no lease and `tick`
-/// is a no-op.
+/// Per-cell execution context a scheduler hands its runner.  It carries
+/// the lease heartbeat: a runner executing under a dynamic-schedule
+/// claim can [`tick`](CellCtx::tick) to keep the lease fresh from
+/// inside a long cell (the trainer loop does, every `log_every` steps),
+/// so `--lease-ttl-ms` may drop below cell wall time.  A worker
+/// registered in the fleet registry ([`fleet::register`]) additionally
+/// rides its registry heartbeat on the same ticks, so fleet liveness is
+/// exactly as fresh as lease liveness.  Under the static schedule (or
+/// no scheduler at all) there is no lease and `tick` is a no-op.
 pub struct CellCtx<'a> {
     heartbeat: Option<&'a claim::ClaimGuard>,
+    registry: Option<&'a fleet::RegistryGuard>,
 }
 
 impl<'a> CellCtx<'a> {
     /// Context for runs outside any lease (static shards, direct calls).
     pub fn none() -> CellCtx<'static> {
-        CellCtx { heartbeat: None }
+        CellCtx { heartbeat: None, registry: None }
     }
 
     /// Context for a cell run under a held claim.
     pub fn under_lease(guard: &'a claim::ClaimGuard) -> CellCtx<'a> {
-        CellCtx { heartbeat: Some(guard) }
+        CellCtx { heartbeat: Some(guard), registry: None }
+    }
+
+    /// Context for a cell run under a held claim by a fleet-registered
+    /// worker: ticks re-stamp the registry entry alongside the lease.
+    pub fn under_lease_registered(
+        guard: &'a claim::ClaimGuard,
+        registry: Option<&'a fleet::RegistryGuard>,
+    ) -> CellCtx<'a> {
+        CellCtx { heartbeat: Some(guard), registry }
     }
 
     pub fn has_heartbeat(&self) -> bool {
         self.heartbeat.is_some()
     }
 
-    /// Best-effort heartbeat refresh.  Errors are swallowed: a missed
-    /// re-stamp at worst lets the lease go stale, which duplicates one
-    /// deterministic cell — never a wrong report.
+    /// Best-effort heartbeat refresh (lease + registry).  Errors are
+    /// swallowed: a missed re-stamp at worst lets the lease go stale,
+    /// which duplicates one deterministic cell — never a wrong report
+    /// (and a stale registry entry costs fleet observability only).
     pub fn tick(&self) {
         if let Some(guard) = self.heartbeat {
             let _ = guard.refresh();
+        }
+        if let Some(reg) = self.registry {
+            let _ = reg.heartbeat();
         }
     }
 }

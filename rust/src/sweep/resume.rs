@@ -49,6 +49,20 @@ pub fn prepare(dir: &Path, spec: &SweepSpec, resume: bool) -> Result<()> {
         std::fs::remove_dir_all(&cdir)
             .with_context(|| format!("clearing sweep fragments {cdir:?}"))?;
     }
+    if !resume {
+        // A fresh run also clears the fleet registry (`workers/`): a
+        // prior run's entries describe workers of *that* run, and a
+        // stale one would otherwise advertise phantom liveness until
+        // its TTL.  The artifact cache (`cache/`) is deliberately
+        // KEPT — its blobs are keyed by content-determining inputs
+        // only, so warm-starting a fresh run from them is exactly as
+        // byte-safe as a worker warm-starting mid-run.
+        let wdir = super::fleet::workers_dir(dir);
+        if wdir.exists() {
+            std::fs::remove_dir_all(&wdir)
+                .with_context(|| format!("clearing fleet registry {wdir:?}"))?;
+        }
+    }
     std::fs::create_dir_all(&cdir)
         .with_context(|| format!("creating sweep dir {cdir:?}"))?;
     if resume {
@@ -177,6 +191,26 @@ mod tests {
             vec![true, false],
             "resume must keep the fragment set untouched"
         );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fresh_prepare_clears_the_registry_but_keeps_the_artifact_cache() {
+        use super::super::fleet;
+        let dir = tmp("fleet");
+        let spec = spec2();
+        prepare(&dir, &spec, false).unwrap();
+        let reg = fleet::register(&dir, "w-old", 60_000).unwrap();
+        let cache = fleet::ArtifactCache::open(&dir).unwrap();
+        cache.store_dev(7, &[]).unwrap();
+        std::mem::forget(reg); // simulate a killed worker leaking its entry
+        // resume keeps both (the entry is someone's liveness evidence) …
+        prepare(&dir, &spec, true).unwrap();
+        assert!(!fleet::live_workers(&dir, 60_000).is_empty());
+        // … a fresh run drops the registry and keeps the cache blobs
+        prepare(&dir, &spec, false).unwrap();
+        assert!(fleet::live_workers(&dir, 60_000).is_empty());
+        assert!(fleet::ArtifactCache::open(&dir).unwrap().load_dev(7).is_some());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

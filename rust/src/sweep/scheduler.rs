@@ -62,6 +62,7 @@ use anyhow::{Context, Result};
 use crate::util::json::Json;
 
 use super::claim::{self, ClaimAttempt};
+use super::fleet;
 use super::grid::{Cell, SweepSpec};
 use super::{merge, resume, CellCtx};
 
@@ -209,6 +210,23 @@ pub fn run_dynamic(
     cfg: &DynamicConfig,
     runner: &mut dyn FnMut(&Cell, &CellCtx<'_>) -> Result<Json>,
 ) -> Result<DynamicRun> {
+    run_dynamic_registered(dir, spec, cfg, None, runner)
+}
+
+/// [`run_dynamic`] for a fleet-registered worker: the registry entry's
+/// heartbeat is re-stamped on every grid pass and rides along on every
+/// in-cell [`CellCtx::tick`], so registry liveness tracks lease
+/// liveness exactly.  Registration is *not* an admission gate — a
+/// worker registering after the sweep started (elastic join) simply
+/// claims whatever cells remain, and `registry: None` degrades to the
+/// plain dynamic run.
+pub fn run_dynamic_registered(
+    dir: &Path,
+    spec: &SweepSpec,
+    cfg: &DynamicConfig,
+    registry: Option<&fleet::RegistryGuard>,
+    runner: &mut dyn FnMut(&Cell, &CellCtx<'_>) -> Result<Json>,
+) -> Result<DynamicRun> {
     let cdir = resume::cells_dir(dir);
     std::fs::create_dir_all(&cdir).with_context(|| format!("creating {cdir:?}"))?;
     // A cell observed complete stays complete for the rest of this run
@@ -224,6 +242,15 @@ pub fn run_dynamic(
     // worker ran, i.e. what its session currently has warm.
     let mut warm: Option<(String, String)> = None;
     loop {
+        // A registered worker proves fleet liveness once per grid pass
+        // (and per in-cell tick below).  Best-effort like every
+        // heartbeat: a missed re-stamp costs observability, never a
+        // result.  (A chaos *kill* scheduled on `registry.heartbeat`
+        // still exits a worker process outright, mid-sweep, exactly
+        // like a real death — only injected IO errors are swallowed.)
+        if let Some(reg) = registry {
+            let _ = reg.heartbeat();
+        }
         // Pass 1: refresh completion knowledge over the incomplete set.
         let mut candidates = Vec::new();
         for (i, cell) in spec.cells.iter().enumerate() {
@@ -242,7 +269,26 @@ pub fn run_dynamic(
             candidates.push(i);
         }
         if candidates.is_empty() {
-            return Ok(run);
+            // Final pre-merge pass: the memo above trusts that a cell
+            // observed complete *stays* complete, but a fragment can be
+            // corrupted after it was seen valid (a lying mount, an
+            // operator mangling `cells/`, a chaos `truncate` landing
+            // post-commit).  Re-validate every memoized completion
+            // before declaring the grid done; any regressed cell flips
+            // back to incomplete and re-runs — deterministic cells
+            // re-commit identical bytes, so healing is invisible in the
+            // merged report.
+            let mut regressed = false;
+            for (i, cell) in spec.cells.iter().enumerate() {
+                if merge::read_fragment(&cdir, spec, cell).is_none() {
+                    done[i] = false;
+                    regressed = true;
+                }
+            }
+            if !regressed {
+                return Ok(run);
+            }
+            continue;
         }
         // Pass 2: claim in affinity-preferred order; after each win the
         // warm key changes, so break back out to re-rank the remainder.
@@ -286,7 +332,7 @@ pub fn run_dynamic(
                     crate::daemon::events::cell_claimed(cell.index, &cfg.worker);
                     // On error the guard drops here, releasing the
                     // claim so other workers can retry immediately.
-                    let ctx = CellCtx::under_lease(&guard);
+                    let ctx = CellCtx::under_lease_registered(&guard, registry);
                     let result = runner(cell, &ctx).with_context(|| {
                         format!(
                             "sweep cell {} ({} on {}, rho={})",
@@ -498,6 +544,72 @@ mod tests {
         assert_eq!(run.duplicates, 1, "the raced cell must be counted");
         assert_eq!(run.ran.len(), spec.cells.len());
         assert!(run.summary().contains("1 duplicate run"), "{}", run.summary());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fragment_corrupted_after_completion_is_revalidated_and_rerun() {
+        let spec = sweep::selftest_spec();
+        let dir = tmp("corrupt_after");
+        resume::prepare(&dir, &spec, false).unwrap();
+        let cdir = resume::cells_dir(&dir);
+        let cfg = DynamicConfig::new("t", 60_000);
+        // While running the grid's LAST cell, corrupt cell 0's already-
+        // committed (and already-memoized) fragment: without the final
+        // pre-merge re-validation the worker would return with a
+        // corrupt fragment in place and the merge would fail.
+        let last = spec.cells.len() - 1;
+        let mut runs_of_zero = 0usize;
+        let run = run_dynamic(&dir, &spec, &cfg, &mut |c, _| {
+            if c.index == 0 {
+                runs_of_zero += 1;
+            }
+            if c.index == last {
+                std::fs::write(
+                    merge::fragment_path(&cdir, &spec.cells[0]),
+                    "{\"cell\": corrupted-after-complete",
+                )
+                .unwrap();
+            }
+            Ok(sweep::mock_cell(c))
+        })
+        .unwrap();
+        assert_eq!(runs_of_zero, 2, "the regressed cell must re-run");
+        assert_eq!(run.ran.len(), spec.cells.len() + 1);
+        // the healed grid merges exactly like an untouched serial run
+        let sdir = tmp("corrupt_after_serial");
+        resume::prepare(&sdir, &spec, false).unwrap();
+        sweep::run_shard(&sdir, &spec, Shard::SERIAL, &mut |c, _| {
+            Ok(sweep::mock_cell(c))
+        })
+        .unwrap();
+        assert_eq!(report(&dir, &spec), report(&sdir, &spec));
+        std::fs::remove_dir_all(&dir).unwrap();
+        std::fs::remove_dir_all(&sdir).unwrap();
+    }
+
+    #[test]
+    fn registered_worker_rides_registry_heartbeat_on_cell_ticks() {
+        let spec = sweep::selftest_spec();
+        let dir = tmp("registered");
+        resume::prepare(&dir, &spec, false).unwrap();
+        let cfg = DynamicConfig::new("t", 60_000);
+        let reg = fleet::register(&dir, &cfg.worker, 60_000).unwrap();
+        let rpath = fleet::registry_path(&dir, &cfg.worker);
+        let mut saw_live = false;
+        let run = run_dynamic_registered(&dir, &spec, &cfg, Some(&reg), &mut |c, ctx| {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            ctx.tick(); // re-stamps lease AND registry entry
+            saw_live = saw_live
+                || fleet::live_workers(&dir, 60_000).contains(&cfg.worker);
+            Ok(sweep::mock_cell(c))
+        })
+        .unwrap();
+        assert_eq!(run.ran.len(), spec.cells.len());
+        assert!(saw_live, "the running worker must be visible in the registry");
+        assert!(rpath.exists());
+        reg.deregister();
+        assert!(!rpath.exists(), "clean exit must deregister");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -11,10 +11,22 @@
 //! dynamic claim/lease scheduler (`super::scheduler`) trades a shared
 //! claim store for balanced pulls; both produce the same fragment set
 //! and therefore byte-identical merged reports.
+//!
+//! For schedulers that cannot share a mount at all — so neither the
+//! dynamic claim store nor its affinity-preferring claim order is
+//! available — [`affinity_assignment`] computes a static cell→shard map
+//! that co-locates same-[`Cell::affinity_key`] cells on one shard, so
+//! every worker still reuses its warm `Session` state (compiled
+//! executables, trainer setups, dataset caches) across its whole
+//! assignment.  Like `index % N`, it is a pure function of the grid:
+//! every host computes the identical map from `sweep.json` alone.
 
+use std::collections::BTreeMap;
 use std::fmt;
 
 use anyhow::{bail, Context, Result};
+
+use super::grid::SweepSpec;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Shard {
@@ -66,6 +78,46 @@ impl fmt::Display for Shard {
     }
 }
 
+/// Affinity-aware static cell→shard map: returns `assignment` with
+/// `assignment[cell.index]` = owning shard, for `of` shards.
+///
+/// Cells sharing an [`affinity_key`] (variant, task) are always
+/// co-located on one shard, so a mount-less static worker reuses its
+/// warm session state across its whole assignment instead of paying
+/// cold start per interleaved cell.  Groups are placed largest-first
+/// onto the currently lightest shard (ties broken by first-appearance
+/// order, then lowest shard index) — the classic LPT greedy, fully
+/// deterministic, so every host derives the identical map from
+/// `sweep.json` alone.  Like `index % N` this only decides *who runs
+/// what*: the fragment set, and therefore the merged report, is
+/// unchanged.
+///
+/// [`affinity_key`]: super::grid::Cell::affinity_key
+pub fn affinity_assignment(spec: &SweepSpec, of: usize) -> Vec<usize> {
+    let of = of.max(1);
+    // Group cell indices by affinity key, remembering each group's
+    // first appearance in canonical order for deterministic tie-breaks.
+    let mut groups: BTreeMap<(String, String), Vec<usize>> = BTreeMap::new();
+    for cell in &spec.cells {
+        let (v, t) = cell.affinity_key();
+        groups.entry((v.to_string(), t.to_string())).or_default().push(cell.index);
+    }
+    let mut ordered: Vec<Vec<usize>> = groups.into_values().collect();
+    // Largest group first; equal sizes by first cell index (canonical
+    // appearance), so the sort is a total deterministic order.
+    ordered.sort_by_key(|g| (std::cmp::Reverse(g.len()), g[0]));
+    let mut load = vec![0usize; of];
+    let mut assignment = vec![0usize; spec.cells.len()];
+    for group in ordered {
+        let shard = (0..of).min_by_key(|&s| (load[s], s)).unwrap_or(0);
+        load[shard] += group.len();
+        for i in group {
+            assignment[i] = shard;
+        }
+    }
+    assignment
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +152,55 @@ mod tests {
     #[test]
     fn serial_owns_everything() {
         assert!((0..50).all(|c| Shard::SERIAL.owns(c)));
+    }
+
+    fn affinity_spec() -> SweepSpec {
+        let mut spec =
+            SweepSpec::new("mock", crate::config::TrainConfig::default());
+        // 3 variants × 2 tasks × 3 seeds, interleaved so `index % N`
+        // would scatter every affinity group across all shards
+        for seed in 0..3u64 {
+            for v in ["A", "B", "C"] {
+                for t in ["t0", "t1"] {
+                    spec.push(v, t, 1.0, "gauss", seed, 0);
+                }
+            }
+        }
+        spec
+    }
+
+    #[test]
+    fn affinity_assignment_partitions_exactly_once_and_colocates_keys() {
+        let spec = affinity_spec();
+        for of in [1usize, 2, 3, 7] {
+            let assignment = affinity_assignment(&spec, of);
+            assert_eq!(assignment.len(), spec.cells.len());
+            // every cell is owned by exactly one in-range shard
+            assert!(assignment.iter().all(|&s| s < of), "{of} shards");
+            // same-key cells always share a shard
+            let mut owner: std::collections::HashMap<(&str, &str), usize> =
+                std::collections::HashMap::new();
+            for cell in &spec.cells {
+                let s = assignment[cell.index];
+                let prev = owner.entry(cell.affinity_key()).or_insert(s);
+                assert_eq!(*prev, s, "{:?} split across shards", cell.affinity_key());
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_assignment_balances_group_counts() {
+        let spec = affinity_spec(); // 6 groups of 3 cells
+        let assignment = affinity_assignment(&spec, 3);
+        let mut load = [0usize; 3];
+        for &s in &assignment {
+            load[s] += 1;
+        }
+        assert_eq!(load, [6, 6, 6], "6 equal groups over 3 shards must balance");
+        // degenerate shard counts: everything on shard 0
+        assert!(affinity_assignment(&spec, 1).iter().all(|&s| s == 0));
+        assert!(affinity_assignment(&spec, 0).iter().all(|&s| s == 0));
+        // determinism: recomputation is identical (every host agrees)
+        assert_eq!(assignment, affinity_assignment(&spec, 3));
     }
 }

@@ -26,7 +26,7 @@ use rmmlinear::config::TrainConfig;
 use rmmlinear::sweep::{
     self,
     claim::{self, ClaimAttempt},
-    merge, resume, DynamicConfig, Shard, SweepSpec,
+    fleet, merge, resume, DynamicConfig, Shard, SweepSpec,
 };
 use rmmlinear::util::json::Json;
 use rmmlinear::util::prop::prop_check;
@@ -166,7 +166,10 @@ fn concurrent_reclaim_of_stale_lease_admits_a_winner_and_keeps_the_cell_claimed(
     // fragments).  The hard properties merge correctness rests on, and
     // which this test pins: the cell is never *lost* (>= 1 winner) and
     // it ends the race claimed by a live thief, with the dead worker's
-    // lease gone.
+    // lease gone.  Note the sleep: an ancient *embedded* heartbeat alone
+    // no longer makes a claim stale (it could be a slow writer's clock —
+    // the symmetric skew rule takes min(heartbeat age, mtime age)), so
+    // the file's mtime must genuinely age past the TTL first.
     let dir = tmp_dir("stale_race");
     std::fs::create_dir_all(&dir).unwrap();
     std::fs::write(
@@ -174,6 +177,7 @@ fn concurrent_reclaim_of_stale_lease_admits_a_winner_and_keeps_the_cell_claimed(
         r#"{"heartbeat_ms": 1, "worker": "dead-worker"}"#,
     )
     .unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(80));
     let wins = AtomicUsize::new(0);
     let barrier = Barrier::new(6);
     std::thread::scope(|s| {
@@ -183,7 +187,7 @@ fn concurrent_reclaim_of_stale_lease_admits_a_winner_and_keeps_the_cell_claimed(
                 let w = claim::worker_id(&format!("thief{t}"));
                 barrier.wait();
                 if let ClaimAttempt::Won(g) =
-                    claim::try_claim(dir, 5, &w, 1_000).unwrap()
+                    claim::try_claim(dir, 5, &w, 50).unwrap()
                 {
                     wins.fetch_add(1, Ordering::SeqCst);
                     std::mem::forget(g); // hold the lease through the race
@@ -415,6 +419,123 @@ fn mixed_static_and_dynamic_workers_share_one_fragment_store() {
     let expect: Vec<usize> = (0..spec.cells.len()).filter(|i| i % 2 == 1).collect();
     assert_eq!(cover(&ran), expect, "dynamic workers must run exactly the leftovers");
     assert_eq!(report(&dir, &spec), serial);
+    std::fs::remove_dir_all(&serial_dir).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Fleet: registered workers, mid-lease kill, elastic join
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_registered_workers_heal_a_kill_and_match_serial_bytes() {
+    let spec = mock_spec(4, 3, 1); // 12 cells
+    let serial_dir = tmp_dir("fleet_ref");
+    let serial = run_serial(&serial_dir, &spec);
+
+    for workers in [1usize, 2, 3, 7] {
+        let dir = tmp_dir(&format!("fleet_{workers}"));
+        resume::prepare(&dir, &spec, false).unwrap();
+        let cdir = resume::cells_dir(&dir);
+        // A registered worker died mid-lease: its registry entry leaks
+        // (no deregister) and it abandons a claim on cell 2 whose mtime
+        // will age past the survivors' TTL.
+        let doomed = fleet::register(&dir, "doomed-worker", 60_000).unwrap();
+        std::mem::forget(doomed);
+        std::fs::write(
+            claim::claim_path(&cdir, 2),
+            r#"{"heartbeat_ms": 1, "worker": "doomed-worker"}"#,
+        )
+        .unwrap();
+
+        let guards: Vec<fleet::RegistryGuard> = (0..workers)
+            .map(|w| {
+                fleet::register(&dir, &format!("fleet-w{w}-of{workers}"), 60_000).unwrap()
+            })
+            .collect();
+        let start = Barrier::new(workers);
+        std::thread::scope(|s| {
+            for (w, reg) in guards.iter().enumerate() {
+                let (start, spec, dir) = (&start, &spec, &dir);
+                s.spawn(move || {
+                    let cfg = DynamicConfig::new(&format!("fw{w}"), 400);
+                    start.wait();
+                    sweep::run_dynamic_registered(dir, spec, &cfg, Some(reg), &mut |c, ctx| {
+                        ctx.tick(); // registry heartbeat rides the lease tick
+                        Ok(sweep::mock_cell(c))
+                    })
+                    .expect("fleet worker failed");
+                });
+            }
+        });
+        // Survivors are live; the kill victim's entry is still visible
+        // at a generous TTL (its liveness evidence hasn't expired yet).
+        let live = fleet::live_workers(&dir, 60_000);
+        for w in 0..workers {
+            let id = format!("fleet-w{w}-of{workers}");
+            assert!(live.contains(&id), "{id} missing from {live:?}");
+        }
+        assert!(live.contains(&"doomed-worker".to_string()));
+        assert_eq!(
+            report(&dir, &spec),
+            serial,
+            "{workers}-worker fleet run differs from serial"
+        );
+        for g in guards {
+            g.deregister();
+        }
+        // Once the victim's heartbeat ages past a short TTL it drops out
+        // of the live set and is reclaimable — exactly the claim rule.
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        assert_eq!(fleet::live_workers(&dir, 25), Vec::<String>::new());
+        assert_eq!(fleet::reclaim_stale(&dir, 25), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    std::fs::remove_dir_all(&serial_dir).unwrap();
+}
+
+#[test]
+fn late_joining_registered_worker_picks_up_unclaimed_cells() {
+    let spec = mock_spec(4, 2, 1); // 8 cells
+    let serial_dir = tmp_dir("elastic_ref");
+    let serial = run_serial(&serial_dir, &spec);
+
+    let dir = tmp_dir("elastic");
+    resume::prepare(&dir, &spec, false).unwrap();
+    std::thread::scope(|s| {
+        let (spec, dir) = (&spec, &dir);
+        let early = s.spawn(move || {
+            let cfg = DynamicConfig::new("early", 60_000);
+            sweep::run_dynamic(dir, spec, &cfg, &mut |c, _| {
+                std::thread::sleep(std::time::Duration::from_millis(40));
+                Ok(sweep::mock_cell(c))
+            })
+            .expect("early worker failed")
+            .ran
+        });
+        // The sweep is well underway when the elastic worker registers:
+        // joining is nothing more than register + run_dynamic_registered
+        // against the same mount — it claims whatever cells remain.
+        std::thread::sleep(std::time::Duration::from_millis(60));
+        let reg = fleet::register(&dir, "late-joiner", 60_000).unwrap();
+        assert!(fleet::live_workers(&dir, 60_000)
+            .contains(&"late-joiner".to_string()));
+        let cfg = DynamicConfig::new("late", 60_000);
+        let late = sweep::run_dynamic_registered(dir, spec, &cfg, Some(&reg), &mut |c, _| {
+            Ok(sweep::mock_cell(c))
+        })
+        .expect("late worker failed")
+        .ran;
+        assert!(!late.is_empty(), "late joiner claimed no cells");
+        reg.deregister();
+        assert!(!early.join().unwrap().is_empty(), "early worker claimed no cells");
+    });
+    assert_eq!(report(&dir, &spec), serial, "elastic-join report differs from serial");
+    assert_eq!(
+        fleet::live_workers(&dir, 60_000),
+        Vec::<String>::new(),
+        "clean exits must leave an empty registry"
+    );
     std::fs::remove_dir_all(&serial_dir).unwrap();
     std::fs::remove_dir_all(&dir).unwrap();
 }

@@ -339,6 +339,110 @@ fn warm_trainer_setup_is_byte_identical_to_cold_and_leak_free() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+// ---------------------------------------------------------------------------
+// Fleet half: the shared on-disk artifact cache warm-starts a *fresh*
+// session (a new worker process joining mid-sweep) byte-identically
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_artifact_cache_warm_starts_a_fresh_session_byte_identically() {
+    let dir = tmp_dir("artifact_fleet");
+    std::fs::create_dir_all(&dir).unwrap();
+    let manifest = synth_manifest(&dir);
+    let variant = manifest.variant("v_test").unwrap();
+    let cfg = TrainConfig::default();
+
+    // cold reference: no cache of any kind
+    let cold = Trainer::new(&manifest, variant, Task::Cola, cfg.clone()).unwrap();
+
+    // session A (first worker on the mount) publishes the setup blob
+    let mut a = Session::new(Engine::cpu().unwrap(), synth_manifest(&dir), true);
+    a.set_artifact_cache(Some(sweep::fleet::ArtifactCache::open(&dir).unwrap()));
+    let setup_a = a.trainer_setup("v_test").unwrap();
+    assert_eq!(a.stats.art_setup_hits, 0, "empty cache cannot hit");
+    assert_eq!(a.stats.art_publishes, 1, "first load must spill the blob");
+
+    // session B — a brand-new process elastically joining the fleet —
+    // warm-starts from the blob instead of re-reading init params cold
+    let mut b = Session::new(Engine::cpu().unwrap(), synth_manifest(&dir), true);
+    b.set_artifact_cache(Some(sweep::fleet::ArtifactCache::open(&dir).unwrap()));
+    let setup_b = b.trainer_setup("v_test").unwrap();
+    assert_eq!(
+        b.stats.art_setup_hits, 1,
+        "fresh session must warm-start from the shared blob: {:?}",
+        b.stats
+    );
+    assert_eq!(b.stats.art_publishes, 0, "warm start must not republish");
+    assert_eq!(*setup_a, *setup_b, "spill/load must round-trip the setup exactly");
+
+    // and the warm-started trainer equals the cold one, byte for byte
+    let (_engine, m) = b.engine_manifest().unwrap();
+    let v = m.variant("v_test").unwrap();
+    let warm = Trainer::from_setup(m, v, &setup_b, Task::Cola, cfg.clone()).unwrap();
+    assert_eq!(warm.params, cold.params);
+    assert_eq!(warm.param_names, cold.param_names);
+    assert_eq!(warm.step_seed(), cold.step_seed());
+
+    // the in-memory layer stacks on top: B's second call hits RAM, and
+    // the disk counter does not move again
+    let setup_b2 = b.trainer_setup("v_test").unwrap();
+    assert!(Arc::ptr_eq(&setup_b, &setup_b2));
+    assert_eq!(b.stats.setup_hits, 1);
+    assert_eq!(b.stats.art_setup_hits, 1);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn fleet_cached_dev_batches_leave_the_merged_report_untouched() {
+    // Two consecutive sweeps in the same dir: pass 0 spills dev-batch
+    // blobs into `cache/`, pass 1 (fresh session, fresh `prepare` — which
+    // keeps `cache/`) warm-starts from them.  Both merged reports must be
+    // byte-identical to the cold serial reference, and the counters must
+    // show the cache actually carried the traffic — in stderr stats only,
+    // never in a fragment.
+    let spec = sweep::selftest_data_spec();
+    let serial_dir = tmp_dir("fleet_ref");
+    let serial = run_serial_cold(&serial_dir, &spec);
+
+    let dir = tmp_dir("fleet_cache");
+    for pass in 0..2u32 {
+        resume::prepare(&dir, &spec, false).unwrap();
+        let mut session = Session::data_only(true);
+        session
+            .set_artifact_cache(Some(sweep::fleet::ArtifactCache::open(&dir).unwrap()));
+        sweep::run_shard(&dir, &spec, Shard::SERIAL, &mut |c, ctx| {
+            run_cell(&mut session, &spec, c, ctx)
+        })
+        .unwrap();
+        if pass == 0 {
+            assert!(
+                session.stats.art_publishes > 0,
+                "first pass must spill dev blobs: {:?}",
+                session.stats
+            );
+            assert_eq!(session.stats.art_dev_hits, 0, "nothing to hit yet");
+        } else {
+            assert!(
+                session.stats.art_dev_hits > 0,
+                "second pass must warm-start from the shared blobs: {:?}",
+                session.stats
+            );
+            assert_eq!(
+                session.stats.art_publishes, 0,
+                "a fully warm pass republishes nothing"
+            );
+        }
+        assert_eq!(
+            report(&dir, &spec),
+            serial,
+            "pass {pass} with the artifact cache differs from cold serial"
+        );
+    }
+    std::fs::remove_dir_all(&serial_dir).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 #[test]
 fn task_mismatch_is_still_rejected_through_the_warm_path() {
     let dir = tmp_dir("mismatch");

@@ -117,4 +117,20 @@ target/release/repro sweep-daemon --queue "$Q/queue" --drain --lease-ttl-ms 1000
 cmp "$Q/ref.json" "$Q/queue/reports/ci__crash.json"
 rm -rf "$Q"
 
+# Fleet gate: the synth-medium grid over 3 dynamic worker processes in
+# fleet mode (--artifact-cache on): every worker registers in the
+# workers/ registry under the sweep dir and shares the on-disk blob
+# cache, while the seeded crash profile kills one registered worker
+# mid-lease.  Survivors reclaim the orphaned cell (the dead worker's
+# registry entry ages out like its stale claim) and the merged bytes
+# must equal the selftest's fault-free COLD serial reference — the
+# registry, the cache/ blobs, and the killed worker are all invisible
+# to the report; cache hit/publish counters surface only in worker
+# stderr (prop_sched.rs / prop_session.rs are the fine-grained gates).
+echo "== sweep fleet (synth-medium, 3 registered workers, kill + shared cache) =="
+for T in 1 4; do
+  RMM_THREADS=$T target/release/repro sweep-selftest --shards 3 --schedule dynamic \
+    --grid synth-medium --chaos-seed 11 --chaos-profile crash --artifact-cache on
+done
+
 echo "ci: all gates passed"
