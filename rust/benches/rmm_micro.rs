@@ -8,16 +8,19 @@
 //! the packed backend clears the scalar reference by ≥4× at 512³.
 //!
 //! `--json` additionally writes `reports/BENCH_kernels.json` (GFLOP/s per
-//! kernel × shape × backend, the 512³ speedup, the compute pool's task
-//! grain / steal counters, the batched-vs-column SORS comparison, and the
-//! closed-form variance-at-ρ entry per estimator configuration) so later
-//! PRs have a perf trajectory to diff against.
+//! kernel × shape × backend — including one forced row per supported SIMD
+//! dispatch level — the 512³ speedup, the active dispatch level + tuned
+//! cache blocking, the compute pool's task grain / steal counters, the
+//! batched-vs-column SORS comparison, and the closed-form variance-at-ρ
+//! entry per estimator configuration) so later PRs have a perf trajectory
+//! to diff against; `baseline_ref` names the committed report
+//! `scripts/bench_diff.py` diffs a fresh run against.
 
 use rmmlinear::bench_harness::runner::num_or_null;
 use rmmlinear::data::{AnyBatcher, Batcher, Split, Task, TaskGen, Tokenizer};
 use rmmlinear::rmm::{self, fft, sketch, SketchKind};
 use rmmlinear::rng::philox::PhiloxStream;
-use rmmlinear::tensor::kernels::{self, packed, Backend, PACKED, SCALAR};
+use rmmlinear::tensor::kernels::{self, dispatch, packed, tune, Backend, PACKED, SCALAR};
 use rmmlinear::tensor::{matmul_at, pool, Tensor};
 use rmmlinear::util::bench::{black_box, Bencher};
 use rmmlinear::util::json::Json;
@@ -30,6 +33,9 @@ fn randt(rows: usize, cols: usize, seed: u64) -> Tensor {
 struct KernelRow {
     kernel: &'static str,
     backend: &'static str,
+    /// Dispatch level the row ran at: a forced level name, or "auto"
+    /// (whatever `active_level()` resolved when the bench started).
+    simd: &'static str,
     m: usize,
     k: usize,
     n: usize,
@@ -42,6 +48,7 @@ impl KernelRow {
         Json::obj(vec![
             ("kernel", Json::str(self.kernel)),
             ("backend", Json::str(self.backend)),
+            ("simd", Json::str(self.simd)),
             ("m", Json::num(self.m as f64)),
             ("k", Json::num(self.k as f64)),
             ("n", Json::num(self.n as f64)),
@@ -65,6 +72,7 @@ fn bench_row(
     KernelRow {
         kernel,
         backend,
+        simd: "auto",
         m,
         k,
         n,
@@ -132,6 +140,27 @@ fn main() {
             }));
         }
     }
+
+    // ---- forced SIMD dispatch rows: GFLOP/s per microkernel ISA ----
+    // The packed driver fetches its microkernel per GEMM call, so
+    // overriding the dispatch level between timings measures every ISA
+    // this CPU supports on the same tensors (outputs are bit-identical
+    // by the dispatch contract — only throughput moves).  "auto" rows
+    // elsewhere ran whatever `active_level()` resolved at startup.
+    for level in dispatch::supported_levels() {
+        dispatch::set_simd_override(Some(level)).expect("level came from supported_levels");
+        for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 512, 512)] {
+            let a = randt(m, k, 11);
+            let bm = randt(k, n, 12);
+            let label = format!("gemm/packed+{}/{m}x{k}x{n}", level.name());
+            let mut row = bench_row(&mut b, "matmul", "packed", &label, (m, k, n), || {
+                black_box(PACKED.matmul(&a, &bm));
+            });
+            row.simd = level.name();
+            krows.push(row);
+        }
+    }
+    dispatch::set_simd_override(None).expect("clearing the override is infallible");
 
     // transpose variants at one representative shape
     {
@@ -379,12 +408,59 @@ fn main() {
         pool_512.steals,
     );
 
+    // ---- dispatch + blocking observability (stderr, like exe-cache) ----
+    let level = dispatch::active_level();
+    let blk = tune::blocking();
+    eprintln!(
+        "simd dispatch: active {} (probe {}, supported: {}); blocking mc={} kc={} nc={} ({})",
+        level.name(),
+        dispatch::probe().name(),
+        dispatch::supported_levels()
+            .iter()
+            .map(|l| l.name())
+            .collect::<Vec<_>>()
+            .join(","),
+        blk.mc,
+        blk.kc,
+        blk.nc,
+        if tune::blocking_override().is_some() { "tuned" } else { "default" },
+    );
+
     b.write_report("reports/bench_rmm_micro.json");
     if json_mode {
         let report = Json::obj(vec![
             ("experiment", Json::str("kernels")),
+            // The committed copy of this report a fresh run should be
+            // diffed against (scripts/bench_diff.py resolves it via
+            // `git show HEAD:<baseline_ref>`).
+            ("baseline_ref", Json::str("reports/BENCH_kernels.json")),
             ("threads", Json::num(nt as f64)),
             ("default_backend", Json::str(kernels::active().name())),
+            (
+                "simd",
+                Json::obj(vec![
+                    ("level", Json::str(level.name())),
+                    ("probe", Json::str(dispatch::probe().name())),
+                    (
+                        "supported",
+                        Json::Arr(
+                            dispatch::supported_levels()
+                                .iter()
+                                .map(|l| Json::str(l.name()))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "blocking",
+                Json::obj(vec![
+                    ("mc", Json::num(blk.mc as f64)),
+                    ("kc", Json::num(blk.kc as f64)),
+                    ("nc", Json::num(blk.nc as f64)),
+                    ("tuned", Json::Bool(tune::blocking_override().is_some())),
+                ]),
+            ),
             // num_or_null: the JSON codec rejects NaN, and either speedup
             // can be NaN if a timing came back degenerate
             ("speedup_512", num_or_null(speedup_512)),

@@ -356,6 +356,22 @@ pub fn run_finetune(
     let (host_exact_ms, host_rmm_ms) = host_grad_baseline(variant);
     let engine_stats_after = engine.stats;
     let pool_delta = pool::stats().delta_since(pool_before);
+    // Machine-shaped knobs (selected microkernel ISA, tuned cache
+    // blocking) go to stderr like the exe-cache counters: fragments must
+    // stay a pure function of the cell, and both knobs are bit-invisible
+    // in results by the dispatch/blocking contracts.
+    {
+        use crate::tensor::kernels::{dispatch, tune};
+        let blk = tune::blocking();
+        eprintln!(
+            "  kernels: simd {} / blocking mc={} kc={} nc={} ({})",
+            dispatch::active_level().name(),
+            blk.mc,
+            blk.kc,
+            blk.nc,
+            if tune::blocking_override().is_some() { "tuned" } else { "default" },
+        );
+    }
     Ok(RunResult {
         variant: variant_name.to_string(),
         task: task.name().to_string(),

@@ -180,6 +180,32 @@ impl DaemonConfig {
     }
 }
 
+/// Kernel-layer knobs (see the "SIMD dispatch + autotune knobs" section
+/// of the `tensor::kernels` module doc).  `None` fields express no
+/// preference: `RMM_SIMD` / the CPU probe pick the dispatch level and
+/// the shipped blocking defaults apply.  Neither knob can change
+/// results — dispatch levels are bit-identical by the no-FMA contract
+/// and blocking only regroups the ascending-k accumulation — they are
+/// pure speed knobs, which is what makes persisting a machine-tuned
+/// winner compatible with byte-reproducible sweeps.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct KernelsConfig {
+    /// Forced SIMD dispatch level: "scalar" | "portable" | "avx2" |
+    /// "avx512" | "neon" (strictly validated; applying a level this CPU
+    /// cannot run is an error, not a fallback).
+    pub simd: Option<String>,
+    /// Autotuned cache blocking `(mc, kc, nc)` — the `kernels.tuned`
+    /// section `tune-kernels --config` persists.  Consumers re-apply it
+    /// without re-timing; `tune-kernels --retune` refreshes it.
+    pub tuned: Option<(usize, usize, usize)>,
+}
+
+impl KernelsConfig {
+    pub fn is_unset(&self) -> bool {
+        self.simd.is_none() && self.tuned.is_none()
+    }
+}
+
 /// RMM estimator knobs (see `rmm::controller`).  `None` fields express no
 /// preference: the CLI flags / grid axes then decide per run.
 #[derive(Debug, Clone, PartialEq, Default)]
@@ -213,6 +239,8 @@ pub struct ExperimentConfig {
     pub backend: Option<String>,
     /// Compute-pool thread-count / task-grain overrides.
     pub pool: PoolConfig,
+    /// Kernel SIMD-dispatch / tuned-blocking overrides.
+    pub kernels: KernelsConfig,
     /// Sweep-orchestrator defaults (shard count, resume).
     pub sweep: SweepConfig,
     /// Sweep-daemon defaults (worker count, queue cap, poll interval).
@@ -231,6 +259,7 @@ impl Default for ExperimentConfig {
             out_dir: "runs".to_string(),
             backend: None,
             pool: PoolConfig::default(),
+            kernels: KernelsConfig::default(),
             sweep: SweepConfig::default(),
             daemon: DaemonConfig::default(),
             rmm: RmmConfig::default(),
@@ -251,6 +280,7 @@ impl ExperimentConfig {
                 "out_dir" => cfg.out_dir = req_str(v, k)?,
                 "backend" => cfg.backend = Some(req_str(v, k)?),
                 "pool" => cfg.pool = parse_pool(v)?,
+                "kernels" => cfg.kernels = parse_kernels(v)?,
                 "sweep" => cfg.sweep = parse_sweep(v)?,
                 "daemon" => cfg.daemon = parse_daemon(v)?,
                 "rmm" => cfg.rmm = parse_rmm(v)?,
@@ -292,6 +322,25 @@ impl ExperimentConfig {
             }
             if let Json::Obj(map) = &mut j {
                 map.insert("pool".to_string(), Json::obj(p));
+            }
+        }
+        if !self.kernels.is_unset() {
+            let mut kv = Vec::new();
+            if let Some(s) = &self.kernels.simd {
+                kv.push(("simd", Json::str(s.clone())));
+            }
+            if let Some((mc, kc, nc)) = self.kernels.tuned {
+                kv.push((
+                    "tuned",
+                    Json::obj(vec![
+                        ("mc", Json::num(mc as f64)),
+                        ("kc", Json::num(kc as f64)),
+                        ("nc", Json::num(nc as f64)),
+                    ]),
+                ));
+            }
+            if let Json::Obj(map) = &mut j {
+                map.insert("kernels".to_string(), Json::obj(kv));
             }
         }
         if !self.sweep.is_unset() {
@@ -383,6 +432,23 @@ impl ExperimentConfig {
         !self.pool.is_unset()
     }
 
+    /// Install this config's kernel overrides (forced SIMD level, tuned
+    /// blocking) as process-global settings.  Errors if the level cannot
+    /// run on this CPU — a config tuned on another machine must fail
+    /// loudly, not silently fall back.  Returns whether anything was
+    /// applied.
+    pub fn apply_kernels(&self) -> Result<bool> {
+        use crate::tensor::kernels::{dispatch, tune};
+        if let Some(s) = &self.kernels.simd {
+            let l = dispatch::SimdLevel::parse_or_err(s)?;
+            dispatch::set_simd_override(Some(l))?;
+        }
+        if let Some((mc, kc, nc)) = self.kernels.tuned {
+            tune::set_blocking_override(Some(tune::Blocking { mc, kc, nc }))?;
+        }
+        Ok(!self.kernels.is_unset())
+    }
+
     pub fn validate(&self) -> Result<()> {
         if crate::data::Task::parse(&self.task).is_none() {
             bail!("unknown task '{}'", self.task);
@@ -397,6 +463,15 @@ impl ExperimentConfig {
         }
         if self.pool.grain_rows == Some(0) {
             bail!("pool.grain_rows must be >= 1");
+        }
+        if let Some(s) = &self.kernels.simd {
+            // Name validity only — whether this CPU can run the level is
+            // checked at apply time, so a tuned config stays loadable
+            // (e.g. for inspection) on any machine.
+            crate::tensor::kernels::dispatch::SimdLevel::parse_or_err(s)?;
+        }
+        if let Some((mc, kc, nc)) = self.kernels.tuned {
+            crate::tensor::kernels::tune::Blocking { mc, kc, nc }.validate()?;
         }
         if self.sweep.shards == Some(0) {
             bail!("sweep.shards must be >= 1");
@@ -475,6 +550,34 @@ fn parse_pool(j: &Json) -> Result<PoolConfig> {
         }
     }
     Ok(p)
+}
+
+fn parse_kernels(j: &Json) -> Result<KernelsConfig> {
+    let mut kcfg = KernelsConfig::default();
+    let obj = j.as_obj().context("'kernels' must be an object")?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "simd" => kcfg.simd = Some(req_str(v, k)?),
+            "tuned" => {
+                let t = v.as_obj().context("'kernels.tuned' must be an object")?;
+                let (mut mc, mut kc, mut nc) = (None, None, None);
+                for (tk, tv) in t {
+                    match tk.as_str() {
+                        "mc" => mc = Some(num(tv, tk)? as usize),
+                        "kc" => kc = Some(num(tv, tk)? as usize),
+                        "nc" => nc = Some(num(tv, tk)? as usize),
+                        other => bail!("unknown kernels.tuned key '{other}'"),
+                    }
+                }
+                match (mc, kc, nc) {
+                    (Some(mc), Some(kc), Some(nc)) => kcfg.tuned = Some((mc, kc, nc)),
+                    _ => bail!("kernels.tuned needs all of mc, kc, nc"),
+                }
+            }
+            other => bail!("unknown kernels key '{other}'"),
+        }
+    }
+    Ok(kcfg)
 }
 
 fn parse_sweep(j: &Json) -> Result<SweepConfig> {
@@ -660,6 +763,14 @@ mod tests {
             r#"{"daemon": {"poll_ms": 0}}"#,
             r#"{"daemon": {"bogus": 1}}"#,
             r#"{"daemon": {"workers": "many"}}"#,
+            r#"{"kernels": {"bogus": 1}}"#,
+            r#"{"kernels": {"simd": "sse9"}}"#,
+            r#"{"kernels": {"simd": 2}}"#,
+            r#"{"kernels": {"tuned": {"mc": 128}}}"#,
+            r#"{"kernels": {"tuned": {"mc": 129, "kc": 256, "nc": 1024}}}"#,
+            r#"{"kernels": {"tuned": {"mc": 128, "kc": 0, "nc": 1024}}}"#,
+            r#"{"kernels": {"tuned": {"mc": 128, "kc": 256, "nc": 12}}}"#,
+            r#"{"kernels": {"tuned": {"mc": 128, "kc": 256, "nc": 1024, "oc": 1}}}"#,
             r#"{"rmm": {"bogus": 1}}"#,
             r#"{"rmm": {"mem_budget": 0}}"#,
             r#"{"rmm": {"mem_budget": -0.5}}"#,
@@ -689,6 +800,45 @@ mod tests {
         let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert!(cfg.pool.is_unset());
         assert!(!cfg.apply_pool());
+    }
+
+    #[test]
+    fn kernels_section_parses_roundtrips_and_applies() {
+        use crate::tensor::kernels::{dispatch, tune};
+        let _g = crate::tensor::pool::knob_test_lock();
+        let j = Json::parse(
+            r#"{"kernels": {"simd": "portable",
+                            "tuned": {"mc": 64, "kc": 128, "nc": 512}}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.kernels.simd.as_deref(), Some("portable"));
+        assert_eq!(cfg.kernels.tuned, Some((64, 128, 512)));
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+        // apply installs both process-globals ("portable" runs anywhere)
+        assert!(cfg.apply_kernels().unwrap());
+        assert_eq!(dispatch::active_level(), dispatch::SimdLevel::Portable);
+        assert_eq!(
+            tune::blocking(),
+            tune::Blocking { mc: 64, kc: 128, nc: 512 }
+        );
+        dispatch::set_simd_override(None).unwrap();
+        tune::set_blocking_override(None).unwrap();
+
+        // a level this CPU can't run: valid config, failing apply
+        if let Some(&bad) = dispatch::SimdLevel::ALL.iter().find(|l| !l.supported()) {
+            let j = Json::parse(&format!(r#"{{"kernels": {{"simd": "{}"}}}}"#, bad.name()))
+                .unwrap();
+            let cfg = ExperimentConfig::from_json(&j).unwrap();
+            assert!(cfg.apply_kernels().is_err());
+        }
+
+        // absent section -> no preference, nothing applied, json omits it
+        let cfg = ExperimentConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(cfg.kernels.is_unset());
+        assert!(!cfg.apply_kernels().unwrap());
+        assert!(cfg.to_json().get("kernels").is_null());
     }
 
     #[test]

@@ -345,7 +345,9 @@ fn run_sweep(args: &Args, spec: &SweepSpec, name: &str) -> Result<Vec<Json>> {
     } else {
         // pass the environment-shaping options through to the workers
         let mut extra = Vec::new();
-        for key in ["artifacts", "backend", "threads", "pool-grain", "config", "reports"] {
+        for key in
+            ["artifacts", "backend", "threads", "pool-grain", "simd", "config", "reports"]
+        {
             if let Some(v) = args.get(key) {
                 extra.push(format!("--{key}"));
                 extra.push(v.to_string());
@@ -386,6 +388,7 @@ fn run(argv: &[String]) -> Result<()> {
             "prefetch",
             "drain",
             "replay-verify",
+            "retune",
         ],
     );
     use rmmlinear::tensor::kernels;
@@ -398,6 +401,7 @@ fn run(argv: &[String]) -> Result<()> {
         let cfg = rmmlinear::config::ExperimentConfig::load(Path::new(path))?;
         backend_chosen = cfg.apply_backend(); // false if no 'backend' key
         cfg.apply_pool(); // no-op if no 'pool' section
+        cfg.apply_kernels()?; // no-op if no 'kernels' section
     }
     if let Some(bk) = args.get("backend") {
         let kind = kernels::BackendKind::parse(bk)
@@ -424,6 +428,18 @@ fn run(argv: &[String]) -> Result<()> {
             .with_context(|| format!("--pool-grain must be a positive integer, got '{g}'"))?;
         pool::set_grain_override(n);
     }
+    // SIMD precedence: --simd flag > config `kernels.simd` (applied
+    // above) > RMM_SIMD env > CPU probe.  The env var is validated up
+    // front even when a higher layer wins, so a typo'd RMM_SIMD fails
+    // here as a normal error instead of panicking from the first kernel
+    // call (or silently losing to the probe).
+    kernels::dispatch::check_env()?;
+    if let Some(s) = args.get("simd") {
+        let level = kernels::dispatch::SimdLevel::parse(s).with_context(|| {
+            format!("--simd must be one of scalar|portable|avx2|avx512|neon, got '{s}'")
+        })?;
+        kernels::dispatch::set_simd_override(Some(level))?;
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
@@ -443,6 +459,8 @@ fn run(argv: &[String]) -> Result<()> {
         "sweep-daemon" => cmd_sweep_daemon(&args),
         "inspect-artifacts" => cmd_inspect(&args),
         "memory-model" => cmd_memory_model(&args),
+        "tune-kernels" => cmd_tune_kernels(&args),
+        "kernel-digest" => cmd_kernel_digest(&args),
         "help" | _ => {
             print!("{}", HELP);
             Ok(())
@@ -528,6 +546,13 @@ COMMANDS
   bench-fig6        relative throughput vs rho (Fig 6)
   inspect-artifacts dump the manifest (variants, entries, arg counts)
   memory-model      analytic memory model [--rho F] [--batch N] [--roberta]
+  tune-kernels      time the packed GEMM over the cache-blocking candidate
+                    grid and print GFLOP/s per (MC,KC,NC); with --config
+                    FILE the winner is persisted into the file's
+                    kernels.tuned section.  A config that already carries
+                    kernels.tuned is applied without re-timing (sweeps
+                    never re-probe); --retune forces a fresh probe
+                    [--reps N (default 3)] [--simd LEVEL]
 
 COMMON OPTIONS
   --artifacts DIR   artifact directory (default: artifacts)
@@ -542,6 +567,12 @@ COMMON OPTIONS
   --pool-grain N    rows per pool task for row-partitioned kernels
                     (overrides --config; env: RMM_POOL_GRAIN; load
                     balance only, never affects results)
+  --simd LEVEL      force the GEMM microkernel dispatch level: scalar |
+                    portable | avx2 | avx512 | neon (default: widest
+                    level the CPU supports; config: kernels.simd; env:
+                    RMM_SIMD — malformed or unsupported values are
+                    rejected, never silently defaulted; results are
+                    bit-identical at every level)
   --shards N        distribute a sweep's grid across N self-spawned worker
                     processes (default 1 = inline; config: sweep.shards;
                     merged reports are cell-order independent)
@@ -1203,6 +1234,107 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// Time the packed GEMM over the blocking candidate grid and persist the
+/// winner into `--config`'s `kernels.tuned` section.  A config already
+/// carrying a tuned blocking is *applied*, never re-timed — sweeps can
+/// invoke this unconditionally and pay the probe cost exactly once per
+/// machine; `--retune` forces a fresh probe.
+fn cmd_tune_kernels(args: &Args) -> Result<()> {
+    use rmmlinear::tensor::kernels::{dispatch, tune};
+    let path = args.get("config").map(PathBuf::from);
+    if let (Some(p), false) = (&path, args.has_flag("retune")) {
+        let cfg = rmmlinear::config::ExperimentConfig::load(p)?;
+        if let Some((mc, kc, nc)) = cfg.kernels.tuned {
+            cfg.apply_kernels()?;
+            println!(
+                "tune-kernels: {} already has kernels.tuned (mc={mc} kc={kc} nc={nc}); \
+                 applied without re-timing (--retune forces a fresh probe)",
+                p.display()
+            );
+            return Ok(());
+        }
+    }
+    let reps = args.get_usize("reps", 3);
+    eprintln!(
+        "tune-kernels: timing {} blockings (simd={}, best of {reps} reps)",
+        tune::candidates().len(),
+        dispatch::active_level().name()
+    );
+    let (best, rows) = tune::autotune(reps);
+    for (b, gf) in &rows {
+        println!(
+            "mc={:<4} kc={:<4} nc={:<5} {gf:>8.2} GFLOP/s{}",
+            b.mc,
+            b.kc,
+            b.nc,
+            if *b == best { "  <- best" } else { "" }
+        );
+    }
+    tune::set_blocking_override(Some(best))?;
+    if let Some(p) = &path {
+        let mut cfg = rmmlinear::config::ExperimentConfig::load(p)?;
+        cfg.kernels.tuned = Some((best.mc, best.kc, best.nc));
+        std::fs::write(p, format!("{}\n", cfg.to_json().to_string_pretty()))
+            .with_context(|| format!("writing tuned blocking to {}", p.display()))?;
+        println!("tune-kernels: kernels.tuned -> {}", p.display());
+    }
+    Ok(())
+}
+
+/// Hidden subcommand backing the forced-dispatch matrix in
+/// `prop_kernels.rs`: print FNV-1a digests of the kernel surfaces (all
+/// three GEMM orientations on MR/NR-remainder shapes, all six streamed
+/// projection families, the batched SORS fast path) so a subprocess grid
+/// over `RMM_SIMD` × `RMM_THREADS` can byte-compare dispatch levels
+/// without shipping tensors across process boundaries.
+fn cmd_kernel_digest(_args: &Args) -> Result<()> {
+    use rmmlinear::rmm::fft::sors_project_fast;
+    use rmmlinear::rmm::sketch::{project_streamed, SketchKind};
+    use rmmlinear::rng::philox::PhiloxStream;
+    use rmmlinear::tensor::{matmul, matmul_at, matmul_bt, Tensor};
+    use rmmlinear::util::fnv;
+
+    fn digest(t: &Tensor) -> u64 {
+        fnv::hash(t.data.iter().flat_map(|v| v.to_bits().to_le_bytes()))
+    }
+    fn probe(rows: usize, cols: usize, tag: u64) -> Tensor {
+        let mut s = PhiloxStream::new(0x00d1_6000 + tag, 11);
+        Tensor::from_fn(rows, cols, |_, _| s.next_normal())
+    }
+
+    // Adversarial GEMM shapes: m % MR != 0, n % NR != 0, odd k, plus one
+    // aligned shape so both the remainder and steady-state tile paths are
+    // in the digest.
+    for (i, &(m, k, n)) in [(13, 29, 17), (70, 33, 41), (128, 64, 96)].iter().enumerate() {
+        let tag = i as u64 * 4;
+        let a = probe(m, k, tag);
+        let b = probe(k, n, tag + 1);
+        let at = probe(k, m, tag + 2);
+        let bt = probe(n, k, tag + 3);
+        println!("matmul[{m}x{k}x{n}]: {:016x}", digest(&matmul(&a, &b)));
+        println!("matmul_at[{m}x{k}x{n}]: {:016x}", digest(&matmul_at(&at, &b)));
+        println!("matmul_bt[{m}x{k}x{n}]: {:016x}", digest(&matmul_bt(&a, &bt)));
+    }
+    // All six streamed projection families on a remainder-heavy shape.
+    let x = probe(53, 37, 100);
+    for kind in [
+        SketchKind::Gauss,
+        SketchKind::Rademacher,
+        SketchKind::Dct,
+        SketchKind::Dft,
+        SketchKind::RowSample,
+        SketchKind::WtaCrs,
+    ] {
+        let p = project_streamed(kind, &x, 19, (7, 9));
+        println!("project[{}]: {:016x}", kind.name(), digest(&p));
+    }
+    // Batched SORS fast path (needs power-of-two batch rows).
+    let xs = probe(64, 40, 200);
+    println!("sors[dct]: {:016x}", digest(&sors_project_fast(true, &xs, 24, (5, 6))));
+    println!("sors[dft]: {:016x}", digest(&sors_project_fast(false, &xs, 24, (5, 6))));
     Ok(())
 }
 

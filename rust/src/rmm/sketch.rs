@@ -10,15 +10,27 @@
 //! including the structured DCT/DFT/rowsample paths that previously fell
 //! back to dense `sketch()` + `matmul_at`.  Output row blocks are
 //! dispatched as tasks on the persistent work-stealing pool
-//! (`tensor::pool`; disjoint `&mut` blocks, stealable grain), and per
-//! output element the input rows accumulate in ascending order, so the
-//! result is bit-identical to the original streaming loop regardless of
-//! tiling, task grain or thread count.
+//! (`tensor::pool`; disjoint `&mut` blocks, stealable grain), the inner
+//! tiles run through the runtime-dispatched SIMD microkernel
+//! (`tensor::kernels::dispatch` — the same AVX2/AVX-512/NEON fast path
+//! as the packed GEMM backend), and per output element the input rows
+//! accumulate in ascending order with unfused multiply-then-add steps,
+//! so the result is bit-identical to the original streaming loop
+//! regardless of tiling, task grain, thread count or SIMD level.  The
+//! gather families (rowsample / wtacrs) have no multiply-accumulate
+//! inner loop at all — their sparsity-aware row copies are already
+//! cheaper than any dense microkernel — so "all families on the fast
+//! path" means: element families through the dispatched kernel, gather
+//! families through the gather.
 
 use crate::rng::philox::{
     element_normal, element_rademacher, element_uniform_int, PhiloxStream,
     STREAM_ROWSEL, STREAM_SIGNS, STREAM_SKETCH, STREAM_WTA,
 };
+use crate::tensor::kernels::dispatch;
+use crate::tensor::kernels::micro::{MR, NR};
+use crate::tensor::kernels::pack::pack_b;
+use crate::tensor::kernels::packed::MatRef;
 use crate::tensor::kernels::threads;
 use crate::tensor::pool;
 use crate::tensor::Tensor;
@@ -223,20 +235,43 @@ pub fn sketch(kind: SketchKind, b: usize, b_proj: usize, seed: (u32, u32)) -> Te
     }
 }
 
-/// Tile extents for the fused streamed projection: S is generated in
-/// TILE_I × TILE_J pieces (16 KiB) that live entirely in L1 while the
-/// corresponding X rows stream through the axpy loop.
+/// k-depth of the generated S panels: S is produced in `TILE_I × MR`
+/// pieces (2 KiB, L1-resident) fed straight to the dispatched
+/// microkernel as its packed A operand.
 const TILE_I: usize = 64;
+/// Historic S-tile width, kept as the basis of the task-grain cap so the
+/// pool geometry (and hence task ownership) is unchanged by the
+/// microkernel rework.
 const TILE_J: usize = 64;
+/// Columns of X packed per slab (NR-aligned); bounds the packed-X
+/// staging buffer at `padded(min(n, X_SLAB)) · b` floats, mirroring the
+/// GEMM driver's NC-slab policy.
+const X_SLAB: usize = 1024;
 
 /// Below this many multiply-adds the thread fan-out costs more than it
 /// saves; stay on the caller's thread.
 const PAR_MADD_THRESHOLD: f64 = 2.0e5;
 
 /// Shared driver for the element-generated families: out = Sᵀ X where
-/// `elem(i, j)` yields S[i, j] on the fly.  Parallel over output rows,
-/// ascending-i accumulation per element (bit-identical to the serial
-/// i-outer/j-inner reference loop).
+/// `elem(i, j)` yields S[i, j] on the fly.  Parallel over output rows;
+/// the inner tiles run through the *dispatched* GEMM microkernel
+/// ([`dispatch::active_kernel`]), so the projection rides the same
+/// AVX2/AVX-512/NEON fast path as the packed backend:
+///
+/// * X is packed once per column slab into NR-column k-major panels
+///   (the microkernel's B operand) via the GEMM packer — read-only,
+///   shared by every task;
+/// * S panels are generated *directly* in MR-row k-major layout (the A
+///   operand) from the Philox counters, `TILE_I` input rows at a time —
+///   S still never exists outside one 2 KiB panel;
+/// * each MR-row × NR-column output tile loads from the band, runs the
+///   microkernel over ascending `i0` blocks, and stores back.
+///
+/// Per output element this performs the identical f32 sequence as the
+/// original streaming loop — input rows ascending, one unfused multiply
+/// then add per row — through every dispatch level (the no-FMA
+/// contract, see `tensor::kernels::dispatch`), so results stay
+/// bit-identical to the seed reference loop pinned in prop_kernels.rs.
 fn project_streamed_elem<F>(x: &Tensor, b_proj: usize, elem: &F) -> Tensor
 where
     F: Fn(usize, usize) -> f32 + Sync,
@@ -248,42 +283,68 @@ where
     }
     let work = b as f64 * b_proj as f64 * n as f64;
     let nt = if work < PAR_MADD_THRESHOLD { 1 } else { threads::num_threads() };
-    // Row blocks as pool tasks: 8-row alignment (finer than TILE_J, for
-    // load balance at small b_proj — blocks may split an S tile, which
-    // only shortens jb, never changes results) and a 4·TILE_J cap so
-    // steals stay possible.
-    let grain = pool::task_grain(b_proj, nt, 8, 4 * TILE_J);
-    pool::par_row_blocks(nt, b_proj, n, grain, &mut out.data, &|j0, jrows, band| {
-        let mut tile = [0.0f32; TILE_I * TILE_J];
-        let mut jt = 0;
-        while jt < jrows {
-            let jb = TILE_J.min(jrows - jt);
-            let mut i0 = 0;
-            while i0 < b {
-                let ib = TILE_I.min(b - i0);
-                // generate the S tile for (i0.., j0+jt..) straight from
-                // the Philox counters — S never exists outside this tile
-                for di in 0..ib {
-                    for dj in 0..jb {
-                        tile[di * TILE_J + dj] = elem(i0 + di, j0 + jt + dj);
-                    }
-                }
-                // rank-ib update of the band's rows, i ascending
-                for di in 0..ib {
-                    let xrow = x.row(i0 + di);
-                    for dj in 0..jb {
-                        let s = tile[di * TILE_J + dj];
-                        let orow = &mut band[(jt + dj) * n..(jt + dj + 1) * n];
-                        for (o, &xv) in orow.iter_mut().zip(xrow) {
-                            *o += s * xv;
+    let kern = dispatch::active_kernel();
+    // Row blocks as pool tasks: MR alignment (finer than TILE_J, for
+    // load balance at small b_proj) and a 4·TILE_J cap so steals stay
+    // possible — the same geometry as the pre-microkernel driver.
+    let grain = pool::task_grain(b_proj, nt, MR, 4 * TILE_J);
+    let slab_w = n.min(X_SLAB);
+    let mut xpack = vec![0.0f32; (slab_w + NR - 1) / NR * NR * b];
+    let mut c0 = 0;
+    while c0 < n {
+        let w = X_SLAB.min(n - c0);
+        let pw = (w + NR - 1) / NR * NR;
+        pack_b(&mut xpack[..pw * b], MatRef::dense(x), 0, b, c0, w);
+        let xp = &xpack[..pw * b];
+        pool::par_row_blocks(nt, b_proj, n, grain, &mut out.data, &|j0, jrows, band| {
+            let mut sbuf = [0.0f32; TILE_I * MR];
+            let mut tile = [[0.0f32; NR]; MR];
+            let mut jp = 0;
+            while jp < jrows {
+                let mr = MR.min(jrows - jp);
+                let mut i0 = 0;
+                while i0 < b {
+                    let ib = TILE_I.min(b - i0);
+                    // Generate the S panel for input rows i0.. and output
+                    // rows j0+jp.. straight from the Philox counters, in
+                    // packed-A layout (sbuf[di·MR + r]); rows past mr are
+                    // exact zeros, inert like the GEMM packers' padding.
+                    for di in 0..ib {
+                        for r in 0..MR {
+                            sbuf[di * MR + r] =
+                                if r < mr { elem(i0 + di, j0 + jp + r) } else { 0.0 };
                         }
                     }
+                    let mut t0 = 0;
+                    while t0 < w {
+                        let nr = NR.min(w - t0);
+                        let xpanel = &xp[(t0 / NR) * NR * b + i0 * NR..][..ib * NR];
+                        // load the output tile (padded lanes zeroed)
+                        for (r, trow) in tile.iter_mut().enumerate() {
+                            if r < mr {
+                                let o0 = (jp + r) * n + c0 + t0;
+                                trow[..nr].copy_from_slice(&band[o0..o0 + nr]);
+                                for v in trow[nr..].iter_mut() {
+                                    *v = 0.0;
+                                }
+                            } else {
+                                *trow = [0.0; NR];
+                            }
+                        }
+                        kern(ib, &sbuf[..ib * MR], xpanel, &mut tile);
+                        for (r, trow) in tile.iter().enumerate().take(mr) {
+                            let o0 = (jp + r) * n + c0 + t0;
+                            band[o0..o0 + nr].copy_from_slice(&trow[..nr]);
+                        }
+                        t0 += NR;
+                    }
+                    i0 += TILE_I;
                 }
-                i0 += TILE_I;
+                jp += MR;
             }
-            jt += TILE_J;
-        }
-    });
+        });
+        c0 += X_SLAB;
+    }
     out
 }
 

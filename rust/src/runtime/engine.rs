@@ -148,13 +148,10 @@ pub const EXE_CACHE_CAP_ENV: &str = "RMM_EXE_CACHE_CAP";
 
 /// Strict parse of the cap value: an operator who *set* the variable to
 /// bound memory must not silently get an unbounded cache from a typo.
+/// Routed through the shared knob parser so the error shape stays
+/// uniform with `RMM_POOL_GRAIN` / `RMM_SIMD`.
 fn parse_cache_cap(v: &str) -> Result<usize> {
-    v.trim().parse().map_err(|_| {
-        anyhow::anyhow!(
-            "{EXE_CACHE_CAP_ENV} must be a non-negative integer \
-             (0 = unbounded), got '{v}'"
-        )
-    })
+    crate::util::env::parse_usize_with_zero(EXE_CACHE_CAP_ENV, "0 = unbounded", v)
 }
 
 fn cache_cap_from_env() -> Result<usize> {

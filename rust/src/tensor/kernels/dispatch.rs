@@ -1,0 +1,336 @@
+//! Runtime SIMD dispatch for the GEMM microkernel: a one-time cached CPU
+//! feature probe selects the widest implementation the hardware supports,
+//! overridable (strictly) via `RMM_SIMD` or the config/CLI layer.
+//!
+//! # Levels and probe order
+//!
+//! | level      | tile strategy                         | requires            |
+//! |------------|---------------------------------------|---------------------|
+//! | `avx512`   | 4 × zmm row-pair accumulators         | AVX-512F (probed)   |
+//! | `avx2`     | 8 × ymm row accumulators              | AVX2 (probed)       |
+//! | `neon`     | 16 × q-register half-row accumulators | aarch64 (baseline)  |
+//! | `portable` | autovectorized [`micro::kernel`]      | —                   |
+//! | `scalar`   | per-element reference loop            | —                   |
+//!
+//! The auto probe picks the first *supported* level in the order
+//! `avx512 → avx2 → neon → portable`; `scalar` is never auto-selected
+//! (it exists as the forced reference for the dispatch-identity tests).
+//!
+//! # Bit-identity contract
+//!
+//! Every level performs, per C element, the *same* f32 operation
+//! sequence as the portable tile: ascending-k, one IEEE multiply then
+//! one IEEE add per step, never a fused multiply-add (no intrinsic FMA,
+//! and Rust/LLVM do not contract separate mul/add without fast-math).
+//! SIMD lane width only changes how many independent elements advance
+//! per instruction — IEEE lane arithmetic is element-independent and the
+//! packers' zero padding contributes exact zeros — so kernel output is
+//! bit-identical across every dispatch level.  `prop_kernels.rs` pins
+//! this across levels × thread counts; `scripts/ci.sh` gates it end to
+//! end with `RMM_SIMD=portable` vs auto.
+//!
+//! # Override precedence
+//!
+//! [`set_simd_override`] (config `kernels.simd` / CLI `--simd`) >
+//! `RMM_SIMD` env (read once, cached; malformed or unsupported values
+//! are *rejected*, never silently defaulted) > the probe.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+use super::micro::{self, MR, NR};
+
+/// Env var forcing a dispatch level (`scalar|portable|avx2|avx512|neon`).
+pub const SIMD_ENV: &str = "RMM_SIMD";
+
+/// A microkernel implementation selectable at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Per-element reference loop (never auto-selected).
+    Scalar,
+    /// The autovectorized generic tile ([`micro::kernel`]).
+    Portable,
+    /// 8-wide AVX2 row accumulators (x86/x86_64 with AVX2).
+    Avx2,
+    /// 16-wide AVX-512F row-pair accumulators (x86/x86_64 with AVX-512F).
+    Avx512,
+    /// 4-wide NEON half-row accumulators (aarch64 baseline).
+    Neon,
+}
+
+impl SimdLevel {
+    pub const ALL: [SimdLevel; 5] = [
+        SimdLevel::Scalar,
+        SimdLevel::Portable,
+        SimdLevel::Avx2,
+        SimdLevel::Avx512,
+        SimdLevel::Neon,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Portable => "portable",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Avx512 => "avx512",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SimdLevel> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "scalar" => SimdLevel::Scalar,
+            "portable" => SimdLevel::Portable,
+            "avx2" => SimdLevel::Avx2,
+            "avx512" => SimdLevel::Avx512,
+            "neon" => SimdLevel::Neon,
+            _ => return None,
+        })
+    }
+
+    /// Strict parse with the canonical knob error shape (name, offending
+    /// value, valid domain) — config/CLI/env surfaces all route through
+    /// this so a typo can never silently fall back to the probe.
+    pub fn parse_or_err(s: &str) -> Result<SimdLevel> {
+        SimdLevel::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "{SIMD_ENV} must be one of scalar|portable|avx2|avx512|neon, got '{s}'"
+            )
+        })
+    }
+
+    /// Whether this build, on this CPU, can run the level right now.
+    pub fn supported(self) -> bool {
+        match self {
+            SimdLevel::Scalar | SimdLevel::Portable => true,
+            SimdLevel::Avx2 => {
+                #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+                {
+                    std::arch::is_x86_feature_detected!("avx2")
+                }
+                #[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+                {
+                    false
+                }
+            }
+            SimdLevel::Avx512 => {
+                #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+                {
+                    std::arch::is_x86_feature_detected!("avx512f")
+                }
+                #[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+                {
+                    false
+                }
+            }
+            SimdLevel::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+/// The levels this build + CPU can actually run, in `ALL` order.
+pub fn supported_levels() -> Vec<SimdLevel> {
+    SimdLevel::ALL.iter().copied().filter(|l| l.supported()).collect()
+}
+
+/// The auto-selected level: widest supported, `scalar` never chosen.
+/// Cached after the first call (feature detection itself caches too, but
+/// the fixed answer makes the precedence chain obviously race-free).
+pub fn probe() -> SimdLevel {
+    static PROBED: OnceLock<SimdLevel> = OnceLock::new();
+    *PROBED.get_or_init(|| {
+        for l in [SimdLevel::Avx512, SimdLevel::Avx2, SimdLevel::Neon] {
+            if l.supported() {
+                return l;
+            }
+        }
+        SimdLevel::Portable
+    })
+}
+
+// 0 = no override; otherwise 1 + index into SimdLevel::ALL.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Install (or clear, with `None`) the process-global dispatch override —
+/// the config/CLI layer's entry point, highest precedence.  Rejects
+/// levels this CPU cannot run instead of letting the first GEMM trap.
+pub fn set_simd_override(level: Option<SimdLevel>) -> Result<()> {
+    match level {
+        None => OVERRIDE.store(0, Ordering::Relaxed),
+        Some(l) => {
+            if !l.supported() {
+                bail!(
+                    "{SIMD_ENV} level '{}' is not supported by this CPU (supported: {})",
+                    l.name(),
+                    supported_levels()
+                        .iter()
+                        .map(|l| l.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+            }
+            let idx = SimdLevel::ALL.iter().position(|&x| x == l).unwrap() as u8;
+            OVERRIDE.store(idx + 1, Ordering::Relaxed);
+        }
+    }
+    Ok(())
+}
+
+fn override_level() -> Option<SimdLevel> {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => None,
+        v => Some(SimdLevel::ALL[(v - 1) as usize]),
+    }
+}
+
+/// Strict read of `RMM_SIMD`: unknown names and valid-but-unsupported
+/// levels are both errors.  The CLI calls this once at startup so a bad
+/// value surfaces as a normal error message; library paths that hit the
+/// cached copy first ([`env_level`]) panic with the same text.
+pub fn check_env() -> Result<Option<SimdLevel>> {
+    match std::env::var(SIMD_ENV) {
+        Err(_) => Ok(None),
+        Ok(v) => {
+            let l = SimdLevel::parse_or_err(v.trim())?;
+            if !l.supported() {
+                // Route through the same unsupported-level message.
+                set_simd_override(Some(l))?;
+            }
+            Ok(Some(l))
+        }
+    }
+}
+
+fn env_level() -> Option<SimdLevel> {
+    static ENV: OnceLock<Option<SimdLevel>> = OnceLock::new();
+    *ENV.get_or_init(|| check_env().unwrap_or_else(|e| panic!("{e}")))
+}
+
+/// The level the next kernel call will run at: override > env > probe.
+pub fn active_level() -> SimdLevel {
+    override_level().or_else(env_level).unwrap_or_else(probe)
+}
+
+/// The shared microkernel shape: `kernel(kc, ap, bp, acc)` with `ap` an
+/// MR-row k-major panel and `bp` an NR-column k-major panel (see
+/// [`micro::kernel`]).  A plain fn pointer so the blocked drivers fetch
+/// it once per GEMM and pool tasks copy it freely.
+pub type MicroKernel = fn(usize, &[f32], &[f32], &mut [[f32; NR]; MR]);
+
+/// Per-element reference microkernel: the same ascending-k mul-then-add
+/// sequence per C element as every other level, written as the plainest
+/// possible loop.  Forced via `RMM_SIMD=scalar`; the dispatch-identity
+/// tests diff every other level against it.
+pub fn kernel_scalar(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    for (r, row) in acc.iter_mut().enumerate() {
+        for (c, out) in row.iter_mut().enumerate() {
+            let mut v = *out;
+            for k in 0..kc {
+                v += ap[k * MR + r] * bp[k * NR + c];
+            }
+            *out = v;
+        }
+    }
+}
+
+/// The microkernel implementing `level`.  Panics if the level is not
+/// supported here — dispatch only hands out callable pointers, which is
+/// what makes the `unsafe` target-feature kernels sound to wrap safely.
+pub fn kernel_for(level: SimdLevel) -> MicroKernel {
+    assert!(
+        level.supported(),
+        "SIMD level '{}' not supported on this CPU",
+        level.name()
+    );
+    match level {
+        SimdLevel::Scalar => kernel_scalar,
+        SimdLevel::Portable => micro::kernel,
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        SimdLevel::Avx2 => super::micro_avx2::kernel,
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        SimdLevel::Avx512 => super::micro_avx512::kernel,
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => super::micro_neon::kernel,
+        #[allow(unreachable_patterns)]
+        _ => unreachable!("supported() gated above"),
+    }
+}
+
+/// The microkernel for [`active_level`] — what the blocked GEMM driver
+/// and the streamed projection fetch once per call.
+pub fn active_kernel() -> MicroKernel {
+    kernel_for(active_level())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_strict_rejection() {
+        for l in SimdLevel::ALL {
+            assert_eq!(SimdLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(SimdLevel::parse("AVX2"), Some(SimdLevel::Avx2));
+        assert_eq!(SimdLevel::parse("sse9"), None);
+        let err = SimdLevel::parse_or_err("sse9").unwrap_err().to_string();
+        assert!(err.contains("RMM_SIMD"), "{err}");
+        assert!(err.contains("'sse9'"), "{err}");
+        assert!(err.contains("avx512"), "{err}");
+    }
+
+    #[test]
+    fn probe_never_picks_scalar_and_is_supported() {
+        let p = probe();
+        assert_ne!(p, SimdLevel::Scalar);
+        assert!(p.supported());
+        assert_eq!(probe(), p); // cached, stable
+    }
+
+    #[test]
+    fn override_precedence_and_unsupported_rejection() {
+        // Portable is supported everywhere; forcing it must stick.
+        set_simd_override(Some(SimdLevel::Portable)).unwrap();
+        assert_eq!(active_level(), SimdLevel::Portable);
+        set_simd_override(None).unwrap();
+        // Whatever env/probe now yields must be a supported level.
+        assert!(active_level().supported());
+        // An unsupported level errors instead of installing.
+        if let Some(&bad) = SimdLevel::ALL.iter().find(|l| !l.supported()) {
+            let err = set_simd_override(Some(bad)).unwrap_err().to_string();
+            assert!(err.contains(bad.name()), "{err}");
+            assert!(err.contains("not supported"), "{err}");
+        }
+    }
+
+    #[test]
+    fn every_supported_level_matches_scalar_bitwise() {
+        // Microtile-granularity identity check (prop_kernels.rs pins the
+        // full GEMM/projection surface): same packed panels through every
+        // callable kernel must produce byte-identical tiles.
+        let kc = 37;
+        let ap: Vec<f32> = (0..kc * MR)
+            .map(|i| ((i * 2654435761usize) % 1000) as f32 * 1e-3 - 0.5)
+            .collect();
+        let bp: Vec<f32> = (0..kc * NR)
+            .map(|i| ((i * 40503usize) % 997) as f32 * 2e-3 - 1.0)
+            .collect();
+        let mut want = [[0.1f32; NR]; MR];
+        kernel_scalar(kc, &ap, &bp, &mut want);
+        for l in supported_levels() {
+            let mut got = [[0.1f32; NR]; MR];
+            kernel_for(l)(kc, &ap, &bp, &mut got);
+            for r in 0..MR {
+                assert_eq!(
+                    got[r].map(f32::to_bits),
+                    want[r].map(f32::to_bits),
+                    "level {} row {r}",
+                    l.name()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,78 @@
+//! AVX2 8-wide microkernel: the 8×8 tile as eight ymm row accumulators.
+//!
+//! Each k step broadcasts one A element per row and does an explicit
+//! `_mm256_mul_ps` followed by `_mm256_add_ps` — never an FMA intrinsic,
+//! and LLVM does not contract separate mul/add without fast-math — so
+//! per C element the operation sequence (ascending k, unfused multiply
+//! then add) is exactly the portable tile's and the output is
+//! bit-identical to every other dispatch level.  Keeping the tile in
+//! registers across k instead of round-tripping memory is value-neutral
+//! for f32.
+
+use super::micro::{MR, NR};
+
+#[cfg(target_arch = "x86")]
+use std::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Safe entry with the shared [`super::dispatch::MicroKernel`] shape.
+/// Callers reach this only through dispatch, which verified AVX2 at
+/// probe/override time — that check is what makes the wrap sound.
+pub fn kernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    // SAFETY: AVX2 availability was established by dispatch (probe or
+    // validated override) before this pointer was handed out; the panel
+    // bounds were asserted above.
+    unsafe { kernel_avx2(kc, ap.as_ptr(), bp.as_ptr(), acc) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn kernel_avx2(
+    kc: usize,
+    ap: *const f32,
+    bp: *const f32,
+    acc: &mut [[f32; NR]; MR],
+) {
+    debug_assert_eq!(NR, 8);
+    let mut rows = [_mm256_setzero_ps(); MR];
+    for (r, row) in rows.iter_mut().enumerate() {
+        *row = _mm256_loadu_ps(acc[r].as_ptr());
+    }
+    for k in 0..kc {
+        let b = _mm256_loadu_ps(bp.add(k * NR));
+        for (r, row) in rows.iter_mut().enumerate() {
+            let a = _mm256_set1_ps(*ap.add(k * MR + r));
+            // Unfused on purpose: mul then add, matching the portable
+            // tile's per-element f32 sequence bit-for-bit.
+            *row = _mm256_add_ps(*row, _mm256_mul_ps(a, b));
+        }
+    }
+    for (r, row) in rows.iter().enumerate() {
+        _mm256_storeu_ps(acc[r].as_mut_ptr(), *row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{dispatch::SimdLevel, micro};
+    use super::*;
+
+    #[test]
+    fn matches_portable_bitwise_when_supported() {
+        if !SimdLevel::Avx2.supported() {
+            eprintln!("skipping: AVX2 unavailable on this CPU");
+            return;
+        }
+        let kc = 19;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| (i as f32).sin()).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| (i as f32).cos()).collect();
+        let mut want = [[0.25f32; NR]; MR];
+        micro::kernel(kc, &ap, &bp, &mut want);
+        let mut got = [[0.25f32; NR]; MR];
+        kernel(kc, &ap, &bp, &mut got);
+        for r in 0..MR {
+            assert_eq!(got[r].map(f32::to_bits), want[r].map(f32::to_bits), "row {r}");
+        }
+    }
+}

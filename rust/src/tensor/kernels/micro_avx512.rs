@@ -1,0 +1,105 @@
+//! AVX-512F 16-wide microkernel: the 8×8 tile as four zmm accumulators,
+//! each covering one contiguous *row pair* of the tile.
+//!
+//! A naive 16-wide kernel would need NR = 16 panels (breaking the shared
+//! NR = 8 pack layout) or k-vectorization (breaking ascending-k order).
+//! Instead each zmm holds rows (2p, 2p+1) side by side; per k step the
+//! NR-wide B row is duplicated into both halves and the two A elements
+//! of the pair are broadcast into their respective halves, so one
+//! mul+add advances two rows at once.  Per C element that is still
+//! exactly one IEEE multiply then one IEEE add per ascending k — no FMA
+//! intrinsic anywhere, and LLVM does not contract separate mul/add
+//! without fast-math — so output stays bit-identical to the portable
+//! tile and every other dispatch level.
+//!
+//! Only AVX-512F intrinsics are used (`permutexvar` rather than the
+//! AVX-512DQ `insertf32x8`/`broadcast_f32x8`), so the F probe alone
+//! gates this kernel.
+
+use super::micro::{MR, NR};
+
+#[cfg(target_arch = "x86")]
+use std::arch::x86::*;
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Safe entry with the shared [`super::dispatch::MicroKernel`] shape.
+/// Callers reach this only through dispatch, which verified AVX-512F at
+/// probe/override time — that check is what makes the wrap sound.
+pub fn kernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    // SAFETY: AVX-512F availability was established by dispatch (probe
+    // or validated override); the panel bounds were asserted above.
+    unsafe { kernel_avx512(kc, ap.as_ptr(), bp.as_ptr(), acc) }
+}
+
+#[target_feature(enable = "avx512f")]
+unsafe fn kernel_avx512(
+    kc: usize,
+    ap: *const f32,
+    bp: *const f32,
+    acc: &mut [[f32; NR]; MR],
+) {
+    debug_assert!(MR == 8 && NR == 8);
+    // Lane index vectors (highest lane first in set_epi32): `bidx` maps a
+    // 256-bit B row into both zmm halves; `aidx[p]` broadcasts packed A
+    // elements 2p / 2p+1 into the halves owning rows 2p / 2p+1.
+    let bidx = _mm512_set_epi32(7, 6, 5, 4, 3, 2, 1, 0, 7, 6, 5, 4, 3, 2, 1, 0);
+    let aidx = [
+        _mm512_set_epi32(1, 1, 1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0, 0, 0),
+        _mm512_set_epi32(3, 3, 3, 3, 3, 3, 3, 3, 2, 2, 2, 2, 2, 2, 2, 2),
+        _mm512_set_epi32(5, 5, 5, 5, 5, 5, 5, 5, 4, 4, 4, 4, 4, 4, 4, 4),
+        _mm512_set_epi32(7, 7, 7, 7, 7, 7, 7, 7, 6, 6, 6, 6, 6, 6, 6, 6),
+    ];
+    // The tile is a contiguous [[f32; 8]; 8]: row pair p is 16 floats at
+    // offset 16·p.  Go through the whole-array pointer (not a row borrow)
+    // so the 16-float access stays inside one allocation's provenance.
+    let cp = acc.as_mut_ptr() as *mut f32;
+    let mut pairs = [
+        _mm512_loadu_ps(cp),
+        _mm512_loadu_ps(cp.add(16)),
+        _mm512_loadu_ps(cp.add(32)),
+        _mm512_loadu_ps(cp.add(48)),
+    ];
+    for k in 0..kc {
+        // Upper 256 bits after the cast are undefined, but every permute
+        // index is < 8, so only the defined lower lanes are ever read.
+        let b = _mm512_castps256_ps512(_mm256_loadu_ps(bp.add(k * NR)));
+        let bv = _mm512_permutexvar_ps(bidx, b);
+        let a = _mm512_castps256_ps512(_mm256_loadu_ps(ap.add(k * MR)));
+        for (p, pair) in pairs.iter_mut().enumerate() {
+            let av = _mm512_permutexvar_ps(aidx[p], a);
+            // Unfused on purpose: mul then add, matching the portable
+            // tile's per-element f32 sequence bit-for-bit.
+            *pair = _mm512_add_ps(*pair, _mm512_mul_ps(av, bv));
+        }
+    }
+    _mm512_storeu_ps(cp, pairs[0]);
+    _mm512_storeu_ps(cp.add(16), pairs[1]);
+    _mm512_storeu_ps(cp.add(32), pairs[2]);
+    _mm512_storeu_ps(cp.add(48), pairs[3]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{dispatch::SimdLevel, micro};
+    use super::*;
+
+    #[test]
+    fn matches_portable_bitwise_when_supported() {
+        if !SimdLevel::Avx512.supported() {
+            eprintln!("skipping: AVX-512F unavailable on this CPU");
+            return;
+        }
+        let kc = 23;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| (i as f32 * 0.7).sin()).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| (i as f32 * 1.3).cos()).collect();
+        let mut want = [[0.5f32; NR]; MR];
+        micro::kernel(kc, &ap, &bp, &mut want);
+        let mut got = [[0.5f32; NR]; MR];
+        kernel(kc, &ap, &bp, &mut got);
+        for r in 0..MR {
+            assert_eq!(got[r].map(f32::to_bits), want[r].map(f32::to_bits), "row {r}");
+        }
+    }
+}

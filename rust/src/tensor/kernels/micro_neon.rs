@@ -1,0 +1,73 @@
+//! NEON microkernel (aarch64): the 8×8 tile as sixteen q-register
+//! accumulators, two 4-lane halves per row.
+//!
+//! Per k step each row broadcasts its A element and does an explicit
+//! `vmulq_f32` followed by `vaddq_f32` — never `vfmaq`/`vmlaq`, and
+//! LLVM does not contract separate mul/add without fast-math — so per C
+//! element the f32 sequence (ascending k, unfused multiply then add) is
+//! exactly the portable tile's and output is bit-identical across
+//! dispatch levels.  NEON is baseline on aarch64, so `supported()` is a
+//! compile-time fact rather than a CPUID probe.
+
+use super::micro::{MR, NR};
+
+use std::arch::aarch64::*;
+
+/// Safe entry with the shared [`super::dispatch::MicroKernel`] shape.
+/// NEON is mandatory on aarch64 targets, so reaching this module at all
+/// (it is compiled only there) makes the inner call sound.
+pub fn kernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [[f32; NR]; MR]) {
+    assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    // SAFETY: aarch64 baseline includes NEON; panel bounds asserted above.
+    unsafe { kernel_neon(kc, ap.as_ptr(), bp.as_ptr(), acc) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn kernel_neon(
+    kc: usize,
+    ap: *const f32,
+    bp: *const f32,
+    acc: &mut [[f32; NR]; MR],
+) {
+    debug_assert!(MR == 8 && NR == 8);
+    let mut rows = [[vdupq_n_f32(0.0); 2]; MR];
+    for (r, row) in rows.iter_mut().enumerate() {
+        row[0] = vld1q_f32(acc[r].as_ptr());
+        row[1] = vld1q_f32(acc[r].as_ptr().add(4));
+    }
+    for k in 0..kc {
+        let b0 = vld1q_f32(bp.add(k * NR));
+        let b1 = vld1q_f32(bp.add(k * NR + 4));
+        for (r, row) in rows.iter_mut().enumerate() {
+            let a = vdupq_n_f32(*ap.add(k * MR + r));
+            // Unfused on purpose: mul then add, matching the portable
+            // tile's per-element f32 sequence bit-for-bit.
+            row[0] = vaddq_f32(row[0], vmulq_f32(a, b0));
+            row[1] = vaddq_f32(row[1], vmulq_f32(a, b1));
+        }
+    }
+    for (r, row) in rows.iter().enumerate() {
+        vst1q_f32(acc[r].as_mut_ptr(), row[0]);
+        vst1q_f32(acc[r].as_mut_ptr().add(4), row[1]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::micro;
+    use super::*;
+
+    #[test]
+    fn matches_portable_bitwise() {
+        let kc = 29;
+        let ap: Vec<f32> = (0..kc * MR).map(|i| (i as f32 * 0.9).sin()).collect();
+        let bp: Vec<f32> = (0..kc * NR).map(|i| (i as f32 * 0.4).cos()).collect();
+        let mut want = [[1.5f32; NR]; MR];
+        micro::kernel(kc, &ap, &bp, &mut want);
+        let mut got = [[1.5f32; NR]; MR];
+        kernel(kc, &ap, &bp, &mut got);
+        for r in 0..MR {
+            assert_eq!(got[r].map(f32::to_bits), want[r].map(f32::to_bits), "row {r}");
+        }
+    }
+}

@@ -28,10 +28,11 @@
 //!   stride and never branches on bounds.  Packing reads through a strided
 //!   [`packed::MatRef`] view, which is how `Aᵀ·B` / `A·Bᵀ` reuse the same
 //!   driver without materializing transposes.
-//! * **Microkernel** ([`micro`]): an `MR×NR = 8×8` accumulator tile
-//!   updated by rank-1 steps; fixed trip counts + `chunks_exact` let LLVM
-//!   keep the tile in vector registers and emit FMA lanes without any
-//!   intrinsics (portable across x86/aarch64).
+//! * **Microkernel** ([`micro`] + [`dispatch`]): an `MR×NR = 8×8`
+//!   accumulator tile updated by rank-1 steps.  The portable tile relies
+//!   on LLVM autovectorization; runtime dispatch upgrades it to explicit
+//!   AVX2/AVX-512/NEON kernels when the CPU supports them (see the
+//!   *SIMD dispatch + autotune knobs* section below).
 //! * **Threading** ([`threads`] + [`crate::tensor::pool`]): work is cut
 //!   into `(jc, row-block)` cache-block tasks and dispatched through the
 //!   persistent work-stealing pool (workers spawned once, parked between
@@ -53,12 +54,54 @@
 //! same layering through `ExperimentConfig::pool` / `--threads` /
 //! `--pool-grain` and the `RMM_THREADS` / `RMM_POOL_GRAIN` env vars
 //! (see [`threads`] and [`crate::tensor::pool`]).
+//!
+//! # SIMD dispatch + autotune knobs
+//!
+//! This is the canonical reference for the kernel-speed knobs; the
+//! module docs of [`dispatch`] and [`tune`] carry the implementation
+//! detail.
+//!
+//! * **Probe order** ([`dispatch::probe`]): one cached CPU-feature probe
+//!   selects the first supported level in `avx512 → avx2 → neon →
+//!   portable`.  `scalar` (the per-element reference loop) is never
+//!   auto-selected; it exists to be forced by the identity tests.
+//! * **Override env**: `RMM_SIMD=scalar|portable|avx2|avx512|neon`
+//!   forces a level.  Parsing is *strict* — an unknown name or a level
+//!   this CPU cannot run is an error (name + offending value + valid
+//!   domain), never a silent fallback — matching `RMM_EXE_CACHE_CAP`
+//!   and `RMM_POOL_GRAIN`.  Precedence: config `kernels.simd` / CLI
+//!   `--simd` ([`dispatch::set_simd_override`]) > `RMM_SIMD` > probe.
+//! * **Tuned-config persistence** ([`tune`]): `repro tune-kernels
+//!   --config FILE` times the deterministic candidate grid and writes
+//!   the winner to the config's `kernels.tuned` section as
+//!   `{"mc": M, "kc": K, "nc": N}`.  Sweeps and runs consuming that
+//!   config re-apply the stored blocking and **never re-time**; pass
+//!   `--retune` to force a fresh probe.  Unset → the shipped
+//!   [`tune::DEFAULT`] (128, 256, 1024).  The pool task grain derives
+//!   from the tuned MC ([`packed::gemm_task_grain`]), so blocking and
+//!   stealing granularity cannot drift apart.
+//! * **No-FMA bit-identity contract**: every dispatch level performs,
+//!   per C element, the identical f32 sequence — ascending k, one IEEE
+//!   multiply then one IEEE add per step, no FMA contraction — and
+//!   blocking only regroups that sequence without reordering it, so
+//!   kernel output is bit-identical across every (SIMD level, MC/KC/NC,
+//!   thread count, task grain) combination.  `prop_kernels.rs` pins the
+//!   matrix; `scripts/ci.sh` gates `RMM_SIMD=portable` vs auto end to
+//!   end.
 
+pub mod dispatch;
 pub mod micro;
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+pub mod micro_avx2;
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+pub mod micro_avx512;
+#[cfg(target_arch = "aarch64")]
+pub mod micro_neon;
 pub mod pack;
 pub mod packed;
 pub mod scalar;
 pub mod threads;
+pub mod tune;
 
 use std::sync::atomic::{AtomicU8, Ordering};
 

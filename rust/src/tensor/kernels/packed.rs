@@ -43,22 +43,24 @@
 //! order and thread count — so results are bit-identical for any
 //! `RMM_THREADS`.
 
-use super::micro::{kernel, MR, NR};
+use super::dispatch::{self, MicroKernel};
+use super::micro::{MR, NR};
 use super::pack::{pack_a, pack_b};
 use super::threads;
+use super::tune::{self, Blocking};
 use crate::tensor::pool::{self, SharedMut};
 use crate::tensor::Tensor;
 
-/// Max rows of C per task / A-pack block (L2-sized: MC·KC·4B ≈ 128 KiB).
-const MC: usize = 128;
-/// k-depth per packed block (panel strips stay L1-resident; one
-/// NC × KC block of the staged slab is ≈ 1 MiB, L3-resident).
-const KC: usize = 256;
-/// Columns of C per B-pack slab.  The staging buffer holds one slab at
-/// full k-depth (`padded_cols(min(n, NC)) · k` floats — ~16 MiB for
-/// k = 4096), but the microtile sweep only streams the current KC-deep
-/// block of it, so the working set per k-block stays L3-sized.
-const NC: usize = 1024;
+// Cache blocking (MC rows per task / A block, KC k-depth per packed
+// block, NC columns per B slab) comes from `tune::blocking()`: the
+// shipped `tune::DEFAULT` (128, 256, 1024 — L2-sized A blocks, an
+// L3-resident B slab) unless a `kernels.tuned` config section installed
+// an autotuned winner.  Read once per GEMM call; see the tune module
+// doc for why blocking is bit-invisible.
+//
+// The microkernel likewise comes from `dispatch::active_kernel()` —
+// portable, scalar, or an explicit AVX2/AVX-512/NEON tile — fetched
+// once per call and copied into the pool tasks as a plain fn pointer.
 
 /// Minimum FLOP count before fanning out to the pool (below this the
 /// dispatch cost dominates).
@@ -133,10 +135,11 @@ fn padded_cols(nc: usize) -> usize {
 }
 
 /// The row-block task grain the pool driver picks for an `m`-row GEMM at
-/// `nt` participants (MR-aligned, at most MC).  Exposed so the benches
-/// can report the grain next to the GFLOP/s numbers.
+/// `nt` participants (MR-aligned, at most the *tuned* MC, so autotuned
+/// blocking and work-stealing granularity cannot drift apart).  Exposed
+/// so the benches can report the grain next to the GFLOP/s numbers.
 pub fn gemm_task_grain(m: usize, nt: usize) -> usize {
-    pool::task_grain(m, nt, MR, MC)
+    pool::task_grain(m, nt, MR, tune::blocking().mc)
 }
 
 /// out = a · b for logical views (out must be zeroed, `a.cols == b.rows`).
@@ -147,28 +150,30 @@ pub fn gemm(a: MatRef<'_>, b: MatRef<'_>, out: &mut Tensor) {
     if m == 0 || n == 0 || k == 0 {
         return; // out is already zero
     }
+    let blk = tune::blocking();
+    let kern = dispatch::active_kernel();
     let flops = 2.0 * m as f64 * k as f64 * n as f64;
     let nt = if flops < PAR_FLOP_THRESHOLD { 1 } else { threads::num_threads() };
 
-    let n_pc = (k + KC - 1) / KC;
+    let n_pc = (k + blk.kc - 1) / blk.kc;
     let grain = gemm_task_grain(m, nt);
     let n_ic = (m + grain - 1) / grain;
     // Staging for one NC-wide column slab of B at full k-depth; block pci
     // lives at the closed-form offset pcols·pc (its k-blocks are pcols·kc
     // each, stacked in pc order).
-    let mut bbuf = vec![0.0f32; padded_cols(n.min(NC)) * k];
+    let mut bbuf = vec![0.0f32; padded_cols(n.min(blk.nc)) * k];
     let cptr = SharedMut::new(out.data.as_mut_ptr());
 
     let mut jc = 0;
     while jc < n {
-        let nc = NC.min(n - jc);
+        let nc = blk.nc.min(n - jc);
         let pcols = padded_cols(nc);
         // ---- wave 1: pack this slab's k-blocks (one pool task each) ----
         {
             let bptr = SharedMut::new(bbuf.as_mut_ptr());
             pool::global().run(nt, n_pc, |pci| {
-                let pc = pci * KC;
-                let kc = KC.min(k - pc);
+                let pc = pci * blk.kc;
+                let kc = blk.kc.min(k - pc);
                 // SAFETY: destination ranges [pcols·pc, pcols·(pc + kc))
                 // are disjoint across tasks and within bbuf's prefix.
                 let dst = unsafe {
@@ -183,9 +188,9 @@ pub fn gemm(a: MatRef<'_>, b: MatRef<'_>, out: &mut Tensor) {
         pool::global().run(nt, n_ic, |ici| {
             let i0 = ici * grain;
             let mrows = grain.min(m - i0);
-            gemm_block(a, bslab, pcols, k, n, jc, nc, i0, mrows, cptr);
+            gemm_block(a, bslab, pcols, k, n, jc, nc, i0, mrows, cptr, blk, kern);
         });
-        jc += NC;
+        jc += blk.nc;
     }
 }
 
@@ -208,18 +213,20 @@ fn gemm_block(
     i0: usize,
     mrows: usize,
     c: SharedMut<f32>,
+    blk: Blocking,
+    kern: MicroKernel,
 ) {
     if mrows == 0 {
         return;
     }
-    let a_panel_rows = (mrows + MR - 1) / MR * MR; // mrows <= MC by grain clamp
-    with_a_scratch(a_panel_rows * KC.min(k), |abuf| {
+    let a_panel_rows = (mrows + MR - 1) / MR * MR; // mrows <= blk.mc by grain clamp
+    with_a_scratch(a_panel_rows * blk.kc.min(k), |abuf| {
         let mut tile = [[0.0f32; NR]; MR];
 
         let mut pci = 0;
-        while pci * KC < k {
-            let pc = pci * KC;
-            let kc = KC.min(k - pc);
+        while pci * blk.kc < k {
+            let pc = pci * blk.kc;
+            let kc = blk.kc.min(k - pc);
             pack_a(abuf, a, i0, mrows, pc, kc);
             let slab = &bslab[pcols * pc..pcols * pc + pcols * kc];
 
@@ -249,7 +256,7 @@ fn gemm_block(
                             *trow = [0.0; NR];
                         }
                     }
-                    kernel(kc, ap, bp, &mut tile);
+                    kern(kc, ap, bp, &mut tile);
                     for (r, trow) in tile.iter().enumerate().take(mr) {
                         let c0 = (i0 + ip + r) * n + jc + jp;
                         // SAFETY: same exclusive region as the load above.
@@ -357,5 +364,49 @@ mod tests {
         }
         threads::set_threads_override(0);
         pool::set_grain_override(0);
+    }
+
+    #[test]
+    fn gemm_is_bit_identical_across_blockings() {
+        let _g = pool::knob_test_lock();
+        // Blocking only regroups the ascending-k accumulation (KC blocks
+        // in order, k ascending inside each) — it cannot reorder any
+        // element's f32 sequence, so the autotuner is free to persist any
+        // candidate without breaking sweep byte-reproducibility.
+        let (m, k, n) = (150usize, 270usize, 190usize);
+        let a = randt(m, k, 9);
+        let b = randt(k, n, 10);
+        tune::set_blocking_override(None).unwrap();
+        let reference = {
+            let mut c = Tensor::zeros(m, n);
+            gemm(MatRef::dense(&a), MatRef::dense(&b), &mut c);
+            c
+        };
+        for blk in tune::candidates() {
+            tune::set_blocking_override(Some(blk)).unwrap();
+            let mut c = Tensor::zeros(m, n);
+            gemm(MatRef::dense(&a), MatRef::dense(&b), &mut c);
+            assert_eq!(c.data, reference.data, "{blk:?}");
+        }
+        tune::set_blocking_override(None).unwrap();
+    }
+
+    #[test]
+    fn task_grain_tracks_tuned_mc_and_stays_mr_aligned() {
+        let _g = pool::knob_test_lock();
+        tune::set_blocking_override(None).unwrap();
+        for blk in tune::candidates() {
+            tune::set_blocking_override(Some(blk)).unwrap();
+            for (m, nt) in [(512usize, 1usize), (512, 4), (4096, 2), (7, 3)] {
+                let g = gemm_task_grain(m, nt);
+                assert!(g >= MR && g % MR == 0, "grain {g} not MR-aligned");
+                assert!(
+                    g <= blk.mc,
+                    "grain {g} exceeds tuned MC {} (m={m}, nt={nt})",
+                    blk.mc
+                );
+            }
+        }
+        tune::set_blocking_override(None).unwrap();
     }
 }

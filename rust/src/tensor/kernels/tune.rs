@@ -1,0 +1,252 @@
+//! MC/KC/NC cache-blocking autotuner for the packed GEMM driver.
+//!
+//! The BLIS-style constants the driver shipped with (MC = 128, KC = 256,
+//! NC = 1024) encode one guess about the cache hierarchy.  This module
+//! makes the guess measurable: [`autotune`] times the *actual* packed
+//! GEMM over a small deterministic candidate grid (axis sweeps around
+//! the default) on fixed Philox-seeded probe shapes and reports GFLOP/s
+//! per candidate; the winner is persisted by the `tune-kernels`
+//! subcommand into the config file's `kernels.tuned` section
+//! (`{"mc": .., "kc": .., "nc": ..}`), which sweeps re-apply via
+//! [`crate::config::ExperimentConfig::apply_kernels`] without ever
+//! re-timing (`--retune` forces a fresh probe).
+//!
+//! Blocking is a pure locality/perf knob: per C element the packed
+//! driver accumulates k ascending through KC-blocks *in order*, so any
+//! (MC, KC, NC) produces bit-identical results — which is what makes it
+//! safe to persist a machine-specific winner while sweeps stay
+//! byte-reproducible (`packed.rs` tests pin this across blockings).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use anyhow::{bail, Result};
+
+use super::micro::{MR, NR};
+
+/// One cache-blocking choice for the packed driver's loop nest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blocking {
+    /// Max rows of C per task / A-pack block (MR-aligned).
+    pub mc: usize,
+    /// k-depth per packed block.
+    pub kc: usize,
+    /// Columns of C per B-pack slab (NR-aligned).
+    pub nc: usize,
+}
+
+/// The shipped defaults (the pre-autotuner constants).
+pub const DEFAULT: Blocking = Blocking { mc: 128, kc: 256, nc: 1024 };
+
+/// Upper sanity bound per dimension: past this the staging buffers stop
+/// fitting any cache story and a typo'd config would silently allocate
+/// gigabytes.
+const MAX_DIM: usize = 1 << 16;
+
+impl Blocking {
+    /// Reject geometrically invalid blockings with the canonical knob
+    /// error shape (field, offending value, valid domain).
+    pub fn validate(&self) -> Result<()> {
+        if self.mc < MR || self.mc % MR != 0 || self.mc > MAX_DIM {
+            bail!(
+                "kernels.tuned mc must be a multiple of {MR} in [{MR}, {MAX_DIM}], got {}",
+                self.mc
+            );
+        }
+        if self.kc == 0 || self.kc > MAX_DIM {
+            bail!("kernels.tuned kc must be in [1, {MAX_DIM}], got {}", self.kc);
+        }
+        if self.nc < NR || self.nc % NR != 0 || self.nc > MAX_DIM {
+            bail!(
+                "kernels.tuned nc must be a multiple of {NR} in [{NR}, {MAX_DIM}], got {}",
+                self.nc
+            );
+        }
+        Ok(())
+    }
+}
+
+// 0 = unset; installed together under the config/CLI layer (or the knob
+// test lock), read per GEMM call.
+static TUNED_MC: AtomicUsize = AtomicUsize::new(0);
+static TUNED_KC: AtomicUsize = AtomicUsize::new(0);
+static TUNED_NC: AtomicUsize = AtomicUsize::new(0);
+
+/// Install (or clear, with `None`) the process-global tuned blocking.
+/// Validates geometry first so a malformed `kernels.tuned` section can
+/// never install a blocking the packers would misindex.
+pub fn set_blocking_override(b: Option<Blocking>) -> Result<()> {
+    match b {
+        None => {
+            TUNED_MC.store(0, Ordering::Relaxed);
+            TUNED_KC.store(0, Ordering::Relaxed);
+            TUNED_NC.store(0, Ordering::Relaxed);
+        }
+        Some(bl) => {
+            bl.validate()?;
+            TUNED_MC.store(bl.mc, Ordering::Relaxed);
+            TUNED_KC.store(bl.kc, Ordering::Relaxed);
+            TUNED_NC.store(bl.nc, Ordering::Relaxed);
+        }
+    }
+    Ok(())
+}
+
+/// The currently installed override, if any.
+pub fn blocking_override() -> Option<Blocking> {
+    let mc = TUNED_MC.load(Ordering::Relaxed);
+    if mc == 0 {
+        return None;
+    }
+    Some(Blocking {
+        mc,
+        kc: TUNED_KC.load(Ordering::Relaxed),
+        nc: TUNED_NC.load(Ordering::Relaxed),
+    })
+}
+
+/// The blocking the packed driver uses right now: tuned override if one
+/// was applied, else [`DEFAULT`].
+pub fn blocking() -> Blocking {
+    blocking_override().unwrap_or(DEFAULT)
+}
+
+/// The deterministic candidate grid: the default plus single-axis sweeps
+/// and two diagonal moves.  Small on purpose — the autotuner is a
+/// subcommand a machine runs once, not a per-process startup cost.
+pub fn candidates() -> Vec<Blocking> {
+    vec![
+        DEFAULT,
+        Blocking { mc: 64, kc: 256, nc: 1024 },
+        Blocking { mc: 256, kc: 256, nc: 1024 },
+        Blocking { mc: 128, kc: 128, nc: 1024 },
+        Blocking { mc: 128, kc: 512, nc: 1024 },
+        Blocking { mc: 128, kc: 256, nc: 512 },
+        Blocking { mc: 128, kc: 256, nc: 2048 },
+        Blocking { mc: 64, kc: 128, nc: 512 },
+        Blocking { mc: 256, kc: 512, nc: 2048 },
+    ]
+}
+
+/// Fixed probe shapes (m, k, n): one square, one rectangular like the
+/// projection-heavy paths.  Deterministic Philox contents so every run
+/// of the tuner multiplies the same matrices.
+const PROBE_SHAPES: [(usize, usize, usize); 2] = [(256, 256, 256), (384, 320, 256)];
+
+/// Time every candidate over the probe grid and return `(winner, rows)`
+/// where each row is `(candidate, GFLOP/s)` in candidate order (best of
+/// `reps` timed repetitions after one warmup).  The caller's blocking
+/// override is saved and restored, so probing never leaks a candidate
+/// into the process state — installing the winner is an explicit,
+/// separate step.
+pub fn autotune_with(cands: &[Blocking], reps: usize) -> (Blocking, Vec<(Blocking, f64)>) {
+    use crate::rng::philox::PhiloxStream;
+    use crate::tensor::Tensor;
+
+    assert!(!cands.is_empty() && reps >= 1);
+    let probes: Vec<(Tensor, Tensor)> = PROBE_SHAPES
+        .iter()
+        .map(|&(m, k, n)| {
+            let mut s = PhiloxStream::new(0x70u64 + m as u64, 3);
+            let a = Tensor::from_fn(m, k, |_, _| s.next_normal());
+            let b = Tensor::from_fn(k, n, |_, _| s.next_normal());
+            (a, b)
+        })
+        .collect();
+    let flops: f64 = PROBE_SHAPES
+        .iter()
+        .map(|&(m, k, n)| 2.0 * m as f64 * k as f64 * n as f64)
+        .sum();
+
+    let prior = blocking_override();
+    let mut rows = Vec::with_capacity(cands.len());
+    for &cand in cands {
+        set_blocking_override(Some(cand)).expect("candidate grid must be valid");
+        let run = || {
+            for (a, b) in &probes {
+                let mut c = Tensor::zeros(a.rows, b.cols);
+                super::packed::gemm(
+                    super::packed::MatRef::dense(a),
+                    super::packed::MatRef::dense(b),
+                    &mut c,
+                );
+                std::hint::black_box(&c);
+            }
+        };
+        run(); // warmup: page in the staging buffers at this geometry
+        let mut best = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            run();
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        rows.push((cand, flops / best / 1e9));
+    }
+    set_blocking_override(prior).expect("prior override was valid");
+
+    let mut winner = rows[0];
+    for &r in &rows[1..] {
+        if r.1 > winner.1 {
+            winner = r;
+        }
+    }
+    (winner.0, rows)
+}
+
+/// [`autotune_with`] over the standard [`candidates`] grid.
+pub fn autotune(reps: usize) -> (Blocking, Vec<(Blocking, f64)>) {
+    autotune_with(&candidates(), reps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::pool;
+
+    #[test]
+    fn validate_rejects_bad_geometry() {
+        for bad in [
+            Blocking { mc: 0, kc: 256, nc: 1024 },
+            Blocking { mc: 129, kc: 256, nc: 1024 },
+            Blocking { mc: 128, kc: 0, nc: 1024 },
+            Blocking { mc: 128, kc: 256, nc: 0 },
+            Blocking { mc: 128, kc: 256, nc: 1025 },
+            Blocking { mc: MAX_DIM * 2, kc: 256, nc: 1024 },
+        ] {
+            let err = bad.validate().unwrap_err().to_string();
+            assert!(err.contains("kernels.tuned"), "{err}");
+            assert!(set_blocking_override(Some(bad)).is_err());
+        }
+        DEFAULT.validate().unwrap();
+        for c in candidates() {
+            c.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn override_roundtrip_and_default() {
+        let _g = pool::knob_test_lock();
+        assert_eq!(blocking(), DEFAULT);
+        let b = Blocking { mc: 64, kc: 128, nc: 512 };
+        set_blocking_override(Some(b)).unwrap();
+        assert_eq!(blocking(), b);
+        assert_eq!(blocking_override(), Some(b));
+        set_blocking_override(None).unwrap();
+        assert_eq!(blocking_override(), None);
+        assert_eq!(blocking(), DEFAULT);
+    }
+
+    #[test]
+    fn autotune_reports_every_candidate_and_restores_override() {
+        let _g = pool::knob_test_lock();
+        set_blocking_override(None).unwrap();
+        let cands = [DEFAULT, Blocking { mc: 64, kc: 128, nc: 512 }];
+        let (best, rows) = autotune_with(&cands, 1);
+        assert_eq!(rows.len(), cands.len());
+        assert!(rows.iter().any(|&(c, _)| c == best));
+        for &(_, gf) in &rows {
+            assert!(gf.is_finite() && gf > 0.0);
+        }
+        // probing must not leak a candidate into process state
+        assert_eq!(blocking_override(), None);
+    }
+}

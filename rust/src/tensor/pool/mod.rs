@@ -115,14 +115,15 @@ fn grain_override() -> usize {
     if o > 0 {
         return o;
     }
-    if let Ok(v) = std::env::var("RMM_POOL_GRAIN") {
-        if let Ok(n) = v.trim().parse::<usize>() {
-            if n >= 1 {
-                return n;
-            }
-        }
+    // Strict like RMM_EXE_CACHE_CAP / RMM_SIMD: an operator who *set*
+    // the grain must not silently run with the derived one on a typo.
+    // Grain is read deep inside kernels (no Result channel), so a
+    // malformed value panics with the canonical knob message.
+    match crate::util::env::var_positive_usize("RMM_POOL_GRAIN") {
+        Ok(Some(n)) => n,
+        Ok(None) => 0,
+        Err(e) => panic!("{e}"),
     }
-    0
 }
 
 /// Rows per task for a kernel splitting `rows` across `nt` participants:

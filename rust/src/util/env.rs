@@ -1,0 +1,75 @@
+//! Strict env-knob parsing with one canonical error shape.
+//!
+//! Every `RMM_*` knob an operator can *set* must reject a malformed
+//! value instead of silently defaulting: someone who exported
+//! `RMM_POOL_GRAIN=1o24` meant to bound task granularity, and quietly
+//! running with the derived grain hides the typo until a perf report
+//! makes no sense.  The error shape is uniform across knobs —
+//! `<NAME> must be <domain>, got '<value>'` — matching
+//! `RMM_EXE_CACHE_CAP` (the first strict knob) and `RMM_SIMD`.
+//!
+//! The `parse_*` functions are pure `Result` parsers (unit-testable);
+//! the `var_*` wrappers read the process environment and treat an unset
+//! variable as "no preference".
+
+use anyhow::Result;
+
+/// Parse a positive (>= 1) integer knob value with the canonical error.
+pub fn parse_positive_usize(name: &str, v: &str) -> Result<usize> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        _ => Err(anyhow::anyhow!("{name} must be a positive integer, got '{v}'")),
+    }
+}
+
+/// Parse a non-negative integer knob value with the canonical error.
+/// `zero_means` names the zero semantics in the message (e.g.
+/// "0 = unbounded") so the domain stays self-describing.
+pub fn parse_usize_with_zero(name: &str, zero_means: &str, v: &str) -> Result<usize> {
+    v.trim().parse::<usize>().map_err(|_| {
+        anyhow::anyhow!("{name} must be a non-negative integer ({zero_means}), got '{v}'")
+    })
+}
+
+/// Read a positive-integer env knob: `Ok(None)` when unset, the
+/// canonical error when set to anything that is not an integer >= 1.
+pub fn var_positive_usize(name: &str) -> Result<Option<usize>> {
+    match std::env::var(name) {
+        Err(_) => Ok(None),
+        Ok(v) => parse_positive_usize(name, &v).map(Some),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn positive_accepts_and_trims() {
+        assert_eq!(parse_positive_usize("K", "3").unwrap(), 3);
+        assert_eq!(parse_positive_usize("K", " 17 ").unwrap(), 17);
+    }
+
+    #[test]
+    fn positive_rejects_with_canonical_shape() {
+        for bad in ["0", "-1", "1o24", "", "3.5", "many"] {
+            let err = parse_positive_usize("RMM_POOL_GRAIN", bad)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("RMM_POOL_GRAIN"), "{err}");
+            assert!(err.contains(&format!("'{bad}'")), "{err}");
+            assert!(err.contains("positive integer"), "{err}");
+        }
+    }
+
+    #[test]
+    fn zero_allowing_variant_keeps_zero_and_names_its_meaning() {
+        assert_eq!(parse_usize_with_zero("C", "0 = unbounded", "0").unwrap(), 0);
+        let err = parse_usize_with_zero("RMM_EXE_CACHE_CAP", "0 = unbounded", "-2")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("RMM_EXE_CACHE_CAP"), "{err}");
+        assert!(err.contains("'-2'"), "{err}");
+        assert!(err.contains("0 = unbounded"), "{err}");
+    }
+}

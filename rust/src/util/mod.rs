@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod env;
 pub mod fnv;
 pub mod json;
 pub mod prop;

@@ -206,3 +206,110 @@ fn fused_projection_never_needs_huge_b_proj_edgecases() {
         }
     }
 }
+
+// ---- forced-dispatch matrix: bit-identity across SIMD levels ----
+
+use rmmlinear::rmm::fft;
+use rmmlinear::tensor::kernels::dispatch::{self, SimdLevel};
+use rmmlinear::tensor::pool;
+
+/// Every kernel surface once: all three GEMM orientations over the
+/// adversarial shape list (MR/NR remainders, zero dims), all six fused
+/// projection families, and the batched SORS fast path.  Returns raw
+/// `data` vectors so callers can compare bit patterns.
+fn kernel_surfaces() -> Vec<Vec<f32>> {
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    for &(m, k, n) in SHAPES {
+        let a = randt(m, k, 1);
+        let b = randt(k, n, 2);
+        let at = randt(k, m, 3);
+        let bt = randt(n, k, 6);
+        outs.push(PACKED.matmul(&a, &b).data);
+        outs.push(PACKED.matmul_at(&at, &b).data);
+        outs.push(PACKED.matmul_bt(&a, &bt).data);
+    }
+    let x = randt(70, 9, 7);
+    for kind in SketchKind::ALL {
+        outs.push(sketch::project_streamed(kind, &x, 19, (3, 4)).data);
+    }
+    let xs = randt(64, 10, 8); // SORS needs power-of-two batch rows
+    outs.push(fft::sors_project_fast(true, &xs, 24, (5, 6)).data);
+    outs.push(fft::sors_project_fast(false, &xs, 24, (5, 6)).data);
+    outs
+}
+
+#[test]
+fn forced_dispatch_levels_are_bit_identical_in_process() {
+    let _g = pool::knob_test_lock();
+    // Reference: everything forced through the scalar per-element loop.
+    dispatch::set_simd_override(Some(SimdLevel::Scalar)).unwrap();
+    let want = kernel_surfaces();
+    for level in dispatch::supported_levels() {
+        dispatch::set_simd_override(Some(level)).unwrap();
+        let got = kernel_surfaces();
+        assert_eq!(want.len(), got.len());
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                w.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                g.iter().map(|v| v.to_bits()).collect::<Vec<u32>>(),
+                "surface {i} differs between scalar and {}",
+                level.name()
+            );
+        }
+    }
+    dispatch::set_simd_override(None).unwrap();
+}
+
+/// The cross-process half of the matrix: `repro kernel-digest` under
+/// every supported `RMM_SIMD` × `RMM_THREADS` ∈ {1, 4} must print
+/// byte-identical digest output (each forced level resolves through the
+/// env layer in a fresh process, exactly how a user forces one).
+#[test]
+fn kernel_digest_is_byte_identical_across_simd_levels_and_threads() {
+    let exe = env!("CARGO_BIN_EXE_repro");
+    let mut reference: Option<(String, String)> = None;
+    for level in SimdLevel::ALL {
+        if !level.supported() {
+            eprintln!("skipping RMM_SIMD={} (unsupported on this CPU)", level.name());
+            continue;
+        }
+        for threads in ["1", "4"] {
+            let tag = format!("RMM_SIMD={} RMM_THREADS={threads}", level.name());
+            let out = std::process::Command::new(exe)
+                .arg("kernel-digest")
+                .env("RMM_SIMD", level.name())
+                .env("RMM_THREADS", threads)
+                .output()
+                .expect("spawning repro kernel-digest");
+            assert!(
+                out.status.success(),
+                "kernel-digest failed under {tag}: {}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+            let text = String::from_utf8(out.stdout).expect("digest output is UTF-8");
+            assert!(text.contains("project[wtacrs]"), "digest output truncated:\n{text}");
+            match &reference {
+                None => reference = Some((tag, text)),
+                Some((rtag, rtext)) => {
+                    assert_eq!(rtext, &text, "digests diverge: {rtag} vs {tag}")
+                }
+            }
+        }
+    }
+    assert!(reference.is_some(), "scalar and portable are always supported");
+}
+
+#[test]
+fn malformed_rmm_simd_is_rejected_by_the_cli() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .arg("kernel-digest")
+        .env("RMM_SIMD", "sse9")
+        .output()
+        .expect("spawning repro kernel-digest");
+    assert!(!out.status.success(), "garbage RMM_SIMD must fail loudly, not fall back");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        err.contains("RMM_SIMD") && err.contains("'sse9'"),
+        "error must name the knob, the offending value and the domain: {err}"
+    );
+}

@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Diff a fresh reports/BENCH_kernels.json against the committed baseline.
+
+The bench report's `baseline_ref` field names the committed copy of
+itself; this script resolves that copy via `git show HEAD:<ref>` and
+prints per-kernel GFLOP/s deltas (keyed on kernel/backend/simd/shape),
+plus the headline speedups.  It is a trend monitor, not a gate: every
+exit path is status 0, so CI can run it unconditionally — a missing
+fresh report, a repo with no committed baseline yet, or malformed JSON
+all degrade to an explanatory message.
+
+Usage: scripts/bench_diff.py [fresh_report] [--baseline-rev REV]
+"""
+
+import json
+import subprocess
+import sys
+
+DEFAULT_REPORT = "reports/BENCH_kernels.json"
+
+
+def row_key(row):
+    return (
+        row.get("kernel", "?"),
+        row.get("backend", "?"),
+        row.get("simd", "auto"),
+        int(row.get("m", 0)),
+        int(row.get("k", 0)),
+        int(row.get("n", 0)),
+    )
+
+
+def load_fresh(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except OSError as e:
+        print(f"bench-diff: no fresh report at {path} ({e}); nothing to diff")
+    except ValueError as e:
+        print(f"bench-diff: {path} is not valid JSON ({e})")
+    return None
+
+
+def load_baseline(rev, ref):
+    proc = subprocess.run(
+        ["git", "show", f"{rev}:{ref}"], capture_output=True, text=True
+    )
+    if proc.returncode != 0:
+        print(
+            f"bench-diff: no committed baseline at {rev}:{ref} "
+            "(first run on this machine?); skipping diff"
+        )
+        return None
+    try:
+        return json.loads(proc.stdout)
+    except ValueError as e:
+        print(f"bench-diff: committed {rev}:{ref} is not valid JSON ({e})")
+        return None
+
+
+def main(argv):
+    path = DEFAULT_REPORT
+    rev = "HEAD"
+    args = list(argv)
+    while args:
+        a = args.pop(0)
+        if a == "--baseline-rev" and args:
+            rev = args.pop(0)
+        else:
+            path = a
+
+    fresh = load_fresh(path)
+    if fresh is None:
+        return 0
+    ref = fresh.get("baseline_ref", DEFAULT_REPORT)
+    base = load_baseline(rev, ref)
+    if base is None:
+        return 0
+
+    base_rows = {row_key(r): r for r in base.get("rows", [])}
+    fresh_rows = [(row_key(r), r) for r in fresh.get("rows", [])]
+    print(f"bench-diff: {path} vs {rev}:{ref} ({len(fresh_rows)} rows)")
+
+    for name in ("speedup_512", "sors_batched_speedup_1024"):
+        f, b = fresh.get(name), base.get(name)
+        if isinstance(f, (int, float)) and isinstance(b, (int, float)) and b:
+            print(f"  {name}: {b:.2f}x -> {f:.2f}x ({100.0 * (f - b) / b:+.1f}%)")
+
+    missing = 0
+    for key, row in fresh_rows:
+        kernel, backend, simd, m, k, n = key
+        label = f"{kernel}/{backend}+{simd}/{m}x{k}x{n}"
+        f_gf = row.get("gflops")
+        b_row = base_rows.get(key)
+        if b_row is None:
+            print(f"  {label:<44} {f_gf:>8.2f} GFLOP/s  (new row)")
+            continue
+        b_gf = b_row.get("gflops")
+        if not isinstance(f_gf, (int, float)) or not isinstance(b_gf, (int, float)) or not b_gf:
+            print(f"  {label:<44} unmeasurable (null GFLOP/s)")
+            continue
+        delta = 100.0 * (f_gf - b_gf) / b_gf
+        print(f"  {label:<44} {b_gf:>8.2f} -> {f_gf:>8.2f} GFLOP/s ({delta:+6.1f}%)")
+    for key in base_rows:
+        if key not in dict(fresh_rows):
+            missing += 1
+    if missing:
+        print(f"bench-diff: {missing} baseline row(s) absent from the fresh report")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -26,6 +26,15 @@ RMM_THREADS=1 cargo test -q
 echo "== cargo test (RMM_THREADS=4) =="
 RMM_THREADS=4 cargo test -q
 
+# SIMD dispatch byte-identity gate, tier-1 half: the whole suite again
+# with the microkernel pinned to the portable tile.  The auto runs above
+# dispatched the widest ISA the CPU supports (avx512/avx2/neon), so any
+# divergence between a SIMD kernel and the portable accumulation order
+# fails the same equality assertions here (prop_kernels.rs additionally
+# forces every supported level in-process and over subprocesses).
+echo "== cargo test (RMM_SIMD=portable, RMM_THREADS=4) =="
+RMM_SIMD=portable RMM_THREADS=4 cargo test -q
+
 # Smoke the multi-process sweep path with real worker subprocesses: the
 # mock grid sharded over 2 workers must merge byte-identically to the
 # serial run (the --shards N vs --shards 1 acceptance check, minus the
@@ -78,6 +87,17 @@ echo "== sweep smoke (budget grid, dynamic, closed-loop controller) =="
 for T in 1 4; do
   RMM_THREADS=$T target/release/repro sweep-selftest --shards 2 --schedule dynamic --grid budget
 done
+
+# SIMD dispatch byte-identity gate, end-to-end half: the budget grid's
+# serial reference bytes under forced-portable dispatch vs the auto
+# probe must be identical (the dispatch level, like thread count and
+# blocking, is bit-invisible in every report).
+echo "== sweep byte-compare (budget grid, RMM_SIMD=portable vs auto) =="
+S=$(mktemp -d)
+RMM_SIMD=portable target/release/repro sweep-selftest --grid budget --out "$S/portable.json"
+target/release/repro sweep-selftest --grid budget --out "$S/auto.json"
+cmp "$S/portable.json" "$S/auto.json"
+rm -rf "$S"
 
 # Daemon byte-identity gate: the same synth grid served through the
 # sweep-daemon queue path (enqueue -> drain -> merge -> report) must
@@ -132,5 +152,12 @@ for T in 1 4; do
   RMM_THREADS=$T target/release/repro sweep-selftest --shards 3 --schedule dynamic \
     --grid synth-medium --chaos-seed 11 --chaos-profile crash --artifact-cache on
 done
+
+# Perf-trend monitor (non-gating): regenerate the kernel GFLOP/s report
+# and diff it against the committed baseline named by its baseline_ref.
+# Timing noise must never brick the gate, so both steps are best-effort.
+echo "== bench diff vs committed baseline (non-gating) =="
+cargo bench -p rmmlinear --bench rmm_micro -- --json || true
+python3 scripts/bench_diff.py || true
 
 echo "ci: all gates passed"
